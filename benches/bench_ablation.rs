@@ -1,0 +1,94 @@
+//! Ablation bench — the design choices DESIGN.md calls out:
+//!   1. matching policy: Hungarian vs greedy
+//!   2. C-row refinement (closed-form LS) on vs off
+//!   3. inner engine: native ALS vs PJRT AOT (when artifacts exist)
+//!   4. MoI-biased vs uniform sampling (via sampling factor on skewed data)
+//!
+//! Run: `cargo bench --bench bench_ablation`
+
+use sambaten::coordinator::{SamBaTen, SamBaTenConfig};
+use sambaten::datagen::{RealDatasetSim, SyntheticSpec};
+use sambaten::matching::MatchPolicy;
+use sambaten::metrics::relative_error;
+use sambaten::runtime::{artifacts_available, artifacts_dir, PjrtAlsSolver, PjrtService};
+use sambaten::tensor::TensorData;
+use sambaten::util::benchkit::{bench, report};
+use std::sync::Arc;
+
+fn run(existing: &TensorData, batches: &[TensorData], cfg: SamBaTenConfig) -> SamBaTen {
+    let mut e = SamBaTen::init(existing, cfg).unwrap();
+    for b in batches {
+        e.ingest(b).unwrap();
+    }
+    e
+}
+
+fn main() {
+    let spec = SyntheticSpec::cube(32, 4, 1.0, 0.05, 11);
+    let (existing, batches, _) = spec.generate_stream(0.1, 8);
+    let (full, _) = spec.generate();
+
+    // 1. Matching policy.
+    for (name, policy) in [("hungarian", MatchPolicy::Hungarian), ("greedy", MatchPolicy::Greedy)] {
+        let mut err = f64::NAN;
+        bench(&format!("ablation/match_{name}"), 0, 2, || {
+            let mut cfg = SamBaTenConfig::new(4, 2, 4, 7);
+            cfg.match_policy = policy;
+            let e = run(&existing, &batches, cfg);
+            err = relative_error(&full, e.model());
+        });
+        report(&format!("ablation/match_{name}/rel_err"), err, "");
+    }
+
+    // 2. C-row refinement.
+    for (name, refine) in [("refine_on", true), ("refine_off", false)] {
+        let mut err = f64::NAN;
+        bench(&format!("ablation/{name}"), 0, 2, || {
+            let mut cfg = SamBaTenConfig::new(4, 2, 4, 7);
+            cfg.refine_c = refine;
+            let e = run(&existing, &batches, cfg);
+            err = relative_error(&full, e.model());
+        });
+        report(&format!("ablation/{name}/rel_err"), err, "");
+    }
+
+    // 3. Inner engine.
+    {
+        let mut err = f64::NAN;
+        bench("ablation/engine_native", 0, 2, || {
+            let e = run(&existing, &batches, SamBaTenConfig::new(4, 2, 4, 7));
+            err = relative_error(&full, e.model());
+        });
+        report("ablation/engine_native/rel_err", err, "");
+        if artifacts_available() {
+            let svc = PjrtService::start(artifacts_dir()).unwrap();
+            let mut err = f64::NAN;
+            bench("ablation/engine_pjrt", 0, 2, || {
+                let cfg = SamBaTenConfig::new(4, 2, 4, 7)
+                    .with_solver(Arc::new(PjrtAlsSolver::new(svc.clone())));
+                let e = run(&existing, &batches, cfg);
+                err = relative_error(&full, e.model());
+            });
+            report("ablation/engine_pjrt/rel_err", err, "");
+        } else {
+            println!("ablation/engine_pjrt: skipped (no artifact bank)");
+        }
+    }
+
+    // 4. Sampling factor on heavy-tailed (real-sim) data — MoI bias matters
+    // most when index energy is skewed.
+    let ds = RealDatasetSim::by_name("Facebook-wall").unwrap();
+    let (existing, batches, _) = ds.generate_stream(0.002, 31);
+    let mut full = existing.clone();
+    for b in &batches {
+        full.append_mode3(b);
+    }
+    for s in [2usize, 4] {
+        let mut err = f64::NAN;
+        bench(&format!("ablation/skewed_s{s}"), 0, 1, || {
+            let e = run(&existing, &batches, SamBaTenConfig::new(ds.rank, s, 4, 17));
+            err = relative_error(&full, e.model());
+        });
+        report(&format!("ablation/skewed_s{s}/rel_err"), err, "");
+    }
+}

@@ -1,0 +1,98 @@
+//! Bench: the figure experiments — Fig 1 (headline), Fig 5 (time vs dim),
+//! Fig 6 (fitness vs dim), Fig 7/8 (GETRANK cost), Fig 9 (s sweep),
+//! Fig 10 (r sweep), Fig 11 (r × s). Each series is regenerated through the
+//! eval harness; this bench times SamBaTen's end-to-end run per point and
+//! reports the series values.
+//!
+//! Run: `cargo bench --bench bench_figures`
+
+use sambaten::coordinator::{SamBaTen, SamBaTenConfig};
+use sambaten::datagen::{RealDatasetSim, SyntheticSpec};
+use sambaten::metrics::{fms, relative_error};
+use sambaten::tensor::TensorData;
+use sambaten::util::benchkit::{bench, report};
+
+fn stream(dim: usize, density: f64, batch: usize, seed: u64) -> (TensorData, Vec<TensorData>, TensorData, sambaten::cp::CpModel) {
+    let spec = SyntheticSpec::cube(dim, 4, density, 0.05, seed);
+    let (existing, batches, truth) = spec.generate_stream(0.1, batch);
+    let (full, _) = spec.generate();
+    (existing, batches, full, truth)
+}
+
+fn run(existing: &TensorData, batches: &[TensorData], cfg: SamBaTenConfig) -> SamBaTen {
+    let mut e = SamBaTen::init(existing, cfg).unwrap();
+    for b in batches {
+        e.ingest(b).unwrap();
+    }
+    e
+}
+
+fn main() {
+    // ---- Fig 5/6 series: time and error vs dimension, dense + sparse.
+    for (variant, density) in [("dense", 1.0f64), ("sparse", 0.55)] {
+        for dim in [16usize, 24, 32, 48] {
+            let (existing, batches, full, _) = stream(dim, density, (dim / 4).max(4), 42);
+            let mut err = f64::NAN;
+            bench(&format!("fig5/{variant}/dim{dim}/SamBaTen"), 0, 2, || {
+                let e = run(&existing, &batches, SamBaTenConfig::new(4, 2, 4, 7));
+                err = relative_error(&full, e.model());
+            });
+            report(&format!("fig6/{variant}/dim{dim}/rel_err"), err, "");
+        }
+    }
+
+    // ---- Fig 9: sampling factor sweep (time ↓, error slightly ↑).
+    let (existing, batches, full, _) = stream(32, 1.0, 8, 61);
+    for s in [2usize, 3, 4, 6] {
+        let mut err = f64::NAN;
+        bench(&format!("fig9/s{s}"), 0, 2, || {
+            let e = run(&existing, &batches, SamBaTenConfig::new(4, s, 4, 13));
+            err = relative_error(&full, e.model());
+        });
+        report(&format!("fig9/s{s}/rel_err"), err, "");
+    }
+
+    // ---- Fig 10: repetition sweep (FMS ↑ with r).
+    let (existing, batches, full, truth) = stream(32, 1.0, 8, 71);
+    for r in [1usize, 2, 4, 8] {
+        let mut score = f64::NAN;
+        bench(&format!("fig10/r{r}"), 0, 1, || {
+            let e = run(&existing, &batches, SamBaTenConfig::new(4, 2, r, 37));
+            score = fms(e.model(), &truth);
+        });
+        report(&format!("fig10/r{r}/fms"), score, "");
+        let _ = &full;
+    }
+
+    // ---- Fig 11: joint r × s on the NIPS sim.
+    let ds = RealDatasetSim::by_name("NIPS").unwrap();
+    let (existing, batches, truth) = ds.generate_stream(0.010, 79);
+    let mut full = existing.clone();
+    for b in &batches {
+        full.append_mode3(b);
+    }
+    for r in [1usize, 2, 4] {
+        for s in [2usize, 3, 5] {
+            let mut score = f64::NAN;
+            bench(&format!("fig11/r{r}_s{s}"), 0, 1, || {
+                let e = run(&existing, &batches, SamBaTenConfig::new(ds.rank, s, r, 41));
+                score = fms(e.model(), &truth);
+            });
+            report(&format!("fig11/r{r}_s{s}/fms"), score, "");
+        }
+    }
+
+    // ---- Fig 7: GETRANK overhead on a deficient stream.
+    let (existing, batches, full, _) = stream(24, 1.0, 6, 41);
+    for (variant, qc) in [("without_getrank", false), ("with_getrank", true)] {
+        let mut err = f64::NAN;
+        bench(&format!("fig7/{variant}"), 0, 1, || {
+            let cfg = SamBaTenConfig::new(4, 2, 3, 23).with_quality_control(qc);
+            let e = run(&existing, &batches, cfg);
+            err = relative_error(&full, e.model());
+        });
+        report(&format!("fig7/{variant}/rel_err"), err, "");
+    }
+    // Fig 1 headline is covered by bench_table4 (dense grid, all methods).
+    println!("fig1: see bench_table4 output (headline = per-method totals at the largest dim)");
+}

@@ -1,0 +1,97 @@
+//! Micro-benchmarks of the substrate hot paths — the profile the §Perf
+//! optimization pass works from:
+//!   * dense MTTKRP (all three modes)
+//!   * sparse MTTKRP (serial vs parallel nnz chunks)
+//!   * weighted sampling without replacement
+//!   * component matching (congruence + Hungarian)
+//!   * Jacobi SVD / Cholesky solve
+//!   * sample extraction (dense + sparse)
+//!
+//! Run: `cargo bench --bench bench_micro`
+
+use sambaten::linalg::{hungarian_min, pinv, svd_jacobi, Matrix};
+use sambaten::matching::{match_components, MatchPolicy};
+use sambaten::sampling::weighted_sample_without_replacement;
+use sambaten::tensor::{CooTensor, DenseTensor, Tensor3};
+use sambaten::util::benchkit::bench;
+use sambaten::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // Dense MTTKRP, 64^3 rank 8 (the largest bank shape).
+    let x = DenseTensor::rand(64, 64, 64, &mut rng);
+    let a = Matrix::rand_gaussian(64, 8, &mut rng);
+    let b = Matrix::rand_gaussian(64, 8, &mut rng);
+    let c = Matrix::rand_gaussian(64, 8, &mut rng);
+    for mode in 0..3 {
+        bench(&format!("micro/mttkrp_dense_64r8/mode{mode}"), 1, 5, || {
+            std::hint::black_box(x.mttkrp(mode, &a, &b, &c));
+        });
+    }
+
+    // Sparse MTTKRP, 200^3 at 1% (80k nnz), rank 8.
+    let xs = CooTensor::rand(200, 200, 200, 0.01, &mut rng);
+    let sa = Matrix::rand_gaussian(200, 8, &mut rng);
+    let sb = Matrix::rand_gaussian(200, 8, &mut rng);
+    let sc = Matrix::rand_gaussian(200, 8, &mut rng);
+    println!("sparse nnz = {}", xs.nnz());
+    for mode in 0..3 {
+        bench(&format!("micro/mttkrp_sparse_200_1pct/mode{mode}"), 1, 5, || {
+            std::hint::black_box(xs.mttkrp(mode, &sa, &sb, &sc));
+        });
+    }
+
+    // Weighted sampling.
+    let weights: Vec<f64> = (0..100_000).map(|_| rng.uniform() + 0.01).collect();
+    bench("micro/weighted_sample_100k_pick_10k", 1, 5, || {
+        let mut r = Rng::new(7);
+        std::hint::black_box(weighted_sample_without_replacement(&weights, 10_000, &mut r));
+    });
+
+    // Matching, R=16 over 200 anchor rows.
+    let anchors = [
+        Matrix::rand_gaussian(200, 16, &mut rng),
+        Matrix::rand_gaussian(200, 16, &mut rng),
+        Matrix::rand_gaussian(200, 16, &mut rng),
+    ];
+    let perm: Vec<usize> = (0..16).rev().collect();
+    let sample = [
+        anchors[0].gather_cols(&perm),
+        anchors[1].gather_cols(&perm),
+        anchors[2].gather_cols(&perm),
+    ];
+    bench("micro/match_components_r16", 1, 10, || {
+        std::hint::black_box(match_components(&anchors, &sample, MatchPolicy::Hungarian));
+    });
+
+    // Hungarian on a 64x64 cost matrix.
+    let cost: Vec<Vec<f64>> =
+        (0..64).map(|_| (0..64).map(|_| rng.uniform()).collect()).collect();
+    bench("micro/hungarian_64", 1, 10, || {
+        std::hint::black_box(hungarian_min(&cost));
+    });
+
+    // SVD and pinv on typical sizes.
+    let m = Matrix::rand_gaussian(64, 16, &mut rng);
+    bench("micro/svd_jacobi_64x16", 1, 5, || {
+        std::hint::black_box(svd_jacobi(&m));
+    });
+    bench("micro/pinv_64x16", 1, 5, || {
+        std::hint::black_box(pinv(&m, None));
+    });
+
+    // Sample extraction.
+    let big = CooTensor::rand(400, 400, 100, 0.005, &mut rng);
+    let is: Vec<usize> = (0..200).collect();
+    let js: Vec<usize> = (0..200).collect();
+    let ks: Vec<usize> = (0..50).collect();
+    bench("micro/extract_sparse_400", 1, 5, || {
+        std::hint::black_box(big.extract(&is, &js, &ks));
+    });
+    let bigd = DenseTensor::rand(96, 96, 96, &mut rng);
+    let is: Vec<usize> = (0..48).collect();
+    bench("micro/extract_dense_96_half", 1, 5, || {
+        std::hint::black_box(bigd.extract(&is, &is, &is));
+    });
+}

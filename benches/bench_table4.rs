@@ -1,0 +1,34 @@
+//! Bench: Table IV — end-to-end incremental decomposition of the *dense*
+//! synthetic grid, every method. Regenerates the rows the paper reports
+//! (relative error per method per dimension) and times each method.
+//!
+//! Run: `cargo bench --bench bench_table4`
+
+use sambaten::coordinator::SamBaTenConfig;
+use sambaten::datagen::SyntheticSpec;
+use sambaten::eval::runner::{run_stream, MethodKind, Workload};
+use sambaten::util::benchkit::{bench, report};
+
+fn workload(dim: usize, dense: bool, batch: usize, seed: u64) -> Workload {
+    let density = if dense { 1.0 } else { 0.55 };
+    let spec = SyntheticSpec::cube(dim, 4, density, 0.05, seed);
+    let (existing, batches, truth) = spec.generate_stream(0.1, batch);
+    let (full, _) = spec.generate();
+    Workload { existing, batches, full, truth: Some(truth), rank: 4 }
+}
+
+fn main() {
+    println!("== Table IV bench: dense synthetic grid ==");
+    for (dim, batch) in [(16usize, 8usize), (24, 8), (32, 10), (48, 12)] {
+        let w = workload(dim, true, batch, 100 + dim as u64);
+        for m in MethodKind::ALL {
+            let cfg = SamBaTenConfig::new(4, 2, 4, 7);
+            let mut rel_err = f64::NAN;
+            bench(&format!("table4/dim{dim}/{}", m.name()), 0, 1, || {
+                let out = run_stream(&w, &[m], &cfg, 120.0).unwrap();
+                rel_err = out[0].rel_err;
+            });
+            report(&format!("table4/dim{dim}/{}/rel_err", m.name()), rel_err, "");
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench: Table V — end-to-end incremental decomposition of the *sparse*
+//! synthetic grid, every method (relative error + time per dimension).
+//!
+//! Run: `cargo bench --bench bench_table5`
+
+use sambaten::coordinator::SamBaTenConfig;
+use sambaten::datagen::SyntheticSpec;
+use sambaten::eval::runner::{run_stream, MethodKind, Workload};
+use sambaten::util::benchkit::{bench, report};
+
+fn workload(dim: usize, density: f64, batch: usize, seed: u64) -> Workload {
+    let spec = SyntheticSpec::cube(dim, 4, density, 0.05, seed);
+    let (existing, batches, truth) = spec.generate_stream(0.1, batch);
+    let (full, _) = spec.generate();
+    Workload { existing, batches, full, truth: Some(truth), rank: 4 }
+}
+
+fn main() {
+    println!("== Table V bench: sparse synthetic grid ==");
+    for (dim, density, batch) in
+        [(16usize, 0.65, 8usize), (24, 0.65, 8), (32, 0.55, 10), (48, 0.55, 12)]
+    {
+        let w = workload(dim, density, batch, 200 + dim as u64);
+        for m in MethodKind::ALL {
+            let cfg = SamBaTenConfig::new(4, 2, 4, 7);
+            let mut rel_err = f64::NAN;
+            bench(&format!("table5/dim{dim}/{}", m.name()), 0, 1, || {
+                let out = run_stream(&w, &[m], &cfg, 120.0).unwrap();
+                rel_err = out[0].rel_err;
+            });
+            report(&format!("table5/dim{dim}/{}/rel_err", m.name()), rel_err, "");
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! Bench: Table VI — the six simulated real datasets (CPU time per method,
+//! with the paper's N/A pattern coming from the per-method budget and the
+//! heavyweight method restriction).
+//!
+//! Run: `cargo bench --bench bench_table6`
+
+use sambaten::coordinator::SamBaTenConfig;
+use sambaten::datagen::REAL_DATASETS;
+use sambaten::eval::real::{real_workload, sim_scale};
+use sambaten::eval::runner::{run_stream, EvalContext, MethodKind};
+use sambaten::util::benchkit::{bench, report};
+
+fn main() {
+    println!("== Table VI bench: simulated real datasets ==");
+    let ctx = EvalContext::default();
+    for ds in REAL_DATASETS {
+        let w = real_workload(ds, &ctx, 77);
+        let methods: Vec<MethodKind> = match ds.name {
+            "Patents" | "Amazon" => vec![MethodKind::CpAls, MethodKind::SamBaTen],
+            "Facebook-wall" | "Facebook-links" => {
+                vec![MethodKind::CpAls, MethodKind::OnlineCp, MethodKind::SamBaTen]
+            }
+            _ => MethodKind::ALL.to_vec(),
+        };
+        println!(
+            "-- {} (scale {}, dims {:?}, nnz {})",
+            ds.name,
+            sim_scale(ds.name),
+            sambaten::tensor::Tensor3::dims(&w.full),
+            sambaten::tensor::Tensor3::nnz(&w.full)
+        );
+        for m in methods {
+            let cfg = SamBaTenConfig::new(ds.rank, ds.sampling_factor.min(4).max(2), 4, 7);
+            let mut rel_err = f64::NAN;
+            let mut completed = false;
+            bench(&format!("table6/{}/{}", ds.name, m.name()), 0, 1, || {
+                let out = run_stream(&w, &[m], &cfg, 60.0).unwrap();
+                rel_err = out[0].rel_err;
+                completed = out[0].completed;
+            });
+            report(
+                &format!("table6/{}/{}/rel_err", ds.name, m.name()),
+                rel_err,
+                if completed { "" } else { "(N/A: budget)" },
+            );
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! End-to-end validation driver (the repository's acceptance run):
+//! exercises ALL layers on a real small workload and reports the paper's
+//! headline metric.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_eval
+//! ```
+//!
+//! Pipeline: synthetic + simulated-real streams → SamBaTen (native AND, if
+//! the artifact bank is built, the AOT JAX/Pallas PJRT engine) vs all four
+//! baselines → headline: SamBaTen's speedup over the recompute baseline at
+//! comparable accuracy (paper: 25-30× vs OnlineCP on NIPS; "comparable
+//! accuracy" Tables IV-V). Results land in results/e2e.csv and
+//! EXPERIMENTS.md records a reference run.
+
+use sambaten::coordinator::{SamBaTen, SamBaTenConfig};
+use sambaten::datagen::{RealDatasetSim, SyntheticSpec};
+use sambaten::eval::runner::{run_stream, MethodKind, Workload};
+use sambaten::io::csv::{num, CsvWriter};
+use sambaten::runtime::{artifacts_available, artifacts_dir, PjrtAlsSolver, PjrtService};
+use sambaten::tensor::Tensor3;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let mut csv = CsvWriter::create(
+        std::path::Path::new("results/e2e.csv"),
+        &["workload", "method", "seconds", "rel_err", "fitness_vs_cpals", "completed"],
+    )?;
+
+    // ---- workload 1: dense synthetic cube (Table IV regime).
+    let dense = {
+        let spec = SyntheticSpec::cube(40, 4, 1.0, 0.05, 17);
+        let (existing, batches, truth) = spec.generate_stream(0.1, 10);
+        let (full, _) = spec.generate();
+        ("dense-40", Workload { existing, batches, full, truth: Some(truth), rank: 4 })
+    };
+    // ---- workload 2: sparse synthetic (Table V regime).
+    let sparse = {
+        let spec = SyntheticSpec::cube(40, 4, 0.55, 0.05, 19);
+        let (existing, batches, truth) = spec.generate_stream(0.1, 10);
+        let (full, _) = spec.generate();
+        ("sparse-40", Workload { existing, batches, full, truth: Some(truth), rank: 4 })
+    };
+    // ---- workload 3: simulated NIPS (Table VI regime).
+    let nips = {
+        let ds = RealDatasetSim::by_name("NIPS").unwrap();
+        let (existing, batches, truth) = ds.generate_stream(0.010, 23);
+        let mut full = existing.clone();
+        for b in &batches {
+            full.append_mode3(b);
+        }
+        ("NIPS-sim", Workload { existing, batches, full, truth: Some(truth), rank: ds.rank })
+    };
+
+    let mut headline: Vec<String> = Vec::new();
+    for (name, w) in [dense, sparse, nips] {
+        println!("\n=== workload {name}: {:?}, {} batches ===", w.full.dims(), w.batches.len());
+        let cfg = SamBaTenConfig::new(w.rank, 2, 4, 7);
+        let outcomes = run_stream(&w, &MethodKind::ALL, &cfg, 120.0)?;
+        let mut cpals_time = f64::NAN;
+        let mut samba_time = f64::NAN;
+        let mut samba_err = f64::NAN;
+        let mut cpals_err = f64::NAN;
+        for o in &outcomes {
+            println!(
+                "  {:>9}: {:>9} s  rel_err {}",
+                o.method,
+                if o.completed { format!("{:.3}", o.seconds) } else { "N/A".into() },
+                if o.completed { format!("{:.4}", o.rel_err) } else { "N/A".into() }
+            );
+            csv.row(&[
+                name.into(),
+                o.method.into(),
+                num(o.seconds),
+                num(o.rel_err),
+                o.fitness_vs_cpals.map(num).unwrap_or_default(),
+                o.completed.to_string(),
+            ])?;
+            match o.method {
+                "CP_ALS" if o.completed => {
+                    cpals_time = o.seconds;
+                    cpals_err = o.rel_err;
+                }
+                "SamBaTen" if o.completed => {
+                    samba_time = o.seconds;
+                    samba_err = o.rel_err;
+                }
+                _ => {}
+            }
+        }
+        if cpals_time.is_finite() && samba_time.is_finite() {
+            headline.push(format!(
+                "{name}: SamBaTen {:.1}x faster than CP_ALS recompute (err {:.3} vs {:.3})",
+                cpals_time / samba_time,
+                samba_err,
+                cpals_err
+            ));
+        }
+    }
+
+    // ---- PJRT three-layer check: run the dense workload again with the
+    // AOT JAX/Pallas engine if the artifact bank exists.
+    if artifacts_available() {
+        println!("\n=== three-layer check (PJRT AOT engine) ===");
+        let spec = SyntheticSpec::cube(30, 4, 1.0, 0.05, 29);
+        let (existing, batches, _) = spec.generate_stream(0.1, 8);
+        let (full, _) = spec.generate();
+        let svc = PjrtService::start(artifacts_dir())?;
+        let cfg = SamBaTenConfig::new(4, 2, 4, 7)
+            .with_solver(Arc::new(PjrtAlsSolver::new(svc.clone())));
+        let mut engine = SamBaTen::init(&existing, cfg)?;
+        let sw = sambaten::util::Stopwatch::started();
+        for b in &batches {
+            engine.ingest(b)?;
+        }
+        let err = sambaten::metrics::relative_error(&full, engine.model());
+        println!(
+            "  pjrt-als engine: {:.2}s, rel_err {:.4} ({} PJRT jobs, {} bank misses)",
+            sw.elapsed_secs(),
+            err,
+            svc.job_count(),
+            svc.fallback_count()
+        );
+        headline.push(format!(
+            "three-layer (Rust→PJRT→JAX/Pallas AOT): rel_err {err:.3} over {} jobs",
+            svc.job_count()
+        ));
+        anyhow::ensure!(err < 0.5, "PJRT path accuracy regressed: {err}");
+    } else {
+        println!("\n(artifact bank missing — run `make artifacts` for the PJRT check)");
+    }
+
+    csv.flush()?;
+    println!("\n== HEADLINE ==");
+    for h in &headline {
+        println!("  {h}");
+    }
+    println!("csv: results/e2e.csv");
+    Ok(())
+}

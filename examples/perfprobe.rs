@@ -1,0 +1,31 @@
+//! Phase-level performance probe: where does an ingest spend its time?
+//! (sample extraction / summary decomposition / matching / merge).
+//! The §Perf iteration log in EXPERIMENTS.md is measured with this driver.
+//!
+//! ```bash
+//! cargo run --release --example perfprobe
+//! ```
+
+use sambaten::coordinator::{SamBaTen, SamBaTenConfig};
+use sambaten::datagen::SyntheticSpec;
+
+fn main() {
+    // Dense 64^3 — the regime where the paper's crossover appears.
+    for (name, density) in [("dense64", 1.0), ("sparse64", 0.55)] {
+        let spec = SyntheticSpec::cube(64, 4, density, 0.05, 17);
+        let (existing, batches, _) = spec.generate_stream(0.1, 12);
+        let mut e = SamBaTen::init(&existing, SamBaTenConfig::new(4, 2, 4, 7)).unwrap();
+        let (mut ts, mut td, mut tm, mut tg, mut tot) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for b in &batches {
+            let st = e.ingest(b).unwrap();
+            ts += st.phase_sample_s;
+            td += st.phase_decompose_s;
+            tm += st.phase_match_s;
+            tg += st.phase_merge_s;
+            tot += st.seconds;
+        }
+        println!(
+            "{name}: total {tot:.3}s  sample {ts:.3} decompose {td:.3} match {tm:.3} merge {tg:.3}"
+        );
+    }
+}

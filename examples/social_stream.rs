@@ -1,0 +1,68 @@
+//! Social-network stream: the paper's motivating scenario (§I) — a
+//! (wall-owner × poster × day) interaction tensor growing one day at a
+//! time, served through the streaming layer with backpressure.
+//!
+//! ```bash
+//! cargo run --release --example social_stream
+//! ```
+//!
+//! Uses the Facebook-wall simulation (heavy-tailed user popularity, shallow
+//! time mode — Table III's shape signature) and reports per-batch ingest
+//! latency and slice throughput, the numbers a production deployment cares
+//! about.
+
+use sambaten::coordinator::{SamBaTen, SamBaTenConfig};
+use sambaten::datagen::RealDatasetSim;
+use sambaten::metrics::relative_error;
+use sambaten::streaming::{StreamPump, TensorReplay};
+use sambaten::tensor::{Tensor3, TensorData};
+
+fn main() -> anyhow::Result<()> {
+    let ds = RealDatasetSim::by_name("Facebook-wall").unwrap();
+    // Scaled-down simulation: ~126×126 users, 8+ days, heavy-tailed.
+    let (full, _truth) = ds.generate(0.002, 99);
+    let (ni, nj, nk) = full.dims();
+    println!(
+        "simulated Facebook-wall: {ni}x{nj}x{nk}, {} nnz ({:.3}% dense)",
+        full.nnz(),
+        100.0 * full.nnz() as f64 / (ni * nj * nk) as f64
+    );
+
+    // First day is the pre-existing tensor; the rest arrives as a stream.
+    let TensorData::Sparse(s) = &full else { unreachable!() };
+    let (existing, rest) = s.split_mode3(2.max(nk / 8));
+    let existing = TensorData::Sparse(existing);
+
+    let cfg = SamBaTenConfig::new(ds.rank, 2, 4, 11);
+    let mut engine = SamBaTen::init(&existing, cfg)?;
+
+    // Stream day-by-day (batch = 1 slice) through the bounded pump.
+    let pump = StreamPump::spawn(TensorReplay::new(TensorData::Sparse(rest)), 1, true, 2)?;
+    let mut latencies = Vec::new();
+    while let Some(batch) = pump.next_batch() {
+        let stats = engine.ingest(&batch)?;
+        latencies.push(stats.seconds);
+        println!(
+            "day {:>3}: ingest {:.3}s (summary {:?}, ranks {:?})",
+            engine.model().factors[2].rows(),
+            stats.seconds,
+            stats.sample_dims[0],
+            stats.ranks_used
+        );
+    }
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = latencies[latencies.len() / 2];
+    let p99 = latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)];
+    let total: f64 = latencies.iter().sum();
+    println!("\n== serving report ==");
+    println!("days ingested    : {}", latencies.len());
+    println!("latency p50 / p99: {:.3}s / {:.3}s", p50, p99);
+    println!("throughput       : {:.2} slices/s", latencies.len() as f64 / total);
+    println!(
+        "final model      : rank {}, rel_err {:.4}",
+        engine.model().rank(),
+        relative_error(engine.tensor(), engine.model())
+    );
+    Ok(())
+}

@@ -1,0 +1,94 @@
+"""AOT lowering: JAX/Pallas ALS sweep → HLO text artifacts for the Rust
+PJRT runtime.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Emits one ``als_sweep_i{I}_j{J}_k{K}_r{R}.hlo.txt`` per shape-bank entry
+plus a ``manifest.tsv`` the Rust artifact registry reads.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import als_sweep
+
+# The shape bank: (I, J, K, R) executables compiled ahead of time. Samples
+# are zero-padded up to the smallest covering entry (exactness argument in
+# compile/model.py). Kept deliberately small — each entry is one PJRT
+# compilation at Rust start-up.
+SHAPE_BANK = [
+    (16, 16, 16, 4),
+    (32, 32, 32, 4),
+    (32, 32, 32, 8),
+    (64, 64, 64, 4),
+    (64, 64, 64, 8),
+    (96, 96, 96, 8),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the Rust
+    side unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(i, j, k, r) -> str:
+    spec_x = jax.ShapeDtypeStruct((i, j, k), jnp.float32)
+    spec_a = jax.ShapeDtypeStruct((i, r), jnp.float32)
+    spec_b = jax.ShapeDtypeStruct((j, r), jnp.float32)
+    spec_c = jax.ShapeDtypeStruct((k, r), jnp.float32)
+    # keep_unused: the sweep overwrites `a` before reading it, so jit would
+    # otherwise drop parameter 1 and break the Rust side's 4-buffer call.
+    lowered = jax.jit(als_sweep, keep_unused=True).lower(spec_x, spec_a, spec_b, spec_c)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--bank",
+        default=None,
+        help="comma-separated I:J:K:R entries overriding the default bank",
+    )
+    args = ap.parse_args()
+    bank = SHAPE_BANK
+    if args.bank:
+        bank = []
+        for entry in args.bank.split(","):
+            i, j, k, r = (int(v) for v in entry.split(":"))
+            bank.append((i, j, k, r))
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for i, j, k, r in bank:
+        name = f"als_sweep_i{i}_j{j}_k{k}_r{r}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_entry(i, j, k, r)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append((name, i, j, k, r))
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("# file\tI\tJ\tK\tR\n")
+        for name, i, j, k, r in manifest:
+            f.write(f"{name}\t{i}\t{j}\t{k}\t{r}\n")
+    print(f"manifest: {len(manifest)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Layer 1 — Pallas MTTKRP kernels.
+
+MTTKRP (matricized tensor times Khatri-Rao product) is the compute hot-spot
+of CP-ALS: for mode 1, ``M = X_(1) (C ⊙ B)``. The naive formulation
+materialises the ``IJ x R`` Khatri-Rao product; these kernels never do —
+each grid step contracts one frontal slice ``X[:, :, k]`` against the
+factor matrices directly:
+
+* mode 1: ``M += X[:,:,k] @ (B * C[k,:])``          (an I×J · J×R matmul)
+* mode 2: ``M += X[:,:,k].T @ (A * C[k,:])``        (a  J×I · I×R matmul)
+* mode 3: ``M[k,:] = sum_j (X[:,:,k].T @ A * B)_j`` (matmul + row reduce)
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates over the K
+mode so each step holds one I×J slice plus J×R / 1×R factor blocks in VMEM
+(BlockSpec expresses the HBM→VMEM schedule), and the contraction is shaped
+as a plain matmul so it lands on the MXU with R padded to the lane width.
+``interpret=True`` everywhere — the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is estimated analytically in
+EXPERIMENTS.md §Perf.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# interpret=True is mandatory on CPU; kept as a module switch so a real-TPU
+# build only has to flip it.
+INTERPRET = True
+
+
+def _mttkrp1_kernel(x_ref, b_ref, c_ref, o_ref):
+    """Grid step k: o += X[:,:,k] @ (B * C[k,:])."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x_k = x_ref[:, :, 0]  # (I, J)
+    scaled = b_ref[...] * c_ref[...]  # (J, R) * (1, R): broadcast over rows
+    o_ref[...] += jnp.dot(x_k, scaled, preferred_element_type=jnp.float32)
+
+
+def _mttkrp2_kernel(x_ref, a_ref, c_ref, o_ref):
+    """Grid step k: o += X[:,:,k].T @ (A * C[k,:])."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x_k = x_ref[:, :, 0]  # (I, J)
+    scaled = a_ref[...] * c_ref[...]  # (I, R)
+    o_ref[...] += jnp.dot(x_k.T, scaled, preferred_element_type=jnp.float32)
+
+
+def _mttkrp3_kernel(x_ref, a_ref, b_ref, o_ref):
+    """Grid step k: o[0,:] = sum_j ((X[:,:,k].T @ A) * B)[j,:]."""
+    x_k = x_ref[:, :, 0]  # (I, J)
+    t = jnp.dot(x_k.T, a_ref[...], preferred_element_type=jnp.float32)  # (J, R)
+    o_ref[...] = jnp.sum(t * b_ref[...], axis=0, keepdims=True)  # (1, R)
+
+
+def mttkrp(x, a, b, c, mode):
+    """MTTKRP of a dense third-order tensor for ``mode in {0, 1, 2}``.
+
+    ``x``: (I, J, K); ``a``: (I, R); ``b``: (J, R); ``c``: (K, R).
+    Returns (dim_mode, R). Factor matrices of the target mode are accepted
+    (and ignored) so call sites stay uniform.
+    """
+    i_dim, j_dim, k_dim = x.shape
+    r = a.shape[1]
+    if mode == 0:
+        return pl.pallas_call(
+            _mttkrp1_kernel,
+            grid=(k_dim,),
+            in_specs=[
+                pl.BlockSpec((i_dim, j_dim, 1), lambda k: (0, 0, k)),
+                pl.BlockSpec((j_dim, r), lambda k: (0, 0)),
+                pl.BlockSpec((1, r), lambda k: (k, 0)),
+            ],
+            out_specs=pl.BlockSpec((i_dim, r), lambda k: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((i_dim, r), x.dtype),
+            interpret=INTERPRET,
+        )(x, b, c)
+    if mode == 1:
+        return pl.pallas_call(
+            _mttkrp2_kernel,
+            grid=(k_dim,),
+            in_specs=[
+                pl.BlockSpec((i_dim, j_dim, 1), lambda k: (0, 0, k)),
+                pl.BlockSpec((i_dim, r), lambda k: (0, 0)),
+                pl.BlockSpec((1, r), lambda k: (k, 0)),
+            ],
+            out_specs=pl.BlockSpec((j_dim, r), lambda k: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((j_dim, r), x.dtype),
+            interpret=INTERPRET,
+        )(x, a, c)
+    if mode == 2:
+        return pl.pallas_call(
+            _mttkrp3_kernel,
+            grid=(k_dim,),
+            in_specs=[
+                pl.BlockSpec((i_dim, j_dim, 1), lambda k: (0, 0, k)),
+                pl.BlockSpec((i_dim, r), lambda k: (0, 0)),
+                pl.BlockSpec((j_dim, r), lambda k: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, r), lambda k: (k, 0)),
+            out_shape=jax.ShapeDtypeStruct((k_dim, r), x.dtype),
+            interpret=INTERPRET,
+        )(x, a, b)
+    raise ValueError(f"mode {mode} out of range for a 3-mode tensor")
+
+
+mttkrp_jit = jax.jit(partial(mttkrp), static_argnames=("mode",))

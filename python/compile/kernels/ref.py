@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the Pallas kernels (the build-time correctness
+signal: pytest asserts kernel == ref to float tolerance).
+
+The reference is the *definitional* einsum — it shares no code path with
+the kernels' slice-wise contraction.
+"""
+
+import jax.numpy as jnp
+
+
+def khatri_rao(p, q):
+    """Column-wise Kronecker: (P ⊙ Q)[i*Jq + j, r] = P[i,r] * Q[j,r]."""
+    ip, r = p.shape
+    jq, r2 = q.shape
+    assert r == r2
+    return (p[:, None, :] * q[None, :, :]).reshape(ip * jq, r)
+
+
+def mttkrp_ref(x, a, b, c, mode):
+    """Definitional MTTKRP: M[d, r] = Σ X(i,j,k) · (other factors)."""
+    if mode == 0:
+        return jnp.einsum("ijk,jr,kr->ir", x, b, c)
+    if mode == 1:
+        return jnp.einsum("ijk,ir,kr->jr", x, a, c)
+    if mode == 2:
+        return jnp.einsum("ijk,ir,jr->kr", x, a, b)
+    raise ValueError(mode)
+
+
+def als_sweep_ref(x, a, b, c, eps=1e-8):
+    """Reference ALS sweep (same math as model.als_sweep, no Pallas)."""
+    r = a.shape[1]
+    eye = jnp.eye(r, dtype=x.dtype)
+
+    def solve(gram, m):
+        scale = jnp.trace(gram) / r + 1.0
+        return jnp.linalg.solve(gram + eps * scale * eye, m.T).T
+
+    m0 = mttkrp_ref(x, a, b, c, 0)
+    a = solve((b.T @ b) * (c.T @ c), m0)
+    m1 = mttkrp_ref(x, a, b, c, 1)
+    b = solve((a.T @ a) * (c.T @ c), m1)
+    m2 = mttkrp_ref(x, a, b, c, 2)
+    c = solve((a.T @ a) * (b.T @ b), m2)
+    # Same rebalancing convention as model.als_sweep.
+    na = jnp.linalg.norm(a, axis=0)
+    nb = jnp.linalg.norm(b, axis=0)
+    sa = jnp.where(na > 0, na, 1.0)
+    sb = jnp.where(nb > 0, nb, 1.0)
+    return a / sa, b / sb, c * (sa * sb)
+
+
+def cp_reconstruct(a, b, c):
+    """Dense reconstruction sum_r a_r ∘ b_r ∘ c_r."""
+    return jnp.einsum("ir,jr,kr->ijk", a, b, c)

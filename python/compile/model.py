@@ -1,0 +1,91 @@
+"""Layer 2 — the JAX compute graph: one full CP-ALS sweep.
+
+``als_sweep`` performs the three mode updates of CP-ALS, each built from the
+Layer-1 Pallas MTTKRP kernel plus a ridge-regularised Cholesky-backed solve
+of the R×R Gram-Hadamard system. It deliberately does **not** normalise
+factor columns: the Rust coordinator runs N sweeps by feeding outputs back
+as inputs, then canonicalises (unit columns, weights in λ) once at the end.
+
+Zero-padding contract (what lets fixed AOT shapes serve dynamic samples):
+padding X with zero slices/rows and the factors with zero rows keeps every
+real row's update bit-identical and padded rows stay exactly zero. Padding
+*rank* with zero columns is also safe because the ridge keeps the Gram
+system solvable and maps zero MTTKRP columns to zero solution columns.
+Property-tested in python/tests/test_model.py and rust runtime tests.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.mttkrp import mttkrp
+
+# Ridge scale: relative to mean Gram diagonal, so padded/rank-deficient
+# systems stay solvable without perturbing well-conditioned ones noticeably.
+EPS = 1e-8
+
+
+def _inv_spd(g):
+    """Inverse of a tiny SPD matrix via unrolled Gauss-Jordan.
+
+    ``jnp.linalg``/``jax.scipy`` solves lower to LAPACK custom-calls on CPU
+    (API_VERSION_TYPED_FFI) which the Rust side's xla_extension 0.5.1
+    rejects; this unrolled elimination emits pure HLO ops. R ≤ 8 and the
+    ridge keeps the system diagonally healthy, so no pivoting is needed.
+    """
+    r = g.shape[0]
+    aug = jnp.concatenate([g, jnp.eye(r, dtype=g.dtype)], axis=1)
+    for t in range(r):
+        row = aug[t] / aug[t, t]
+        aug = aug - jnp.outer(aug[:, t], row)
+        aug = aug.at[t].set(row)
+    return aug[:, r:]
+
+
+def _solve(gram, m):
+    """Solve F · gram = m row-wise with relative ridge."""
+    r = gram.shape[0]
+    scale = jnp.trace(gram) / r + 1.0
+    reg = gram + EPS * scale * jnp.eye(r, dtype=gram.dtype)
+    return m @ _inv_spd(reg)
+
+
+def als_sweep(x, a, b, c):
+    """One CP-ALS sweep over modes 1..3. Returns updated ``(a, b, c)``.
+
+    After the three updates, columns of ``a`` and ``b`` are rebalanced to
+    unit norm with the scale absorbed into ``c`` (the cp_als convention).
+    Without this, ALS regularly stalls in scaling swamps. Zero columns
+    (rank padding) are guarded and stay exactly zero, preserving the
+    padding contract.
+    """
+    m0 = mttkrp(x, a, b, c, 0)
+    a = _solve((b.T @ b) * (c.T @ c), m0)
+    m1 = mttkrp(x, a, b, c, 1)
+    b = _solve((a.T @ a) * (c.T @ c), m1)
+    m2 = mttkrp(x, a, b, c, 2)
+    c = _solve((a.T @ a) * (b.T @ b), m2)
+    na = jnp.linalg.norm(a, axis=0)
+    nb = jnp.linalg.norm(b, axis=0)
+    sa = jnp.where(na > 0, na, 1.0)
+    sb = jnp.where(nb > 0, nb, 1.0)
+    a = a / sa
+    b = b / sb
+    c = c * (sa * sb)
+    return a, b, c
+
+
+def als_sweeps(x, a, b, c, n):
+    """``n`` sweeps via lax.fori_loop (single fused HLO; used when the
+    caller wants a fixed iteration count baked into one executable)."""
+
+    def body(_, abc):
+        return als_sweep(x, *abc)
+
+    return jax.lax.fori_loop(0, n, body, (a, b, c))
+
+
+def cp_loss(x, a, b, c):
+    """Squared Frobenius reconstruction error (diagnostics)."""
+    rec = jnp.einsum("ir,jr,kr->ijk", a, b, c)
+    d = x - rec
+    return jnp.sum(d * d)

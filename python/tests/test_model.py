@@ -1,0 +1,128 @@
+"""Layer-2 correctness: the ALS sweep (model.py) against the reference
+sweep, convergence behaviour, and the zero-padding contract the AOT shape
+bank depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import als_sweep_ref, cp_reconstruct
+from compile.model import als_sweep, als_sweeps, cp_loss
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def low_rank_tensor(i, j, k, r, seed=0, noise=0.0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((i, r)).astype(np.float32)
+    b = rng.standard_normal((j, r)).astype(np.float32)
+    c = rng.standard_normal((k, r)).astype(np.float32)
+    x = np.einsum("ir,jr,kr->ijk", a, b, c)
+    if noise:
+        x = x + noise * rng.standard_normal(x.shape).astype(np.float32)
+    return jnp.asarray(x)
+
+
+def rand_factors(i, j, k, r, seed=1):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(rng.uniform(size=(i, r)), dtype=jnp.float32),
+        jnp.asarray(rng.uniform(size=(j, r)), dtype=jnp.float32),
+        jnp.asarray(rng.uniform(size=(k, r)), dtype=jnp.float32),
+    )
+
+
+def test_sweep_matches_reference_sweep():
+    x = low_rank_tensor(6, 7, 5, 2, seed=3)
+    a, b, c = rand_factors(6, 7, 5, 2, seed=4)
+    ga, gb, gc = als_sweep(x, a, b, c)
+    ra, rb, rc = als_sweep_ref(x, a, b, c)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ra), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(rb), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(gc), np.asarray(rc), rtol=2e-3, atol=2e-3)
+
+
+def test_sweeps_decrease_loss_monotonically():
+    x = low_rank_tensor(8, 8, 8, 3, seed=5, noise=0.05)
+    a, b, c = rand_factors(8, 8, 8, 3, seed=6)
+    losses = [float(cp_loss(x, a, b, c))]
+    for _ in range(8):
+        a, b, c = als_sweep(x, a, b, c)
+        losses.append(float(cp_loss(x, a, b, c)))
+    for before, after in zip(losses, losses[1:]):
+        assert after <= before * (1 + 1e-5), losses
+
+
+def test_converges_to_exact_fit_on_low_rank():
+    # Gaussian init: all-positive uniform inits can land ALS in a known slow
+    # swamp on mixed-sign data (sign flips take hundreds of sweeps).
+    rng = np.random.default_rng(8)
+    x = low_rank_tensor(8, 8, 8, 2, seed=7)
+    a = jnp.asarray(rng.standard_normal((8, 2)), dtype=jnp.float32)
+    b = jnp.asarray(rng.standard_normal((8, 2)), dtype=jnp.float32)
+    c = jnp.asarray(rng.standard_normal((8, 2)), dtype=jnp.float32)
+    for _ in range(30):
+        a, b, c = als_sweep(x, a, b, c)
+    rel = float(jnp.sqrt(cp_loss(x, a, b, c)) / jnp.linalg.norm(x.ravel()))
+    assert rel < 1e-2, rel
+
+
+def test_als_sweeps_fori_matches_python_loop():
+    x = low_rank_tensor(6, 6, 6, 2, seed=9)
+    a0, b0, c0 = rand_factors(6, 6, 6, 2, seed=10)
+    a, b, c = a0, b0, c0
+    for _ in range(4):
+        a, b, c = als_sweep(x, a, b, c)
+    fa, fb, fc = als_sweeps(x, a0, b0, c0, 4)
+    np.testing.assert_allclose(np.asarray(fa), np.asarray(a), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fc), np.asarray(c), rtol=1e-4, atol=1e-4)
+
+
+def test_zero_padding_exactness_full_sweep():
+    """THE shape-bank contract: a sweep on the zero-padded problem must equal
+    the sweep on the unpadded problem on real indices, and keep padding zero.
+    Covers dim padding AND rank padding."""
+    i, j, k, r = 6, 5, 4, 2
+    x = low_rank_tensor(i, j, k, r, seed=11, noise=0.1)
+    a, b, c = rand_factors(i, j, k, r, seed=12)
+    pi, pj, pk, pr = 8, 8, 8, 4
+    xp = jnp.zeros((pi, pj, pk), jnp.float32).at[:i, :j, :k].set(x)
+    ap = jnp.zeros((pi, pr), jnp.float32).at[:i, :r].set(a)
+    bp = jnp.zeros((pj, pr), jnp.float32).at[:j, :r].set(b)
+    cp = jnp.zeros((pk, pr), jnp.float32).at[:k, :r].set(c)
+    for _ in range(3):
+        a, b, c = als_sweep(x, a, b, c)
+        ap, bp, cp = als_sweep(xp, ap, bp, cp)
+    np.testing.assert_allclose(np.asarray(ap[:i, :r]), np.asarray(a), rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(bp[:j, :r]), np.asarray(b), rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(cp[:k, :r]), np.asarray(c), rtol=5e-3, atol=5e-3)
+    # Padded rows and rank columns stay (near-)zero.
+    np.testing.assert_allclose(np.asarray(ap[i:]), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ap[:, r:]), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cp[k:]), 0.0, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    i=st.integers(min_value=2, max_value=10),
+    r=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_sweep_never_nan_hypothesis(i, r, seed):
+    """Robustness sweep: the ridge must keep every system solvable, even for
+    overfactored random data."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((i, i, i)), dtype=jnp.float32)
+    a, b, c = rand_factors(i, i, i, r, seed=seed % 1000)
+    for _ in range(3):
+        a, b, c = als_sweep(x, a, b, c)
+    assert np.isfinite(np.asarray(a)).all()
+    assert np.isfinite(np.asarray(b)).all()
+    assert np.isfinite(np.asarray(c)).all()
+
+
+def test_reconstruction_shape():
+    a, b, c = rand_factors(3, 4, 5, 2, seed=13)
+    assert cp_reconstruct(a, b, c).shape == (3, 4, 5)

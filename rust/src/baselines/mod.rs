@@ -1,0 +1,107 @@
+//! The four baselines of §IV-C, re-implemented from their source papers'
+//! update equations (the original code drops are Matlab):
+//!
+//! * [`CpAlsFull`] — re-run `CP_ALS` from scratch on every update (the
+//!   non-incremental reference).
+//! * [`OnlineCp`] — Zhou et al., KDD 2016: auxiliary `P`/`Q` accumulators,
+//!   closed-form `C_new`, one-solve updates for `A`, `B`.
+//! * [`Sdt`] — Nion & Sidiropoulos, IEEE TSP 2009: incremental SVD tracking
+//!   of the mode-3 unfolding + Khatri-Rao structuring of the right factor.
+//! * [`Rlst`] — Nion & Sidiropoulos, IEEE TSP 2009: recursive least squares
+//!   tracking of `C` and `D = (B ⊙ A)`.
+//!
+//! All of them share the [`IncrementalDecomposer`] trait with the SamBaTen
+//! engine wrapper so the evaluation harness treats every method uniformly.
+//! Note all four baselines operate on **dense unfoldings** — exactly like
+//! the paper's baselines, which is why they stop scaling while SamBaTen
+//! keeps going (Tables IV-VI).
+
+pub mod cpals_full;
+pub mod onlinecp;
+pub mod rlst;
+pub mod sdt;
+
+pub use cpals_full::CpAlsFull;
+pub use onlinecp::OnlineCp;
+pub use rlst::Rlst;
+pub use sdt::Sdt;
+
+use crate::cp::CpModel;
+use crate::tensor::TensorData;
+use anyhow::Result;
+
+/// A method that maintains a CP decomposition of a tensor growing in mode 3.
+pub trait IncrementalDecomposer: Send {
+    /// Method name as reported in tables.
+    fn name(&self) -> &'static str;
+
+    /// Ingest a batch of new slices.
+    fn ingest(&mut self, x_new: &TensorData) -> Result<()>;
+
+    /// Current model estimate.
+    fn model(&self) -> CpModel;
+
+    /// Whether the method exploits sparsity (only SamBaTen and — partially —
+    /// repeated CP_ALS do; see §IV-D.1).
+    fn exploits_sparsity(&self) -> bool {
+        false
+    }
+}
+
+/// Wrapper making the SamBaTen engine an [`IncrementalDecomposer`] so the
+/// harness can run it side by side with the baselines.
+pub struct SamBaTenMethod(pub crate::coordinator::SamBaTen);
+
+impl IncrementalDecomposer for SamBaTenMethod {
+    fn name(&self) -> &'static str {
+        "SamBaTen"
+    }
+    fn ingest(&mut self, x_new: &TensorData) -> Result<()> {
+        self.0.ingest(x_new).map(|_| ())
+    }
+    fn model(&self) -> CpModel {
+        self.0.model().clone()
+    }
+    fn exploits_sparsity(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{SamBaTen, SamBaTenConfig};
+    use crate::datagen::SyntheticSpec;
+    use crate::metrics::relative_error;
+
+    /// Every method, fed the same stream, must track the tensor reasonably.
+    #[test]
+    fn all_methods_track_a_clean_low_rank_stream() {
+        let spec = SyntheticSpec::dense(12, 12, 16, 2, 0.01, 21);
+        let (existing, batches, _) = spec.generate_stream(0.4, 4);
+        let (full, _) = spec.generate();
+        let mut methods: Vec<Box<dyn IncrementalDecomposer>> = vec![
+            Box::new(CpAlsFull::init(&existing, 2, 11).unwrap()),
+            Box::new(OnlineCp::init(&existing, 2, 12).unwrap()),
+            Box::new(Sdt::init(&existing, 2, 13).unwrap()),
+            Box::new(Rlst::init(&existing, 2, 14).unwrap()),
+            Box::new(SamBaTenMethod(
+                SamBaTen::init(&existing, SamBaTenConfig::new(2, 2, 4, 15)).unwrap(),
+            )),
+        ];
+        for m in &mut methods {
+            for b in &batches {
+                m.ingest(b).unwrap();
+            }
+            let re = relative_error(&full, &m.model());
+            let bound = match m.name() {
+                // Tracking methods are less accurate — the paper observes
+                // the same (SDT/RLST roughly half the fitness of others).
+                "SDT" | "RLST" => 0.75,
+                _ => 0.4,
+            };
+            assert!(re < bound, "{}: relative error {re}", m.name());
+            assert_eq!(m.model().factors[2].rows(), 16, "{}", m.name());
+        }
+    }
+}

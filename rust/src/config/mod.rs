@@ -1,0 +1,187 @@
+//! Configuration system: a minimal TOML-subset parser (flat tables,
+//! strings/numbers/bools — the offline crate set has no `toml`/`serde`)
+//! plus the typed experiment configuration the CLI and eval harness share.
+
+pub mod toml_min;
+
+pub use toml_min::{TomlDoc, TomlValue};
+
+use crate::coordinator::SamBaTenConfig;
+use crate::cp::AlsOptions;
+use crate::matching::MatchPolicy;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Typed run configuration (`sambaten run --config run.toml`).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// CP rank `R`.
+    pub rank: usize,
+    /// Sampling factor `s`.
+    pub sampling_factor: usize,
+    /// Repetitions `r`.
+    pub repetitions: usize,
+    pub seed: u64,
+    pub batch_size: usize,
+    /// Fraction of mode-3 slices treated as pre-existing.
+    pub existing_frac: f64,
+    pub quality_control: bool,
+    pub refine_c: bool,
+    /// `hungarian` | `greedy`.
+    pub match_policy: String,
+    /// `native` | `pjrt`.
+    pub engine: String,
+    pub als_max_iters: usize,
+    pub als_tol: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            rank: 4,
+            sampling_factor: 2,
+            repetitions: 4,
+            seed: 42,
+            batch_size: 10,
+            existing_frac: 0.1,
+            quality_control: false,
+            refine_c: true,
+            match_policy: "hungarian".into(),
+            engine: "native".into(),
+            als_max_iters: 100,
+            als_tol: 1e-5,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from a TOML file; unknown keys are rejected (typo safety).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = RunConfig::default();
+        for (key, value) in doc.entries() {
+            match key.as_str() {
+                "rank" => cfg.rank = value.as_usize().context("rank")?,
+                "sampling_factor" => {
+                    cfg.sampling_factor = value.as_usize().context("sampling_factor")?
+                }
+                "repetitions" => cfg.repetitions = value.as_usize().context("repetitions")?,
+                "seed" => cfg.seed = value.as_usize().context("seed")? as u64,
+                "batch_size" => cfg.batch_size = value.as_usize().context("batch_size")?,
+                "existing_frac" => cfg.existing_frac = value.as_f64().context("existing_frac")?,
+                "quality_control" => {
+                    cfg.quality_control = value.as_bool().context("quality_control")?
+                }
+                "refine_c" => cfg.refine_c = value.as_bool().context("refine_c")?,
+                "match_policy" => cfg.match_policy = value.as_str().context("match_policy")?.into(),
+                "engine" => cfg.engine = value.as_str().context("engine")?.into(),
+                "als_max_iters" => cfg.als_max_iters = value.as_usize().context("als_max_iters")?,
+                "als_tol" => cfg.als_tol = value.as_f64().context("als_tol")?,
+                other => anyhow::bail!("unknown config key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.rank >= 1, "rank must be >= 1");
+        anyhow::ensure!(self.sampling_factor >= 1, "sampling_factor must be >= 1");
+        anyhow::ensure!(self.repetitions >= 1, "repetitions must be >= 1");
+        anyhow::ensure!(self.batch_size >= 1, "batch_size must be >= 1");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.existing_frac) && self.existing_frac > 0.0,
+            "existing_frac must be in (0, 1)"
+        );
+        anyhow::ensure!(
+            matches!(self.match_policy.as_str(), "hungarian" | "greedy"),
+            "match_policy must be hungarian|greedy"
+        );
+        anyhow::ensure!(
+            matches!(self.engine.as_str(), "native" | "pjrt"),
+            "engine must be native|pjrt"
+        );
+        Ok(())
+    }
+
+    /// Build the engine configuration (solver attached by the caller, which
+    /// knows whether a PJRT service is running).
+    pub fn to_engine_config(&self) -> SamBaTenConfig {
+        let mut cfg = SamBaTenConfig::new(self.rank, self.sampling_factor, self.repetitions, self.seed);
+        cfg.als = AlsOptions { max_iters: self.als_max_iters, tol: self.als_tol, ..Default::default() };
+        cfg.refine_c = self.refine_c;
+        cfg.match_policy = if self.match_policy == "greedy" {
+            MatchPolicy::Greedy
+        } else {
+            MatchPolicy::Hungarian
+        };
+        if self.quality_control {
+            cfg = cfg.with_quality_control(true);
+        }
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"
+# experiment config
+rank = 5
+sampling_factor = 10
+repetitions = 8
+seed = 7
+batch_size = 500
+existing_frac = 0.1
+quality_control = true
+refine_c = false
+match_policy = "greedy"
+engine = "pjrt"
+als_max_iters = 200
+als_tol = 1e-6
+"#;
+        let cfg = RunConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.rank, 5);
+        assert_eq!(cfg.sampling_factor, 10);
+        assert!(cfg.quality_control);
+        assert!(!cfg.refine_c);
+        assert_eq!(cfg.match_policy, "greedy");
+        assert_eq!(cfg.engine, "pjrt");
+        assert!((cfg.als_tol - 1e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(RunConfig::from_toml_str("rnak = 5\n").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(RunConfig::from_toml_str("rank = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("existing_frac = 1.5\n").is_err());
+        assert!(RunConfig::from_toml_str("engine = \"gpu\"\n").is_err());
+    }
+
+    #[test]
+    fn engine_config_mapping() {
+        let cfg = RunConfig { rank: 3, repetitions: 5, match_policy: "greedy".into(), ..Default::default() };
+        let ec = cfg.to_engine_config();
+        assert_eq!(ec.rank, 3);
+        assert_eq!(ec.repetitions, 5);
+        assert_eq!(ec.match_policy, MatchPolicy::Greedy);
+    }
+}

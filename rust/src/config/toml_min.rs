@@ -1,0 +1,193 @@
+//! A minimal TOML-subset parser: flat `key = value` documents with
+//! strings, integers, floats and booleans; `#` comments; optional `[table]`
+//! headers flattened to `table.key`. Covers everything the run configs use
+//! (the offline crate set has no `toml` crate — DESIGN.md §4).
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(v) if *v >= 0 => Some(*v as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: ordered `(key, value)` pairs, table headers flattened
+/// as `table.key`.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: Vec<(String, TomlValue)>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        let mut prefix = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed table header {line:?}", ln + 1);
+                }
+                prefix = line[1..line.len() - 1].trim().to_string();
+                if prefix.is_empty() {
+                    bail!("line {}: empty table name", ln + 1);
+                }
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected key = value, got {line:?}", ln + 1);
+            };
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", ln + 1);
+            }
+            let full_key =
+                if prefix.is_empty() { key.to_string() } else { format!("{prefix}.{key}") };
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", ln + 1))?;
+            if entries.iter().any(|(k, _)| *k == full_key) {
+                bail!("line {}: duplicate key {full_key:?}", ln + 1);
+            }
+            entries.push((full_key, value));
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &(String, TomlValue)> {
+        self.entries.iter()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside a quoted string starts a comment.
+    let mut in_str = false;
+    for (idx, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..idx],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("missing value");
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            bail!("unterminated string {s:?}");
+        };
+        if inner.contains('"') {
+            bail!("embedded quotes unsupported in minimal TOML: {s:?}");
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    // Integer first (no '.', 'e', 'E'), then float.
+    if !s.contains(['.', 'e', 'E']) {
+        if let Ok(v) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(v));
+        }
+    }
+    if let Ok(v) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_kinds() {
+        let doc = TomlDoc::parse(
+            "s = \"hello\"\ni = 42\nf = 3.5\nneg = -7\nexp = 1e-5\nb = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("s").unwrap().as_str(), Some("hello"));
+        assert_eq!(doc.get("i").unwrap().as_usize(), Some(42));
+        assert_eq!(doc.get("f").unwrap().as_f64(), Some(3.5));
+        assert_eq!(doc.get("neg").unwrap(), &TomlValue::Int(-7));
+        assert_eq!(doc.get("exp").unwrap().as_f64(), Some(1e-5));
+        assert_eq!(doc.get("b").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn comments_stripped_but_not_inside_strings() {
+        let doc = TomlDoc::parse("a = 1 # comment\ns = \"x # y\"\n").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_usize(), Some(1));
+        assert_eq!(doc.get("s").unwrap().as_str(), Some("x # y"));
+    }
+
+    #[test]
+    fn tables_flatten() {
+        let doc = TomlDoc::parse("[als]\nmax_iters = 10\n[run]\nseed = 1\n").unwrap();
+        assert_eq!(doc.get("als.max_iters").unwrap().as_usize(), Some(10));
+        assert_eq!(doc.get("run.seed").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(TomlDoc::parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(TomlDoc::parse("just a line\n").is_err());
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("k = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn int_with_underscores() {
+        let doc = TomlDoc::parse("n = 1_000_000\n").unwrap();
+        assert_eq!(doc.get("n").unwrap().as_usize(), Some(1_000_000));
+    }
+}

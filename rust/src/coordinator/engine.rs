@@ -1,0 +1,457 @@
+//! The SamBaTen engine: owns the evolving model and tensor state, ingests
+//! batches of new slices and runs Algorithm 1 end to end, with the
+//! repetitions executed in parallel (§III-A: repetitions need no
+//! synchronisation until the final merge).
+
+use super::solver::{InnerSolver, NativeAlsSolver};
+use super::update::{normalize_sample_model, project_sample, ProjectedUpdate};
+use crate::cp::{cp_als, AlsOptions, CpModel};
+use crate::corcondia::{getrank, GetRankOptions};
+use crate::matching::{match_components, MatchPolicy};
+use crate::sampling::{draw_sample, Sample, SamplerConfig};
+use crate::tensor::{Tensor3, TensorData};
+use crate::util::{parallel_map, Rng, Stopwatch};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Configuration of the SamBaTen engine.
+#[derive(Clone)]
+pub struct SamBaTenConfig {
+    /// Universal rank `R`.
+    pub rank: usize,
+    /// Sampling factor `s` (each mode keeps `⌈dim/s⌉` indices).
+    pub sampling_factor: usize,
+    /// Optional distinct sampling factor for mode 3.
+    pub sampling_factor_mode3: Option<usize>,
+    /// Number of sampling repetitions `r`.
+    pub repetitions: usize,
+    /// Master seed — everything downstream is derived from it.
+    pub seed: u64,
+    /// ALS options for sample decompositions.
+    pub als: AlsOptions,
+    /// Quality control (§III-B): estimate `R_new` per sample via GETRANK.
+    pub quality_control: bool,
+    /// GETRANK options (used only when `quality_control`).
+    pub getrank: GetRankOptions,
+    /// Component matching policy.
+    pub match_policy: MatchPolicy,
+    /// Matches with aggregate congruence below this are dropped (a weak
+    /// match would pollute the factors — the same failure §III-B guards).
+    pub congruence_threshold: f64,
+    /// After the sample-space merge, refine the appended `C` rows with one
+    /// closed-form least-squares solve against the incoming batch
+    /// (`O(nnz(X_new)·R + R³)`, the same step OnlineCP performs). Stabilises
+    /// λ drift from sample-ALS local optima; ablated in
+    /// `benches/bench_ablation.rs`.
+    pub refine_c: bool,
+    /// Blend weight for non-zero `A`/`B`/`C_old` entries on sampled indices
+    /// (`0` = the paper's literal zero-fill-only rule; see
+    /// `update::merge_updates_with`).
+    pub blend: f64,
+    /// Inner decomposition engine (native ALS or PJRT AOT).
+    pub solver: Arc<dyn InnerSolver>,
+}
+
+impl std::fmt::Debug for SamBaTenConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SamBaTenConfig")
+            .field("rank", &self.rank)
+            .field("sampling_factor", &self.sampling_factor)
+            .field("repetitions", &self.repetitions)
+            .field("quality_control", &self.quality_control)
+            .field("solver", &self.solver.name())
+            .finish()
+    }
+}
+
+impl SamBaTenConfig {
+    /// `rank R`, `sampling factor s`, `repetitions r`, `seed`.
+    pub fn new(rank: usize, sampling_factor: usize, repetitions: usize, seed: u64) -> Self {
+        SamBaTenConfig {
+            rank,
+            sampling_factor,
+            sampling_factor_mode3: None,
+            repetitions,
+            seed,
+            als: AlsOptions { max_iters: 100, tol: 1e-5, ..Default::default() },
+            quality_control: false,
+            getrank: GetRankOptions::default(),
+            match_policy: MatchPolicy::Hungarian,
+            // Low hard gate: the blend weight already downweights weak
+            // matches quadratically, so the hard gate only needs to drop
+            // hopeless ones (tuned on dense/sparse/real-sim probes).
+            congruence_threshold: 0.25,
+            refine_c: true,
+            blend: 0.5,
+            solver: Arc::new(NativeAlsSolver),
+        }
+    }
+
+    pub fn with_quality_control(mut self, on: bool) -> Self {
+        self.quality_control = on;
+        self.getrank.max_rank = self.rank;
+        self
+    }
+
+    pub fn with_solver(mut self, solver: Arc<dyn InnerSolver>) -> Self {
+        self.solver = solver;
+        self
+    }
+}
+
+/// Per-batch diagnostics.
+#[derive(Clone, Debug)]
+pub struct BatchStats {
+    /// Wall-clock seconds for the whole ingest.
+    pub seconds: f64,
+    /// Sample tensor dims per repetition.
+    pub sample_dims: Vec<(usize, usize, usize)>,
+    /// Rank used per repetition (differs from `R` under quality control).
+    pub ranks_used: Vec<usize>,
+    /// Mean matching congruence per repetition.
+    pub mean_congruence: Vec<f64>,
+    /// Slices ingested.
+    pub k_new: usize,
+    /// CPU seconds summed over repetitions, per phase (sample extraction /
+    /// decomposition / matching+projection). With `w` worker threads the
+    /// wall-clock contribution is roughly `phase / min(w, r)`.
+    pub phase_sample_s: f64,
+    pub phase_decompose_s: f64,
+    pub phase_match_s: f64,
+    /// Wall-clock of the final single-threaded merge.
+    pub phase_merge_s: f64,
+}
+
+/// The incremental decomposition engine (Algorithm 1).
+pub struct SamBaTen {
+    cfg: SamBaTenConfig,
+    model: CpModel,
+    /// The tensor accumulated so far (sampling source).
+    x: TensorData,
+    rng: Rng,
+    /// History of per-batch stats.
+    history: Vec<BatchStats>,
+}
+
+impl SamBaTen {
+    /// Initialise from a pre-existing tensor: runs a full CP-ALS on it to
+    /// obtain the starting factors (the paper assumes "a pre-existing set of
+    /// decomposition results" — this constructor produces them).
+    pub fn init(x_old: &TensorData, cfg: SamBaTenConfig) -> Result<Self> {
+        let als = AlsOptions { seed: cfg.seed, ..cfg.als.clone() };
+        let (mut model, _) = cp_als(x_old, cfg.rank, &als).context("initial decomposition")?;
+        model.normalize();
+        Ok(Self::from_model(x_old.clone(), model, cfg))
+    }
+
+    /// Initialise from an existing decomposition (e.g. loaded from disk).
+    pub fn from_model(x_old: TensorData, mut model: CpModel, cfg: SamBaTenConfig) -> Self {
+        model.normalize();
+        let rng = Rng::new(cfg.seed ^ 0x5A3B_A7E9);
+        SamBaTen { cfg, model, x: x_old, rng, history: Vec::new() }
+    }
+
+    /// Current model (unit-norm columns, weights in λ).
+    pub fn model(&self) -> &CpModel {
+        &self.model
+    }
+
+    /// The accumulated tensor.
+    pub fn tensor(&self) -> &TensorData {
+        &self.x
+    }
+
+    pub fn history(&self) -> &[BatchStats] {
+        &self.history
+    }
+
+    pub fn config(&self) -> &SamBaTenConfig {
+        &self.cfg
+    }
+
+    /// Ingest a batch of new slices (Algorithm 1). Returns the batch stats.
+    pub fn ingest(&mut self, x_new: &TensorData) -> Result<BatchStats> {
+        let sw = Stopwatch::started();
+        let (ni, nj, k_old) = self.x.dims();
+        let (ni2, nj2, k_new) = x_new.dims();
+        anyhow::ensure!(
+            (ni, nj) == (ni2, nj2),
+            "batch modes 1-2 ({ni2}x{nj2}) must match existing tensor ({ni}x{nj})"
+        );
+        anyhow::ensure!(k_new > 0, "empty batch");
+        let reps = self.cfg.repetitions.max(1);
+        // Imbalanced-mode guard (§III-A: "different rates can be used for
+        // imbalanced modes"): if sampling mode 3 at factor s would leave the
+        // sample's C' with fewer than max(R, 4) old rows, the anchors cannot
+        // pin down a rank-R matching — keep the whole (shallow) time mode.
+        let s3 = self.cfg.sampling_factor_mode3.unwrap_or_else(|| {
+            let keep = k_old.div_ceil(self.cfg.sampling_factor);
+            if keep < self.cfg.rank.max(4) {
+                1
+            } else {
+                self.cfg.sampling_factor
+            }
+        });
+        let sampler = SamplerConfig {
+            factor: self.cfg.sampling_factor,
+            factor_mode3: Some(s3),
+        };
+        // Derive one RNG per repetition up front (sequential, deterministic),
+        // then run the repetitions fully in parallel.
+        let mut rep_rngs: Vec<Rng> = (0..reps).map(|i| self.rng.fork(i as u64)).collect();
+        let seeds: Vec<u64> = rep_rngs.iter_mut().map(|r| r.next_u64()).collect();
+        struct RepInput {
+            rng: Rng,
+            seed: u64,
+        }
+        let inputs: Vec<RepInput> = rep_rngs
+            .into_iter()
+            .zip(seeds)
+            .map(|(rng, seed)| RepInput { rng, seed })
+            .collect();
+        let cfg = &self.cfg;
+        let x = &self.x;
+        let model = &self.model;
+        type RepOut = (Sample, ProjectedUpdate, usize, f64, [f64; 3]);
+        let results: Vec<Result<RepOut>> = parallel_map(&inputs, |_, inp| {
+            let mut rng = inp.rng.clone();
+            // 1. Sample.
+            let t0 = std::time::Instant::now();
+            let sample = draw_sample(x, x_new, sampler, &mut rng);
+            let t_sample = t0.elapsed().as_secs_f64();
+            // 2. (optional) Quality control: estimate R_new.
+            let t0 = std::time::Instant::now();
+            let rank = if cfg.quality_control {
+                let mut gopts = cfg.getrank.clone();
+                gopts.max_rank = cfg.rank;
+                gopts.seed = inp.seed;
+                getrank(&sample.tensor, &gopts)?
+            } else {
+                cfg.rank
+            };
+            let rank = rank
+                .min(sample.is.len())
+                .min(sample.js.len())
+                .min(sample.ks_old.len() + sample.k_new)
+                .max(1);
+            // 3. Decompose the summary.
+            let mut model_s = cfg.solver.decompose(&sample.tensor, rank, &cfg.als, inp.seed)?;
+            normalize_sample_model(&mut model_s, sample.ks_old.len());
+            let t_decompose = t0.elapsed().as_secs_f64();
+            // 4. Match against the anchors (Lemma 1).
+            let t0 = std::time::Instant::now();
+            let anchors = [
+                model.factors[0].gather_rows(&sample.is),
+                model.factors[1].gather_rows(&sample.js),
+                model.factors[2].gather_rows(&sample.ks_old),
+            ];
+            let shared_rows: Vec<usize> = (0..sample.ks_old.len()).collect();
+            let shared = [
+                model_s.factors[0].clone(),
+                model_s.factors[1].clone(),
+                model_s.factors[2].gather_rows(&shared_rows),
+            ];
+            let mres = match_components(&anchors, &shared, cfg.match_policy);
+            let mean_cong = if mres.congruence.is_empty() {
+                0.0
+            } else {
+                mres.congruence.iter().sum::<f64>() / mres.congruence.len() as f64
+            };
+            // 5. Project into the global frame.
+            let upd = project_sample(model, &sample, &model_s, &mres, cfg.congruence_threshold);
+            let t_match = t0.elapsed().as_secs_f64();
+            Ok((sample, upd, rank, mean_cong, [t_sample, t_decompose, t_match]))
+        });
+        let mut samples = Vec::with_capacity(reps);
+        let mut updates = Vec::with_capacity(reps);
+        let mut ranks_used = Vec::with_capacity(reps);
+        let mut congruences = Vec::with_capacity(reps);
+        let mut sample_dims = Vec::with_capacity(reps);
+        let mut phases = [0.0f64; 3];
+        for r in results {
+            let (s, u, rank, cong, ph) = r?;
+            sample_dims.push(s.tensor.dims());
+            ranks_used.push(rank);
+            congruences.push(cong);
+            samples.push(s);
+            updates.push(u);
+            for (acc, p) in phases.iter_mut().zip(ph) {
+                *acc += p;
+            }
+        }
+        // 6. Merge into the global model (single synchronisation point).
+        let t0 = std::time::Instant::now();
+        super::update::merge_updates_with(&mut self.model, &samples, &updates, k_new, self.cfg.blend);
+        // 6b. Optional stabilisation: overwrite the appended C rows with the
+        // closed-form LS solution against the batch (A, B fixed).
+        if self.cfg.refine_c {
+            self.refine_new_c_rows(x_new, k_old, k_new)?;
+        }
+        // 7. Grow the accumulated tensor.
+        self.x.append_mode3(x_new);
+        let phase_merge_s = t0.elapsed().as_secs_f64();
+        debug_assert_eq!(self.model.factors[2].rows(), k_old + k_new);
+        let stats = BatchStats {
+            seconds: sw.elapsed_secs(),
+            sample_dims,
+            ranks_used,
+            mean_congruence: congruences,
+            k_new,
+            phase_sample_s: phases[0],
+            phase_decompose_s: phases[1],
+            phase_match_s: phases[2],
+            phase_merge_s,
+        };
+        self.history.push(stats.clone());
+        Ok(stats)
+    }
+
+    /// Closed-form LS for the new `C` rows with `A`, `B` fixed:
+    /// `Y = X_new(3)(B ⊙ Ã)[(ÃᵀÃ)∘(BᵀB)]⁻¹` with `Ã = A·diag(λ)`, written
+    /// into the appended rows, followed by re-canonicalisation.
+    fn refine_new_c_rows(&mut self, x_new: &TensorData, k_old: usize, k_new: usize) -> Result<()> {
+        let r = self.model.rank();
+        let mut a_scaled = self.model.factors[0].clone();
+        for t in 0..r {
+            a_scaled.scale_col(t, self.model.lambda[t]);
+        }
+        let b = &self.model.factors[1];
+        let m = x_new.mttkrp(2, &a_scaled, b, &self.model.factors[2]);
+        let g = a_scaled.gram().hadamard(&b.gram());
+        let y = crate::linalg::solve_gram_system(&g, &m)?;
+        for k in 0..k_new {
+            for t in 0..r {
+                self.model.factors[2][(k_old + k, t)] = y[(k, t)];
+            }
+        }
+        // Restore unit-norm columns, weights in λ.
+        let norms = self.model.factors[2].normalize_cols();
+        for t in 0..r {
+            if norms[t] > 0.0 {
+                self.model.lambda[t] *= norms[t];
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::SyntheticSpec;
+    use crate::metrics::relative_error;
+
+    fn run_stream(
+        spec: &SyntheticSpec,
+        cfg: SamBaTenConfig,
+        batch: usize,
+    ) -> (SamBaTen, TensorData) {
+        let (existing, batches, _) = spec.generate_stream(0.3, batch);
+        let mut engine = SamBaTen::init(&existing, cfg).unwrap();
+        for b in &batches {
+            engine.ingest(b).unwrap();
+        }
+        let (full, _) = spec.generate();
+        (engine, full)
+    }
+
+    #[test]
+    fn dense_incremental_tracks_full_tensor() {
+        let spec = SyntheticSpec::dense(16, 16, 20, 3, 0.02, 42);
+        let cfg = SamBaTenConfig::new(3, 2, 4, 7);
+        let (engine, full) = run_stream(&spec, cfg, 4);
+        let re = relative_error(&full, engine.model());
+        assert!(re < 0.35, "relative error {re}");
+        assert_eq!(engine.model().factors[2].rows(), 20);
+    }
+
+    #[test]
+    fn sparse_incremental_tracks_full_tensor() {
+        let spec = SyntheticSpec::sparse(16, 16, 20, 2, 0.6, 0.02, 43);
+        let cfg = SamBaTenConfig::new(2, 2, 6, 8);
+        let (engine, full) = run_stream(&spec, cfg, 5);
+        let re = relative_error(&full, engine.model());
+        // Uniformly-dropped support makes CP genuinely harder (missing
+        // entries act as zeros); the paper's sparse errors are ~2x the
+        // dense ones too (Table V vs IV).
+        assert!(re < 0.7, "relative error {re}");
+    }
+
+    #[test]
+    fn ingest_is_deterministic_given_seed() {
+        let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, 1);
+        let (existing, batches, _) = spec.generate_stream(0.5, 3);
+        let run = || {
+            let mut e = SamBaTen::init(&existing, SamBaTenConfig::new(2, 2, 2, 99)).unwrap();
+            for b in &batches {
+                e.ingest(b).unwrap();
+            }
+            e.model().clone()
+        };
+        let a = run();
+        let b = run();
+        assert!(a.factors[2].max_abs_diff(&b.factors[2]) < 1e-12);
+        assert_eq!(a.lambda, b.lambda);
+    }
+
+    #[test]
+    fn batch_stats_recorded() {
+        let spec = SyntheticSpec::dense(10, 10, 10, 2, 0.0, 2);
+        let (existing, batches, _) = spec.generate_stream(0.5, 5);
+        let mut e = SamBaTen::init(&existing, SamBaTenConfig::new(2, 2, 3, 5)).unwrap();
+        let stats = e.ingest(&batches[0]).unwrap();
+        assert_eq!(stats.k_new, 5);
+        assert_eq!(stats.ranks_used, vec![2, 2, 2]);
+        assert_eq!(stats.sample_dims.len(), 3);
+        assert_eq!(e.history().len(), 1);
+        assert!(stats.seconds > 0.0);
+    }
+
+    #[test]
+    fn mismatched_batch_modes_rejected() {
+        let spec = SyntheticSpec::dense(8, 8, 8, 2, 0.0, 3);
+        let (x, _) = spec.generate();
+        let mut e = SamBaTen::init(&x, SamBaTenConfig::new(2, 2, 2, 1)).unwrap();
+        let (bad, _) = SyntheticSpec::dense(9, 8, 2, 2, 0.0, 4).generate();
+        assert!(e.ingest(&bad).is_err());
+    }
+
+    #[test]
+    fn quality_control_engages_getrank() {
+        // Existing tensor rank 3; batch built from only 1 component —
+        // quality control should use a lower rank for some repetition.
+        let spec = SyntheticSpec::dense(12, 12, 12, 3, 0.0, 5);
+        let (existing, batches, _) = spec.generate_stream(0.7, 4);
+        let cfg = SamBaTenConfig::new(3, 2, 2, 6).with_quality_control(true);
+        let mut e = SamBaTen::init(&existing, cfg).unwrap();
+        let stats = e.ingest(&batches[0]).unwrap();
+        assert!(stats.ranks_used.iter().all(|&r| r >= 1 && r <= 3));
+    }
+
+    #[test]
+    fn singleton_batches_supported() {
+        let spec = SyntheticSpec::dense(10, 10, 8, 2, 0.0, 6);
+        let (existing, batches, _) = spec.generate_stream(0.5, 1);
+        let mut e = SamBaTen::init(&existing, SamBaTenConfig::new(2, 2, 2, 2)).unwrap();
+        for b in &batches {
+            assert_eq!(b.dims().2, 1);
+            e.ingest(b).unwrap();
+        }
+        assert_eq!(e.model().factors[2].rows(), 8);
+    }
+
+    #[test]
+    fn model_stays_canonical_after_ingests() {
+        let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.01, 7);
+        let cfg = SamBaTenConfig::new(2, 2, 3, 3);
+        let (engine, _) = run_stream(&spec, cfg, 4);
+        let m = engine.model();
+        for f in 0..3 {
+            for t in 0..m.rank() {
+                let n = m.factors[f].col_norm(t);
+                assert!((n - 1.0).abs() < 1e-8, "factor {f} col {t} norm {n}");
+            }
+        }
+        assert!(m.lambda.iter().all(|&l| l >= 0.0));
+    }
+}

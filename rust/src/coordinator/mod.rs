@@ -1,0 +1,23 @@
+//! The SamBaTen coordination engine — the paper's primary contribution
+//! (Algorithm 1), built as a long-lived incremental decomposer:
+//!
+//! 1. **Sample** — per repetition, draw MoI-biased index sets from the old
+//!    tensor and merge in *all* incoming slices ([`crate::sampling`]).
+//! 2. **Decompose** — CP-ALS on each summary, in parallel, through a
+//!    pluggable [`solver::InnerSolver`] (native Rust or the AOT-compiled
+//!    JAX/Pallas executable via PJRT).
+//! 3. **Project back** — undo permutation/scaling against the anchor rows
+//!    ([`crate::matching`]).
+//! 4. **Update** — fill zero entries of `A`,`B`,`C` on sampled indices,
+//!    average the new `C` rows across repetitions, append, update λ
+//!    ([`update`]).
+//!
+//! Quality control (§III-B) runs GETRANK on each summary and matches only
+//! the `R_new ≤ R` components that are actually present.
+
+pub mod engine;
+pub mod solver;
+pub mod update;
+
+pub use engine::{BatchStats, SamBaTen, SamBaTenConfig};
+pub use solver::{InnerSolver, NativeAlsSolver};

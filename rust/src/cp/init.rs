@@ -1,0 +1,87 @@
+//! Factor initialisation for ALS: random uniform (the Tensor-Toolbox default
+//! the paper uses) and an HOSVD-style spectral start (leading left singular
+//! vectors of each unfolding) for tough dense cases.
+
+use crate::linalg::{svd_truncated, Matrix};
+use crate::tensor::{Tensor3, TensorData};
+use crate::util::Rng;
+
+/// Initialisation strategy for [`crate::cp::cp_als`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitMethod {
+    /// I.i.d. uniform `[0,1)` entries (`cp_als` default in Tensor Toolbox).
+    Random,
+    /// Leading singular vectors of each mode unfolding (HOSVD-style).
+    Hosvd,
+}
+
+/// Produce `[A, B, C]` initial factors of rank `r`.
+pub fn init_factors(x: &TensorData, r: usize, method: InitMethod, rng: &mut Rng) -> [Matrix; 3] {
+    let (ni, nj, nk) = x.dims();
+    match method {
+        InitMethod::Random => [
+            Matrix::rand_uniform(ni, r, rng),
+            Matrix::rand_uniform(nj, r, rng),
+            Matrix::rand_uniform(nk, r, rng),
+        ],
+        InitMethod::Hosvd => {
+            let dense = x.to_dense();
+            let mut out = Vec::with_capacity(3);
+            for mode in 0..3 {
+                let unf = dense.unfold(mode);
+                let dim = unf.rows();
+                if r <= dim.min(unf.cols()) {
+                    let svd = svd_truncated(&unf, r);
+                    // Pad with random columns if the unfolding is rank-deficient.
+                    let mut m = svd.u;
+                    for t in 0..r {
+                        if svd.s[t] <= 1e-14 {
+                            for i in 0..dim {
+                                m[(i, t)] = rng.uniform();
+                            }
+                        }
+                    }
+                    out.push(m);
+                } else {
+                    out.push(Matrix::rand_uniform(dim, r, rng));
+                }
+            }
+            [out.remove(0), out.remove(0), out.remove(0)]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DenseTensor;
+
+    #[test]
+    fn random_init_shapes() {
+        let mut rng = Rng::new(1);
+        let x: TensorData = DenseTensor::rand(4, 5, 6, &mut rng).into();
+        let f = init_factors(&x, 3, InitMethod::Random, &mut rng);
+        assert_eq!((f[0].rows(), f[0].cols()), (4, 3));
+        assert_eq!((f[1].rows(), f[1].cols()), (5, 3));
+        assert_eq!((f[2].rows(), f[2].cols()), (6, 3));
+    }
+
+    #[test]
+    fn hosvd_init_orthonormal_when_possible() {
+        let mut rng = Rng::new(2);
+        let x: TensorData = DenseTensor::rand(6, 6, 6, &mut rng).into();
+        let f = init_factors(&x, 3, InitMethod::Hosvd, &mut rng);
+        for m in &f {
+            let g = m.gram();
+            assert!(g.max_abs_diff(&Matrix::identity(3)) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn hosvd_rank_exceeding_dim_falls_back() {
+        let mut rng = Rng::new(3);
+        let x: TensorData = DenseTensor::rand(2, 5, 5, &mut rng).into();
+        let f = init_factors(&x, 4, InitMethod::Hosvd, &mut rng);
+        assert_eq!((f[0].rows(), f[0].cols()), (2, 4));
+    }
+}

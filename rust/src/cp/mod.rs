@@ -1,0 +1,11 @@
+//! CP (CANDECOMP/PARAFAC) decomposition: the Kruskal model container and the
+//! Alternating Least Squares solver used both as the inner decomposition of
+//! SamBaTen (Algorithm 1, line 5) and as the `CP_ALS` recompute baseline.
+
+pub mod als;
+pub mod init;
+pub mod model;
+
+pub use als::{cp_als, AlsOptions, AlsReport};
+pub use init::{init_factors, InitMethod};
+pub use model::CpModel;

@@ -1,0 +1,239 @@
+//! The Kruskal model `[[λ; A, B, C]]` — a sum of `R` rank-one tensors.
+
+use crate::linalg::Matrix;
+use crate::tensor::{DenseTensor, Tensor3};
+
+/// A rank-`R` CP model of a third-order tensor:
+/// `X ≈ Σ_r λ_r · A(:,r) ∘ B(:,r) ∘ C(:,r)`.
+#[derive(Clone, Debug)]
+pub struct CpModel {
+    /// Factor matrices `[A (I×R), B (J×R), C (K×R)]`.
+    pub factors: [Matrix; 3],
+    /// Component weights, length `R`.
+    pub lambda: Vec<f64>,
+}
+
+impl CpModel {
+    pub fn new(a: Matrix, b: Matrix, c: Matrix, lambda: Vec<f64>) -> Self {
+        assert_eq!(a.cols(), b.cols());
+        assert_eq!(b.cols(), c.cols());
+        assert_eq!(lambda.len(), a.cols());
+        CpModel { factors: [a, b, c], lambda }
+    }
+
+    /// Rank (number of components).
+    pub fn rank(&self) -> usize {
+        self.lambda.len()
+    }
+
+    /// `(I, J, K)`.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.factors[0].rows(), self.factors[1].rows(), self.factors[2].rows())
+    }
+
+    /// Normalise every factor column to unit ℓ₂ norm, absorbing the scales
+    /// into `λ` (the canonical form the matching step relies on). Columns
+    /// with zero norm keep λ = 0.
+    pub fn normalize(&mut self) {
+        let r = self.rank();
+        for f in &mut self.factors {
+            let norms = f.normalize_cols();
+            for t in 0..r {
+                self.lambda[t] *= if norms[t] > 0.0 { norms[t] } else { 0.0 };
+            }
+        }
+    }
+
+    /// Reorder components so λ is descending (canonical presentation).
+    pub fn sort_components(&mut self) {
+        let r = self.rank();
+        let mut order: Vec<usize> = (0..r).collect();
+        order.sort_by(|&a, &b| self.lambda[b].partial_cmp(&self.lambda[a]).unwrap());
+        if order.iter().enumerate().all(|(i, &o)| i == o) {
+            return;
+        }
+        self.permute_components(&order);
+    }
+
+    /// Apply a component permutation: new column `t` = old column `perm[t]`.
+    pub fn permute_components(&mut self, perm: &[usize]) {
+        assert_eq!(perm.len(), self.rank());
+        for f in &mut self.factors {
+            *f = f.gather_cols(perm);
+        }
+        self.lambda = perm.iter().map(|&p| self.lambda[p]).collect();
+    }
+
+    /// Dense reconstruction `Σ_r λ_r a_r ∘ b_r ∘ c_r`.
+    pub fn to_dense(&self) -> DenseTensor {
+        let (ni, nj, nk) = self.dims();
+        let r = self.rank();
+        let (a, b, c) = (&self.factors[0], &self.factors[1], &self.factors[2]);
+        let mut out = DenseTensor::zeros(ni, nj, nk);
+        for k in 0..nk {
+            let ck = c.row(k);
+            for j in 0..nj {
+                let bj = b.row(j);
+                for i in 0..ni {
+                    let ai = a.row(i);
+                    let mut v = 0.0;
+                    for t in 0..r {
+                        v += self.lambda[t] * ai[t] * bj[t] * ck[t];
+                    }
+                    out.set(i, j, k, v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Single reconstructed entry.
+    pub fn entry(&self, i: usize, j: usize, k: usize) -> f64 {
+        let (a, b, c) = (&self.factors[0], &self.factors[1], &self.factors[2]);
+        let (ai, bj, ck) = (a.row(i), b.row(j), c.row(k));
+        (0..self.rank()).map(|t| self.lambda[t] * ai[t] * bj[t] * ck[t]).sum()
+    }
+
+    /// Squared Frobenius norm of the model, computed in `O(R²·(I+J+K))`
+    /// via `λᵀ ((AᵀA) .* (BᵀB) .* (CᵀC)) λ` — never materialises the tensor.
+    pub fn norm_sq(&self) -> f64 {
+        let g = self.factors[0]
+            .gram()
+            .hadamard(&self.factors[1].gram())
+            .hadamard(&self.factors[2].gram());
+        let gl = g.matvec(&self.lambda);
+        self.lambda.iter().zip(&gl).map(|(a, b)| a * b).sum()
+    }
+
+    /// `||X - X̂||²` against any tensor, computed without materialising `X̂`:
+    /// `||X||² - 2⟨X, X̂⟩ + ||X̂||²`. Clamped at 0 to absorb round-off.
+    pub fn residual_norm_sq<T: Tensor3 + ?Sized>(&self, x: &T) -> f64 {
+        let xn = x.norm();
+        let inner = x.inner_with_kruskal(
+            &self.lambda,
+            &self.factors[0],
+            &self.factors[1],
+            &self.factors[2],
+        );
+        (xn * xn - 2.0 * inner + self.norm_sq()).max(0.0)
+    }
+
+    /// Fit `1 - ||X - X̂|| / ||X||` (1 = perfect).
+    pub fn fit<T: Tensor3 + ?Sized>(&self, x: &T) -> f64 {
+        let xn = x.norm();
+        if xn == 0.0 {
+            return 0.0;
+        }
+        1.0 - self.residual_norm_sq(x).sqrt() / xn
+    }
+
+    /// Keep only the given components (used by GETRANK's truncated matching).
+    pub fn select_components(&self, keep: &[usize]) -> CpModel {
+        CpModel {
+            factors: [
+                self.factors[0].gather_cols(keep),
+                self.factors[1].gather_cols(keep),
+                self.factors[2].gather_cols(keep),
+            ],
+            lambda: keep.iter().map(|&t| self.lambda[t]).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_model(dims: (usize, usize, usize), r: usize, seed: u64) -> CpModel {
+        let mut rng = Rng::new(seed);
+        CpModel::new(
+            Matrix::rand_gaussian(dims.0, r, &mut rng),
+            Matrix::rand_gaussian(dims.1, r, &mut rng),
+            Matrix::rand_gaussian(dims.2, r, &mut rng),
+            (0..r).map(|_| 0.5 + rng.uniform()).collect(),
+        )
+    }
+
+    #[test]
+    fn norm_sq_matches_dense() {
+        let m = random_model((4, 5, 6), 3, 1);
+        let dense = m.to_dense();
+        assert!((m.norm_sq() - dense.norm_sq()).abs() / dense.norm_sq() < 1e-10);
+    }
+
+    #[test]
+    fn normalize_preserves_reconstruction() {
+        let mut m = random_model((3, 4, 5), 2, 2);
+        let before = m.to_dense();
+        m.normalize();
+        let after = m.to_dense();
+        for (x, y) in before.data().iter().zip(after.data()) {
+            assert!((x - y).abs() < 1e-10);
+        }
+        // Columns unit-norm now.
+        for f in &m.factors {
+            for t in 0..m.rank() {
+                assert!((f.col_norm(t) - 1.0).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn permute_preserves_reconstruction() {
+        let mut m = random_model((3, 3, 3), 3, 3);
+        let before = m.to_dense();
+        m.permute_components(&[2, 0, 1]);
+        let after = m.to_dense();
+        for (x, y) in before.data().iter().zip(after.data()) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn sort_components_descending() {
+        let mut m = random_model((3, 3, 3), 4, 4);
+        m.lambda = vec![0.1, 3.0, 1.0, 2.0];
+        m.sort_components();
+        assert_eq!(m.lambda, vec![3.0, 2.0, 1.0, 0.1]);
+    }
+
+    #[test]
+    fn perfect_fit_on_own_reconstruction() {
+        let m = random_model((4, 4, 4), 2, 5);
+        let x = m.to_dense();
+        assert!((m.fit(&x) - 1.0).abs() < 1e-7);
+        assert!(m.residual_norm_sq(&x) < 1e-9);
+    }
+
+    #[test]
+    fn residual_matches_explicit() {
+        let m = random_model((3, 4, 5), 2, 6);
+        let mut rng = Rng::new(7);
+        let x = crate::tensor::DenseTensor::rand(3, 4, 5, &mut rng);
+        let rec = m.to_dense();
+        let explicit: f64 = x
+            .data()
+            .iter()
+            .zip(rec.data())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        assert!((m.residual_norm_sq(&x) - explicit).abs() < 1e-8);
+    }
+
+    #[test]
+    fn entry_matches_dense() {
+        let m = random_model((3, 3, 3), 2, 8);
+        let d = m.to_dense();
+        assert!((m.entry(1, 2, 0) - d.get(1, 2, 0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn select_components_subsets() {
+        let m = random_model((3, 3, 3), 4, 9);
+        let s = m.select_components(&[1, 3]);
+        assert_eq!(s.rank(), 2);
+        assert_eq!(s.lambda, vec![m.lambda[1], m.lambda[3]]);
+        assert_eq!(s.factors[0].col(0), m.factors[0].col(1));
+    }
+}

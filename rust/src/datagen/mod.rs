@@ -1,0 +1,11 @@
+//! Workload generation: synthetic tensors with known ground-truth factors
+//! (§IV-A.1, Table II) and simulated real-world dataset streams matching the
+//! shape signatures of Table III (see DESIGN.md §4 for the substitution
+//! argument — the original FROSTT files are tens of GB and gated on
+//! bandwidth; `io::tns` loads the real files when present).
+
+pub mod real_sim;
+pub mod synthetic;
+
+pub use real_sim::{RealDatasetSim, REAL_DATASETS};
+pub use synthetic::SyntheticSpec;

@@ -1,0 +1,272 @@
+//! Simulated real-world dataset streams (Table III substitution).
+//!
+//! The paper evaluates on six FROSTT datasets up to 73 GB. Those files are
+//! not available in this environment, so each dataset is replaced by a
+//! synthetic sparse stream that preserves the *shape signature* that
+//! actually stresses the algorithms: mode-size ratios, density regime,
+//! batch size : time-mode ratio, and a low-rank-plus-noise latent structure
+//! concentrated on power-law-ish index popularity (real interaction data is
+//! heavy-tailed, which is what makes MoI sampling meaningful).
+//! A single `scale` knob shrinks all modes proportionally.
+//!
+//! When real FROSTT `.tns` files are on disk, `crate::io::tns` loads them
+//! directly and the eval harness prefers them.
+
+use crate::cp::CpModel;
+use crate::linalg::Matrix;
+use crate::tensor::{CooTensor, Tensor3, TensorData};
+use crate::util::Rng;
+
+/// Signature of a real dataset from Table III.
+#[derive(Clone, Debug)]
+pub struct RealDatasetSim {
+    pub name: &'static str,
+    /// Paper dimensions (for documentation/reporting).
+    pub paper_dims: (usize, usize, usize),
+    pub paper_nnz: u64,
+    /// Paper's batch size and sampling factor (Table III).
+    pub paper_batch: usize,
+    pub sampling_factor: usize,
+    /// Heavy-tail exponent for index popularity (larger = more skew).
+    pub skew: f64,
+    /// Latent rank used for the simulated structure.
+    pub rank: usize,
+}
+
+/// The six datasets of Table III.
+pub const REAL_DATASETS: &[RealDatasetSim] = &[
+    RealDatasetSim {
+        name: "NIPS",
+        paper_dims: (2482, 2862, 14036),
+        paper_nnz: 3_101_609,
+        paper_batch: 500,
+        sampling_factor: 10,
+        skew: 0.8,
+        rank: 5,
+    },
+    RealDatasetSim {
+        name: "NELL",
+        paper_dims: (12092, 9184, 28818),
+        paper_nnz: 76_879_419,
+        paper_batch: 500,
+        sampling_factor: 10,
+        skew: 1.0,
+        rank: 5,
+    },
+    RealDatasetSim {
+        name: "Facebook-wall",
+        paper_dims: (62891, 62891, 1070),
+        paper_nnz: 78_067_090,
+        paper_batch: 100,
+        sampling_factor: 5,
+        skew: 1.2,
+        rank: 5,
+    },
+    RealDatasetSim {
+        name: "Facebook-links",
+        paper_dims: (62891, 62891, 650),
+        paper_nnz: 263_544_295,
+        paper_batch: 50,
+        sampling_factor: 2,
+        skew: 1.2,
+        rank: 5,
+    },
+    RealDatasetSim {
+        name: "Patents",
+        paper_dims: (239172, 239172, 46),
+        paper_nnz: 3_596_640_708,
+        paper_batch: 10,
+        sampling_factor: 2,
+        skew: 1.1,
+        rank: 5,
+    },
+    RealDatasetSim {
+        name: "Amazon",
+        paper_dims: (4_821_207, 1_774_269, 1_805_187),
+        paper_nnz: 1_741_809_018,
+        paper_batch: 50_000,
+        sampling_factor: 20,
+        skew: 0.9,
+        rank: 5,
+    },
+];
+
+impl RealDatasetSim {
+    pub fn by_name(name: &str) -> Option<&'static RealDatasetSim> {
+        REAL_DATASETS.iter().find(|d| d.name.eq_ignore_ascii_case(name))
+    }
+
+    /// Scaled dimensions: each mode shrunk by `scale`. The *time* mode is
+    /// floored at min(paper K, 24) — an incremental experiment needs enough
+    /// slices for existing + a sequence of batches, and shrinking K below
+    /// that measures nothing (the entity modes floor at 8).
+    pub fn scaled_dims(&self, scale: f64) -> (usize, usize, usize) {
+        let f = |d: usize| ((d as f64 * scale).round() as usize).max(8);
+        let k_floor = self.paper_dims.2.min(24);
+        (
+            f(self.paper_dims.0),
+            f(self.paper_dims.1),
+            f(self.paper_dims.2).max(k_floor),
+        )
+    }
+
+    /// Scaled batch size, proportional to the time-mode shrink.
+    pub fn scaled_batch(&self, scale: f64) -> usize {
+        let k_scaled = self.scaled_dims(scale).2;
+        let frac = self.paper_batch as f64 / self.paper_dims.2 as f64;
+        ((k_scaled as f64 * frac).round() as usize).clamp(1, k_scaled / 2)
+    }
+
+    /// nnz at scale. Real-data density is *not* scale-invariant: shrinking a
+    /// heavy-tailed interaction tensor concentrates mass (fewer entities,
+    /// same per-entity activity), so we target a workable sparse fill of 4%
+    /// of the scaled volume, clamped to keep every simulated dataset in the
+    /// 10³–5·10⁵ nnz band this testbed handles.
+    pub fn scaled_nnz(&self, scale: f64) -> usize {
+        let (i, j, k) = self.scaled_dims(scale);
+        let vol = (i * j * k) as f64;
+        // 12% fill keeps rank-R CP identifiable inside s=2..5 samples
+        // (a sample holds vol/s³ entries but needs ≳ R·(dims/s) of them).
+        ((vol * 0.12).round() as usize).clamp(2_000, 500_000)
+    }
+
+    /// Generate the simulated tensor: low-rank heavy-tailed structure plus
+    /// noise, with support drawn from per-mode Zipf-like popularity.
+    /// Returns `(tensor, latent_model)`.
+    pub fn generate(&self, scale: f64, seed: u64) -> (TensorData, CpModel) {
+        let (ni, nj, nk) = self.scaled_dims(scale);
+        let nnz_target = self.scaled_nnz(scale);
+        let mut rng = Rng::new(seed ^ 0x5EED_DA7A);
+        // Latent factors: sparse-ish non-negative with popularity decay in
+        // modes 1/2 (entities), smooth drift in mode 3 (time).
+        let r = self.rank;
+        let pop_factor = |n: usize, rng: &mut Rng| {
+            Matrix::from_fn(n, r, |i, _| {
+                let pop = 1.0 / (1.0 + i as f64).powf(self.skew * 0.5);
+                pop * rng.uniform()
+            })
+        };
+        let a = pop_factor(ni, &mut rng);
+        let b = pop_factor(nj, &mut rng);
+        let c = Matrix::from_fn(nk, r, |k, t| {
+            // Smooth temporal drift per component.
+            let phase = (t as f64 + 1.0) * 0.7;
+            0.5 + 0.5 * ((k as f64 / nk as f64) * std::f64::consts::PI * phase).sin().abs()
+        });
+        let truth = CpModel::new(a, b, c, vec![1.0; r]);
+        // Zipf-ish samplers per mode via inverse-CDF on precomputed weights.
+        let cdf = |n: usize, skew: f64| -> Vec<f64> {
+            let mut w: Vec<f64> = (0..n).map(|i| 1.0 / (1.0 + i as f64).powf(skew)).collect();
+            let total: f64 = w.iter().sum();
+            let mut acc = 0.0;
+            for x in &mut w {
+                acc += *x / total;
+                *x = acc;
+            }
+            w
+        };
+        let (ci, cj) = (cdf(ni, self.skew), cdf(nj, self.skew));
+        let draw = |cdf: &[f64], rng: &mut Rng| -> usize {
+            let u = rng.uniform();
+            match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+                Ok(x) | Err(x) => x.min(cdf.len() - 1),
+            }
+        };
+        let mut coo = CooTensor::with_capacity(ni, nj, nk, nnz_target);
+        for _ in 0..nnz_target {
+            let i = draw(&ci, &mut rng);
+            let j = draw(&cj, &mut rng);
+            let k = rng.below(nk);
+            let v = truth.entry(i, j, k) + 0.05 * rng.gaussian();
+            // Count-like non-negative data.
+            coo.push(i, j, k, v.abs() + 0.01);
+        }
+        coo.coalesce();
+        (TensorData::Sparse(coo), truth)
+    }
+
+    /// Generate and split into existing (10%) + batches, matching the
+    /// paper's protocol (§IV-D.1).
+    pub fn generate_stream(
+        &self,
+        scale: f64,
+        seed: u64,
+    ) -> (TensorData, Vec<TensorData>, CpModel) {
+        let (full, truth) = self.generate(scale, seed);
+        let nk = full.dims().2;
+        // 10% existing like the paper, floored at 5 slices (at paper scale
+        // 10% is hundreds of slices; 1-2 is a shrink artifact).
+        let frac = 0.1f64.max(5.0 / nk as f64);
+        let k0 = ((nk as f64 * frac).round() as usize).clamp(1, nk - 1);
+        let batch = self.scaled_batch(scale);
+        let TensorData::Sparse(s) = &full else { unreachable!() };
+        let (existing, mut rest) = s.split_mode3(k0);
+        let mut batches = Vec::new();
+        while rest.dims().2 > 0 {
+            let take = batch.min(rest.dims().2);
+            let (head, tail) = rest.split_mode3(take);
+            batches.push(TensorData::Sparse(head));
+            rest = tail;
+        }
+        (TensorData::Sparse(existing), batches, truth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor3;
+
+    #[test]
+    fn all_six_datasets_present() {
+        assert_eq!(REAL_DATASETS.len(), 6);
+        assert!(RealDatasetSim::by_name("nips").is_some());
+        assert!(RealDatasetSim::by_name("Facebook-wall").is_some());
+        assert!(RealDatasetSim::by_name("nosuch").is_none());
+    }
+
+    #[test]
+    fn scaled_dims_preserve_ratios_roughly() {
+        let fb = RealDatasetSim::by_name("Facebook-wall").unwrap();
+        let (i, j, k) = fb.scaled_dims(0.002);
+        assert_eq!(i, j); // square user modes preserved
+        assert!(k < i); // shallow time mode preserved
+    }
+
+    #[test]
+    fn generate_produces_sparse_nonempty() {
+        let nips = RealDatasetSim::by_name("NIPS").unwrap();
+        let (x, _) = nips.generate(0.01, 1);
+        assert!(x.is_sparse());
+        assert!(x.nnz() > 100, "nnz {}", x.nnz());
+        let (i, j, k) = x.dims();
+        assert!(i >= 8 && j >= 8 && k >= 8);
+    }
+
+    #[test]
+    fn generate_deterministic() {
+        let nell = RealDatasetSim::by_name("NELL").unwrap();
+        let (x1, _) = nell.generate(0.003, 7);
+        let (x2, _) = nell.generate(0.003, 7);
+        assert_eq!(x1.nnz(), x2.nnz());
+        assert!((x1.norm() - x2.norm()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stream_covers_time_mode() {
+        let nips = RealDatasetSim::by_name("NIPS").unwrap();
+        let (existing, batches, _) = nips.generate_stream(0.005, 3);
+        let k_total =
+            existing.dims().2 + batches.iter().map(|b| b.dims().2).sum::<usize>();
+        assert_eq!(k_total, nips.scaled_dims(0.005).2);
+        assert!(!batches.is_empty());
+    }
+
+    #[test]
+    fn values_nonnegative_count_like() {
+        let pat = RealDatasetSim::by_name("Patents").unwrap();
+        let (x, _) = pat.generate(0.0005, 5);
+        let TensorData::Sparse(s) = &x else { unreachable!() };
+        assert!(s.values().iter().all(|&v| v > 0.0));
+    }
+}

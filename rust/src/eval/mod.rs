@@ -1,0 +1,55 @@
+//! Evaluation harness: one entry point per table/figure of the paper's
+//! §IV (the experiment index lives in DESIGN.md §3). Every experiment
+//! prints a paper-style table and writes a CSV under `results/`.
+//!
+//! Scaling: the paper's testbed is a 48-core Xeon running tensors up to
+//! 100K³; ours is CI-sized, so the dimension grids are shrunk while keeping
+//! the comparison shape (who wins, by what factor, who exceeds budget —
+//! budget overruns reproduce the paper's "N/A" cells).
+
+pub mod quality;
+pub mod real;
+pub mod runner;
+pub mod sweeps;
+pub mod synthetic;
+
+pub use runner::{EvalContext, MethodKind, StreamOutcome};
+
+use anyhow::Result;
+
+/// Run one experiment by id (`table2`, `table4`, ..., `fig11`, `all`).
+pub fn run_experiment(id: &str, ctx: &EvalContext) -> Result<()> {
+    match id {
+        "table2" => synthetic::table2(ctx),
+        "table4" => synthetic::table4(ctx).map(|_| ()),
+        "table5" => synthetic::table5(ctx).map(|_| ()),
+        "table6" => real::table6(ctx),
+        "table7" => quality::table7(ctx),
+        "table8" => quality::table8(ctx),
+        "fig1" => synthetic::fig1(ctx),
+        "fig5" => synthetic::fig5(ctx),
+        "fig6" => synthetic::fig6(ctx),
+        "fig7" => quality::fig7(ctx),
+        "fig8" => quality::fig8(ctx),
+        "fig9" => sweeps::fig9(ctx),
+        "fig10" => sweeps::fig10(ctx),
+        "fig11" => sweeps::fig11(ctx),
+        "all" => {
+            for id in EXPERIMENTS {
+                println!("\n=== {id} ===");
+                run_experiment(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?}; available: {} or `all`",
+            EXPERIMENTS.join(", ")
+        ),
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const EXPERIMENTS: &[&str] = &[
+    "table2", "table4", "table5", "table6", "table7", "table8", "fig1", "fig5", "fig6", "fig7",
+    "fig8", "fig9", "fig10", "fig11",
+];

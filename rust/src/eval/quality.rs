@@ -1,0 +1,274 @@
+//! Quality-control experiments: Tables VII/VIII and Figures 7/8 — the
+//! effect of GETRANK (§III-B) on FMS/fitness and its CPU-time overhead.
+
+use super::runner::{print_row, EvalContext};
+use crate::coordinator::{SamBaTen, SamBaTenConfig};
+use crate::datagen::{RealDatasetSim, SyntheticSpec};
+use crate::io::csv::{num, CsvWriter};
+use crate::metrics::{fms, relative_error};
+use crate::tensor::TensorData;
+use crate::util::Stopwatch;
+use anyhow::Result;
+
+/// Run SamBaTen on a stream with/without GETRANK; return
+/// `(seconds, fms_vs_truth, rel_err)` per variant.
+pub struct QcOutcome {
+    pub seconds: f64,
+    pub fms: f64,
+    pub rel_err: f64,
+}
+
+pub fn run_qc(
+    existing: &TensorData,
+    batches: &[TensorData],
+    full: &TensorData,
+    truth: &crate::cp::CpModel,
+    base_cfg: &SamBaTenConfig,
+    quality: bool,
+) -> Result<QcOutcome> {
+    let cfg = base_cfg.clone().with_quality_control(quality);
+    let mut engine = SamBaTen::init(existing, cfg)?;
+    let sw = Stopwatch::started();
+    for b in batches {
+        engine.ingest(b)?;
+    }
+    let seconds = sw.elapsed_secs();
+    let model = engine.model();
+    // FMS reference: synthetic streams have exact ground-truth factors; for
+    // simulated real data the generator's latent model is distorted by the
+    // count-like |·| transform, so — like the paper (§IV-D.2) — CP_ALS on
+    // the full tensor provides the reference components.
+    let reference = if existing.is_sparse() {
+        crate::cp::cp_als(
+            full,
+            base_cfg.rank,
+            &crate::cp::AlsOptions { seed: 3, ..Default::default() },
+        )?
+        .0
+    } else {
+        truth.clone()
+    };
+    Ok(QcOutcome { seconds, fms: fms(model, &reference), rel_err: relative_error(full, model) })
+}
+
+/// Rank-deficient stream: the existing tensor has rank R but the batches
+/// carry only `r_new < R` active components (the situation §III-B guards).
+/// Built by zeroing the last `R - r_new` columns' contribution on the
+/// streamed slices.
+fn deficient_stream(
+    dim: usize,
+    rank: usize,
+    r_new: usize,
+    batch: usize,
+    seed: u64,
+) -> (TensorData, Vec<TensorData>, TensorData, crate::cp::CpModel) {
+    let spec = SyntheticSpec::cube(dim, rank, 1.0, 0.02, seed);
+    let (full, truth) = spec.generate();
+    // Rebuild the tail slices from only the first r_new components.
+    let keep: Vec<usize> = (0..r_new).collect();
+    let partial = truth.select_components(&keep);
+    let k0 = (dim as f64 * 0.4).round() as usize;
+    let mut dense = full.to_dense();
+    let partial_dense = partial.to_dense();
+    for k in k0..dim {
+        for j in 0..dim {
+            for i in 0..dim {
+                dense.set(i, j, k, partial_dense.get(i, j, k));
+            }
+        }
+    }
+    let (existing, rest) = dense.split_mode3(k0);
+    let mut batches = Vec::new();
+    let mut rest = rest;
+    while rest.dims().2 > 0 {
+        let take = batch.min(rest.dims().2);
+        let (head, tail) = rest.split_mode3(take);
+        batches.push(TensorData::Dense(head));
+        rest = tail;
+    }
+    let mut full_acc: TensorData = existing.clone().into();
+    for b in &batches {
+        full_acc.append_mode3(b);
+    }
+    (existing.into(), batches, full_acc, truth)
+}
+
+use crate::tensor::{DenseTensor, Tensor3};
+// (DenseTensor used via deficient_stream's split; silence unused when cfg'd)
+#[allow(unused)]
+fn _t(_: &DenseTensor) {}
+
+/// Table VII: FMS with/without GETRANK across synthetic dimensions.
+pub fn table7(ctx: &EvalContext) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        &ctx.csv_path("table7.csv"),
+        &["dim", "variant", "fms", "seconds", "rel_err"],
+    )?;
+    // Paper dims 200..1000 (batch 50, s=2) → scaled.
+    let dims: Vec<usize> = [12, 16, 20, 24, 28].iter().map(|&d| ctx.dim(d)).collect();
+    println!("Table VII: FMS with vs without GETRANK (rank-deficient streams)");
+    let widths = [8, 14, 14];
+    print_row(&["I=J=K", "w/ GetRank", "w/o GetRank"].map(String::from), &widths);
+    for dim in dims {
+        let rank = 4;
+        let (existing, batches, full, truth) = deficient_stream(dim, rank, 2, dim / 4, 31);
+        let base = SamBaTenConfig::new(rank, 2, 3, 17);
+        let with = run_qc(&existing, &batches, &full, &truth, &base, true)?;
+        let without = run_qc(&existing, &batches, &full, &truth, &base, false)?;
+        print_row(
+            &[dim.to_string(), format!("{:.3}", with.fms), format!("{:.3}", without.fms)],
+            &widths,
+        );
+        for (variant, o) in [("with", &with), ("without", &without)] {
+            csv.row(&[
+                dim.to_string(),
+                variant.into(),
+                num(o.fms),
+                num(o.seconds),
+                num(o.rel_err),
+            ])?;
+        }
+    }
+    csv.flush()
+}
+
+/// Table VIII: FMS with/without GETRANK on NIPS/NELL sims over sampling
+/// factors (paper: s ∈ [2, 5, 10, 15, 20]; scaled dims force s ∈ [2, 3, 5]).
+pub fn table8(ctx: &EvalContext) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        &ctx.csv_path("table8.csv"),
+        &["dataset", "sampling_factor", "variant", "fms", "seconds"],
+    )?;
+    let s_values = [2usize, 3, 5];
+    println!("Table VIII: FMS w/ vs w/o GETRANK (NIPS/NELL sims), s sweep");
+    let widths = [10, 4, 14, 14];
+    print_row(&["dataset", "s", "w/ GetRank", "w/o GetRank"].map(String::from), &widths);
+    for name in ["NIPS", "NELL"] {
+        let ds = RealDatasetSim::by_name(name).unwrap();
+        let scale = super::real::sim_scale(name) * ctx.scale;
+        let (existing, batches, truth) = ds.generate_stream(scale, 53);
+        let mut full = existing.clone();
+        for b in &batches {
+            full.append_mode3(b);
+        }
+        for &s in &s_values {
+            let base = SamBaTenConfig::new(ds.rank, s, 3, 19);
+            let with = run_qc(&existing, &batches, &full, &truth, &base, true)?;
+            let without = run_qc(&existing, &batches, &full, &truth, &base, false)?;
+            print_row(
+                &[
+                    name.to_string(),
+                    s.to_string(),
+                    format!("{:.3}", with.fms),
+                    format!("{:.3}", without.fms),
+                ],
+                &widths,
+            );
+            for (variant, o) in [("with", &with), ("without", &without)] {
+                csv.row(&[
+                    name.into(),
+                    s.to_string(),
+                    variant.into(),
+                    num(o.fms),
+                    num(o.seconds),
+                ])?;
+            }
+        }
+    }
+    csv.flush()
+}
+
+/// Figure 7: GETRANK CPU-time overhead and fitness improvement, synthetic.
+pub fn fig7(ctx: &EvalContext) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        &ctx.csv_path("fig7.csv"),
+        &["dim", "variant", "seconds", "rel_err", "fms"],
+    )?;
+    let dims: Vec<usize> = [12, 16, 20, 24].iter().map(|&d| ctx.dim(d)).collect();
+    println!("Figure 7: GETRANK cost (s) and fitness improvement, synthetic (s=2)");
+    for dim in dims {
+        let (existing, batches, full, truth) = deficient_stream(dim, 4, 2, (dim / 4).max(2), 41);
+        let base = SamBaTenConfig::new(4, 2, 3, 23);
+        let with = run_qc(&existing, &batches, &full, &truth, &base, true)?;
+        let without = run_qc(&existing, &batches, &full, &truth, &base, false)?;
+        let improvement = (without.rel_err - with.rel_err) / without.rel_err.max(1e-12);
+        println!(
+            "  dim {dim:>4}: time w/ {:.2}s  w/o {:.2}s  | rel_err w/ {:.3} w/o {:.3}  (fitness improvement {:+.1}%)",
+            with.seconds, without.seconds, with.rel_err, without.rel_err, improvement * 100.0
+        );
+        for (variant, o) in [("with", &with), ("without", &without)] {
+            csv.row(&[dim.to_string(), variant.into(), num(o.seconds), num(o.rel_err), num(o.fms)])?;
+        }
+    }
+    csv.flush()
+}
+
+/// Figure 8: GETRANK cost + fitness on NIPS/NELL sims over sampling factor.
+pub fn fig8(ctx: &EvalContext) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        &ctx.csv_path("fig8.csv"),
+        &["dataset", "sampling_factor", "variant", "seconds", "rel_err"],
+    )?;
+    println!("Figure 8: GETRANK cost and fitness, NIPS/NELL sims, s sweep");
+    for name in ["NIPS", "NELL"] {
+        let ds = RealDatasetSim::by_name(name).unwrap();
+        let scale = super::real::sim_scale(name) * ctx.scale;
+        let (existing, batches, truth) = ds.generate_stream(scale, 59);
+        let mut full = existing.clone();
+        for b in &batches {
+            full.append_mode3(b);
+        }
+        for s in [2usize, 3, 5] {
+            let base = SamBaTenConfig::new(ds.rank, s, 3, 29);
+            let with = run_qc(&existing, &batches, &full, &truth, &base, true)?;
+            let without = run_qc(&existing, &batches, &full, &truth, &base, false)?;
+            println!(
+                "  {name} s={s}: w/ {:.2}s err {:.3} | w/o {:.2}s err {:.3}",
+                with.seconds, with.rel_err, without.seconds, without.rel_err
+            );
+            for (variant, o) in [("with", &with), ("without", &without)] {
+                csv.row(&[
+                    name.into(),
+                    s.to_string(),
+                    variant.into(),
+                    num(o.seconds),
+                    num(o.rel_err),
+                ])?;
+            }
+        }
+    }
+    csv.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deficient_stream_tail_is_low_rank() {
+        let (_, batches, _, truth) = deficient_stream(10, 3, 1, 3, 7);
+        // Batches reconstruct from 1 component only → a rank-1 CP fit should
+        // be near-exact on any batch.
+        let b = &batches[0];
+        let partial = truth.select_components(&[0]);
+        let err = crate::metrics::relative_error(b, &{
+            // Restrict partial's C rows to this batch's k-range: rebuild via
+            // fit quality instead — run rank-1 ALS.
+            let (m, _) = crate::cp::cp_als(b, 1, &crate::cp::AlsOptions::quick()).unwrap();
+            m
+        });
+        let _ = partial;
+        assert!(err < 0.1, "batch not rank-1: err {err}");
+    }
+
+    #[test]
+    fn qc_runs_both_variants() {
+        let (existing, batches, full, truth) = deficient_stream(10, 3, 2, 3, 9);
+        let base = SamBaTenConfig::new(3, 2, 2, 5);
+        let with = run_qc(&existing, &batches, &full, &truth, &base, true).unwrap();
+        let without = run_qc(&existing, &batches, &full, &truth, &base, false).unwrap();
+        assert!(with.seconds > 0.0 && without.seconds > 0.0);
+        assert!(with.fms >= 0.0 && with.fms <= 1.0);
+        assert!(without.rel_err.is_finite());
+    }
+}

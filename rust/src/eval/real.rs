@@ -1,0 +1,165 @@
+//! Table VI: CPU time and fitness on the (simulated) real datasets.
+//!
+//! Each of the six Table-III datasets is simulated at a per-dataset scale
+//! chosen so the *relative* difficulty ordering of the paper survives:
+//! NIPS/NELL are mid-size, the Facebook tensors have extreme mode
+//! imbalance, and Patents/Amazon are the heavyweights where only SamBaTen
+//! (and sometimes CP_ALS) finishes inside the budget. Real FROSTT `.tns`
+//! files are used instead when found under `data/` (io::tns).
+
+use super::runner::{print_row, run_stream, EvalContext, MethodKind, Workload};
+use crate::coordinator::SamBaTenConfig;
+use crate::datagen::{RealDatasetSim, REAL_DATASETS};
+use crate::io::csv::{num, CsvWriter};
+use crate::io::read_tns;
+use crate::tensor::{Tensor3, TensorData};
+use anyhow::Result;
+
+/// Per-dataset simulation scale (fraction of each paper mode length).
+/// Chosen so nnz lands in the 10³–10⁵ band — large enough to stress the
+/// dense baselines' IJ-sized unfoldings, small enough for CI hardware.
+/// Patents/Amazon get relatively *larger* scaled sizes so the budget
+/// separates them, as in the paper.
+pub fn sim_scale(name: &str) -> f64 {
+    match name {
+        "NIPS" => 0.010,
+        "NELL" => 0.004,
+        "Facebook-wall" => 0.0015,
+        "Facebook-links" => 0.0015,
+        "Patents" => 0.0006,
+        "Amazon" => 0.00003,
+        _ => 0.005,
+    }
+}
+
+/// The heavyweights where the paper reports every baseline as N/A. At our
+/// scale the budget produces the same pattern; we also skip SDT/RLST
+/// outright on them (their IJ×IJ trackers exceed memory sanity at any
+/// meaningful scale — same reason the paper lists N/A).
+fn methods_for(name: &str, ctx: &EvalContext) -> Vec<MethodKind> {
+    let _ = ctx;
+    match name {
+        "Patents" | "Amazon" => vec![MethodKind::CpAls, MethodKind::SamBaTen],
+        "Facebook-wall" | "Facebook-links" => vec![
+            MethodKind::CpAls,
+            MethodKind::OnlineCp,
+            MethodKind::SamBaTen,
+        ],
+        _ => MethodKind::ALL.to_vec(),
+    }
+}
+
+/// Build a workload for a (simulated or real) dataset.
+pub fn real_workload(ds: &RealDatasetSim, ctx: &EvalContext, seed: u64) -> Workload {
+    // Prefer a real FROSTT file when present.
+    let real_path = std::path::Path::new("data").join(format!("{}.tns", ds.name.to_lowercase()));
+    if real_path.exists() {
+        if let Ok(coo) = read_tns(&real_path, None) {
+            let full = TensorData::Sparse(coo);
+            let nk = full.dims().2;
+            let k0 = ((nk as f64 * 0.1).round() as usize).clamp(1, nk - 1);
+            let TensorData::Sparse(s) = &full else { unreachable!() };
+            let (existing, mut rest) = s.split_mode3(k0);
+            let batch = ds.scaled_batch(1.0).max(1);
+            let mut batches = Vec::new();
+            while rest.dims().2 > 0 {
+                let take = batch.min(rest.dims().2);
+                let (head, tail) = rest.split_mode3(take);
+                batches.push(TensorData::Sparse(head));
+                rest = tail;
+            }
+            return Workload {
+                existing: TensorData::Sparse(existing),
+                batches,
+                full,
+                truth: None,
+                rank: ds.rank,
+            };
+        }
+    }
+    let scale = sim_scale(ds.name) * ctx.scale;
+    let (existing, batches, truth) = ds.generate_stream(scale, seed);
+    let mut full = existing.clone();
+    for b in &batches {
+        full.append_mode3(b);
+    }
+    Workload { existing, batches, full, truth: Some(truth), rank: ds.rank }
+}
+
+/// Table VI: per-dataset CPU time and fitness (SamBaTen w.r.t. baselines).
+pub fn table6(ctx: &EvalContext) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        &ctx.csv_path("table6.csv"),
+        &["dataset", "method", "seconds", "rel_err", "fitness_vs_cpals", "completed"],
+    )?;
+    println!("Table VI (simulated real datasets): CPU time (s) / fitness vs CP_ALS");
+    let widths = [16, 10, 12, 12, 12, 12];
+    print_row(
+        &["dataset", "method", "seconds", "rel_err", "fitness", "dims"].map(String::from),
+        &widths,
+    );
+    for ds in REAL_DATASETS {
+        let w = real_workload(ds, ctx, 77);
+        let (ni, nj, nk) = w.full.dims();
+        // Paper sampling factors (up to 20) assume paper-size modes; cap so
+        // scaled samples keep ≥ 2R rows in the entity modes.
+        let s_dims = (ni.min(nj) / (2 * ds.rank)).max(2);
+        let s = ds.sampling_factor.min(3).min(s_dims).max(2);
+        let cfg = SamBaTenConfig::new(ds.rank, s, 4, 7);
+        let methods = methods_for(ds.name, ctx);
+        let outcomes = run_stream(&w, &methods, &cfg, ctx.budget_s)?;
+        for o in &outcomes {
+            print_row(
+                &[
+                    ds.name.to_string(),
+                    o.method.to_string(),
+                    if o.completed { format!("{:.2}", o.seconds) } else { "N/A".into() },
+                    if o.completed { format!("{:.3}", o.rel_err) } else { "N/A".into() },
+                    o.fitness_vs_cpals.map(|f| format!("{f:.3}")).unwrap_or_else(|| "-".into()),
+                    format!("{ni}x{nj}x{nk}"),
+                ],
+                &widths,
+            );
+            csv.row(&[
+                ds.name.into(),
+                o.method.into(),
+                num(o.seconds),
+                num(o.rel_err),
+                o.fitness_vs_cpals.map(num).unwrap_or_default(),
+                o.completed.to_string(),
+            ])?;
+        }
+    }
+    csv.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_defined_for_all_datasets() {
+        for ds in REAL_DATASETS {
+            assert!(sim_scale(ds.name) > 0.0, "{}", ds.name);
+        }
+    }
+
+    #[test]
+    fn workload_builds_for_nips() {
+        let ctx = EvalContext { scale: 0.5, ..Default::default() };
+        let ds = RealDatasetSim::by_name("NIPS").unwrap();
+        let w = real_workload(ds, &ctx, 3);
+        assert!(w.full.is_sparse());
+        assert!(!w.batches.is_empty());
+        let k_total: usize =
+            w.existing.dims().2 + w.batches.iter().map(|b| b.dims().2).sum::<usize>();
+        assert_eq!(k_total, w.full.dims().2);
+    }
+
+    #[test]
+    fn heavyweights_limit_method_set() {
+        let ctx = EvalContext::default();
+        assert_eq!(methods_for("Patents", &ctx).len(), 2);
+        assert_eq!(methods_for("NIPS", &ctx).len(), 5);
+    }
+}

@@ -1,0 +1,258 @@
+//! Shared machinery: evaluation context, the method zoo, and the
+//! stream-runner that feeds every method the same batches under a time
+//! budget (budget overruns become the paper's "N/A" cells).
+
+use crate::baselines::{CpAlsFull, IncrementalDecomposer, OnlineCp, Rlst, SamBaTenMethod, Sdt};
+use crate::coordinator::{SamBaTen, SamBaTenConfig};
+use crate::cp::CpModel;
+use crate::metrics::{fms, relative_error, relative_fitness};
+use crate::tensor::TensorData;
+use crate::util::Stopwatch;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Global knobs for an eval run.
+#[derive(Clone, Debug)]
+pub struct EvalContext {
+    /// Output directory for CSVs.
+    pub out_dir: PathBuf,
+    /// Repetitions per configuration (paper: 10; default kept low so the
+    /// whole suite runs in minutes — raise with `--iters`).
+    pub iters: usize,
+    /// Per-method time budget per workload, seconds ("N/A" beyond it).
+    pub budget_s: f64,
+    /// Dimension multiplier (1.0 = the default scaled grid).
+    pub scale: f64,
+    /// Use the PJRT solver for SamBaTen's sample decompositions when the
+    /// artifact bank is present.
+    pub use_pjrt: bool,
+}
+
+impl Default for EvalContext {
+    fn default() -> Self {
+        EvalContext {
+            out_dir: PathBuf::from("results"),
+            iters: 2,
+            budget_s: 60.0,
+            scale: 1.0,
+            use_pjrt: false,
+        }
+    }
+}
+
+impl EvalContext {
+    /// Scale a base dimension.
+    pub fn dim(&self, base: usize) -> usize {
+        ((base as f64 * self.scale).round() as usize).max(4)
+    }
+
+    pub fn csv_path(&self, name: &str) -> PathBuf {
+        self.out_dir.join(name)
+    }
+}
+
+/// Which methods to run on a workload.
+#[derive(Clone, Debug, PartialEq, Eq, Copy)]
+pub enum MethodKind {
+    CpAls,
+    OnlineCp,
+    Sdt,
+    Rlst,
+    SamBaTen,
+}
+
+impl MethodKind {
+    pub const ALL: [MethodKind; 5] = [
+        MethodKind::CpAls,
+        MethodKind::OnlineCp,
+        MethodKind::Sdt,
+        MethodKind::Rlst,
+        MethodKind::SamBaTen,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodKind::CpAls => "CP_ALS",
+            MethodKind::OnlineCp => "OnlineCP",
+            MethodKind::Sdt => "SDT",
+            MethodKind::Rlst => "RLST",
+            MethodKind::SamBaTen => "SamBaTen",
+        }
+    }
+}
+
+/// Outcome of one `(method, workload)` stream run.
+#[derive(Clone, Debug)]
+pub struct StreamOutcome {
+    pub method: &'static str,
+    /// Total ingest wall-clock (excludes the shared init decomposition).
+    pub seconds: f64,
+    pub rel_err: f64,
+    /// `‖X−X̂_m‖ / ‖X−X̂_CP_ALS‖` when CP_ALS completed.
+    pub fitness_vs_cpals: Option<f64>,
+    /// FMS against ground-truth factors when available.
+    pub fms_vs_truth: Option<f64>,
+    pub completed: bool,
+}
+
+impl StreamOutcome {
+    pub fn na(method: &'static str) -> Self {
+        StreamOutcome {
+            method,
+            seconds: f64::NAN,
+            rel_err: f64::NAN,
+            fitness_vs_cpals: None,
+            fms_vs_truth: None,
+            completed: false,
+        }
+    }
+}
+
+/// One synthetic/real workload expressed as a stream.
+pub struct Workload {
+    pub existing: TensorData,
+    pub batches: Vec<TensorData>,
+    pub full: TensorData,
+    pub truth: Option<CpModel>,
+    pub rank: usize,
+}
+
+/// Run `methods` over the workload. Every method gets the same stream; each
+/// is timed per-ingest and aborted (N/A) past `budget_s`. SamBaTen's engine
+/// configuration comes from `samba_cfg`.
+pub fn run_stream(
+    w: &Workload,
+    methods: &[MethodKind],
+    samba_cfg: &SamBaTenConfig,
+    budget_s: f64,
+) -> Result<Vec<StreamOutcome>> {
+    let mut outcomes = Vec::with_capacity(methods.len());
+    let mut cpals_model: Option<CpModel> = None;
+    // CP_ALS first so its model is available as the fitness baseline.
+    let mut ordered: Vec<MethodKind> = methods.to_vec();
+    ordered.sort_by_key(|m| if *m == MethodKind::CpAls { 0 } else { 1 });
+    for kind in ordered {
+        let built: Result<Box<dyn IncrementalDecomposer>> = (|| {
+            Ok(match kind {
+                MethodKind::CpAls => {
+                    Box::new(CpAlsFull::init(&w.existing, w.rank, 11)?) as Box<dyn IncrementalDecomposer>
+                }
+                MethodKind::OnlineCp => Box::new(OnlineCp::init(&w.existing, w.rank, 12)?),
+                MethodKind::Sdt => Box::new(Sdt::init(&w.existing, w.rank, 13)?),
+                MethodKind::Rlst => Box::new(Rlst::init(&w.existing, w.rank, 14)?),
+                MethodKind::SamBaTen => Box::new(SamBaTenMethod(SamBaTen::init(
+                    &w.existing,
+                    samba_cfg.clone(),
+                )?)),
+            })
+        })();
+        let mut method = match built {
+            Ok(m) => m,
+            Err(_) => {
+                outcomes.push(StreamOutcome::na(kind.name()));
+                continue;
+            }
+        };
+        let sw = Stopwatch::started();
+        let mut ok = true;
+        for b in &w.batches {
+            if method.ingest(b).is_err() || sw.elapsed_secs() > budget_s {
+                ok = false;
+                break;
+            }
+        }
+        let seconds = sw.elapsed_secs();
+        if !ok {
+            outcomes.push(StreamOutcome::na(kind.name()));
+            continue;
+        }
+        let model = method.model();
+        let rel_err = relative_error(&w.full, &model);
+        let fitness = cpals_model.as_ref().map(|base| relative_fitness(&w.full, &model, base));
+        let fms_v = w.truth.as_ref().map(|t| fms(&model, t));
+        if kind == MethodKind::CpAls {
+            cpals_model = Some(model);
+        }
+        outcomes.push(StreamOutcome {
+            method: kind.name(),
+            seconds,
+            rel_err,
+            fitness_vs_cpals: fitness,
+            fms_vs_truth: fms_v,
+            completed: true,
+        });
+    }
+    // Restore caller order.
+    let order_of = |name: &str| methods.iter().position(|m| m.name() == name).unwrap_or(usize::MAX);
+    outcomes.sort_by_key(|o| order_of(o.method));
+    Ok(outcomes)
+}
+
+/// Format `mean ± std` like the paper's tables ("N/A" for empty).
+pub fn pm(values: &[f64]) -> String {
+    let vals: Vec<f64> = values.iter().copied().filter(|v| v.is_finite()).collect();
+    if vals.is_empty() {
+        return "N/A".into();
+    }
+    let (m, s) = crate::metrics::mean_std(&vals);
+    format!("{m:.3} ± {s:.3}")
+}
+
+/// Print a fixed-width table row.
+pub fn print_row(cells: &[String], widths: &[usize]) {
+    let line: Vec<String> = cells
+        .iter()
+        .zip(widths)
+        .map(|(c, w)| format!("{c:>w$}", w = *w))
+        .collect();
+    println!("| {} |", line.join(" | "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::SyntheticSpec;
+
+    fn workload() -> Workload {
+        let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.01, 5);
+        let (existing, batches, truth) = spec.generate_stream(0.4, 4);
+        let (full, _) = spec.generate();
+        Workload { existing, batches, full, truth: Some(truth), rank: 2 }
+    }
+
+    #[test]
+    fn run_stream_all_methods_complete_small() {
+        let w = workload();
+        let cfg = SamBaTenConfig::new(2, 2, 2, 7);
+        let out = run_stream(&w, &MethodKind::ALL, &cfg, 60.0).unwrap();
+        assert_eq!(out.len(), 5);
+        for o in &out {
+            assert!(o.completed, "{} N/A", o.method);
+            assert!(o.rel_err.is_finite());
+        }
+        // Order preserved: CP_ALS first per ALL ordering.
+        assert_eq!(out[0].method, "CP_ALS");
+        assert_eq!(out[4].method, "SamBaTen");
+        // Fitness vs CP_ALS present for non-CP_ALS methods.
+        assert!(out[4].fitness_vs_cpals.is_some());
+        assert!(out[0].fitness_vs_cpals.is_none());
+        assert!(out[4].fms_vs_truth.is_some());
+    }
+
+    #[test]
+    fn budget_zero_yields_na() {
+        let w = workload();
+        let cfg = SamBaTenConfig::new(2, 2, 2, 7);
+        let out = run_stream(&w, &[MethodKind::SamBaTen], &cfg, 0.0).unwrap();
+        assert!(!out[0].completed);
+        assert!(out[0].rel_err.is_nan());
+    }
+
+    #[test]
+    fn pm_formats() {
+        assert_eq!(pm(&[]), "N/A");
+        assert_eq!(pm(&[f64::NAN]), "N/A");
+        let s = pm(&[0.1, 0.2]);
+        assert!(s.contains('±'));
+    }
+}

@@ -1,0 +1,213 @@
+//! Parameter sweeps: Figure 9 (sampling factor s), Figure 10 (repetition
+//! factor r), Figure 11 (joint r × s on the NIPS sim).
+
+use super::runner::{EvalContext};
+use crate::coordinator::{SamBaTen, SamBaTenConfig};
+use crate::cp::CpModel;
+use crate::datagen::{RealDatasetSim, SyntheticSpec};
+use crate::io::csv::{num, CsvWriter};
+use crate::metrics::{fms, relative_error, relative_fitness};
+use crate::tensor::TensorData;
+use crate::util::Stopwatch;
+use anyhow::Result;
+
+struct SweepRun {
+    seconds: f64,
+    rel_err: f64,
+    fitness_vs_cpals: f64,
+    fms: f64,
+}
+
+fn run_once(
+    existing: &TensorData,
+    batches: &[TensorData],
+    full: &TensorData,
+    _truth: &CpModel,
+    cfg: SamBaTenConfig,
+) -> Result<SweepRun> {
+    // CP_ALS reference on the final tensor — both the relative-fitness
+    // baseline AND the FMS reference ("we compute CP_ALS on the full tensor
+    // and set those as ground truth components", §IV-D.2).
+    let (cpals, _) = crate::cp::cp_als(
+        full,
+        cfg.rank,
+        &crate::cp::AlsOptions { seed: 3, ..Default::default() },
+    )?;
+    let mut engine = SamBaTen::init(existing, cfg)?;
+    let sw = Stopwatch::started();
+    for b in batches {
+        engine.ingest(b)?;
+    }
+    let seconds = sw.elapsed_secs();
+    let model = engine.model();
+    Ok(SweepRun {
+        seconds,
+        rel_err: relative_error(full, model),
+        fitness_vs_cpals: relative_fitness(full, model, &cpals),
+        fms: fms(model, &cpals),
+    })
+}
+
+fn synthetic_workload(
+    dim: usize,
+    rank: usize,
+    batch: usize,
+    seed: u64,
+) -> (TensorData, Vec<TensorData>, TensorData, CpModel) {
+    let spec = SyntheticSpec::cube(dim, rank, 1.0, 0.05, seed);
+    // 10% existing, floored at 5 slices (scale artifact guard — see
+    // eval/synthetic.rs).
+    let frac = 0.1f64.max(5.0 / dim as f64);
+    let (existing, batches, truth) = spec.generate_stream(frac, batch);
+    let (full, _) = spec.generate();
+    (existing, batches, full, truth)
+}
+
+fn nips_workload(
+    ctx: &EvalContext,
+    seed: u64,
+) -> (TensorData, Vec<TensorData>, TensorData, CpModel, usize) {
+    let ds = RealDatasetSim::by_name("NIPS").unwrap();
+    let scale = super::real::sim_scale("NIPS") * ctx.scale;
+    let (existing, batches, truth) = ds.generate_stream(scale, seed);
+    let mut full = existing.clone();
+    for b in &batches {
+        full.append_mode3(b);
+    }
+    (existing, batches, full, truth, ds.rank)
+}
+
+/// Figure 9: sampling factor sweep → CPU time and relative fitness.
+/// Paper: batch 50 fixed, several datasets; higher s ⇒ lower time, slightly
+/// worse fitness.
+pub fn fig9(ctx: &EvalContext) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        &ctx.csv_path("fig9.csv"),
+        &["dataset", "s", "seconds", "rel_err", "relative_fitness"],
+    )?;
+    println!("Figure 9: sampling factor sweep (CPU time / relative fitness)");
+    let dims = [ctx.dim(24), ctx.dim(32)];
+    for dim in dims {
+        let (existing, batches, full, truth) = synthetic_workload(dim, 4, (dim / 4).max(2), 61);
+        for s in [2usize, 3, 4, 6] {
+            let cfg = SamBaTenConfig::new(4, s, 4, 13);
+            let run = run_once(&existing, &batches, &full, &truth, cfg)?;
+            println!(
+                "  dim {dim:>4} s={s}: {:.2}s rel_err {:.3} fitness {:.3}",
+                run.seconds, run.rel_err, run.fitness_vs_cpals
+            );
+            csv.row(&[
+                format!("synthetic-{dim}"),
+                s.to_string(),
+                num(run.seconds),
+                num(run.rel_err),
+                num(run.fitness_vs_cpals),
+            ])?;
+        }
+    }
+    let (existing, batches, full, truth, rank) = nips_workload(ctx, 67);
+    for s in [2usize, 3, 4, 6] {
+        let cfg = SamBaTenConfig::new(rank, s, 4, 13);
+        let run = run_once(&existing, &batches, &full, &truth, cfg)?;
+        println!(
+            "  NIPS-sim s={s}: {:.2}s rel_err {:.3} fitness {:.3}",
+            run.seconds, run.rel_err, run.fitness_vs_cpals
+        );
+        csv.row(&[
+            "NIPS-sim".into(),
+            s.to_string(),
+            num(run.seconds),
+            num(run.rel_err),
+            num(run.fitness_vs_cpals),
+        ])?;
+    }
+    csv.flush()
+}
+
+/// Figure 10: repetition factor sweep → FMS and relative fitness
+/// (paper: higher r improves both).
+pub fn fig10(ctx: &EvalContext) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        &ctx.csv_path("fig10.csv"),
+        &["dataset", "r", "fms", "relative_fitness", "seconds"],
+    )?;
+    println!("Figure 10: repetition factor sweep (FMS / relative fitness)");
+    let dim = ctx.dim(32); // the paper's 500³ row, scaled
+    let (existing, batches, full, truth) = synthetic_workload(dim, 4, (dim / 4).max(2), 71);
+    for r in [1usize, 2, 4, 8] {
+        let cfg = SamBaTenConfig::new(4, 2, r, 37);
+        let run = run_once(&existing, &batches, &full, &truth, cfg)?;
+        println!(
+            "  synthetic-{dim} r={r}: FMS {:.3} fitness {:.3} ({:.2}s)",
+            run.fms, run.fitness_vs_cpals, run.seconds
+        );
+        csv.row(&[
+            format!("synthetic-{dim}"),
+            r.to_string(),
+            num(run.fms),
+            num(run.fitness_vs_cpals),
+            num(run.seconds),
+        ])?;
+    }
+    let (existing, batches, full, truth, rank) = nips_workload(ctx, 73);
+    for r in [1usize, 2, 4, 8] {
+        let cfg = SamBaTenConfig::new(rank, 2, r, 37);
+        let run = run_once(&existing, &batches, &full, &truth, cfg)?;
+        println!(
+            "  NIPS-sim r={r}: FMS {:.3} fitness {:.3} ({:.2}s)",
+            run.fms, run.fitness_vs_cpals, run.seconds
+        );
+        csv.row(&[
+            "NIPS-sim".into(),
+            r.to_string(),
+            num(run.fms),
+            num(run.fitness_vs_cpals),
+            num(run.seconds),
+        ])?;
+    }
+    csv.flush()
+}
+
+/// Figure 11: joint r × s sweep on the NIPS sim → FMS and relative fitness.
+pub fn fig11(ctx: &EvalContext) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        &ctx.csv_path("fig11.csv"),
+        &["r", "s", "fms", "relative_fitness", "seconds"],
+    )?;
+    println!("Figure 11: joint r × s sweep on NIPS sim");
+    let (existing, batches, full, truth, rank) = nips_workload(ctx, 79);
+    for r in [1usize, 2, 4] {
+        for s in [2usize, 3, 5] {
+            let cfg = SamBaTenConfig::new(rank, s, r, 41);
+            let run = run_once(&existing, &batches, &full, &truth, cfg)?;
+            println!(
+                "  r={r} s={s}: FMS {:.3} fitness {:.3} ({:.2}s)",
+                run.fms, run.fitness_vs_cpals, run.seconds
+            );
+            csv.row(&[
+                r.to_string(),
+                s.to_string(),
+                num(run.fms),
+                num(run.fitness_vs_cpals),
+                num(run.seconds),
+            ])?;
+        }
+    }
+    csv.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_once_produces_finite_metrics() {
+        let (existing, batches, full, truth) = synthetic_workload(10, 2, 3, 5);
+        let run = run_once(&existing, &batches, &full, &truth, SamBaTenConfig::new(2, 2, 2, 3))
+            .unwrap();
+        assert!(run.seconds > 0.0);
+        assert!(run.rel_err.is_finite());
+        assert!(run.fitness_vs_cpals.is_finite());
+        assert!((0.0..=1.0).contains(&run.fms));
+    }
+}

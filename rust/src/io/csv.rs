@@ -1,0 +1,107 @@
+//! Minimal CSV writer for experiment results (`results/*.csv`). Quotes
+//! fields only when needed; numbers are written with enough precision to
+//! re-plot the paper's figures.
+
+use anyhow::{Context, Result};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    w: BufWriter<std::fs::File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (and parent dirs) and write the header row.
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let f =
+            std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "{}", header.iter().map(|h| escape(h)).collect::<Vec<_>>().join(","))?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    /// Write one row of stringified fields.
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        anyhow::ensure!(
+            fields.len() == self.cols,
+            "row has {} fields, header has {}",
+            fields.len(),
+            self.cols
+        );
+        writeln!(
+            self.w,
+            "{}",
+            fields.iter().map(|f| escape(f)).collect::<Vec<_>>().join(",")
+        )?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Format an f64 for CSV (NaN → empty, matching the paper's "N/A" cells).
+pub fn num(v: f64) -> String {
+    if v.is_nan() {
+        String::new()
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+fn escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sambaten_csv_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn writes_header_and_rows() {
+        let p = tmp("basic.csv");
+        let mut w = CsvWriter::create(&p, &["method", "time", "err"]).unwrap();
+        w.row(&["SamBaTen".into(), num(1.25), num(0.1)]).unwrap();
+        w.row(&["CP_ALS".into(), num(f64::NAN), num(0.2)]).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "method,time,err");
+        assert_eq!(lines[1], "SamBaTen,1.250000,0.100000");
+        assert_eq!(lines[2], "CP_ALS,,0.200000"); // NaN -> empty (paper N/A)
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let p = tmp("arity.csv");
+        let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+        assert!(w.row(&["only-one".into()]).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn escaping() {
+        let p = tmp("esc.csv");
+        let mut w = CsvWriter::create(&p, &["name"]).unwrap();
+        w.row(&["a,b \"quoted\"".into()]).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("\"a,b \"\"quoted\"\"\""));
+        std::fs::remove_file(&p).ok();
+    }
+}

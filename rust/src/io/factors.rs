@@ -1,0 +1,156 @@
+//! Persist/restore CP models — lets a long-running deployment checkpoint
+//! the incremental decomposition and resume after restart.
+//!
+//! Format: a small self-describing text header followed by one row per
+//! line, full `f64` precision via hex-float round-tripping.
+
+use crate::cp::CpModel;
+use crate::linalg::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+const MAGIC: &str = "sambaten-cp-v1";
+
+/// Save a model to `path`.
+pub fn save_model(path: &Path, m: &CpModel) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    let (ni, nj, nk) = m.dims();
+    writeln!(w, "{MAGIC}")?;
+    writeln!(w, "rank {}", m.rank())?;
+    writeln!(w, "dims {ni} {nj} {nk}")?;
+    write!(w, "lambda")?;
+    for l in &m.lambda {
+        write!(w, " {}", hexf(*l))?;
+    }
+    writeln!(w)?;
+    for (name, f_) in [("A", &m.factors[0]), ("B", &m.factors[1]), ("C", &m.factors[2])] {
+        writeln!(w, "factor {name} {} {}", f_.rows(), f_.cols())?;
+        for i in 0..f_.rows() {
+            let row: Vec<String> = f_.row(i).iter().map(|&v| hexf(v)).collect();
+            writeln!(w, "{}", row.join(" "))?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a model from `path`.
+pub fn load_model(path: &Path) -> Result<CpModel> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut lines = BufReader::new(f).lines();
+    let mut next = || -> Result<String> {
+        lines.next().context("unexpected end of file")?.map_err(Into::into)
+    };
+    if next()?.trim() != MAGIC {
+        bail!("not a {MAGIC} file");
+    }
+    let rank_line = next()?;
+    let rank: usize = rank_line
+        .strip_prefix("rank ")
+        .context("missing rank line")?
+        .trim()
+        .parse()?;
+    let _dims_line = next()?;
+    let lambda_line = next()?;
+    let lambda: Vec<f64> = lambda_line
+        .strip_prefix("lambda")
+        .context("missing lambda line")?
+        .split_whitespace()
+        .map(unhexf)
+        .collect::<Result<_>>()?;
+    if lambda.len() != rank {
+        bail!("lambda length {} != rank {rank}", lambda.len());
+    }
+    let mut factors = Vec::with_capacity(3);
+    for expected in ["A", "B", "C"] {
+        let header = next()?;
+        let parts: Vec<&str> = header.split_whitespace().collect();
+        if parts.len() != 4 || parts[0] != "factor" || parts[1] != expected {
+            bail!("bad factor header {header:?} (expected factor {expected})");
+        }
+        let rows: usize = parts[2].parse()?;
+        let cols: usize = parts[3].parse()?;
+        if cols != rank {
+            bail!("factor {expected} has {cols} cols, expected {rank}");
+        }
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            let line = next()?;
+            let vals: Vec<f64> =
+                line.split_whitespace().map(unhexf).collect::<Result<_>>()?;
+            if vals.len() != cols {
+                bail!("factor {expected} row {i}: {} values, expected {cols}", vals.len());
+            }
+            m.row_mut(i).copy_from_slice(&vals);
+        }
+        factors.push(m);
+    }
+    let c = factors.pop().unwrap();
+    let b = factors.pop().unwrap();
+    let a = factors.pop().unwrap();
+    Ok(CpModel::new(a, b, c, lambda))
+}
+
+/// Exact f64 round-trip via bit pattern.
+fn hexf(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn unhexf(s: &str) -> Result<f64> {
+    let bits = u64::from_str_radix(s, 16).with_context(|| format!("bad float {s:?}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sambaten_{}_{}", std::process::id(), name))
+    }
+
+    fn random_model(seed: u64) -> CpModel {
+        let mut rng = Rng::new(seed);
+        CpModel::new(
+            Matrix::rand_gaussian(4, 3, &mut rng),
+            Matrix::rand_gaussian(5, 3, &mut rng),
+            Matrix::rand_gaussian(6, 3, &mut rng),
+            vec![1.5, 0.25, 3.0],
+        )
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let m = random_model(1);
+        let p = tmp("model.cp");
+        save_model(&p, &m).unwrap();
+        let back = load_model(&p).unwrap();
+        assert_eq!(back.lambda, m.lambda);
+        for n in 0..3 {
+            assert_eq!(back.factors[n].data(), m.factors[n].data());
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        let p = tmp("garbage.cp");
+        std::fs::write(&p, "not a model\n").unwrap();
+        assert!(load_model(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let m = random_model(2);
+        let p = tmp("trunc.cp");
+        save_model(&p, &m).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let cut: String = text.lines().take(6).collect::<Vec<_>>().join("\n");
+        std::fs::write(&p, cut).unwrap();
+        assert!(load_model(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

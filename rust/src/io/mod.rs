@@ -1,0 +1,11 @@
+//! On-disk formats: FROSTT-style `.tns` sparse tensors (so the paper's real
+//! datasets drop in directly when available), factor-matrix persistence, and
+//! the CSV emitter the eval harness writes results with.
+
+pub mod csv;
+pub mod factors;
+pub mod tns;
+
+pub use csv::CsvWriter;
+pub use factors::{load_model, save_model};
+pub use tns::{read_tns, write_tns};

@@ -1,0 +1,121 @@
+//! FROSTT `.tns` format: whitespace-separated `i j k value` lines with
+//! 1-based indices, `#` comments allowed. This is the format of every
+//! dataset in Table III (frostt.io), so real files can replace the
+//! simulated streams without code changes.
+
+use crate::tensor::CooTensor;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Read a 3-mode `.tns` file. Dimensions are inferred from the max index
+/// unless `dims` is given (FROSTT files don't carry a header).
+pub fn read_tns(path: &Path, dims: Option<(usize, usize, usize)>) -> Result<CooTensor> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let reader = BufReader::new(f);
+    let mut entries: Vec<(usize, usize, usize, f64)> = Vec::new();
+    let (mut mi, mut mj, mut mk) = (0usize, 0usize, 0usize);
+    for (ln, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let parse = |tok: Option<&str>, what: &str| -> Result<f64> {
+            tok.with_context(|| format!("line {}: missing {what}", ln + 1))?
+                .parse::<f64>()
+                .with_context(|| format!("line {}: bad {what}", ln + 1))
+        };
+        let i = parse(it.next(), "i")? as usize;
+        let j = parse(it.next(), "j")? as usize;
+        let k = parse(it.next(), "k")? as usize;
+        let v = parse(it.next(), "value")?;
+        if i == 0 || j == 0 || k == 0 {
+            bail!("line {}: .tns indices are 1-based, got a zero", ln + 1);
+        }
+        if it.next().is_some() {
+            bail!("line {}: more than 4 fields — not a 3-mode tensor", ln + 1);
+        }
+        mi = mi.max(i);
+        mj = mj.max(j);
+        mk = mk.max(k);
+        entries.push((i - 1, j - 1, k - 1, v));
+    }
+    let (di, dj, dk) = dims.unwrap_or((mi, mj, mk));
+    if mi > di || mj > dj || mk > dk {
+        bail!("explicit dims ({di},{dj},{dk}) smaller than data ({mi},{mj},{mk})");
+    }
+    let mut t = CooTensor::with_capacity(di, dj, dk, entries.len());
+    for (i, j, k, v) in entries {
+        t.push(i, j, k, v);
+    }
+    Ok(t)
+}
+
+/// Write a `.tns` file (1-based indices).
+pub fn write_tns(path: &Path, t: &CooTensor) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for (i, j, k, v) in t.iter() {
+        writeln!(w, "{} {} {} {}", i + 1, j + 1, k + 1, v)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor3;
+    use crate::util::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sambaten_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let t = CooTensor::rand(6, 7, 8, 0.2, &mut rng);
+        let p = tmp("rt.tns");
+        write_tns(&p, &t).unwrap();
+        let back = read_tns(&p, Some((6, 7, 8))).unwrap();
+        assert_eq!(back.nnz(), t.nnz());
+        assert!((back.norm() - t.norm()).abs() < 1e-9);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let p = tmp("c.tns");
+        std::fs::write(&p, "# header\n\n1 1 1 2.5\n2 3 4 -1\n").unwrap();
+        let t = read_tns(&p, None).unwrap();
+        assert_eq!(t.dims(), (2, 3, 4));
+        assert_eq!(t.nnz(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn zero_index_rejected() {
+        let p = tmp("z.tns");
+        std::fs::write(&p, "0 1 1 2.5\n").unwrap();
+        assert!(read_tns(&p, None).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn extra_fields_rejected() {
+        let p = tmp("x.tns");
+        std::fs::write(&p, "1 1 1 1 9.0\n").unwrap();
+        assert!(read_tns(&p, None).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn dims_too_small_rejected() {
+        let p = tmp("d.tns");
+        std::fs::write(&p, "3 1 1 1.0\n").unwrap();
+        assert!(read_tns(&p, Some((2, 2, 2))).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

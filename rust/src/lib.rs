@@ -1,0 +1,38 @@
+//! # SamBaTen — Sampling-based Batch Incremental Tensor Decomposition
+//!
+//! A production-quality Rust + JAX + Pallas reproduction of
+//! *Gujral, Pasricha, Papalexakis, "SamBaTen: Sampling-based Batch
+//! Incremental Tensor Decomposition" (2017)*.
+//!
+//! The crate is organised in three layers (see `DESIGN.md`):
+//!
+//! * **Layer 3 (this crate)** — the incremental coordination engine:
+//!   sampling ([`sampling`]), parallel sample decompositions ([`cp`]),
+//!   permutation matching ([`matching`]), quality control ([`corcondia`]),
+//!   factor merging ([`coordinator`]), baselines ([`baselines`]),
+//!   streaming ingestion ([`streaming`]) and the evaluation harness
+//!   ([`eval`]).
+//! * **Layer 2/1 (build-time Python)** — a JAX ALS sweep calling a Pallas
+//!   MTTKRP kernel, AOT-lowered to HLO text and executed from Rust through
+//!   the PJRT runtime wrapper ([`runtime`]).
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod corcondia;
+pub mod cp;
+pub mod datagen;
+pub mod eval;
+pub mod io;
+pub mod linalg;
+pub mod matching;
+pub mod metrics;
+pub mod runtime;
+pub mod sampling;
+pub mod streaming;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

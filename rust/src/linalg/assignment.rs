@@ -1,0 +1,227 @@
+//! Hungarian (Kuhn-Munkres) assignment, O(n³).
+//!
+//! SamBaTen's "project back" step must find the permutation Π matching the
+//! columns of a sample decomposition to the columns of the existing factors
+//! (Lemma 1). We convert the column-similarity matrix to costs and solve the
+//! assignment exactly; a greedy variant is kept for the ablation bench.
+
+/// Minimum-cost assignment. `cost` is a row-major `n×m` matrix with `n ≤ m`;
+/// returns for each row the assigned column.
+pub fn hungarian_min(cost: &[Vec<f64>]) -> Vec<usize> {
+    let n = cost.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let m = cost[0].len();
+    assert!(n <= m, "hungarian_min requires rows <= cols ({n} > {m})");
+    const INF: f64 = f64::INFINITY;
+    // Classic O(n^2 m) potentials implementation (1-indexed internals).
+    let mut u = vec![0.0; n + 1];
+    let mut v = vec![0.0; m + 1];
+    let mut p = vec![0usize; m + 1]; // p[j] = row assigned to column j
+    let mut way = vec![0usize; m + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; m + 1];
+        let mut used = vec![false; m + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=m {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=m {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut ans = vec![0usize; n];
+    for j in 1..=m {
+        if p[j] > 0 {
+            ans[p[j] - 1] = j - 1;
+        }
+    }
+    ans
+}
+
+/// Greedy assignment: repeatedly take the globally smallest remaining cost.
+/// Kept for the matching-policy ablation (`benches/bench_ablation.rs`).
+pub fn greedy_min(cost: &[Vec<f64>]) -> Vec<usize> {
+    let n = cost.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let m = cost[0].len();
+    assert!(n <= m);
+    let mut pairs: Vec<(f64, usize, usize)> = Vec::with_capacity(n * m);
+    for (i, row) in cost.iter().enumerate() {
+        for (j, &c) in row.iter().enumerate() {
+            pairs.push((c, i, j));
+        }
+    }
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut row_done = vec![false; n];
+    let mut col_done = vec![false; m];
+    let mut out = vec![usize::MAX; n];
+    let mut assigned = 0;
+    for (_, i, j) in pairs {
+        if !row_done[i] && !col_done[j] {
+            out[i] = j;
+            row_done[i] = true;
+            col_done[j] = true;
+            assigned += 1;
+            if assigned == n {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Total cost of an assignment.
+pub fn assignment_cost(cost: &[Vec<f64>], assign: &[usize]) -> f64 {
+    assign.iter().enumerate().map(|(i, &j)| cost[i][j]).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn trivial_identity() {
+        let cost = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        assert_eq!(hungarian_min(&cost), vec![0, 1]);
+    }
+
+    #[test]
+    fn forced_swap() {
+        let cost = vec![vec![10.0, 1.0], vec![1.0, 10.0]];
+        assert_eq!(hungarian_min(&cost), vec![1, 0]);
+    }
+
+    #[test]
+    fn classic_3x3() {
+        // Known example: optimal = 5 (0->1? compute): rows assignments below.
+        let cost = vec![
+            vec![4.0, 1.0, 3.0],
+            vec![2.0, 0.0, 5.0],
+            vec![3.0, 2.0, 2.0],
+        ];
+        let a = hungarian_min(&cost);
+        assert_eq!(assignment_cost(&cost, &a), 5.0);
+    }
+
+    #[test]
+    fn rectangular_rows_lt_cols() {
+        let cost = vec![vec![5.0, 1.0, 9.0, 7.0], vec![4.0, 8.0, 0.5, 7.0]];
+        let a = hungarian_min(&cost);
+        assert_eq!(a, vec![1, 2]);
+    }
+
+    #[test]
+    fn assignment_is_injective() {
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let n = 1 + rng.below(8);
+            let m = n + rng.below(4);
+            let cost: Vec<Vec<f64>> =
+                (0..n).map(|_| (0..m).map(|_| rng.uniform()).collect()).collect();
+            let a = hungarian_min(&cost);
+            let mut seen = a.clone();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), n, "assignment not injective: {a:?}");
+            assert!(a.iter().all(|&j| j < m));
+        }
+    }
+
+    #[test]
+    fn hungarian_never_worse_than_greedy() {
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let n = 2 + rng.below(6);
+            let cost: Vec<Vec<f64>> =
+                (0..n).map(|_| (0..n).map(|_| rng.uniform()).collect()).collect();
+            let h = assignment_cost(&cost, &hungarian_min(&cost));
+            let g = assignment_cost(&cost, &greedy_min(&cost));
+            assert!(h <= g + 1e-12, "hungarian {h} > greedy {g}");
+        }
+    }
+
+    #[test]
+    fn brute_force_agreement_small() {
+        // Exhaustive check against all permutations for n=4 (Heap's algorithm).
+        fn perms(n: usize) -> Vec<Vec<usize>> {
+            let mut xs: Vec<usize> = (0..n).collect();
+            let mut out = vec![xs.clone()];
+            let mut c = vec![0usize; n];
+            let mut i = 0;
+            while i < n {
+                if c[i] < i {
+                    if i % 2 == 0 {
+                        xs.swap(0, i);
+                    } else {
+                        xs.swap(c[i], i);
+                    }
+                    out.push(xs.clone());
+                    c[i] += 1;
+                    i = 0;
+                } else {
+                    c[i] = 0;
+                    i += 1;
+                }
+            }
+            out
+        }
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let n = 4;
+            let cost: Vec<Vec<f64>> =
+                (0..n).map(|_| (0..n).map(|_| rng.uniform()).collect()).collect();
+            let h = assignment_cost(&cost, &hungarian_min(&cost));
+            let best = perms(n)
+                .into_iter()
+                .map(|p| assignment_cost(&cost, &p))
+                .fold(f64::INFINITY, f64::min);
+            assert!((h - best).abs() < 1e-12, "hungarian {h} vs brute {best}");
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let cost: Vec<Vec<f64>> = vec![];
+        assert!(hungarian_min(&cost).is_empty());
+    }
+}

@@ -1,0 +1,180 @@
+//! Cholesky factorisation and the SPD solves used by every ALS update.
+//!
+//! ALS solves `M · Gᵀ = MTTKRPᵀ` where `G = (AᵀA) .* (BᵀB)` is an `R×R`
+//! symmetric (semi-)definite Gram-Hadamard matrix. We factor `G + εI` with a
+//! small ridge when `G` is singular (rank-deficient updates — §III-B of the
+//! paper — produce exactly this situation).
+
+use super::Matrix;
+use anyhow::{bail, Result};
+
+/// Cholesky factor `L` (lower triangular) of an SPD matrix.
+pub struct Cholesky {
+    l: Matrix,
+}
+
+impl Cholesky {
+    /// Factor `a` (symmetric positive definite). Fails on non-PD input.
+    pub fn new(a: &Matrix) -> Result<Self> {
+        let n = a.rows();
+        if a.cols() != n {
+            bail!("cholesky: matrix not square ({}x{})", a.rows(), a.cols());
+        }
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 || !sum.is_finite() {
+                        bail!("cholesky: not positive definite at pivot {i} (sum={sum})");
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Solve `A x = b` for a single right-hand side.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        // Forward: L y = b
+        let mut y = b.to_vec();
+        for i in 0..n {
+            for k in 0..i {
+                y[i] -= self.l[(i, k)] * y[k];
+            }
+            y[i] /= self.l[(i, i)];
+        }
+        // Backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            for k in i + 1..n {
+                y[i] -= self.l[(k, i)] * y[k];
+            }
+            y[i] /= self.l[(i, i)];
+        }
+        y
+    }
+
+    /// Solve `A X = B` column-by-column.
+    pub fn solve(&self, b: &Matrix) -> Matrix {
+        let n = self.l.rows();
+        assert_eq!(b.rows(), n);
+        let mut out = Matrix::zeros(n, b.cols());
+        for j in 0..b.cols() {
+            let col = b.col(j);
+            out.set_col(j, &self.solve_vec(&col));
+        }
+        out
+    }
+
+    /// The lower-triangular factor.
+    pub fn factor(&self) -> &Matrix {
+        &self.l
+    }
+}
+
+/// Solve `A X = B` for symmetric positive (semi-)definite `A`, retrying with
+/// an increasing ridge `εI` when the plain factorisation fails. This is the
+/// workhorse of every ALS mode update.
+pub fn spd_solve(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    if let Ok(ch) = Cholesky::new(a) {
+        return Ok(ch.solve(b));
+    }
+    // Ridge escalations relative to the matrix scale.
+    let scale = (0..a.rows()).map(|i| a[(i, i)].abs()).fold(0.0, f64::max).max(1e-300);
+    for mag in [1e-12, 1e-9, 1e-6, 1e-3] {
+        let mut reg = a.clone();
+        let eps = scale * mag;
+        for i in 0..a.rows() {
+            reg[(i, i)] += eps;
+        }
+        if let Ok(ch) = Cholesky::new(&reg) {
+            return Ok(ch.solve(b));
+        }
+    }
+    bail!("spd_solve: matrix irrecoverably non-PD (n={})", a.rows())
+}
+
+/// Solve the row-wise ALS system `X · G = M`, i.e. `X = M G⁻¹`, where `G` is
+/// the `R×R` Gram-Hadamard matrix and `M` is the `n×R` MTTKRP result.
+/// Equivalent to solving `G Xᵀ = Mᵀ` (G symmetric).
+pub fn solve_gram_system(gram: &Matrix, mttkrp: &Matrix) -> Result<Matrix> {
+    Ok(spd_solve(gram, &mttkrp.transpose())?.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::rand_gaussian(n + 3, n, &mut rng);
+        let mut g = a.gram();
+        for i in 0..n {
+            g[(i, i)] += 0.5;
+        }
+        g
+    }
+
+    #[test]
+    fn solve_recovers_known_x() {
+        let a = spd(5, 1);
+        let mut rng = Rng::new(2);
+        let x_true = Matrix::rand_gaussian(5, 3, &mut rng);
+        let b = a.matmul(&x_true);
+        let x = Cholesky::new(&a).unwrap().solve(&b);
+        assert!(x.max_abs_diff(&x_true) < 1e-9);
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(6, 3);
+        let ch = Cholesky::new(&a).unwrap();
+        let l = ch.factor();
+        let rec = l.matmul_t(l);
+        assert!(rec.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn non_pd_rejected() {
+        let mut a = Matrix::identity(3);
+        a[(2, 2)] = -1.0;
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn non_square_rejected() {
+        assert!(Cholesky::new(&Matrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn spd_solve_handles_singular_with_ridge() {
+        // Rank-1 Gram matrix: plain Cholesky must fail, ridge must recover.
+        let v = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let g = v.t_matmul(&v); // 3x3 rank-1
+        assert!(Cholesky::new(&g).is_err());
+        let b = Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let x = spd_solve(&g, &b).unwrap();
+        // residual of the least-squares-ish solution should be small
+        let r = g.matmul(&x).sub(&b);
+        assert!(r.frob_norm() < 1e-2, "residual {}", r.frob_norm());
+    }
+
+    #[test]
+    fn solve_gram_system_matches_direct() {
+        let g = spd(4, 5);
+        let mut rng = Rng::new(6);
+        let x_true = Matrix::rand_gaussian(7, 4, &mut rng);
+        let m = x_true.matmul(&g); // X G = M
+        let x = solve_gram_system(&g, &m).unwrap();
+        assert!(x.max_abs_diff(&x_true) < 1e-9);
+    }
+}

@@ -1,0 +1,473 @@
+//! Row-major dense matrix with the operations the decomposition stack needs.
+
+use crate::util::Rng;
+use std::fmt;
+
+/// Dense row-major `rows × cols` matrix of `f64`.
+///
+/// Row-major is chosen so that *rows are the unit of gather/scatter*: the
+/// SamBaTen engine constantly extracts and writes back factor-matrix rows for
+/// sampled index sets, which this layout makes contiguous.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show = self.rows.min(6);
+        for i in 0..show {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f)?;
+        }
+        if show < self.rows {
+            writeln!(f, "  ... ({} more rows)", self.rows - show)?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Matrix {
+    // ---------------------------------------------------------------- ctors
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a closure over `(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// I.i.d. uniform `[0,1)` entries (the paper's factor initialisation).
+    pub fn rand_uniform(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.uniform()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// I.i.d. standard normal entries.
+    pub fn rand_gaussian(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.gaussian()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// Gather the given rows into a new matrix (SamBaTen's `A(I_s, :)`).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Gather the given columns into a new matrix.
+    pub fn gather_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            for (c, &j) in idx.iter().enumerate() {
+                out[(i, c)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Stack `self` on top of `other` (must have equal `cols`).
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Matrix { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    // ------------------------------------------------------------- products
+
+    /// `self * other` — blocked i-k-j loop order (row-major friendly).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            let a_row = &self.data[i * k..(i + 1) * k];
+            for (p, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    out_row[j] += a * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * other` without forming the transpose.
+    pub fn t_matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for p in 0..k {
+            let a_row = &self.data[p * m..(p + 1) * m];
+            let b_row = &other.data[p * n..(p + 1) * n];
+            for (i, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    out_row[j] += a * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self * otherᵀ` without forming the transpose.
+    pub fn matmul_t(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let b_row = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0;
+                for p in 0..k {
+                    acc += a_row[p] * b_row[p];
+                }
+                out[(i, j)] = acc;
+            }
+        }
+        out
+    }
+
+    /// Gram matrix `selfᵀ self` (symmetric; computed once per ALS update).
+    pub fn gram(&self) -> Matrix {
+        self.t_matmul(self)
+    }
+
+    /// Element-wise (Hadamard) product.
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Khatri-Rao product (column-wise Kronecker): `(self ⊙ other)` of shapes
+    /// `(I×R) ⊙ (J×R) → (IJ×R)`, row `(i*J + j)` = `self(i,:) .* other(j,:)`.
+    pub fn khatri_rao(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "khatri_rao rank mismatch");
+        let r = self.cols;
+        let mut out = Matrix::zeros(self.rows * other.rows, r);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            for j in 0..other.rows {
+                let b_row = other.row(j);
+                let o = out.row_mut(i * other.rows + j);
+                for c in 0..r {
+                    o[c] = a_row[c] * b_row[c];
+                }
+            }
+        }
+        out
+    }
+
+    /// Kronecker product `self ⊗ other`.
+    pub fn kronecker(&self, other: &Matrix) -> Matrix {
+        let (m, n) = (self.rows, self.cols);
+        let (p, q) = (other.rows, other.cols);
+        let mut out = Matrix::zeros(m * p, n * q);
+        for i in 0..m {
+            for j in 0..n {
+                let a = self[(i, j)];
+                if a == 0.0 {
+                    continue;
+                }
+                for k in 0..p {
+                    for l in 0..q {
+                        out[(i * p + k, j * q + l)] = a * other[(k, l)];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    // ------------------------------------------------------------ reductions
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn col_norm(&self, j: usize) -> f64 {
+        (0..self.rows).map(|i| self[(i, j)] * self[(i, j)]).sum::<f64>().sqrt()
+    }
+
+    /// Scale column `j` by `s`.
+    pub fn scale_col(&mut self, j: usize, s: f64) {
+        for i in 0..self.rows {
+            self[(i, j)] *= s;
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Max absolute entry difference — test helper.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Normalise every column to unit ℓ₂ norm, returning the norms.
+    /// Zero columns are left untouched and report norm 0.
+    pub fn normalize_cols(&mut self) -> Vec<f64> {
+        let mut norms = Vec::with_capacity(self.cols);
+        for j in 0..self.cols {
+            let n = self.col_norm(j);
+            if n > 0.0 {
+                self.scale_col(j, 1.0 / n);
+            }
+            norms.push(n);
+        }
+        norms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, v: &[f64]) -> Matrix {
+        Matrix::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = m(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = m(3, 2, &[7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::rand_gaussian(7, 4, &mut rng);
+        let b = Matrix::rand_gaussian(7, 5, &mut rng);
+        let expect = a.transpose().matmul(&b);
+        assert!(a.t_matmul(&b).max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_t_matches_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::rand_gaussian(6, 4, &mut rng);
+        let b = Matrix::rand_gaussian(5, 4, &mut rng);
+        let expect = a.matmul(&b.transpose());
+        assert!(a.matmul_t(&b).max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::rand_gaussian(10, 4, &mut rng);
+        let g = a.gram();
+        for i in 0..4 {
+            assert!(g[(i, i)] >= 0.0);
+            for j in 0..4 {
+                assert!((g[(i, j)] - g[(j, i)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn khatri_rao_definition() {
+        let a = m(2, 2, &[1., 2., 3., 4.]);
+        let b = m(2, 2, &[5., 6., 7., 8.]);
+        let kr = a.khatri_rao(&b);
+        // row (i*J+j) = a(i,:) .* b(j,:)
+        assert_eq!(kr.row(0), &[5., 12.]);
+        assert_eq!(kr.row(1), &[7., 16.]);
+        assert_eq!(kr.row(2), &[15., 24.]);
+        assert_eq!(kr.row(3), &[21., 32.]);
+    }
+
+    #[test]
+    fn kron_shape_and_values() {
+        let a = m(2, 1, &[1., 2.]);
+        let b = m(1, 2, &[3., 4.]);
+        let k = a.kronecker(&b);
+        assert_eq!((k.rows(), k.cols()), (2, 2));
+        assert_eq!(k.data(), &[3., 4., 6., 8.]);
+    }
+
+    #[test]
+    fn gather_rows_picks_and_orders() {
+        let a = m(3, 2, &[0., 1., 10., 11., 20., 21.]);
+        let g = a.gather_rows(&[2, 0]);
+        assert_eq!(g.data(), &[20., 21., 0., 1.]);
+    }
+
+    #[test]
+    fn vstack_stacks() {
+        let a = m(1, 2, &[1., 2.]);
+        let b = m(2, 2, &[3., 4., 5., 6.]);
+        let v = a.vstack(&b);
+        assert_eq!((v.rows(), v.cols()), (3, 2));
+        assert_eq!(v.row(2), &[5., 6.]);
+    }
+
+    #[test]
+    fn normalize_cols_unit_norm_and_returns_norms() {
+        let mut a = m(2, 2, &[3., 0., 4., 0.]);
+        let norms = a.normalize_cols();
+        assert!((norms[0] - 5.0).abs() < 1e-12);
+        assert_eq!(norms[1], 0.0);
+        assert!((a.col_norm(0) - 1.0).abs() < 1e-12);
+        assert_eq!(a.col_norm(1), 0.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::rand_gaussian(5, 3, &mut rng);
+        assert!(a.transpose().transpose().max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = m(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let x = vec![1., 0., -1.];
+        assert_eq!(a.matvec(&x), vec![-2., -2.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,20 @@
+//! Dense linear algebra substrate.
+//!
+//! The paper's Matlab implementation leans on Tensor Toolbox + Matlab's
+//! BLAS/LAPACK; this module rebuilds the exact pieces CP-ALS, the baselines
+//! and CORCONDIA need: a row-major [`Matrix`] with blocked multiplies,
+//! Gram/Hadamard products, SPD Cholesky solves, Householder QR, a one-sided
+//! Jacobi SVD, pseudo-inverse, and the Hungarian assignment solver used by
+//! the permutation-matching step.
+
+pub mod assignment;
+pub mod cholesky;
+pub mod matrix;
+pub mod qr;
+pub mod svd;
+
+pub use assignment::hungarian_min;
+pub use cholesky::{solve_gram_system, spd_solve, Cholesky};
+pub use matrix::Matrix;
+pub use qr::qr_thin;
+pub use svd::{orth, pinv, svd_jacobi, svd_truncated, Svd};

@@ -1,0 +1,128 @@
+//! Thin Householder QR — used by the HOSVD-style initialisation and the SDT
+//! baseline's subspace orthonormalisation.
+
+use super::Matrix;
+
+/// Thin QR of an `m×n` matrix with `m ≥ n`: returns `(Q, R)` with `Q` of
+/// shape `m×n` (orthonormal columns) and `R` of shape `n×n` upper-triangular.
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let m = a.rows();
+    let n = a.cols();
+    assert!(m >= n, "qr_thin requires m >= n (got {m}x{n})");
+    let mut r = a.clone();
+    // Householder vectors stored per column.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build the Householder vector for column k below the diagonal.
+        let mut norm = 0.0;
+        for i in k..m {
+            norm += r[(i, k)] * r[(i, k)];
+        }
+        let norm = norm.sqrt();
+        let mut v = vec![0.0; m - k];
+        if norm == 0.0 {
+            vs.push(v);
+            continue;
+        }
+        let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
+        for i in k..m {
+            v[i - k] = r[(i, k)];
+        }
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 > 0.0 {
+            // Apply H = I - 2 v vᵀ / (vᵀv) to the trailing block of R.
+            for j in k..n {
+                let mut dot = 0.0;
+                for i in k..m {
+                    dot += v[i - k] * r[(i, j)];
+                }
+                let f = 2.0 * dot / vnorm2;
+                for i in k..m {
+                    r[(i, j)] -= f * v[i - k];
+                }
+            }
+        }
+        vs.push(v);
+    }
+    // Accumulate Q by applying the Householder reflectors to the thin identity.
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[(i, j)];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= f * v[i - k];
+            }
+        }
+    }
+    // Zero out numerical noise below R's diagonal and truncate.
+    let mut r_thin = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_thin[(i, j)] = r[(i, j)];
+        }
+    }
+    (q, r_thin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::rand_gaussian(8, 5, &mut rng);
+        let (q, r) = qr_thin(&a);
+        assert!(q.matmul(&r).max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::rand_gaussian(10, 4, &mut rng);
+        let (q, _) = qr_thin(&a);
+        let qtq = q.gram();
+        assert!(qtq.max_abs_diff(&Matrix::identity(4)) < 1e-10);
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::rand_gaussian(6, 6, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..6 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficient() {
+        // Two identical columns.
+        let a = Matrix::from_vec(4, 2, vec![1., 1., 2., 2., 3., 3., 4., 4.]);
+        let (q, r) = qr_thin(&a);
+        assert!(q.matmul(&r).max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn square_identity() {
+        let a = Matrix::identity(3);
+        let (q, r) = qr_thin(&a);
+        assert!(q.matmul(&r).max_abs_diff(&a) < 1e-12);
+    }
+}

@@ -1,0 +1,253 @@
+//! One-sided Jacobi SVD and the Moore-Penrose pseudo-inverse.
+//!
+//! Needed by: the SDT baseline (SVD tracking of the unfolded tensor), the
+//! RLST baseline, CORCONDIA (factor pseudo-inverses), and HOSVD-style
+//! initialisation. Sizes here are small (`R`, sample dimensions), so the
+//! robust-and-simple Jacobi method is the right tool.
+
+use super::{qr_thin, Matrix};
+
+/// Result of a singular value decomposition `A = U diag(s) Vᵀ`.
+pub struct Svd {
+    /// `m×k` left singular vectors (orthonormal columns), `k = min(m,n)`.
+    pub u: Matrix,
+    /// Singular values, descending.
+    pub s: Vec<f64>,
+    /// `n×k` right singular vectors (orthonormal columns).
+    pub v: Matrix,
+}
+
+/// One-sided Jacobi SVD. Handles any `m×n` (transposes internally when
+/// `m < n`). Accuracy ~1e-12 relative for well-conditioned inputs.
+pub fn svd_jacobi(a: &Matrix) -> Svd {
+    if a.rows() < a.cols() {
+        let t = svd_jacobi(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    let m = a.rows();
+    let n = a.cols();
+    // Work on U = A (columns rotated towards orthogonality), V accumulates.
+    let mut u = a.clone();
+    let mut v = Matrix::identity(n);
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Compute the 2x2 Gram block for columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                let denom = (app * aqq).sqrt();
+                if denom <= 0.0 || apq.abs() <= eps * denom {
+                    continue;
+                }
+                off = off.max(apq.abs() / denom);
+                // Jacobi rotation that zeroes apq.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    u[(i, p)] = c * up - s * uq;
+                    u[(i, q)] = s * up + c * uq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-13 {
+            break;
+        }
+    }
+    // Column norms of U are the singular values.
+    let mut sv: Vec<(f64, usize)> = (0..n).map(|j| (u.col_norm(j), j)).collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut u_out = Matrix::zeros(m, n);
+    let mut v_out = Matrix::zeros(n, n);
+    let mut s_out = Vec::with_capacity(n);
+    for (rank, &(sval, j)) in sv.iter().enumerate() {
+        s_out.push(sval);
+        if sval > 0.0 {
+            for i in 0..m {
+                u_out[(i, rank)] = u[(i, j)] / sval;
+            }
+        }
+        for i in 0..n {
+            v_out[(i, rank)] = v[(i, j)];
+        }
+    }
+    Svd { u: u_out, s: s_out, v: v_out }
+}
+
+impl Svd {
+    /// Effective numerical rank at relative tolerance `rtol`.
+    pub fn rank(&self, rtol: f64) -> usize {
+        let smax = self.s.first().copied().unwrap_or(0.0);
+        self.s.iter().filter(|&&x| x > rtol * smax).count()
+    }
+}
+
+/// Moore-Penrose pseudo-inverse via the Jacobi SVD, with relative cutoff
+/// `rtol` (defaulting to `1e-12` when passed `None`).
+pub fn pinv(a: &Matrix, rtol: Option<f64>) -> Matrix {
+    let rtol = rtol.unwrap_or(1e-12);
+    let svd = svd_jacobi(a);
+    let smax = svd.s.first().copied().unwrap_or(0.0);
+    let k = svd.s.len();
+    // pinv = V diag(1/s) Uᵀ
+    let mut vs = Matrix::zeros(a.cols(), k);
+    for j in 0..k {
+        let inv = if svd.s[j] > rtol * smax && svd.s[j] > 0.0 { 1.0 / svd.s[j] } else { 0.0 };
+        for i in 0..a.cols() {
+            vs[(i, j)] = svd.v[(i, j)] * inv;
+        }
+    }
+    vs.matmul_t(&svd.u)
+}
+
+/// Truncated SVD of rank `r` obtained by randomized-free deterministic
+/// subspace iteration seeded with QR of `AᵀA` power — adequate for the small
+/// matrices in this codebase where `r` ≪ min(m,n) is not guaranteed; falls
+/// back to the full Jacobi SVD and truncates.
+pub fn svd_truncated(a: &Matrix, r: usize) -> Svd {
+    let full = svd_jacobi(a);
+    let k = r.min(full.s.len());
+    let mut u = Matrix::zeros(a.rows(), k);
+    let mut v = Matrix::zeros(a.cols(), k);
+    for j in 0..k {
+        for i in 0..a.rows() {
+            u[(i, j)] = full.u[(i, j)];
+        }
+        for i in 0..a.cols() {
+            v[(i, j)] = full.v[(i, j)];
+        }
+    }
+    Svd { u, s: full.s[..k].to_vec(), v }
+}
+
+/// Orthonormal basis of the column space (thin QR wrapper used by SDT).
+pub fn orth(a: &Matrix) -> Matrix {
+    qr_thin(a).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn reconstruct(svd: &Svd) -> Matrix {
+        let k = svd.s.len();
+        let mut us = svd.u.clone();
+        for j in 0..k {
+            us.scale_col(j, svd.s[j]);
+        }
+        us.matmul_t(&svd.v)
+    }
+
+    #[test]
+    fn svd_reconstructs_tall() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::rand_gaussian(9, 4, &mut rng);
+        let svd = svd_jacobi(&a);
+        assert!(reconstruct(&svd).max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn svd_reconstructs_wide() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::rand_gaussian(3, 8, &mut rng);
+        let svd = svd_jacobi(&a);
+        assert!(reconstruct(&svd).max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::rand_gaussian(6, 6, &mut rng);
+        let svd = svd_jacobi(&a);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(svd.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn u_v_orthonormal() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::rand_gaussian(7, 5, &mut rng);
+        let svd = svd_jacobi(&a);
+        assert!(svd.u.gram().max_abs_diff(&Matrix::identity(5)) < 1e-10);
+        assert!(svd.v.gram().max_abs_diff(&Matrix::identity(5)) < 1e-10);
+    }
+
+    #[test]
+    fn known_diagonal_svd() {
+        let a = Matrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, -2.0]);
+        let svd = svd_jacobi(&a);
+        assert!((svd.s[0] - 3.0).abs() < 1e-12);
+        assert!((svd.s[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_detects_deficiency() {
+        let mut rng = Rng::new(5);
+        let b = Matrix::rand_gaussian(8, 2, &mut rng);
+        let c = Matrix::rand_gaussian(2, 5, &mut rng);
+        let a = b.matmul(&c); // rank 2
+        let svd = svd_jacobi(&a);
+        assert_eq!(svd.rank(1e-10), 2);
+    }
+
+    #[test]
+    fn pinv_satisfies_moore_penrose() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::rand_gaussian(6, 4, &mut rng);
+        let p = pinv(&a, None);
+        // A A+ A = A
+        assert!(a.matmul(&p).matmul(&a).max_abs_diff(&a) < 1e-9);
+        // A+ A A+ = A+
+        assert!(p.matmul(&a).matmul(&p).max_abs_diff(&p) < 1e-9);
+    }
+
+    #[test]
+    fn pinv_of_rank_deficient() {
+        let mut rng = Rng::new(7);
+        let b = Matrix::rand_gaussian(5, 2, &mut rng);
+        let a = b.matmul(&b.transpose()); // rank 2, 5x5
+        let p = pinv(&a, None);
+        assert!(a.matmul(&p).matmul(&a).max_abs_diff(&a) < 1e-8);
+    }
+
+    #[test]
+    fn zero_matrix_pinv_is_zero() {
+        let a = Matrix::zeros(3, 4);
+        let p = pinv(&a, None);
+        assert_eq!(p.frob_norm(), 0.0);
+        assert_eq!((p.rows(), p.cols()), (4, 3));
+    }
+
+    #[test]
+    fn truncated_keeps_top_components() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::rand_gaussian(8, 6, &mut rng);
+        let t = svd_truncated(&a, 3);
+        assert_eq!(t.s.len(), 3);
+        let full = svd_jacobi(&a);
+        for j in 0..3 {
+            assert!((t.s[j] - full.s[j]).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,337 @@
+//! `sambaten` — the launcher CLI.
+//!
+//! Subcommands:
+//!   generate    synthesize a tensor (.tns) with known factors
+//!   decompose   full CP-ALS of a .tns file
+//!   run         incremental SamBaTen over a streamed tensor
+//!   getrank     estimate CP rank via CORCONDIA
+//!   eval        regenerate a paper table/figure (see DESIGN.md §3)
+//!   info        artifact bank / environment report
+
+use anyhow::{bail, Context, Result};
+use sambaten::config::RunConfig;
+use sambaten::coordinator::SamBaTen;
+use sambaten::corcondia::{getrank, GetRankOptions};
+use sambaten::cp::{cp_als, AlsOptions};
+use sambaten::datagen::SyntheticSpec;
+use sambaten::eval::{run_experiment, EvalContext, EXPERIMENTS};
+use sambaten::io::{read_tns, save_model, write_tns};
+use sambaten::metrics::relative_error;
+use sambaten::runtime::{artifacts_available, artifacts_dir, PjrtAlsSolver, PjrtService};
+use sambaten::streaming::{StreamPump, TensorReplay};
+use sambaten::tensor::{CooTensor, Tensor3, TensorData};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Tiny flag parser: positional args + `--key value` pairs + `--flag`.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(key.to_string(), value);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value for --{key}: {v:?}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "generate" => cmd_generate(&args),
+        "decompose" => cmd_decompose(&args),
+        "run" => cmd_run(&args),
+        "getrank" => cmd_getrank(&args),
+        "eval" => cmd_eval(&args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `sambaten help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "sambaten — Sampling-based Batch Incremental Tensor Decomposition
+
+USAGE: sambaten <command> [options]
+
+COMMANDS:
+  generate   --dims I,J,K --rank R [--density 1.0] [--noise 0.05] [--seed 42] --out X.tns
+  decompose  --input X.tns --rank R [--max-iters 1000] [--tol 1e-5] [--save model.cp]
+  run        --input X.tns | --dims I,J,K  [--config run.toml] [--rank R] [--batch B]
+             [--sampling-factor S] [--repetitions r] [--engine native|pjrt]
+             [--quality-control] [--seed N] [--save model.cp]
+  getrank    --input X.tns [--max-rank 10] [--iters 2]
+  eval       <{}|all> [--iters N] [--budget SECONDS] [--scale F] [--out-dir results] [--pjrt]
+  info       artifact bank / environment report",
+        EXPERIMENTS.join("|")
+    );
+}
+
+fn parse_dims(s: &str) -> Result<(usize, usize, usize)> {
+    let parts: Vec<usize> = s
+        .split(',')
+        .map(|p| p.trim().parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .with_context(|| format!("bad --dims {s:?} (expected I,J,K)"))?;
+    anyhow::ensure!(parts.len() == 3, "--dims needs exactly three values");
+    Ok((parts[0], parts[1], parts[2]))
+}
+
+fn load_input(args: &Args) -> Result<TensorData> {
+    if let Some(path) = args.get("input") {
+        let coo = read_tns(&PathBuf::from(path), None)?;
+        Ok(TensorData::Sparse(coo))
+    } else if let Some(dims) = args.get("dims") {
+        let (i, j, k) = parse_dims(dims)?;
+        let spec = SyntheticSpec {
+            i,
+            j,
+            k,
+            rank: args.get_or("rank", 4usize)?,
+            density: args.get_or("density", 1.0f64)?,
+            noise: args.get_or("noise", 0.05f64)?,
+            seed: args.get_or("seed", 42u64)?,
+        };
+        Ok(spec.generate().0)
+    } else {
+        bail!("need --input FILE.tns or --dims I,J,K")
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let out = args.get("out").context("--out required")?;
+    let (i, j, k) = parse_dims(args.get("dims").context("--dims required")?)?;
+    let spec = SyntheticSpec {
+        i,
+        j,
+        k,
+        rank: args.get_or("rank", 4usize)?,
+        density: args.get_or("density", 1.0f64)?,
+        noise: args.get_or("noise", 0.05f64)?,
+        seed: args.get_or("seed", 42u64)?,
+    };
+    let (x, _) = spec.generate();
+    let coo = match &x {
+        TensorData::Sparse(s) => s.clone(),
+        TensorData::Dense(d) => CooTensor::from_dense(d, 0.0),
+    };
+    write_tns(&PathBuf::from(out), &coo)?;
+    println!(
+        "wrote {out}: {}x{}x{} nnz={} (rank-{} truth, noise {})",
+        i,
+        j,
+        k,
+        coo.nnz(),
+        spec.rank,
+        spec.noise
+    );
+    Ok(())
+}
+
+fn cmd_decompose(args: &Args) -> Result<()> {
+    let x = load_input(args)?;
+    let rank = args.get_or("rank", 4usize)?;
+    let opts = AlsOptions {
+        max_iters: args.get_or("max-iters", 1000usize)?,
+        tol: args.get_or("tol", 1e-5f64)?,
+        seed: args.get_or("seed", 0u64)?,
+        ..Default::default()
+    };
+    let (result, secs) = sambaten::util::timer::timed(|| cp_als(&x, rank, &opts));
+    let (model, report) = result?;
+    println!(
+        "CP-ALS rank {rank}: fit {:.4} after {} iters ({:.2}s), rel_err {:.4}",
+        report.final_fit,
+        report.iterations,
+        secs,
+        relative_error(&x, &model)
+    );
+    if let Some(path) = args.get("save") {
+        save_model(&PathBuf::from(path), &model)?;
+        println!("model saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    // Config file first, CLI flags override.
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(&PathBuf::from(path))?,
+        None => RunConfig::default(),
+    };
+    if args.has("rank") {
+        cfg.rank = args.get_or("rank", cfg.rank)?;
+    }
+    if args.has("batch") {
+        cfg.batch_size = args.get_or("batch", cfg.batch_size)?;
+    }
+    if args.has("sampling-factor") {
+        cfg.sampling_factor = args.get_or("sampling-factor", cfg.sampling_factor)?;
+    }
+    if args.has("repetitions") {
+        cfg.repetitions = args.get_or("repetitions", cfg.repetitions)?;
+    }
+    if args.has("seed") {
+        cfg.seed = args.get_or("seed", cfg.seed)?;
+    }
+    if args.has("engine") {
+        cfg.engine = args.get("engine").unwrap().to_string();
+    }
+    if args.has("quality-control") {
+        cfg.quality_control = true;
+    }
+    cfg.validate()?;
+    let full = load_input(args)?;
+    let (ni, nj, nk) = full.dims();
+    let k0 = ((nk as f64 * cfg.existing_frac).round() as usize).clamp(1, nk - 1);
+    println!(
+        "tensor {ni}x{nj}x{nk} ({} nnz, {}), existing {k0} slices, batch {}",
+        full.nnz(),
+        if full.is_sparse() { "sparse" } else { "dense" },
+        cfg.batch_size
+    );
+    // Split into existing + replay stream.
+    let (existing, rest) = match &full {
+        TensorData::Dense(d) => {
+            let (a, b) = d.split_mode3(k0);
+            (TensorData::Dense(a), TensorData::Dense(b))
+        }
+        TensorData::Sparse(s) => {
+            let (a, b) = s.split_mode3(k0);
+            (TensorData::Sparse(a), TensorData::Sparse(b))
+        }
+    };
+    let mut engine_cfg = cfg.to_engine_config();
+    if cfg.engine == "pjrt" {
+        anyhow::ensure!(
+            artifacts_available(),
+            "engine=pjrt but no artifact bank (run `make artifacts`)"
+        );
+        let svc = PjrtService::start(artifacts_dir())?;
+        engine_cfg = engine_cfg.with_solver(std::sync::Arc::new(PjrtAlsSolver::new(svc)));
+    }
+    let mut engine = SamBaTen::init(&existing, engine_cfg)?;
+    println!("init fit on existing: {:.4}", engine.model().fit(&existing));
+    let sparse = rest.is_sparse();
+    let pump = StreamPump::spawn(TensorReplay::new(rest), cfg.batch_size, sparse, 4)?;
+    let mut n = 0;
+    let mut total = 0.0;
+    while let Some(batch) = pump.next_batch() {
+        let stats = engine.ingest(&batch)?;
+        total += stats.seconds;
+        n += 1;
+        println!(
+            "batch {n:>3}: +{} slices in {:.3}s (sample {}, mean congruence {:.3})",
+            stats.k_new,
+            stats.seconds,
+            stats
+                .sample_dims
+                .first()
+                .map(|d| format!("{}x{}x{}", d.0, d.1, d.2))
+                .unwrap_or_default(),
+            stats.mean_congruence.iter().sum::<f64>()
+                / stats.mean_congruence.len().max(1) as f64,
+        );
+    }
+    let model = engine.model();
+    println!(
+        "done: {n} batches in {total:.2}s, final rel_err {:.4}, fit {:.4}",
+        relative_error(engine.tensor(), model),
+        model.fit(engine.tensor())
+    );
+    if let Some(path) = args.get("save") {
+        save_model(&PathBuf::from(path), model)?;
+        println!("model saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_getrank(args: &Args) -> Result<()> {
+    let x = load_input(args)?;
+    let opts = GetRankOptions {
+        max_rank: args.get_or("max-rank", 10usize)?,
+        iterations: args.get_or("iters", 2usize)?,
+        ..Default::default()
+    };
+    let (result, secs) = sambaten::util::timer::timed(|| getrank(&x, &opts));
+    println!("estimated rank: {} ({secs:.2}s)", result?);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let ctx = EvalContext {
+        out_dir: PathBuf::from(args.get("out-dir").unwrap_or("results")),
+        iters: args.get_or("iters", 2usize)?,
+        budget_s: args.get_or("budget", 60.0f64)?,
+        scale: args.get_or("scale", 1.0f64)?,
+        use_pjrt: args.has("pjrt"),
+    };
+    run_experiment(id, &ctx)
+}
+
+fn cmd_info() -> Result<()> {
+    println!("sambaten {}", env!("CARGO_PKG_VERSION"));
+    println!("artifacts dir: {}", artifacts_dir().display());
+    if artifacts_available() {
+        let bank = sambaten::runtime::ArtifactBank::load(&artifacts_dir())?;
+        println!("artifact bank ({} entries):", bank.entries.len());
+        for e in &bank.entries {
+            println!("  {}x{}x{} rank {}  {}", e.i, e.j, e.k, e.r, e.file.display());
+        }
+    } else {
+        println!("artifact bank: NOT BUILT (run `make artifacts`) — native engine only");
+    }
+    println!(
+        "threads available: {}",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(0)
+    );
+    Ok(())
+}

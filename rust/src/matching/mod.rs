@@ -1,0 +1,258 @@
+//! The "Project back" step (§III-A): undo the permutation and scaling
+//! ambiguity of a sample decomposition against the existing factors.
+//!
+//! Lemma 1: after unit-normalising shared rows, matching columns have inner
+//! product 1 (noiseless) and mismatched columns < 1. We build a congruence
+//! score aggregated over all three modes and solve the assignment exactly
+//! (Hungarian); a greedy policy is kept for the ablation bench.
+
+use crate::cp::CpModel;
+use crate::linalg::assignment::greedy_min as greedy_min_impl;
+use crate::linalg::{hungarian_min, Matrix};
+
+/// Matching policy — exact assignment vs greedy (ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatchPolicy {
+    Hungarian,
+    Greedy,
+}
+
+/// Result of matching a sample decomposition to the anchors.
+#[derive(Clone, Debug)]
+pub struct MatchResult {
+    /// `perm[t] = q` means: sample component `t` corresponds to existing
+    /// component `q`.
+    pub perm: Vec<usize>,
+    /// Congruence (product of |cosines| over modes) per matched pair.
+    pub congruence: Vec<f64>,
+}
+
+/// Normalise the columns of `m` by the ℓ₂ norm of the rows in `anchor_rows`
+/// only — the paper's normalisation `A'(:,f) / ||A'(I_s, f)||₂`. For the
+/// sample factors the anchor span *is* the whole matrix (trivially), but the
+/// old factors are normalised over the shared rows.
+pub fn normalize_over_rows(m: &Matrix, anchor_rows: &[usize]) -> (Matrix, Vec<f64>) {
+    let mut out = m.clone();
+    let mut norms = Vec::with_capacity(m.cols());
+    for t in 0..m.cols() {
+        let n: f64 = anchor_rows
+            .iter()
+            .map(|&i| m[(i, t)] * m[(i, t)])
+            .sum::<f64>()
+            .sqrt();
+        if n > 0.0 {
+            out.scale_col(t, 1.0 / n);
+        }
+        norms.push(n);
+    }
+    (out, norms)
+}
+
+/// Congruence matrix between columns of `a` (n×R1) and `b` (n×R2), both
+/// already normalised over the same rows: `|aᵀ b|` per column pair,
+/// restricted to `rows`.
+fn column_congruence(a: &Matrix, b: &Matrix, rows: &[usize]) -> Vec<Vec<f64>> {
+    let (ra, rb) = (a.cols(), b.cols());
+    let mut c = vec![vec![0.0; rb]; ra];
+    for p in 0..ra {
+        for q in 0..rb {
+            let dot: f64 = rows.iter().map(|&i| a[(i, p)] * b[(i, q)]).sum();
+            c[p][q] = dot.abs();
+        }
+    }
+    c
+}
+
+/// Match the components of `sample` (rank `R_new ≤ R`) to the components of
+/// the existing factors (rank `R`), per Lemma 1.
+///
+/// * `old_anchor[n]` — the existing factor matrix of mode `n` *restricted to
+///   the sampled rows* (`A_old(I_s,:)` etc.), shape `|I_s| × R`.
+/// * `sample_factors[n]` — the sample decomposition factor of mode `n`
+///   restricted to the *shared* (old) rows, shape `|I_s| × R_new`.
+///
+/// Both sides are normalised over those shared rows internally.
+pub fn match_components(
+    old_anchor: &[Matrix; 3],
+    sample_factors: &[Matrix; 3],
+    policy: MatchPolicy,
+) -> MatchResult {
+    let r_new = sample_factors[0].cols();
+    let r_old = old_anchor[0].cols();
+    assert!(
+        r_new <= r_old,
+        "sample rank {r_new} exceeds existing rank {r_old}"
+    );
+    // Aggregate congruence = product over modes of per-mode |cos|.
+    let mut agg = vec![vec![1.0; r_old]; r_new];
+    for n in 0..3 {
+        let rows: Vec<usize> = (0..old_anchor[n].rows()).collect();
+        let (a_n, _) = normalize_over_rows(&sample_factors[n], &rows);
+        let (b_n, _) = normalize_over_rows(&old_anchor[n], &rows);
+        let c = column_congruence(&a_n, &b_n, &rows);
+        for p in 0..r_new {
+            for q in 0..r_old {
+                agg[p][q] *= c[p][q];
+            }
+        }
+    }
+    // Maximise congruence == minimise negative congruence.
+    let cost: Vec<Vec<f64>> = agg.iter().map(|row| row.iter().map(|&x| -x).collect()).collect();
+    let perm = match policy {
+        MatchPolicy::Hungarian => hungarian_min(&cost),
+        MatchPolicy::Greedy => greedy_min_impl(&cost),
+    };
+    let congruence = perm.iter().enumerate().map(|(p, &q)| agg[p][q]).collect();
+    MatchResult { perm, congruence }
+}
+
+/// Apply a match: permute (and rank-extend) a sample model so its components
+/// line up with the existing `R` components. Unmatched target slots are
+/// filled with zero components (they received no update from this sample).
+pub fn align_model(sample: &CpModel, m: &MatchResult, r_old: usize) -> CpModel {
+    let dims = sample.dims();
+    let r_new = sample.rank();
+    let mut factors = [
+        Matrix::zeros(dims.0, r_old),
+        Matrix::zeros(dims.1, r_old),
+        Matrix::zeros(dims.2, r_old),
+    ];
+    let mut lambda = vec![0.0; r_old];
+    for p in 0..r_new {
+        let q = m.perm[p];
+        for n in 0..3 {
+            for i in 0..factors[n].rows() {
+                factors[n][(i, q)] = sample.factors[n][(i, p)];
+            }
+        }
+        lambda[q] = sample.lambda[p];
+    }
+    let [a, b, c] = factors;
+    CpModel::new(a, b, c, lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_factors(dims: (usize, usize, usize), r: usize, seed: u64) -> [Matrix; 3] {
+        let mut rng = Rng::new(seed);
+        [
+            Matrix::rand_gaussian(dims.0, r, &mut rng),
+            Matrix::rand_gaussian(dims.1, r, &mut rng),
+            Matrix::rand_gaussian(dims.2, r, &mut rng),
+        ]
+    }
+
+    #[test]
+    fn recovers_known_permutation_noiseless() {
+        let anchors = random_factors((12, 11, 10), 4, 1);
+        // Sample factors = anchors with columns permuted and rescaled.
+        let perm = [2usize, 0, 3, 1];
+        let mut sample = [
+            anchors[0].gather_cols(&perm),
+            anchors[1].gather_cols(&perm),
+            anchors[2].gather_cols(&perm),
+        ];
+        sample[0].scale_col(1, 3.0);
+        sample[2].scale_col(2, 0.25);
+        let m = match_components(&anchors, &sample, MatchPolicy::Hungarian);
+        assert_eq!(m.perm, perm.to_vec());
+        for c in &m.congruence {
+            assert!((c - 1.0).abs() < 1e-9, "congruence {c}");
+        }
+    }
+
+    #[test]
+    fn recovers_permutation_with_sign_flips() {
+        let anchors = random_factors((10, 10, 10), 3, 2);
+        let perm = [1usize, 2, 0];
+        let mut sample = [
+            anchors[0].gather_cols(&perm),
+            anchors[1].gather_cols(&perm),
+            anchors[2].gather_cols(&perm),
+        ];
+        // Flip a column's sign in one mode (CP sign ambiguity).
+        sample[1].scale_col(0, -1.0);
+        let m = match_components(&anchors, &sample, MatchPolicy::Hungarian);
+        assert_eq!(m.perm, perm.to_vec());
+    }
+
+    #[test]
+    fn survives_moderate_noise() {
+        let mut rng = Rng::new(3);
+        let anchors = random_factors((30, 30, 30), 4, 3);
+        let perm = [3usize, 1, 0, 2];
+        let mut sample = [
+            anchors[0].gather_cols(&perm),
+            anchors[1].gather_cols(&perm),
+            anchors[2].gather_cols(&perm),
+        ];
+        for n in 0..3 {
+            for v in sample[n].data_mut() {
+                *v += 0.1 * rng.gaussian();
+            }
+        }
+        let m = match_components(&anchors, &sample, MatchPolicy::Hungarian);
+        assert_eq!(m.perm, perm.to_vec());
+    }
+
+    #[test]
+    fn rank_deficient_sample_matches_subset() {
+        let anchors = random_factors((15, 15, 15), 5, 4);
+        // Sample contains only components 4 and 1.
+        let keep = [4usize, 1];
+        let sample = [
+            anchors[0].gather_cols(&keep),
+            anchors[1].gather_cols(&keep),
+            anchors[2].gather_cols(&keep),
+        ];
+        let m = match_components(&anchors, &sample, MatchPolicy::Hungarian);
+        assert_eq!(m.perm, vec![4, 1]);
+    }
+
+    #[test]
+    fn align_model_places_components() {
+        let mut rng = Rng::new(5);
+        let sample = CpModel::new(
+            Matrix::rand_gaussian(4, 2, &mut rng),
+            Matrix::rand_gaussian(4, 2, &mut rng),
+            Matrix::rand_gaussian(4, 2, &mut rng),
+            vec![2.0, 3.0],
+        );
+        let m = MatchResult { perm: vec![3, 0], congruence: vec![1.0, 1.0] };
+        let aligned = align_model(&sample, &m, 4);
+        assert_eq!(aligned.rank(), 4);
+        assert_eq!(aligned.lambda, vec![3.0, 0.0, 0.0, 2.0]);
+        assert_eq!(aligned.factors[0].col(3), sample.factors[0].col(0));
+        assert_eq!(aligned.factors[1].col(0), sample.factors[1].col(1));
+        assert_eq!(aligned.factors[2].col(1), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn normalize_over_rows_unit_on_anchor_span() {
+        let mut rng = Rng::new(6);
+        let m = Matrix::rand_gaussian(8, 3, &mut rng);
+        let rows = vec![1, 3, 5];
+        let (n, norms) = normalize_over_rows(&m, &rows);
+        for t in 0..3 {
+            let span: f64 = rows.iter().map(|&i| n[(i, t)] * n[(i, t)]).sum::<f64>().sqrt();
+            assert!((span - 1.0).abs() < 1e-12);
+            assert!(norms[t] > 0.0);
+        }
+    }
+
+    #[test]
+    fn greedy_policy_also_recovers_clean_permutation() {
+        let anchors = random_factors((12, 12, 12), 4, 7);
+        let perm = [1usize, 3, 2, 0];
+        let sample = [
+            anchors[0].gather_cols(&perm),
+            anchors[1].gather_cols(&perm),
+            anchors[2].gather_cols(&perm),
+        ];
+        let m = match_components(&anchors, &sample, MatchPolicy::Greedy);
+        assert_eq!(m.perm, perm.to_vec());
+    }
+}

@@ -1,0 +1,227 @@
+//! Evaluation measures from §IV-B of the paper: Relative Error, Relative
+//! Fitness, CPU time accounting, and the Factor Matching Score (Eq. 2) used
+//! by the GETRANK quality-control experiments.
+
+use crate::cp::CpModel;
+use crate::linalg::Matrix;
+use crate::tensor::Tensor3;
+
+/// Relative Error `‖X − X̂‖ / ‖X‖` (lower is better). Computed without
+/// materialising `X̂` (efficient for sparse `X` — `O(nnz·R + R²·dims)`).
+pub fn relative_error<T: Tensor3 + ?Sized>(x: &T, model: &CpModel) -> f64 {
+    let xn = x.norm();
+    if xn == 0.0 {
+        return if model.norm_sq() == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    model.residual_norm_sq(x).sqrt() / xn
+}
+
+/// Relative Fitness `‖X − X̂_method‖ / ‖X − X̂_baseline‖` (§IV-B; lower
+/// favours the method).
+pub fn relative_fitness<T: Tensor3 + ?Sized>(x: &T, method: &CpModel, baseline: &CpModel) -> f64 {
+    let num = method.residual_norm_sq(x).sqrt();
+    let den = baseline.residual_norm_sq(x).sqrt();
+    if den == 0.0 {
+        if num == 0.0 {
+            1.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        num / den
+    }
+}
+
+/// Factor Matching Score (Eq. 2 of the paper), in `[0, 1]`:
+///
+/// `FMS = (1/R) Σ_r (1 − |λ_a − λ_b| / max(λ_a, λ_b)) Π_n |a_rᵀ b_r|`
+///
+/// computed after unit-normalising both models and greedily matching
+/// components by aggregate column correlation (the paper matches components
+/// before scoring; we use the Hungarian assignment for exactness).
+///
+/// Note: the paper's Eq. 2 carries a `100 ×` presentation factor and its
+/// tables report values in `[0, 1]`; we return the `[0, 1]` convention.
+pub fn fms(a: &CpModel, b: &CpModel) -> f64 {
+    let mut ma = a.clone();
+    let mut mb = b.clone();
+    ma.normalize();
+    mb.normalize();
+    let ra = ma.rank();
+    let rb = mb.rank();
+    let r = ra.min(rb);
+    if r == 0 {
+        return 0.0;
+    }
+    // Cost = negative congruence product so the assignment maximises it.
+    let mut cost = vec![vec![0.0; rb.max(ra)]; r];
+    let (small, large, swapped) = if ra <= rb { (&ma, &mb, false) } else { (&mb, &ma, true) };
+    for p in 0..r {
+        for q in 0..large.rank() {
+            let mut prod = 1.0;
+            for n in 0..3 {
+                let x = col_dot(&small.factors[n], p, &large.factors[n], q).abs();
+                prod *= x;
+            }
+            cost[p][q] = -prod;
+        }
+    }
+    let assign = crate::linalg::hungarian_min(&cost);
+    let mut score = 0.0;
+    for p in 0..r {
+        let q = assign[p];
+        let (la, lb) = if swapped {
+            (large.lambda[q], small.lambda[p])
+        } else {
+            (small.lambda[p], large.lambda[q])
+        };
+        let penalty = if la.max(lb) > 0.0 { 1.0 - (la - lb).abs() / la.max(lb) } else { 0.0 };
+        score += penalty * (-cost[p][q]);
+    }
+    score / r as f64
+}
+
+fn col_dot(a: &Matrix, ca: usize, b: &Matrix, cb: usize) -> f64 {
+    debug_assert_eq!(a.rows(), b.rows());
+    (0..a.rows()).map(|i| a[(i, ca)] * b[(i, cb)]).sum()
+}
+
+/// A single experiment measurement: method name, wall-clock seconds and the
+/// quality numbers — the row type every eval harness emits.
+#[derive(Clone, Debug)]
+pub struct MethodResult {
+    pub method: String,
+    pub cpu_time_s: f64,
+    pub relative_error: f64,
+    /// `None` when the method itself is the fitness baseline.
+    pub relative_fitness: Option<f64>,
+    /// `None` when no ground-truth factors exist.
+    pub fms: Option<f64>,
+    /// `false` when the method exceeded its budget (paper: "N/A").
+    pub completed: bool,
+}
+
+impl MethodResult {
+    pub fn failed(method: &str) -> Self {
+        MethodResult {
+            method: method.to_string(),
+            cpu_time_s: f64::NAN,
+            relative_error: f64::NAN,
+            relative_fitness: None,
+            fms: None,
+            completed: false,
+        }
+    }
+}
+
+/// Mean and (population) standard deviation — the paper reports
+/// `mean ± std` over 10 runs.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DenseTensor, TensorData};
+    use crate::util::Rng;
+
+    fn random_model(dims: (usize, usize, usize), r: usize, seed: u64) -> CpModel {
+        let mut rng = Rng::new(seed);
+        CpModel::new(
+            Matrix::rand_gaussian(dims.0, r, &mut rng),
+            Matrix::rand_gaussian(dims.1, r, &mut rng),
+            Matrix::rand_gaussian(dims.2, r, &mut rng),
+            (0..r).map(|_| 0.5 + rng.uniform()).collect(),
+        )
+    }
+
+    #[test]
+    fn relative_error_zero_for_exact() {
+        let m = random_model((4, 5, 6), 2, 1);
+        let x: TensorData = m.to_dense().into();
+        assert!(relative_error(&x, &m) < 1e-7);
+    }
+
+    #[test]
+    fn relative_error_one_for_zero_model() {
+        let mut rng = Rng::new(2);
+        let x: TensorData = DenseTensor::rand(4, 4, 4, &mut rng).into();
+        let zero = CpModel::new(
+            Matrix::zeros(4, 1),
+            Matrix::zeros(4, 1),
+            Matrix::zeros(4, 1),
+            vec![0.0],
+        );
+        assert!((relative_error(&x, &zero) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relative_fitness_identity_is_one() {
+        let m = random_model((4, 4, 4), 2, 3);
+        let mut rng = Rng::new(4);
+        let x: TensorData = DenseTensor::rand(4, 4, 4, &mut rng).into();
+        let rf = relative_fitness(&x, &m, &m);
+        assert!((rf - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fms_perfect_for_same_model() {
+        let m = random_model((5, 5, 5), 3, 5);
+        let s = fms(&m, &m);
+        assert!((s - 1.0).abs() < 1e-9, "fms {s}");
+    }
+
+    #[test]
+    fn fms_invariant_to_permutation() {
+        let m = random_model((5, 5, 5), 3, 6);
+        let mut p = m.clone();
+        p.permute_components(&[2, 0, 1]);
+        let s = fms(&m, &p);
+        assert!((s - 1.0).abs() < 1e-9, "fms {s}");
+    }
+
+    #[test]
+    fn fms_invariant_to_sign_flip() {
+        let m = random_model((5, 5, 5), 2, 7);
+        let mut f = m.clone();
+        // Flip signs of component 0 in two modes (net sign preserved).
+        for n in 0..2 {
+            for i in 0..5 {
+                let v = f.factors[n][(i, 0)];
+                f.factors[n][(i, 0)] = -v;
+            }
+        }
+        let s = fms(&m, &f);
+        assert!(s > 0.999, "fms {s}");
+    }
+
+    #[test]
+    fn fms_low_for_unrelated_models() {
+        let a = random_model((20, 20, 20), 3, 8);
+        let b = random_model((20, 20, 20), 3, 9);
+        let s = fms(&a, &b);
+        assert!(s < 0.5, "fms {s}");
+    }
+
+    #[test]
+    fn fms_handles_rank_mismatch() {
+        let a = random_model((5, 5, 5), 3, 10);
+        let b = a.select_components(&[0, 2]);
+        let s = fms(&a, &b);
+        assert!(s > 0.99, "fms {s}");
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+}

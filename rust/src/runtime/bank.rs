@@ -1,0 +1,138 @@
+//! Artifact registry: parse `manifest.tsv`, pick the smallest covering
+//! shape for a sample, lazily compile executables.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled shape `(I, J, K, R)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BankEntry {
+    pub file: PathBuf,
+    pub i: usize,
+    pub j: usize,
+    pub k: usize,
+    pub r: usize,
+}
+
+impl BankEntry {
+    pub fn volume(&self) -> usize {
+        self.i * self.j * self.k * self.r
+    }
+
+    pub fn covers(&self, i: usize, j: usize, k: usize, r: usize) -> bool {
+        self.i >= i && self.j >= j && self.k >= k && self.r >= r
+    }
+}
+
+/// The set of available artifacts (metadata only — compilation happens in
+/// the service thread that owns the PJRT client).
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactBank {
+    pub entries: Vec<BankEntry>,
+}
+
+impl ArtifactBank {
+    /// Load from a directory containing `manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut entries = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('\t').collect();
+            if parts.len() != 5 {
+                bail!("manifest line {} malformed: {line:?}", ln + 1);
+            }
+            entries.push(BankEntry {
+                file: dir.join(parts[0]),
+                i: parts[1].parse()?,
+                j: parts[2].parse()?,
+                k: parts[3].parse()?,
+                r: parts[4].parse()?,
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest {} has no entries", manifest.display());
+        }
+        Ok(ArtifactBank { entries })
+    }
+
+    /// Smallest (by padded volume) entry covering `(i, j, k, r)`.
+    pub fn select(&self, i: usize, j: usize, k: usize, r: usize) -> Option<&BankEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.covers(i, j, k, r))
+            .min_by_key(|e| e.volume())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bank() -> ArtifactBank {
+        let mk = |i: usize, j: usize, k: usize, r: usize| BankEntry {
+            file: PathBuf::from(format!("als_sweep_i{i}_j{j}_k{k}_r{r}.hlo.txt")),
+            i,
+            j,
+            k,
+            r,
+        };
+        ArtifactBank {
+            entries: vec![mk(16, 16, 16, 4), mk(32, 32, 32, 4), mk(64, 64, 64, 8)],
+        }
+    }
+
+    #[test]
+    fn select_smallest_covering() {
+        let b = bank();
+        let e = b.select(10, 12, 9, 3).unwrap();
+        assert_eq!((e.i, e.j, e.k, e.r), (16, 16, 16, 4));
+        let e = b.select(17, 10, 10, 4).unwrap();
+        assert_eq!((e.i, e.j, e.k, e.r), (32, 32, 32, 4));
+        let e = b.select(10, 10, 10, 5).unwrap();
+        assert_eq!((e.i, e.j, e.k, e.r), (64, 64, 64, 8));
+    }
+
+    #[test]
+    fn select_none_when_uncoverable() {
+        let b = bank();
+        assert!(b.select(100, 10, 10, 4).is_none());
+        assert!(b.select(10, 10, 10, 16).is_none());
+    }
+
+    #[test]
+    fn exact_fit_selected() {
+        let b = bank();
+        let e = b.select(16, 16, 16, 4).unwrap();
+        assert_eq!((e.i, e.j, e.k, e.r), (16, 16, 16, 4));
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("sambaten_bank_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# file\tI\tJ\tK\tR\nals_sweep_i8_j8_k8_r2.hlo.txt\t8\t8\t8\t2\n",
+        )
+        .unwrap();
+        let b = ArtifactBank::load(&dir).unwrap();
+        assert_eq!(b.entries.len(), 1);
+        assert_eq!(b.entries[0].r, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = std::env::temp_dir().join(format!("sambaten_bank_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), "not\ttabs\tenough\n").unwrap();
+        assert!(ArtifactBank::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,39 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas ALS-sweep artifacts
+//! (`artifacts/als_sweep_*.hlo.txt`) and executes them from the Rust hot
+//! path. Python never runs at request time — `make artifacts` is the only
+//! place the L1/L2 layers execute.
+//!
+//! Architecture: the `xla` crate's `PjRtClient` is `Rc`-based (not `Send`),
+//! so a dedicated **service thread** owns the client and every compiled
+//! executable; [`PjrtAlsSolver`] handles are `Send + Sync` and submit jobs
+//! over a channel. Sample decompositions from parallel repetitions
+//! serialise at the PJRT boundary — the CPU PJRT client runs its own
+//! intra-op thread pool, so this costs little and keeps the FFI single-
+//! threaded.
+//!
+//! Shape bank + zero padding: each artifact is a fixed-shape `(I,J,K,R)`
+//! one-sweep executable. A sample of any smaller shape is zero-padded up to
+//! the smallest covering entry; padding is *exact* for ALS (padded rows and
+//! rank columns stay zero, real entries are bit-identical — see
+//! `python/compile/model.py` and [`pad`] tests).
+
+pub mod bank;
+pub mod pad;
+pub mod service;
+
+pub use bank::{ArtifactBank, BankEntry};
+pub use pad::{pad_dense_c_order, pad_factor, unpad_factor};
+pub use service::{PjrtAlsSolver, PjrtService};
+
+/// Default artifacts directory, overridable with `SAMBATEN_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("SAMBATEN_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}
+
+/// True when a usable artifact bank exists on disk (tests and the CLI use
+/// this to decide whether the PJRT path is available).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.tsv").exists()
+}

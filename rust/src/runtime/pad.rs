@@ -1,0 +1,87 @@
+//! Zero padding between the engine's tensors/factors (f64, column-major
+//! slices) and the AOT executables' buffers (f32, C-order, bank shapes).
+
+use crate::linalg::Matrix;
+use crate::tensor::{DenseTensor, Tensor3};
+
+/// Pad a dense tensor into an f32 C-order buffer of shape `(pi, pj, pk)`
+/// (the JAX array layout: index `(i·pj + j)·pk + k`).
+pub fn pad_dense_c_order(t: &DenseTensor, pi: usize, pj: usize, pk: usize) -> Vec<f32> {
+    let (ni, nj, nk) = t.dims();
+    assert!(ni <= pi && nj <= pj && nk <= pk, "tensor larger than pad target");
+    let mut buf = vec![0f32; pi * pj * pk];
+    for k in 0..nk {
+        for j in 0..nj {
+            for i in 0..ni {
+                buf[(i * pj + j) * pk + k] = t.get(i, j, k) as f32;
+            }
+        }
+    }
+    buf
+}
+
+/// Pad a factor matrix into an f32 C-order `(pd, pr)` buffer (extra rows and
+/// rank columns zero).
+pub fn pad_factor(m: &Matrix, pd: usize, pr: usize) -> Vec<f32> {
+    assert!(m.rows() <= pd && m.cols() <= pr);
+    let mut buf = vec![0f32; pd * pr];
+    for i in 0..m.rows() {
+        for t in 0..m.cols() {
+            buf[i * pr + t] = m[(i, t)] as f32;
+        }
+    }
+    buf
+}
+
+/// Extract the real `(rows, cols)` block of a padded C-order factor buffer.
+pub fn unpad_factor(buf: &[f32], pd: usize, pr: usize, rows: usize, cols: usize) -> Matrix {
+    assert_eq!(buf.len(), pd * pr);
+    assert!(rows <= pd && cols <= pr);
+    Matrix::from_fn(rows, cols, |i, t| buf[i * pr + t] as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn tensor_pad_layout() {
+        let mut t = DenseTensor::zeros(2, 3, 2);
+        t.set(1, 2, 0, 5.0);
+        t.set(0, 0, 1, 7.0);
+        let buf = pad_dense_c_order(&t, 4, 4, 4);
+        assert_eq!(buf.len(), 64);
+        assert_eq!(buf[(1 * 4 + 2) * 4 + 0], 5.0);
+        assert_eq!(buf[(0 * 4 + 0) * 4 + 1], 7.0);
+        // Padding zero.
+        assert_eq!(buf[(3 * 4 + 3) * 4 + 3], 0.0);
+        let total: f32 = buf.iter().map(|x| x.abs()).sum();
+        assert_eq!(total, 12.0);
+    }
+
+    #[test]
+    fn factor_pad_unpad_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::rand_gaussian(5, 3, &mut rng);
+        let buf = pad_factor(&m, 8, 4);
+        // Padded areas zero.
+        for i in 5..8 {
+            for t in 0..4 {
+                assert_eq!(buf[i * 4 + t], 0.0);
+            }
+        }
+        for i in 0..5 {
+            assert_eq!(buf[i * 4 + 3], 0.0);
+        }
+        let back = unpad_factor(&buf, 8, 4, 5, 3);
+        assert!(back.max_abs_diff(&m) < 1e-6); // f32 roundtrip
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversize_pad_panics() {
+        let t = DenseTensor::zeros(5, 5, 5);
+        let _ = pad_dense_c_order(&t, 4, 8, 8);
+    }
+}

@@ -1,0 +1,276 @@
+//! The PJRT service thread and the [`PjrtAlsSolver`] handle.
+//!
+//! One OS thread owns the `PjRtClient` and all compiled executables
+//! (lazily compiled on first use of each bank entry). Handles submit
+//! `(tensor, rank, seed)` jobs over an mpsc channel and block on a reply
+//! channel. If no bank entry covers the sample's shape the solver falls
+//! back to the native Rust ALS, so the engine never stalls on an
+//! under-provisioned bank (the fallback is counted and reported).
+
+use super::bank::ArtifactBank;
+use super::pad::{pad_dense_c_order, pad_factor, unpad_factor};
+use crate::coordinator::solver::{InnerSolver, NativeAlsSolver};
+use crate::cp::{AlsOptions, CpModel};
+use crate::linalg::Matrix;
+use crate::tensor::{Tensor3, TensorData};
+use crate::util::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+struct Job {
+    tensor: TensorData,
+    rank: usize,
+    sweeps: usize,
+    seed: u64,
+    reply: mpsc::Sender<Result<CpModel>>,
+}
+
+/// Handle to the PJRT service. Cloneable, `Send + Sync`.
+pub struct PjrtService {
+    tx: Mutex<mpsc::Sender<Job>>,
+    fallbacks: AtomicUsize,
+    jobs: AtomicUsize,
+}
+
+impl PjrtService {
+    /// Spawn the service thread for the given artifacts directory.
+    pub fn start(dir: PathBuf) -> Result<Arc<Self>> {
+        let bank = ArtifactBank::load(&dir)?;
+        let (tx, rx) = mpsc::channel::<Job>();
+        std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_loop(bank, rx))
+            .context("spawning pjrt service thread")?;
+        Ok(Arc::new(PjrtService {
+            tx: Mutex::new(tx),
+            fallbacks: AtomicUsize::new(0),
+            jobs: AtomicUsize::new(0),
+        }))
+    }
+
+    /// Number of jobs that fell back to the native solver (bank miss).
+    pub fn fallback_count(&self) -> usize {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    pub fn job_count(&self) -> usize {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    fn submit(&self, tensor: TensorData, rank: usize, sweeps: usize, seed: u64) -> Result<CpModel> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Job { tensor, rank, sweeps, seed, reply: reply_tx })
+                .map_err(|_| anyhow!("pjrt service thread is gone"))?;
+        }
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        reply_rx.recv().map_err(|_| anyhow!("pjrt service dropped the reply channel"))?
+    }
+}
+
+fn service_loop(bank: ArtifactBank, rx: mpsc::Receiver<Job>) {
+    // The client and executable cache live (only) on this thread.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Poison every incoming job with the root cause.
+            while let Ok(job) = rx.recv() {
+                let _ = job.reply.send(Err(anyhow!("PJRT client init failed: {e}")));
+            }
+            return;
+        }
+    };
+    let mut compiled: Vec<Option<xla::PjRtLoadedExecutable>> =
+        (0..bank.entries.len()).map(|_| None).collect();
+    while let Ok(job) = rx.recv() {
+        let result = run_job(&bank, &client, &mut compiled, &job);
+        let _ = job.reply.send(result);
+    }
+}
+
+fn run_job(
+    bank: &ArtifactBank,
+    client: &xla::PjRtClient,
+    compiled: &mut [Option<xla::PjRtLoadedExecutable>],
+    job: &Job,
+) -> Result<CpModel> {
+    let (ni, nj, nk) = job.tensor.dims();
+    let entry_idx = bank
+        .entries
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.covers(ni, nj, nk, job.rank))
+        .min_by_key(|(_, e)| e.volume())
+        .map(|(idx, _)| idx)
+        .ok_or_else(|| {
+            anyhow!("no bank entry covers sample {}x{}x{} rank {}", ni, nj, nk, job.rank)
+        })?;
+    let entry = &bank.entries[entry_idx];
+    if compiled[entry_idx].is_none() {
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .with_context(|| format!("loading {}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        compiled[entry_idx] =
+            Some(client.compile(&comp).with_context(|| format!("compiling {}", entry.file.display()))?);
+    }
+    let exe = compiled[entry_idx].as_ref().unwrap();
+    let (pi, pj, pk, pr) = (entry.i, entry.j, entry.k, entry.r);
+    // Pad inputs. Gaussian init (uniform inits can stall ALS in swamps).
+    let dense = job.tensor.to_dense();
+    let x_buf = pad_dense_c_order(&dense, pi, pj, pk);
+    let mut rng = Rng::new(job.seed);
+    let a0 = Matrix::rand_gaussian(ni, job.rank, &mut rng);
+    let b0 = Matrix::rand_gaussian(nj, job.rank, &mut rng);
+    let c0 = Matrix::rand_gaussian(nk, job.rank, &mut rng);
+    let x_lit = xla::Literal::vec1(&x_buf).reshape(&[pi as i64, pj as i64, pk as i64])?;
+    let mut a_lit =
+        xla::Literal::vec1(&pad_factor(&a0, pi, pr)).reshape(&[pi as i64, pr as i64])?;
+    let mut b_lit =
+        xla::Literal::vec1(&pad_factor(&b0, pj, pr)).reshape(&[pj as i64, pr as i64])?;
+    let mut c_lit =
+        xla::Literal::vec1(&pad_factor(&c0, pk, pr)).reshape(&[pk as i64, pr as i64])?;
+    for _ in 0..job.sweeps {
+        let out = exe.execute::<xla::Literal>(&[
+            x_lit.clone(),
+            a_lit,
+            b_lit,
+            c_lit,
+        ])?[0][0]
+            .to_literal_sync()?;
+        let (a, b, c) = out.to_tuple3()?;
+        a_lit = a;
+        b_lit = b;
+        c_lit = c;
+    }
+    let a = unpad_factor(&a_lit.to_vec::<f32>()?, pi, pr, ni, job.rank);
+    let b = unpad_factor(&b_lit.to_vec::<f32>()?, pj, pr, nj, job.rank);
+    let c = unpad_factor(&c_lit.to_vec::<f32>()?, pk, pr, nk, job.rank);
+    let mut model = CpModel::new(a, b, c, vec![1.0; job.rank]);
+    model.normalize();
+    model.sort_components();
+    Ok(model)
+}
+
+/// [`InnerSolver`] backed by the PJRT service — the three-layer hot path.
+pub struct PjrtAlsSolver {
+    service: Arc<PjrtService>,
+    /// Fixed sweep count per decomposition (AOT executables have no
+    /// convergence check inside; 25 sweeps ≈ the native solver's typical
+    /// iteration count on bank-sized samples).
+    pub sweeps: usize,
+    fallback: NativeAlsSolver,
+}
+
+impl PjrtAlsSolver {
+    pub fn new(service: Arc<PjrtService>) -> Self {
+        PjrtAlsSolver { service, sweeps: 25, fallback: NativeAlsSolver }
+    }
+
+    pub fn with_sweeps(mut self, sweeps: usize) -> Self {
+        self.sweeps = sweeps;
+        self
+    }
+
+    pub fn service(&self) -> &Arc<PjrtService> {
+        &self.service
+    }
+}
+
+impl InnerSolver for PjrtAlsSolver {
+    fn decompose(
+        &self,
+        x: &TensorData,
+        rank: usize,
+        opts: &AlsOptions,
+        seed: u64,
+    ) -> Result<CpModel> {
+        match self.service.submit(x.clone(), rank, self.sweeps, seed) {
+            Ok(m) => Ok(m),
+            Err(e) if e.to_string().contains("no bank entry") => {
+                // Bank miss → native fallback (counted).
+                self.service.fallbacks.fetch_add(1, Ordering::Relaxed);
+                self.fallback.decompose(x, rank, opts, seed)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-als"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::SyntheticSpec;
+    use crate::runtime::{artifacts_available, artifacts_dir};
+
+    fn service() -> Option<Arc<PjrtService>> {
+        if !artifacts_available() {
+            eprintln!("skipping PJRT test: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(PjrtService::start(artifacts_dir()).unwrap())
+    }
+
+    #[test]
+    fn pjrt_decomposes_low_rank_dense() {
+        let Some(svc) = service() else { return };
+        let solver = PjrtAlsSolver::new(svc).with_sweeps(40);
+        let (x, _) = SyntheticSpec::dense(12, 12, 12, 2, 0.0, 1).generate();
+        let model = solver.decompose(&x, 2, &AlsOptions::default(), 5).unwrap();
+        let fit = model.fit(&x);
+        assert!(fit > 0.99, "fit {fit}");
+    }
+
+    #[test]
+    fn pjrt_matches_native_quality() {
+        let Some(svc) = service() else { return };
+        let solver = PjrtAlsSolver::new(svc).with_sweeps(40);
+        let native = NativeAlsSolver;
+        let (x, _) = SyntheticSpec::dense(14, 10, 12, 3, 0.05, 2).generate();
+        let mp = solver.decompose(&x, 3, &AlsOptions::default(), 7).unwrap();
+        let mn = native.decompose(&x, 3, &AlsOptions::default(), 7).unwrap();
+        let (fp, fn_) = (mp.fit(&x), mn.fit(&x));
+        assert!((fp - fn_).abs() < 0.05, "pjrt fit {fp} vs native {fn_}");
+    }
+
+    #[test]
+    fn pjrt_bank_miss_falls_back_to_native() {
+        let Some(svc) = service() else { return };
+        let solver = PjrtAlsSolver::new(svc.clone());
+        // 200 exceeds every bank entry.
+        let (x, _) = SyntheticSpec::dense(8, 8, 8, 2, 0.0, 3).generate();
+        let mut big = x.to_dense();
+        // Fake a big tensor cheaply: 8x8x8 is fine, use rank > bank max (16).
+        let _ = &mut big;
+        let model = solver.decompose(&x, 2, &AlsOptions::quick(), 11);
+        assert!(model.is_ok());
+        let before = svc.fallback_count();
+        // rank 16 > any bank entry rank → fallback.
+        let model = solver.decompose(&x, 9, &AlsOptions::quick(), 11).unwrap();
+        assert_eq!(model.rank(), 9);
+        assert_eq!(svc.fallback_count(), before + 1);
+    }
+
+    #[test]
+    fn pjrt_usable_from_many_threads() {
+        let Some(svc) = service() else { return };
+        let solver = Arc::new(PjrtAlsSolver::new(svc));
+        let (x, _) = SyntheticSpec::dense(10, 10, 10, 2, 0.0, 4).generate();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let solver = Arc::clone(&solver);
+                let x = x.clone();
+                s.spawn(move || {
+                    let m = solver.decompose(&x, 2, &AlsOptions::quick(), t).unwrap();
+                    assert!(m.fit(&x) > 0.9);
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,288 @@
+//! The "Sample" step of SamBaTen (§III-A, Algorithm 1 lines 2–4).
+//!
+//! Each mode of the tensor is sampled **without replacement**, biased by the
+//! Measure of Importance (MoI) — the per-index sum of squares (Eq. 1). With
+//! sampling factor `s`, a mode of size `n` yields `⌈n/s⌉` indices. The
+//! mode-3 sample is then merged with *all* indices of the incoming batch,
+//! producing the summary `X_s = X(I_s, J_s, K_s ∪ [K+1..K_new])`.
+
+use crate::tensor::{Tensor3, TensorData};
+use crate::util::Rng;
+
+/// A per-repetition sample: index sets into the *updated* tensor, plus the
+/// extracted sub-tensor.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Sampled mode-1 indices (sorted ascending).
+    pub is: Vec<usize>,
+    /// Sampled mode-2 indices (sorted ascending).
+    pub js: Vec<usize>,
+    /// Sampled *old* mode-3 indices (sorted ascending; excludes new slices).
+    pub ks_old: Vec<usize>,
+    /// Number of new slices appended after `ks_old` in the sample.
+    pub k_new: usize,
+    /// The extracted sub-tensor of shape `(|is|, |js|, |ks_old| + k_new)`.
+    pub tensor: TensorData,
+}
+
+impl Sample {
+    /// Full mode-3 index list into the updated tensor of old size `k_old`.
+    pub fn ks_full(&self, k_old: usize) -> Vec<usize> {
+        let mut ks = self.ks_old.clone();
+        ks.extend(k_old..k_old + self.k_new);
+        ks
+    }
+}
+
+/// Weighted sampling without replacement of `k` indices from `0..w.len()`,
+/// probability proportional to `w` — Efraimidis–Spirakis exponential-keys
+/// (each index gets key `u^(1/w)`; the top-k keys are an exact sample).
+/// Zero/negative weights are excluded unless needed to reach `k`, in which
+/// case they are drawn uniformly from the remainder (the paper's sampler
+/// never needs indices with zero energy, but rank-deficient batches can
+/// leave a mode with fewer positive weights than the sample size).
+pub fn weighted_sample_without_replacement(
+    weights: &[f64],
+    k: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let n = weights.len();
+    assert!(k <= n, "cannot sample {k} of {n}");
+    // (key, index); larger key wins.
+    let mut keyed: Vec<(f64, usize)> = Vec::with_capacity(n);
+    let mut zeros: Vec<usize> = Vec::new();
+    for (i, &w) in weights.iter().enumerate() {
+        if w > 0.0 {
+            let u = rng.uniform_open();
+            keyed.push((u.ln() / w, i)); // log-space: u^(1/w) ↔ ln(u)/w
+        } else {
+            zeros.push(i);
+        }
+    }
+    // Top-k selection, not a full sort: O(n) expected vs O(n log n) — this
+    // runs 3·r times per ingest and dominated the sampling profile
+    // (EXPERIMENTS.md §Perf).
+    let take = k.min(keyed.len());
+    if take > 0 && take < keyed.len() {
+        keyed.select_nth_unstable_by(take - 1, |a, b| b.0.partial_cmp(&a.0).unwrap());
+    }
+    let mut out: Vec<usize> = keyed[..take].iter().map(|&(_, i)| i).collect();
+    if out.len() < k {
+        // Top up uniformly from zero-weight indices.
+        let need = k - out.len();
+        let extra = rng.sample_indices(zeros.len(), need);
+        out.extend(extra.into_iter().map(|e| zeros[e]));
+    }
+    out
+}
+
+/// Sampling configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplerConfig {
+    /// Sampling factor `s`: each mode keeps `⌈dim/s⌉` indices.
+    pub factor: usize,
+    /// Optional distinct factor for mode 3 (imbalanced modes — §III-A
+    /// "different rates can be used for imbalanced modes").
+    pub factor_mode3: Option<usize>,
+}
+
+impl SamplerConfig {
+    pub fn new(factor: usize) -> Self {
+        assert!(factor >= 1);
+        SamplerConfig { factor, factor_mode3: None }
+    }
+
+    fn count(dim: usize, s: usize) -> usize {
+        dim.div_ceil(s).max(1).min(dim)
+    }
+}
+
+/// Draw one sample summary of `x_old ⊕ x_new` (Algorithm 1 lines 2–4):
+/// MoI-biased index sets on the *old* tensor, all new slices included.
+///
+/// `x_old` has dims `(I, J, K_old)`; `x_new` has dims `(I, J, K_new)`.
+pub fn draw_sample(
+    x_old: &TensorData,
+    x_new: &TensorData,
+    cfg: SamplerConfig,
+    rng: &mut Rng,
+) -> Sample {
+    let (ni, nj, nk_old) = x_old.dims();
+    let (ni2, nj2, nk_new) = x_new.dims();
+    assert_eq!((ni, nj), (ni2, nj2), "old/new tensors must share modes 1-2");
+    // MoI over the old tensor plus the incoming batch: the batch contributes
+    // energy to modes 1 and 2 as well (its indices are part of the complete
+    // tensor the sample approximates).
+    let mut xa = x_old.mode_sum_squares(0);
+    let mut xb = x_old.mode_sum_squares(1);
+    let xa_new = x_new.mode_sum_squares(0);
+    let xb_new = x_new.mode_sum_squares(1);
+    for i in 0..ni {
+        xa[i] += xa_new[i];
+    }
+    for j in 0..nj {
+        xb[j] += xb_new[j];
+    }
+    let xc = x_old.mode_sum_squares(2);
+    let s = cfg.factor;
+    let s3 = cfg.factor_mode3.unwrap_or(s);
+    let mut is = weighted_sample_without_replacement(&xa, SamplerConfig::count(ni, s), rng);
+    let mut js = weighted_sample_without_replacement(&xb, SamplerConfig::count(nj, s), rng);
+    let mut ks = weighted_sample_without_replacement(&xc, SamplerConfig::count(nk_old, s3), rng);
+    // Sorted index sets keep extraction and scatter cache-friendly and make
+    // the anchor rows deterministic given the set.
+    is.sort_unstable();
+    js.sort_unstable();
+    ks.sort_unstable();
+    // Extract old part and new part, then concatenate along mode 3.
+    let mut sub = x_old.extract(&is, &js, &ks);
+    let all_new_k: Vec<usize> = (0..nk_new).collect();
+    let sub_new = x_new.extract(&is, &js, &all_new_k);
+    sub.append_mode3(&sub_new);
+    Sample { is, js, ks_old: ks, k_new: nk_new, tensor: sub }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{CooTensor, DenseTensor};
+
+    #[test]
+    fn weighted_sample_is_distinct_and_in_range() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f64> = (0..50).map(|i| (i + 1) as f64).collect();
+        for k in [1, 10, 50] {
+            let s = weighted_sample_without_replacement(&w, k, &mut rng);
+            assert_eq!(s.len(), k);
+            let mut d = s.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), k);
+            assert!(d.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    fn weighted_sample_biases_towards_heavy_indices() {
+        let mut rng = Rng::new(2);
+        // Index 0 has 100x the weight of the others; it should almost always
+        // be in a size-2 sample from 20 candidates.
+        let mut w = vec![1.0; 20];
+        w[0] = 100.0;
+        let mut hit = 0;
+        for _ in 0..300 {
+            let s = weighted_sample_without_replacement(&w, 2, &mut rng);
+            if s.contains(&0) {
+                hit += 1;
+            }
+        }
+        assert!(hit > 270, "hit {hit}/300");
+    }
+
+    #[test]
+    fn weighted_sample_uses_zeros_only_when_forced() {
+        let mut rng = Rng::new(3);
+        let w = vec![0.0, 1.0, 0.0, 1.0];
+        let s = weighted_sample_without_replacement(&w, 2, &mut rng);
+        let mut d = s.clone();
+        d.sort_unstable();
+        assert_eq!(d, vec![1, 3]);
+        // Forced case: k exceeds positive-weight count.
+        let s = weighted_sample_without_replacement(&w, 3, &mut rng);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn draw_sample_shapes() {
+        let mut rng = Rng::new(4);
+        let old = DenseTensor::rand(10, 12, 8, &mut rng);
+        let new = DenseTensor::rand(10, 12, 3, &mut rng);
+        let sample = draw_sample(
+            &old.into(),
+            &new.into(),
+            SamplerConfig::new(2),
+            &mut rng,
+        );
+        assert_eq!(sample.is.len(), 5);
+        assert_eq!(sample.js.len(), 6);
+        assert_eq!(sample.ks_old.len(), 4);
+        assert_eq!(sample.k_new, 3);
+        assert_eq!(sample.tensor.dims(), (5, 6, 7));
+        // Index sets sorted.
+        assert!(sample.is.windows(2).all(|w| w[0] < w[1]));
+        assert!(sample.ks_old.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn draw_sample_includes_all_new_slices_values() {
+        let mut rng = Rng::new(5);
+        let old = DenseTensor::rand(6, 6, 4, &mut rng);
+        let mut new = DenseTensor::zeros(6, 6, 2);
+        for j in 0..6 {
+            for i in 0..6 {
+                new.set(i, j, 0, 100.0 + (i * 6 + j) as f64);
+                new.set(i, j, 1, 200.0 + (i * 6 + j) as f64);
+            }
+        }
+        let sample = draw_sample(
+            &old.into(),
+            &new.clone().into(),
+            SamplerConfig::new(2),
+            &mut rng,
+        );
+        // The last k_new slices of the sample tensor must equal the batch
+        // restricted to (is, js).
+        let d = sample.tensor.to_dense();
+        let base_k = sample.ks_old.len();
+        for (a, &i) in sample.is.iter().enumerate() {
+            for (b, &j) in sample.js.iter().enumerate() {
+                assert_eq!(d.get(a, b, base_k), new.get(i, j, 0));
+                assert_eq!(d.get(a, b, base_k + 1), new.get(i, j, 1));
+            }
+        }
+    }
+
+    #[test]
+    fn draw_sample_sparse_path() {
+        let mut rng = Rng::new(6);
+        let old = CooTensor::rand(12, 12, 9, 0.3, &mut rng);
+        let new = CooTensor::rand(12, 12, 3, 0.3, &mut rng);
+        let sample = draw_sample(
+            &old.into(),
+            &new.into(),
+            SamplerConfig { factor: 3, factor_mode3: Some(2) },
+            &mut rng,
+        );
+        assert!(sample.tensor.is_sparse());
+        assert_eq!(sample.is.len(), 4);
+        assert_eq!(sample.ks_old.len(), 5); // ceil(9/2)
+        assert_eq!(sample.tensor.dims(), (4, 4, 8));
+    }
+
+    #[test]
+    fn ks_full_appends_new_indices() {
+        let s = Sample {
+            is: vec![0],
+            js: vec![0],
+            ks_old: vec![1, 3],
+            k_new: 2,
+            tensor: DenseTensor::zeros(1, 1, 4).into(),
+        };
+        assert_eq!(s.ks_full(5), vec![1, 3, 5, 6]);
+    }
+
+    #[test]
+    fn sampling_factor_one_keeps_everything() {
+        let mut rng = Rng::new(7);
+        let old = DenseTensor::rand(5, 5, 5, &mut rng);
+        let new = DenseTensor::rand(5, 5, 1, &mut rng);
+        let sample = draw_sample(
+            &old.clone().into(),
+            &new.into(),
+            SamplerConfig::new(1),
+            &mut rng,
+        );
+        assert_eq!(sample.is, (0..5).collect::<Vec<_>>());
+        assert_eq!(sample.tensor.dims(), (5, 5, 6));
+    }
+}

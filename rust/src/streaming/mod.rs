@@ -1,0 +1,288 @@
+//! Streaming ingestion: slice sources, batching and backpressure.
+//!
+//! The incremental setting of the paper is "updates arrive as new slices
+//! over time". This module turns any slice producer into a batched stream
+//! the engine consumes: a [`SliceSource`] yields frontal slices one at a
+//! time; [`Batcher`] groups them into `TensorData` batches; and
+//! [`StreamPump`] runs a source on a producer thread with a bounded queue —
+//! if the decomposition falls behind, the producer blocks (backpressure)
+//! instead of letting memory grow unboundedly.
+
+use crate::tensor::{CooTensor, DenseTensor, Tensor3, TensorData};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+
+/// One incoming frontal slice: either dense `I×J` data (column-major, `i`
+/// fastest) or sparse `(i, j, v)` triples.
+#[derive(Clone, Debug)]
+pub enum Slice {
+    Dense { i: usize, j: usize, data: Vec<f64> },
+    Sparse { i: usize, j: usize, entries: Vec<(u32, u32, f64)> },
+}
+
+impl Slice {
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            Slice::Dense { i, j, .. } | Slice::Sparse { i, j, .. } => (*i, *j),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            Slice::Dense { data, .. } => data.iter().filter(|&&v| v != 0.0).count(),
+            Slice::Sparse { entries, .. } => entries.len(),
+        }
+    }
+}
+
+/// A producer of slices (a growing mode-3 tensor source).
+pub trait SliceSource: Send {
+    /// `(I, J)` of every slice this source emits.
+    fn slice_dims(&self) -> (usize, usize);
+    /// Next slice, or `None` when the stream ends.
+    fn next_slice(&mut self) -> Option<Slice>;
+}
+
+/// Adapts an owned tensor into a slice-by-slice replay (simulation of a
+/// live feed; used by examples and the eval harness).
+pub struct TensorReplay {
+    tensor: TensorData,
+    cursor: usize,
+}
+
+impl TensorReplay {
+    pub fn new(tensor: TensorData) -> Self {
+        TensorReplay { tensor, cursor: 0 }
+    }
+}
+
+impl SliceSource for TensorReplay {
+    fn slice_dims(&self) -> (usize, usize) {
+        let (i, j, _) = self.tensor.dims();
+        (i, j)
+    }
+
+    fn next_slice(&mut self) -> Option<Slice> {
+        let (ni, nj, nk) = self.tensor.dims();
+        if self.cursor >= nk {
+            return None;
+        }
+        let k = self.cursor;
+        self.cursor += 1;
+        Some(match &self.tensor {
+            TensorData::Dense(d) => {
+                Slice::Dense { i: ni, j: nj, data: d.frontal_slice(k).to_vec() }
+            }
+            TensorData::Sparse(s) => {
+                let entries = s
+                    .iter()
+                    .filter(|&(_, _, kk, _)| kk == k)
+                    .map(|(i, j, _, v)| (i as u32, j as u32, v))
+                    .collect();
+                Slice::Sparse { i: ni, j: nj, entries }
+            }
+        })
+    }
+}
+
+/// Groups slices into batches of `batch_size` (the paper's "batch of
+/// incoming slices"; the final partial batch is flushed at end of stream).
+pub struct Batcher {
+    batch_size: usize,
+    sparse: bool,
+    pending: VecDeque<Slice>,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize, sparse: bool) -> Self {
+        assert!(batch_size >= 1);
+        Batcher { batch_size, sparse, pending: VecDeque::new() }
+    }
+
+    /// Add a slice; returns a full batch when ready.
+    pub fn push(&mut self, s: Slice) -> Option<TensorData> {
+        self.pending.push_back(s);
+        if self.pending.len() >= self.batch_size {
+            self.flush()
+        } else {
+            None
+        }
+    }
+
+    /// Drain whatever is pending into a (possibly partial) batch.
+    pub fn flush(&mut self) -> Option<TensorData> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let (ni, nj) = self.pending[0].dims();
+        let nk = self.pending.len();
+        let out = if self.sparse {
+            let mut t = CooTensor::new(ni, nj, nk);
+            for (k, s) in self.pending.drain(..).enumerate() {
+                match s {
+                    Slice::Sparse { entries, .. } => {
+                        for (i, j, v) in entries {
+                            t.push(i as usize, j as usize, k, v);
+                        }
+                    }
+                    Slice::Dense { data, .. } => {
+                        for j in 0..nj {
+                            for i in 0..ni {
+                                let v = data[i + ni * j];
+                                if v != 0.0 {
+                                    t.push(i, j, k, v);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            TensorData::Sparse(t)
+        } else {
+            let mut t = DenseTensor::zeros(ni, nj, nk);
+            for (k, s) in self.pending.drain(..).enumerate() {
+                match s {
+                    Slice::Dense { data, .. } => {
+                        for j in 0..nj {
+                            for i in 0..ni {
+                                t.set(i, j, k, data[i + ni * j]);
+                            }
+                        }
+                    }
+                    Slice::Sparse { entries, .. } => {
+                        for (i, j, v) in entries {
+                            t.set(i as usize, j as usize, k, v);
+                        }
+                    }
+                }
+            }
+            TensorData::Dense(t)
+        };
+        Some(out)
+    }
+}
+
+/// Runs a [`SliceSource`] on a producer thread, batching into a bounded
+/// queue (`queue_cap` batches). `next_batch` blocks the consumer; a full
+/// queue blocks the *producer* — backpressure instead of unbounded memory.
+pub struct StreamPump {
+    rx: mpsc::Receiver<TensorData>,
+}
+
+impl StreamPump {
+    pub fn spawn<S: SliceSource + 'static>(
+        mut source: S,
+        batch_size: usize,
+        sparse: bool,
+        queue_cap: usize,
+    ) -> Result<Self> {
+        let (tx, rx) = mpsc::sync_channel::<TensorData>(queue_cap.max(1));
+        std::thread::Builder::new().name("stream-pump".into()).spawn(move || {
+            let mut batcher = Batcher::new(batch_size, sparse);
+            while let Some(slice) = source.next_slice() {
+                if let Some(batch) = batcher.push(slice) {
+                    if tx.send(batch).is_err() {
+                        return; // consumer hung up
+                    }
+                }
+            }
+            if let Some(batch) = batcher.flush() {
+                let _ = tx.send(batch);
+            }
+        })?;
+        Ok(StreamPump { rx })
+    }
+
+    /// Blocking pull; `None` at end of stream.
+    pub fn next_batch(&self) -> Option<TensorData> {
+        self.rx.recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn replay_roundtrips_dense_tensor() {
+        let mut rng = Rng::new(1);
+        let t = DenseTensor::rand(4, 5, 6, &mut rng);
+        let mut replay = TensorReplay::new(t.clone().into());
+        let mut batcher = Batcher::new(6, false);
+        let mut out = None;
+        while let Some(s) = replay.next_slice() {
+            if let Some(b) = batcher.push(s) {
+                out = Some(b);
+            }
+        }
+        let out = out.unwrap().to_dense();
+        assert_eq!(out.data(), t.data());
+    }
+
+    #[test]
+    fn batcher_emits_full_and_partial_batches() {
+        let mut b = Batcher::new(3, false);
+        let mk = || Slice::Dense { i: 2, j: 2, data: vec![1.0; 4] };
+        assert!(b.push(mk()).is_none());
+        assert!(b.push(mk()).is_none());
+        let full = b.push(mk()).unwrap();
+        assert_eq!(full.dims(), (2, 2, 3));
+        assert!(b.push(mk()).is_none());
+        let partial = b.flush().unwrap();
+        assert_eq!(partial.dims(), (2, 2, 1));
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn sparse_batching_preserves_entries() {
+        let mut b = Batcher::new(2, true);
+        let s0 = Slice::Sparse { i: 3, j: 3, entries: vec![(0, 1, 5.0), (2, 2, -1.0)] };
+        let s1 = Slice::Sparse { i: 3, j: 3, entries: vec![(1, 0, 2.0)] };
+        assert!(b.push(s0).is_none());
+        let batch = b.push(s1).unwrap();
+        assert!(batch.is_sparse());
+        assert_eq!(batch.nnz(), 3);
+        let d = batch.to_dense();
+        assert_eq!(d.get(0, 1, 0), 5.0);
+        assert_eq!(d.get(1, 0, 1), 2.0);
+    }
+
+    #[test]
+    fn mixed_slice_kinds_into_dense_batch() {
+        let mut b = Batcher::new(2, false);
+        let s0 = Slice::Dense { i: 2, j: 1, data: vec![1.0, 2.0] };
+        let s1 = Slice::Sparse { i: 2, j: 1, entries: vec![(1, 0, 7.0)] };
+        b.push(s0);
+        let batch = b.push(s1).unwrap();
+        let d = batch.to_dense();
+        assert_eq!(d.get(0, 0, 0), 1.0);
+        assert_eq!(d.get(1, 0, 1), 7.0);
+    }
+
+    #[test]
+    fn pump_streams_all_batches_with_backpressure() {
+        let mut rng = Rng::new(2);
+        let t = DenseTensor::rand(3, 3, 10, &mut rng);
+        let pump = StreamPump::spawn(TensorReplay::new(t.clone().into()), 3, false, 1).unwrap();
+        let mut total_k = 0;
+        let mut count = 0;
+        while let Some(b) = pump.next_batch() {
+            total_k += b.dims().2;
+            count += 1;
+            // Slow consumer: the producer must block, not drop.
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(total_k, 10);
+        assert_eq!(count, 4); // 3+3+3+1
+    }
+
+    #[test]
+    fn slice_nnz() {
+        let s = Slice::Dense { i: 2, j: 2, data: vec![0.0, 1.0, 0.0, 2.0] };
+        assert_eq!(s.nnz(), 2);
+        let s = Slice::Sparse { i: 2, j: 2, entries: vec![(0, 0, 1.0)] };
+        assert_eq!(s.nnz(), 1);
+    }
+}

@@ -1,0 +1,583 @@
+//! Dense third-order tensor, column-major within frontal slices
+//! (`idx = i + I·j + I·J·k`, the Matlab/Tensor-Toolbox layout the paper's
+//! artifact uses): frontal slice `X(:,:,k)` is one contiguous `I×J` block,
+//! which both the dense MTTKRP and the PJRT hand-off exploit.
+
+use super::{mode_dim, Tensor3};
+use crate::linalg::Matrix;
+use crate::util::Rng;
+
+#[derive(Clone)]
+pub struct DenseTensor {
+    i: usize,
+    j: usize,
+    k: usize,
+    data: Vec<f64>,
+}
+
+impl std::fmt::Debug for DenseTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "DenseTensor({}x{}x{}, norm={:.4})", self.i, self.j, self.k, self.norm())
+    }
+}
+
+impl DenseTensor {
+    pub fn zeros(i: usize, j: usize, k: usize) -> Self {
+        DenseTensor { i, j, k, data: vec![0.0; i * j * k] }
+    }
+
+    /// I.i.d. uniform entries — test/datagen helper.
+    pub fn rand(i: usize, j: usize, k: usize, rng: &mut Rng) -> Self {
+        let data = (0..i * j * k).map(|_| rng.uniform()).collect();
+        DenseTensor { i, j, k, data }
+    }
+
+    pub fn from_vec(i: usize, j: usize, k: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), i * j * k);
+        DenseTensor { i, j, k, data }
+    }
+
+    #[inline]
+    fn idx(&self, i: usize, j: usize, k: usize) -> usize {
+        debug_assert!(i < self.i && j < self.j && k < self.k);
+        i + self.i * (j + self.j * k)
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize, k: usize) -> f64 {
+        self.data[self.idx(i, j, k)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, k: usize, v: f64) {
+        let ix = self.idx(i, j, k);
+        self.data[ix] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, i: usize, j: usize, k: usize, v: f64) {
+        let ix = self.idx(i, j, k);
+        self.data[ix] += v;
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Contiguous frontal slice `X(:,:,k)` (column-major `I×J`).
+    pub fn frontal_slice(&self, k: usize) -> &[f64] {
+        let sz = self.i * self.j;
+        &self.data[k * sz..(k + 1) * sz]
+    }
+
+    /// Mode-`n` unfolding, Kolda convention: `X_(1)` is `I × JK` with column
+    /// `j + J·k`; `X_(2)` is `J × IK` with column `i + I·k`; `X_(3)` is
+    /// `K × IJ` with column `i + I·j`.
+    pub fn unfold(&self, mode: usize) -> Matrix {
+        let (ni, nj, nk) = (self.i, self.j, self.k);
+        match mode {
+            0 => Matrix::from_fn(ni, nj * nk, |i, c| self.get(i, c % nj, c / nj)),
+            1 => Matrix::from_fn(nj, ni * nk, |j, c| self.get(c % ni, j, c / ni)),
+            2 => Matrix::from_fn(nk, ni * nj, |k, c| self.get(c % ni, c / ni, k)),
+            _ => panic!("mode {mode} out of range"),
+        }
+    }
+
+    /// Extract sub-tensor at given index lists (any order, with the output
+    /// axes following the list order) — the sampling primitive.
+    pub fn extract(&self, is: &[usize], js: &[usize], ks: &[usize]) -> DenseTensor {
+        let mut out = DenseTensor::zeros(is.len(), js.len(), ks.len());
+        for (kk, &k) in ks.iter().enumerate() {
+            for (jj, &j) in js.iter().enumerate() {
+                for (ii, &i) in is.iter().enumerate() {
+                    out.set(ii, jj, kk, self.get(i, j, k));
+                }
+            }
+        }
+        out
+    }
+
+    /// Split along mode 3 at `at`: returns `(X[..,..,0..at], X[..,..,at..])`.
+    pub fn split_mode3(&self, at: usize) -> (DenseTensor, DenseTensor) {
+        assert!(at <= self.k);
+        let sz = self.i * self.j;
+        let first = DenseTensor::from_vec(self.i, self.j, at, self.data[..at * sz].to_vec());
+        let second =
+            DenseTensor::from_vec(self.i, self.j, self.k - at, self.data[at * sz..].to_vec());
+        (first, second)
+    }
+
+    /// Append `other` along mode 3 (slices concatenate because frontal
+    /// slices are contiguous).
+    pub fn append_mode3(&mut self, other: &DenseTensor) {
+        assert_eq!((self.i, self.j), (other.i, other.j), "mode-1/2 dims must match");
+        self.data.extend_from_slice(&other.data);
+        self.k += other.k;
+    }
+
+    /// Squared Frobenius norm.
+    pub fn norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    /// Tensor-times-matrix along `mode`: `Y = X ×_n M` with `M` of shape
+    /// `new_dim × dim_n`. Used by CORCONDIA (`G = X ×₁ Ã⁺ ×₂ B⁺ ×₃ C⁺`).
+    pub fn ttm(&self, mode: usize, m: &Matrix) -> DenseTensor {
+        let (ni, nj, nk) = self.dims();
+        let p = m.rows();
+        match mode {
+            0 => {
+                assert_eq!(m.cols(), ni, "ttm mode-1 dim mismatch");
+                let mut out = DenseTensor::zeros(p, nj, nk);
+                for k in 0..nk {
+                    for j in 0..nj {
+                        for q in 0..p {
+                            let mut acc = 0.0;
+                            for i in 0..ni {
+                                acc += m[(q, i)] * self.get(i, j, k);
+                            }
+                            out.set(q, j, k, acc);
+                        }
+                    }
+                }
+                out
+            }
+            1 => {
+                assert_eq!(m.cols(), nj, "ttm mode-2 dim mismatch");
+                let mut out = DenseTensor::zeros(ni, p, nk);
+                for k in 0..nk {
+                    for q in 0..p {
+                        for i in 0..ni {
+                            let mut acc = 0.0;
+                            for j in 0..nj {
+                                acc += m[(q, j)] * self.get(i, j, k);
+                            }
+                            out.set(i, q, k, acc);
+                        }
+                    }
+                }
+                out
+            }
+            2 => {
+                assert_eq!(m.cols(), nk, "ttm mode-3 dim mismatch");
+                let mut out = DenseTensor::zeros(ni, nj, p);
+                for q in 0..p {
+                    for k in 0..nk {
+                        let c = m[(q, k)];
+                        if c == 0.0 {
+                            continue;
+                        }
+                        for j in 0..nj {
+                            for i in 0..ni {
+                                out.add_at(i, j, q, c * self.get(i, j, k));
+                            }
+                        }
+                    }
+                }
+                out
+            }
+            _ => panic!("mode {mode} out of range"),
+        }
+    }
+}
+
+impl DenseTensor {
+    /// Monomorphised MTTKRP hot loops: with `R` a compile-time constant the
+    /// per-entry `t` loops become straight-line vector code (measured ~1.5-2×
+    /// over the runtime-`r` fallback — EXPERIMENTS.md §Perf).
+    fn mttkrp_const<const R: usize>(
+        &self,
+        mode: usize,
+        a: &Matrix,
+        b: &Matrix,
+        c: &Matrix,
+        out: &mut Matrix,
+    ) {
+        let (ni, nj, nk) = (self.i, self.j, self.k);
+        match mode {
+            0 => {
+                let mut bc = [0.0f64; R];
+                for k in 0..nk {
+                    let slice = self.frontal_slice(k);
+                    let c_row = c.row(k);
+                    for j in 0..nj {
+                        let b_row = b.row(j);
+                        for t in 0..R {
+                            bc[t] = b_row[t] * c_row[t];
+                        }
+                        let col = &slice[j * ni..(j + 1) * ni];
+                        for (i, &x) in col.iter().enumerate() {
+                            if x == 0.0 {
+                                continue;
+                            }
+                            let o = out.row_mut(i);
+                            for t in 0..R {
+                                o[t] += x * bc[t];
+                            }
+                        }
+                    }
+                }
+            }
+            1 => {
+                for k in 0..nk {
+                    let slice = self.frontal_slice(k);
+                    let c_row = c.row(k);
+                    let mut cr = [0.0f64; R];
+                    cr.copy_from_slice(&c_row[..R]);
+                    for j in 0..nj {
+                        let col = &slice[j * ni..(j + 1) * ni];
+                        let mut acc = [0.0f64; R];
+                        for (i, &x) in col.iter().enumerate() {
+                            if x == 0.0 {
+                                continue;
+                            }
+                            let a_row = a.row(i);
+                            for t in 0..R {
+                                acc[t] += x * a_row[t];
+                            }
+                        }
+                        let o = out.row_mut(j);
+                        for t in 0..R {
+                            o[t] += acc[t] * cr[t];
+                        }
+                    }
+                }
+            }
+            2 => {
+                for k in 0..nk {
+                    let slice = self.frontal_slice(k);
+                    let mut acc = [0.0f64; R];
+                    for j in 0..nj {
+                        let b_row = b.row(j);
+                        let col = &slice[j * ni..(j + 1) * ni];
+                        let mut ja = [0.0f64; R];
+                        for (i, &x) in col.iter().enumerate() {
+                            if x == 0.0 {
+                                continue;
+                            }
+                            let a_row = a.row(i);
+                            for t in 0..R {
+                                ja[t] += x * a_row[t];
+                            }
+                        }
+                        for t in 0..R {
+                            acc[t] += ja[t] * b_row[t];
+                        }
+                    }
+                    let o = out.row_mut(k);
+                    for t in 0..R {
+                        o[t] += acc[t];
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+impl Tensor3 for DenseTensor {
+    fn dims(&self) -> (usize, usize, usize) {
+        (self.i, self.j, self.k)
+    }
+
+    fn norm(&self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+
+    fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    fn mttkrp(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix {
+        let r = match mode {
+            0 => b.cols(),
+            1 | 2 => a.cols(),
+            _ => panic!("mode {mode} out of range"),
+        };
+        let (ni, nj, nk) = (self.i, self.j, self.k);
+        let mut out = Matrix::zeros(mode_dim(self.dims(), mode), r);
+        // Monomorphised fast path for the common small ranks.
+        match r {
+            1 => return { self.mttkrp_const::<1>(mode, a, b, c, &mut out); out },
+            2 => return { self.mttkrp_const::<2>(mode, a, b, c, &mut out); out },
+            3 => return { self.mttkrp_const::<3>(mode, a, b, c, &mut out); out },
+            4 => return { self.mttkrp_const::<4>(mode, a, b, c, &mut out); out },
+            5 => return { self.mttkrp_const::<5>(mode, a, b, c, &mut out); out },
+            6 => return { self.mttkrp_const::<6>(mode, a, b, c, &mut out); out },
+            8 => return { self.mttkrp_const::<8>(mode, a, b, c, &mut out); out },
+            10 => return { self.mttkrp_const::<10>(mode, a, b, c, &mut out); out },
+            16 => return { self.mttkrp_const::<16>(mode, a, b, c, &mut out); out },
+            _ => {}
+        }
+        match mode {
+            0 => {
+                // M[i,:] += X(i,j,k) * (B[j,:] .* C[k,:])
+                assert_eq!(b.rows(), nj);
+                assert_eq!(c.rows(), nk);
+                let mut bc = vec![0.0; r];
+                for k in 0..nk {
+                    let slice = self.frontal_slice(k);
+                    let c_row = c.row(k);
+                    for j in 0..nj {
+                        let b_row = b.row(j);
+                        for t in 0..r {
+                            bc[t] = b_row[t] * c_row[t];
+                        }
+                        let col = &slice[j * ni..(j + 1) * ni];
+                        for (i, &x) in col.iter().enumerate() {
+                            if x == 0.0 {
+                                continue;
+                            }
+                            let o = out.row_mut(i);
+                            for t in 0..r {
+                                o[t] += x * bc[t];
+                            }
+                        }
+                    }
+                }
+            }
+            1 => {
+                // M[j,:] += X(i,j,k) * (A[i,:] .* C[k,:])
+                assert_eq!(a.rows(), ni);
+                assert_eq!(c.rows(), nk);
+                for k in 0..nk {
+                    let slice = self.frontal_slice(k);
+                    let c_row = c.row(k);
+                    for j in 0..nj {
+                        let col = &slice[j * ni..(j + 1) * ni];
+                        let o = out.row_mut(j);
+                        for (i, &x) in col.iter().enumerate() {
+                            if x == 0.0 {
+                                continue;
+                            }
+                            let a_row = a.row(i);
+                            for t in 0..r {
+                                o[t] += x * a_row[t] * c_row[t];
+                            }
+                        }
+                    }
+                }
+            }
+            2 => {
+                // M[k,:] += X(i,j,k) * (A[i,:] .* B[j,:])
+                assert_eq!(a.rows(), ni);
+                assert_eq!(b.rows(), nj);
+                for k in 0..nk {
+                    let slice = self.frontal_slice(k);
+                    let o = out.row_mut(k);
+                    for j in 0..nj {
+                        let b_row = b.row(j);
+                        let col = &slice[j * ni..(j + 1) * ni];
+                        for (i, &x) in col.iter().enumerate() {
+                            if x == 0.0 {
+                                continue;
+                            }
+                            let a_row = a.row(i);
+                            for t in 0..r {
+                                o[t] += x * a_row[t] * b_row[t];
+                            }
+                        }
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+        out
+    }
+
+    fn mode_sum_squares(&self, mode: usize) -> Vec<f64> {
+        let mut out = vec![0.0; mode_dim(self.dims(), mode)];
+        let (ni, nj, nk) = (self.i, self.j, self.k);
+        for k in 0..nk {
+            let slice = self.frontal_slice(k);
+            for j in 0..nj {
+                let col = &slice[j * ni..(j + 1) * ni];
+                match mode {
+                    0 => {
+                        for (i, &x) in col.iter().enumerate() {
+                            out[i] += x * x;
+                        }
+                    }
+                    1 => {
+                        out[j] += col.iter().map(|x| x * x).sum::<f64>();
+                    }
+                    2 => {
+                        out[k] += col.iter().map(|x| x * x).sum::<f64>();
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+        out
+    }
+
+    fn inner_with_kruskal(&self, lambda: &[f64], a: &Matrix, b: &Matrix, c: &Matrix) -> f64 {
+        // ⟨X, model⟩ = Σ_r λ_r Σ_ijk X(i,j,k) A(i,r)B(j,r)C(k,r)
+        //            = Σ_r λ_r · ⟨MTTKRP_3(X; A,B)[k,r], C[k,r]⟩
+        let m3 = self.mttkrp(2, a, b, c);
+        let r = lambda.len();
+        let mut acc = 0.0;
+        for k in 0..c.rows() {
+            let mr = m3.row(k);
+            let cr = c.row(k);
+            for t in 0..r {
+                acc += lambda[t] * mr[t] * cr[t];
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> DenseTensor {
+        // 2x3x2 with distinct entries.
+        let mut t = DenseTensor::zeros(2, 3, 2);
+        let mut v = 1.0;
+        for k in 0..2 {
+            for j in 0..3 {
+                for i in 0..2 {
+                    t.set(i, j, k, v);
+                    v += 1.0;
+                }
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut t = DenseTensor::zeros(3, 4, 5);
+        t.set(2, 3, 4, 7.5);
+        assert_eq!(t.get(2, 3, 4), 7.5);
+        assert_eq!(t.nnz(), 1);
+    }
+
+    #[test]
+    fn frontal_slice_layout() {
+        let t = small();
+        // slice k=1 starts after 6 entries
+        assert_eq!(t.frontal_slice(1)[0], 7.0);
+        assert_eq!(t.get(0, 0, 1), 7.0);
+    }
+
+    #[test]
+    fn unfold_shapes_and_values() {
+        let t = small();
+        let u1 = t.unfold(0);
+        assert_eq!((u1.rows(), u1.cols()), (2, 6));
+        // X(1)[i, j + J*k]
+        assert_eq!(u1[(0, 1)], t.get(0, 1, 0));
+        assert_eq!(u1[(1, 3 + 2)], t.get(1, 2, 1));
+        let u2 = t.unfold(1);
+        assert_eq!((u2.rows(), u2.cols()), (3, 4));
+        assert_eq!(u2[(2, 1 + 2)], t.get(1, 2, 1));
+        let u3 = t.unfold(2);
+        assert_eq!((u3.rows(), u3.cols()), (2, 6));
+        assert_eq!(u3[(1, 0)], t.get(0, 0, 1));
+    }
+
+    /// MTTKRP must equal the definitional `X_(n) · KRP` computed explicitly.
+    #[test]
+    fn mttkrp_matches_definition() {
+        let mut rng = Rng::new(10);
+        let t = DenseTensor::rand(4, 5, 6, &mut rng);
+        let a = Matrix::rand_gaussian(4, 3, &mut rng);
+        let b = Matrix::rand_gaussian(5, 3, &mut rng);
+        let c = Matrix::rand_gaussian(6, 3, &mut rng);
+        // Kolda: X(1)(C ⊙ B); column (j + J*k) pairs with KR row (k*J + j) = C(k,:).*B(j,:)
+        let expect0 = t.unfold(0).matmul(&c.khatri_rao(&b));
+        assert!(t.mttkrp(0, &a, &b, &c).max_abs_diff(&expect0) < 1e-10);
+        let expect1 = t.unfold(1).matmul(&c.khatri_rao(&a));
+        assert!(t.mttkrp(1, &a, &b, &c).max_abs_diff(&expect1) < 1e-10);
+        let expect2 = t.unfold(2).matmul(&b.khatri_rao(&a));
+        assert!(t.mttkrp(2, &a, &b, &c).max_abs_diff(&expect2) < 1e-10);
+    }
+
+    #[test]
+    fn mode_sum_squares_matches_manual() {
+        let t = small();
+        for mode in 0..3 {
+            let got = t.mode_sum_squares(mode);
+            let (ni, nj, nk) = t.dims();
+            let dim = [ni, nj, nk][mode];
+            let mut expect = vec![0.0; dim];
+            for i in 0..ni {
+                for j in 0..nj {
+                    for k in 0..nk {
+                        let v = t.get(i, j, k);
+                        expect[[i, j, k][mode]] += v * v;
+                    }
+                }
+            }
+            for (g, e) in got.iter().zip(&expect) {
+                assert!((g - e).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn extract_orders_axes_by_list() {
+        let t = small();
+        let s = t.extract(&[1], &[2, 0], &[1]);
+        assert_eq!(s.dims(), (1, 2, 1));
+        assert_eq!(s.get(0, 0, 0), t.get(1, 2, 1));
+        assert_eq!(s.get(0, 1, 0), t.get(1, 0, 1));
+    }
+
+    #[test]
+    fn split_append_roundtrip() {
+        let mut rng = Rng::new(3);
+        let t = DenseTensor::rand(3, 4, 7, &mut rng);
+        let (mut a, b) = t.split_mode3(3);
+        assert_eq!(a.dims(), (3, 4, 3));
+        assert_eq!(b.dims(), (3, 4, 4));
+        a.append_mode3(&b);
+        assert_eq!(a.dims(), t.dims());
+        assert_eq!(a.data(), t.data());
+    }
+
+    #[test]
+    fn norm_matches_data() {
+        let t = small();
+        let expect: f64 = (1..=12).map(|v| (v * v) as f64).sum::<f64>();
+        assert!((t.norm() - expect.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inner_with_kruskal_matches_reconstruction() {
+        let mut rng = Rng::new(4);
+        let t = DenseTensor::rand(3, 4, 5, &mut rng);
+        let a = Matrix::rand_gaussian(3, 2, &mut rng);
+        let b = Matrix::rand_gaussian(4, 2, &mut rng);
+        let c = Matrix::rand_gaussian(5, 2, &mut rng);
+        let lam = vec![0.7, 1.3];
+        let mut expect = 0.0;
+        for i in 0..3 {
+            for j in 0..4 {
+                for k in 0..5 {
+                    let mut m = 0.0;
+                    for r in 0..2 {
+                        m += lam[r] * a[(i, r)] * b[(j, r)] * c[(k, r)];
+                    }
+                    expect += t.get(i, j, k) * m;
+                }
+            }
+        }
+        let got = t.inner_with_kruskal(&lam, &a, &b, &c);
+        assert!((got - expect).abs() < 1e-9, "{got} vs {expect}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn unfold_bad_mode_panics() {
+        let t = small();
+        let _ = t.unfold(3);
+    }
+}

@@ -1,0 +1,496 @@
+//! Sparse third-order tensor in coordinate (COO) format, struct-of-arrays.
+//!
+//! The paper's key scalability lever is that SamBaTen "effectively leverages
+//! sparsity": every operation here — MTTKRP, MoI, extraction, norms — is
+//! `O(nnz)`, never `O(I·J·K)`. The sparse MTTKRP is also the crate's hottest
+//! loop on real-world-shaped workloads and is parallelised over nnz chunks
+//! with per-thread accumulators (no locks in the inner loop).
+
+use super::{mode_dim, DenseTensor, Tensor3};
+use crate::linalg::Matrix;
+use crate::util::par::{chunk_ranges, workers_for};
+use crate::util::Rng;
+
+/// COO sparse tensor. Indices are `u32` (dimensions beyond 4B indices are
+/// out of scope for this testbed) and values `f64`.
+#[derive(Clone, Default)]
+pub struct CooTensor {
+    dims: (usize, usize, usize),
+    ii: Vec<u32>,
+    jj: Vec<u32>,
+    kk: Vec<u32>,
+    vv: Vec<f64>,
+}
+
+impl std::fmt::Debug for CooTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CooTensor({}x{}x{}, nnz={})",
+            self.dims.0,
+            self.dims.1,
+            self.dims.2,
+            self.vv.len()
+        )
+    }
+}
+
+impl CooTensor {
+    pub fn new(i: usize, j: usize, k: usize) -> Self {
+        CooTensor { dims: (i, j, k), ..Default::default() }
+    }
+
+    pub fn with_capacity(i: usize, j: usize, k: usize, cap: usize) -> Self {
+        CooTensor {
+            dims: (i, j, k),
+            ii: Vec::with_capacity(cap),
+            jj: Vec::with_capacity(cap),
+            kk: Vec::with_capacity(cap),
+            vv: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Push an entry. Duplicate coordinates are allowed and treated as
+    /// summing (standard COO semantics); call [`CooTensor::coalesce`] to
+    /// merge them physically.
+    #[inline]
+    pub fn push(&mut self, i: usize, j: usize, k: usize, v: f64) {
+        debug_assert!(i < self.dims.0 && j < self.dims.1 && k < self.dims.2);
+        if v == 0.0 {
+            return;
+        }
+        self.ii.push(i as u32);
+        self.jj.push(j as u32);
+        self.kk.push(k as u32);
+        self.vv.push(v);
+    }
+
+    /// Merge duplicate coordinates (sums values, drops exact zeros).
+    pub fn coalesce(&mut self) {
+        let n = self.vv.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_unstable_by_key(|&e| (self.kk[e], self.jj[e], self.ii[e]));
+        let (mut ii, mut jj, mut kk, mut vv) =
+            (Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n));
+        for &e in &order {
+            let key = (self.ii[e], self.jj[e], self.kk[e]);
+            if let (Some(&li), Some(&lj), Some(&lk)) = (ii.last(), jj.last(), kk.last()) {
+                if (li, lj, lk) == key {
+                    *vv.last_mut().unwrap() += self.vv[e];
+                    continue;
+                }
+            }
+            ii.push(key.0);
+            jj.push(key.1);
+            kk.push(key.2);
+            vv.push(self.vv[e]);
+        }
+        // Drop zeros created by cancellation.
+        let keep: Vec<usize> = (0..vv.len()).filter(|&e| vv[e] != 0.0).collect();
+        self.ii = keep.iter().map(|&e| ii[e]).collect();
+        self.jj = keep.iter().map(|&e| jj[e]).collect();
+        self.kk = keep.iter().map(|&e| kk[e]).collect();
+        self.vv = keep.iter().map(|&e| vv[e]).collect();
+    }
+
+    /// Entry iterator `(i, j, k, v)`.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, usize, f64)> + '_ {
+        (0..self.vv.len()).map(move |e| {
+            (self.ii[e] as usize, self.jj[e] as usize, self.kk[e] as usize, self.vv[e])
+        })
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.vv
+    }
+
+    /// Random sparse tensor with the given fill fraction — test helper.
+    pub fn rand(i: usize, j: usize, k: usize, density: f64, rng: &mut Rng) -> Self {
+        let total = ((i * j * k) as f64 * density).round() as usize;
+        let mut t = CooTensor::with_capacity(i, j, k, total);
+        for _ in 0..total {
+            t.push(rng.below(i), rng.below(j), rng.below(k), rng.gaussian());
+        }
+        t.coalesce();
+        t
+    }
+
+    pub fn from_dense(d: &DenseTensor, threshold: f64) -> Self {
+        let (ni, nj, nk) = d.dims();
+        let mut t = CooTensor::new(ni, nj, nk);
+        for k in 0..nk {
+            for j in 0..nj {
+                for i in 0..ni {
+                    let v = d.get(i, j, k);
+                    if v.abs() > threshold {
+                        t.push(i, j, k, v);
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    pub fn to_dense(&self) -> DenseTensor {
+        let (ni, nj, nk) = self.dims;
+        let mut d = DenseTensor::zeros(ni, nj, nk);
+        for (i, j, k, v) in self.iter() {
+            d.add_at(i, j, k, v);
+        }
+        d
+    }
+
+    /// Extract the sub-tensor at the given index lists. `O(nnz + dims)`:
+    /// builds inverse maps, then filters entries.
+    pub fn extract(&self, is: &[usize], js: &[usize], ks: &[usize]) -> CooTensor {
+        let inv_i = inverse_map(self.dims.0, is);
+        let inv_j = inverse_map(self.dims.1, js);
+        let inv_k = inverse_map(self.dims.2, ks);
+        let mut out = CooTensor::new(is.len(), js.len(), ks.len());
+        for e in 0..self.vv.len() {
+            let (Some(ni), Some(nj), Some(nk)) = (
+                inv_i[self.ii[e] as usize],
+                inv_j[self.jj[e] as usize],
+                inv_k[self.kk[e] as usize],
+            ) else {
+                continue;
+            };
+            out.ii.push(ni);
+            out.jj.push(nj);
+            out.kk.push(nk);
+            out.vv.push(self.vv[e]);
+        }
+        out
+    }
+
+    /// Split along mode 3 at `at` (entries partitioned by `k < at`).
+    pub fn split_mode3(&self, at: usize) -> (CooTensor, CooTensor) {
+        assert!(at <= self.dims.2);
+        let mut a = CooTensor::new(self.dims.0, self.dims.1, at);
+        let mut b = CooTensor::new(self.dims.0, self.dims.1, self.dims.2 - at);
+        for (i, j, k, v) in self.iter() {
+            if k < at {
+                a.push(i, j, k, v);
+            } else {
+                b.push(i, j, k - at, v);
+            }
+        }
+        (a, b)
+    }
+
+    /// Append `other` along mode 3 (its `k` indices are shifted by our `K`).
+    pub fn append_mode3(&mut self, other: &CooTensor) {
+        assert_eq!((self.dims.0, self.dims.1), (other.dims.0, other.dims.1));
+        let shift = self.dims.2 as u32;
+        self.ii.extend_from_slice(&other.ii);
+        self.jj.extend_from_slice(&other.jj);
+        self.kk.extend(other.kk.iter().map(|&k| k + shift));
+        self.vv.extend_from_slice(&other.vv);
+        self.dims.2 += other.dims.2;
+    }
+
+    pub fn norm_sq(&self) -> f64 {
+        self.vv.iter().map(|v| v * v).sum()
+    }
+
+    /// Density in `[0, 1]`.
+    pub fn density(&self) -> f64 {
+        let total = self.dims.0 * self.dims.1 * self.dims.2;
+        if total == 0 {
+            0.0
+        } else {
+            self.vv.len() as f64 / total as f64
+        }
+    }
+}
+
+impl CooTensor {
+    /// nnz-range MTTKRP with a compile-time rank (vectorisable inner loop).
+    #[inline]
+    fn mttkrp_range_const<const R: usize>(
+        &self,
+        mode: usize,
+        a: &Matrix,
+        b: &Matrix,
+        c: &Matrix,
+        range: std::ops::Range<usize>,
+        local: &mut Matrix,
+    ) {
+        for e in range {
+            let (i, j, k) = (self.ii[e] as usize, self.jj[e] as usize, self.kk[e] as usize);
+            let v = self.vv[e];
+            let (dst, f1, f2) = match mode {
+                0 => (i, b.row(j), c.row(k)),
+                1 => (j, a.row(i), c.row(k)),
+                2 => (k, a.row(i), b.row(j)),
+                _ => panic!("mode {mode} out of range"),
+            };
+            let o = local.row_mut(dst);
+            for t in 0..R {
+                o[t] += v * f1[t] * f2[t];
+            }
+        }
+    }
+
+    fn mttkrp_range_generic(
+        &self,
+        mode: usize,
+        a: &Matrix,
+        b: &Matrix,
+        c: &Matrix,
+        range: std::ops::Range<usize>,
+        local: &mut Matrix,
+    ) {
+        let r = a.cols();
+        for e in range {
+            let (i, j, k) = (self.ii[e] as usize, self.jj[e] as usize, self.kk[e] as usize);
+            let v = self.vv[e];
+            let (dst, f1, f2) = match mode {
+                0 => (i, b.row(j), c.row(k)),
+                1 => (j, a.row(i), c.row(k)),
+                2 => (k, a.row(i), b.row(j)),
+                _ => panic!("mode {mode} out of range"),
+            };
+            let o = local.row_mut(dst);
+            for t in 0..r {
+                o[t] += v * f1[t] * f2[t];
+            }
+        }
+    }
+}
+
+fn inverse_map(dim: usize, idx: &[usize]) -> Vec<Option<u32>> {
+    let mut inv = vec![None; dim];
+    for (new, &old) in idx.iter().enumerate() {
+        inv[old] = Some(new as u32);
+    }
+    inv
+}
+
+impl Tensor3 for CooTensor {
+    fn dims(&self) -> (usize, usize, usize) {
+        self.dims
+    }
+
+    fn norm(&self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+
+    fn nnz(&self) -> usize {
+        self.vv.len()
+    }
+
+    fn mttkrp(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix {
+        let r = a.cols();
+        debug_assert_eq!(b.cols(), r);
+        debug_assert_eq!(c.cols(), r);
+        let out_dim = mode_dim(self.dims, mode);
+        let nnz = self.vv.len();
+        let nw = workers_for(nnz / 4096 + 1);
+        // Per-thread accumulators, reduced at the end — no locks in the
+        // loop; the inner rank loop is monomorphised for common ranks.
+        let acc_fn = |range: std::ops::Range<usize>| -> Matrix {
+            let mut local = Matrix::zeros(out_dim, r);
+            match r {
+                1 => self.mttkrp_range_const::<1>(mode, a, b, c, range, &mut local),
+                2 => self.mttkrp_range_const::<2>(mode, a, b, c, range, &mut local),
+                3 => self.mttkrp_range_const::<3>(mode, a, b, c, range, &mut local),
+                4 => self.mttkrp_range_const::<4>(mode, a, b, c, range, &mut local),
+                5 => self.mttkrp_range_const::<5>(mode, a, b, c, range, &mut local),
+                6 => self.mttkrp_range_const::<6>(mode, a, b, c, range, &mut local),
+                8 => self.mttkrp_range_const::<8>(mode, a, b, c, range, &mut local),
+                10 => self.mttkrp_range_const::<10>(mode, a, b, c, range, &mut local),
+                16 => self.mttkrp_range_const::<16>(mode, a, b, c, range, &mut local),
+                _ => self.mttkrp_range_generic(mode, a, b, c, range, &mut local),
+            }
+            local
+        };
+        if nw <= 1 {
+            return acc_fn(0..nnz);
+        }
+        let ranges = chunk_ranges(nnz, nw);
+        let partials = crate::util::parallel_map(&ranges, |_, range| acc_fn(range.clone()));
+        let mut out = Matrix::zeros(out_dim, r);
+        for p in partials {
+            out = out.add(&p);
+        }
+        out
+    }
+
+    fn mode_sum_squares(&self, mode: usize) -> Vec<f64> {
+        let mut out = vec![0.0; mode_dim(self.dims, mode)];
+        for e in 0..self.vv.len() {
+            let d = match mode {
+                0 => self.ii[e],
+                1 => self.jj[e],
+                2 => self.kk[e],
+                _ => panic!("mode {mode} out of range"),
+            } as usize;
+            out[d] += self.vv[e] * self.vv[e];
+        }
+        out
+    }
+
+    fn inner_with_kruskal(&self, lambda: &[f64], a: &Matrix, b: &Matrix, c: &Matrix) -> f64 {
+        let r = lambda.len();
+        let mut acc = 0.0;
+        for (i, j, k, v) in self.iter() {
+            let (ar, br, cr) = (a.row(i), b.row(j), c.row(k));
+            let mut m = 0.0;
+            for t in 0..r {
+                m += lambda[t] * ar[t] * br[t] * cr[t];
+            }
+            acc += v * m;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_iter_roundtrip() {
+        let mut t = CooTensor::new(3, 3, 3);
+        t.push(0, 1, 2, 5.0);
+        t.push(2, 2, 2, -1.0);
+        t.push(1, 1, 1, 0.0); // dropped
+        assert_eq!(t.nnz(), 2);
+        let entries: Vec<_> = t.iter().collect();
+        assert_eq!(entries[0], (0, 1, 2, 5.0));
+        assert_eq!(entries[1], (2, 2, 2, -1.0));
+    }
+
+    #[test]
+    fn coalesce_merges_duplicates_and_drops_cancels() {
+        let mut t = CooTensor::new(2, 2, 2);
+        t.push(0, 0, 0, 1.0);
+        t.push(0, 0, 0, 2.0);
+        t.push(1, 1, 1, 3.0);
+        t.push(1, 1, 1, -3.0);
+        t.coalesce();
+        assert_eq!(t.nnz(), 1);
+        assert_eq!(t.iter().next().unwrap(), (0, 0, 0, 3.0));
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Rng::new(1);
+        let t = CooTensor::rand(5, 6, 7, 0.1, &mut rng);
+        let d = t.to_dense();
+        let t2 = CooTensor::from_dense(&d, 0.0);
+        assert_eq!(t.nnz(), t2.nnz());
+        assert!((t.norm() - t2.norm()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mttkrp_matches_dense() {
+        let mut rng = Rng::new(2);
+        let t = CooTensor::rand(6, 5, 4, 0.3, &mut rng);
+        let d = t.to_dense();
+        let a = Matrix::rand_gaussian(6, 3, &mut rng);
+        let b = Matrix::rand_gaussian(5, 3, &mut rng);
+        let c = Matrix::rand_gaussian(4, 3, &mut rng);
+        for mode in 0..3 {
+            let ms = t.mttkrp(mode, &a, &b, &c);
+            let md = d.mttkrp(mode, &a, &b, &c);
+            assert!(ms.max_abs_diff(&md) < 1e-10, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn mttkrp_parallel_matches_serial_large() {
+        // Enough nnz to trigger the parallel path.
+        let mut rng = Rng::new(3);
+        let t = CooTensor::rand(40, 40, 40, 0.5, &mut rng);
+        assert!(t.nnz() > 8192);
+        let a = Matrix::rand_gaussian(40, 4, &mut rng);
+        let b = Matrix::rand_gaussian(40, 4, &mut rng);
+        let c = Matrix::rand_gaussian(40, 4, &mut rng);
+        let par = t.mttkrp(0, &a, &b, &c);
+        let ser = t.to_dense().mttkrp(0, &a, &b, &c);
+        assert!(par.max_abs_diff(&ser) < 1e-9);
+    }
+
+    #[test]
+    fn extract_matches_dense_extract() {
+        let mut rng = Rng::new(4);
+        let t = CooTensor::rand(8, 7, 6, 0.4, &mut rng);
+        let is = vec![0, 3, 5];
+        let js = vec![6, 2];
+        let ks = vec![1, 4, 5];
+        let se = t.extract(&is, &js, &ks).to_dense();
+        let de = t.to_dense().extract(&is, &js, &ks);
+        assert_eq!(se.dims(), de.dims());
+        let (ni, nj, nk) = se.dims();
+        for i in 0..ni {
+            for j in 0..nj {
+                for k in 0..nk {
+                    assert_eq!(se.get(i, j, k), de.get(i, j, k));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_append_roundtrip() {
+        let mut rng = Rng::new(5);
+        let t = CooTensor::rand(5, 5, 10, 0.3, &mut rng);
+        let (mut a, b) = t.split_mode3(4);
+        assert_eq!(a.dims().2, 4);
+        assert_eq!(b.dims().2, 6);
+        a.append_mode3(&b);
+        assert_eq!(a.dims(), t.dims());
+        assert!((a.norm() - t.norm()).abs() < 1e-12);
+        // Entry-level equality through dense.
+        let d1 = a.to_dense();
+        let d2 = t.to_dense();
+        assert_eq!(d1.data(), d2.data());
+    }
+
+    #[test]
+    fn mode_sum_squares_matches_dense() {
+        let mut rng = Rng::new(6);
+        let t = CooTensor::rand(6, 5, 4, 0.5, &mut rng);
+        let d = t.to_dense();
+        for mode in 0..3 {
+            let s = t.mode_sum_squares(mode);
+            let e = d.mode_sum_squares(mode);
+            for (a, b) in s.iter().zip(&e) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn density_reports_fill() {
+        let mut t = CooTensor::new(2, 2, 2);
+        t.push(0, 0, 0, 1.0);
+        t.push(1, 1, 1, 1.0);
+        assert!((t.density() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inner_with_kruskal_matches_dense() {
+        let mut rng = Rng::new(7);
+        let t = CooTensor::rand(5, 4, 3, 0.5, &mut rng);
+        let a = Matrix::rand_gaussian(5, 2, &mut rng);
+        let b = Matrix::rand_gaussian(4, 2, &mut rng);
+        let c = Matrix::rand_gaussian(3, 2, &mut rng);
+        let lam = vec![1.1, 0.4];
+        let got = t.inner_with_kruskal(&lam, &a, &b, &c);
+        let expect = t.to_dense().inner_with_kruskal(&lam, &a, &b, &c);
+        assert!((got - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_tensor_safe() {
+        let t = CooTensor::new(3, 3, 3);
+        assert_eq!(t.nnz(), 0);
+        assert_eq!(t.norm(), 0.0);
+        let a = Matrix::zeros(3, 2);
+        let m = t.mttkrp(0, &a, &a, &a);
+        assert_eq!(m.frob_norm(), 0.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Mini property-testing harness.
+//!
+//! The offline crate set has no `proptest`, so this module provides the
+//! piece the test suite actually needs: run an invariant over many seeded
+//! random cases and, on failure, report the *seed and case description* so
+//! the failure replays deterministically. Shrinking is approximated by
+//! generators that draw sizes from small-biased distributions (small cases
+//! are tried densely, so the failing case reported is usually near-minimal).
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `property(case_rng, case_index)` for `cfg.cases` seeded cases.
+/// The closure returns `Err(description)` to fail. Panics with the seed and
+/// case number so the exact case can be replayed.
+pub fn check<F>(name: &str, cfg: PropConfig, mut property: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = root.fork(case as u64);
+        if let Err(msg) = property(&mut case_rng, case) {
+            panic!(
+                "property {name:?} failed at case {case} (replay: seed={:#x}, fork({case})): {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Size generator biased towards small values: ~half the draws land in
+/// `[lo, lo + (hi-lo)/4]`, making reported failures near-minimal.
+pub fn small_biased(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    debug_assert!(lo <= hi);
+    let span = hi - lo + 1;
+    if rng.uniform() < 0.5 {
+        lo + rng.below((span / 4).max(1))
+    } else {
+        lo + rng.below(span)
+    }
+}
+
+/// Assert two floats are close (relative + absolute), returning a property
+/// error otherwise.
+pub fn close(got: f64, want: f64, tol: f64, what: &str) -> Result<(), String> {
+    let scale = want.abs().max(1.0);
+    if (got - want).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{what}: got {got}, want {want} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", PropConfig { cases: 10, seed: 1 }, |_, _| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\" failed at case 3")]
+    fn failing_property_reports_case() {
+        check("fails", PropConfig { cases: 10, seed: 2 }, |_, case| {
+            if case == 3 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn small_biased_in_range_and_biased() {
+        let mut rng = Rng::new(3);
+        let mut small = 0;
+        for _ in 0..1000 {
+            let v = small_biased(&mut rng, 2, 20);
+            assert!((2..=20).contains(&v));
+            if v <= 6 {
+                small += 1;
+            }
+        }
+        assert!(small > 400, "small draws: {small}");
+    }
+
+    #[test]
+    fn close_tolerates_and_rejects() {
+        assert!(close(1.0001, 1.0, 1e-3, "x").is_ok());
+        assert!(close(1.1, 1.0, 1e-3, "x").is_err());
+    }
+}

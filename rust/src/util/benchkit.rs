@@ -1,0 +1,61 @@
+//! Tiny benchmarking kit for the `harness = false` benches (the offline
+//! crate set has no criterion): warmup, N timed iterations, median + MAD,
+//! and a uniform report line that `bench_output.txt` collects.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub iters: usize,
+}
+
+/// Run `f` with `warmup` unmeasured runs then `iters` measured runs;
+/// prints and returns median ± MAD.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    let r = BenchResult { name: name.to_string(), median_s: median, mad_s: mad, iters };
+    println!(
+        "bench {:<48} {:>12.6}s ± {:>9.6}s  (n={})",
+        r.name, r.median_s, r.mad_s, r.iters
+    );
+    r
+}
+
+/// Print a named scalar alongside bench rows (throughput, error, ...).
+pub fn report(name: &str, value: f64, unit: &str) {
+    println!("value {name:<48} {value:>12.6} {unit}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0;
+        let r = bench("test-case", 1, 5, || {
+            count += 1;
+            std::hint::black_box(42);
+        });
+        assert_eq!(count, 6); // 1 warmup + 5 measured
+        assert_eq!(r.iters, 5);
+        assert!(r.median_s >= 0.0);
+    }
+}

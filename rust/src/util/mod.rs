@@ -1,0 +1,15 @@
+//! Small utilities shared across the crate: a fast seeded PRNG, wall-clock
+//! timers and scoped-thread parallel helpers.
+//!
+//! The offline crate set does not include `rand`/`rayon`, so this module
+//! provides the minimal, well-tested equivalents the rest of the system
+//! needs (see DESIGN.md §4 Substitutions).
+
+pub mod benchkit;
+pub mod par;
+pub mod rng;
+pub mod timer;
+
+pub use par::{parallel_for_each, parallel_map};
+pub use rng::Rng;
+pub use timer::Stopwatch;

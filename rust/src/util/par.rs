@@ -1,0 +1,148 @@
+//! Scoped-thread parallel helpers.
+//!
+//! The paper's §III-A claims SamBaTen's sampling repetitions "do not require
+//! any synchronization ... which results in higher parallelism potential".
+//! These helpers run independent work items on `std::thread::scope` threads,
+//! bounded by the available parallelism — the crate-local stand-in for rayon
+//! (not in the offline crate set).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use for `n` items.
+pub fn workers_for(n: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    hw.min(n).max(1)
+}
+
+/// Parallel map preserving input order. `f` must be `Sync` (called from many
+/// threads); items are pulled off a shared atomic counter so the work is
+/// dynamically balanced.
+pub fn parallel_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let nw = workers_for(n);
+    if nw == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Vec<Mutex<Option<U>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..nw {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i, &items[i]);
+                *out[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    out.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+/// Parallel for-each over indices `0..n`.
+pub fn parallel_for_each<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let nw = workers_for(n);
+    if nw == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..nw {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Split `0..n` into at most `parts` contiguous, near-equal ranges.
+pub fn chunk_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 || parts == 0 {
+        return Vec::new();
+    }
+    let parts = parts.min(n);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let xs: Vec<usize> = (0..1000).collect();
+        let ys = parallel_map(&xs, |_, &x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_empty() {
+        let xs: Vec<u32> = vec![];
+        assert!(parallel_map(&xs, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn for_each_touches_all() {
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_each(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunks_cover_exactly() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for parts in [1usize, 2, 3, 8] {
+                let rs = chunk_ranges(n, parts);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+                let mut expect = 0;
+                for r in &rs {
+                    assert_eq!(r.start, expect);
+                    expect = r.end;
+                }
+                if n > 0 {
+                    let lens: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+                    let min = lens.iter().min().unwrap();
+                    let max = lens.iter().max().unwrap();
+                    assert!(max - min <= 1);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! Wall-clock timing used by the metrics module and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A cumulative stopwatch: start/stop any number of times, read the total.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    acc: Duration,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { acc: Duration::ZERO, started: None }
+    }
+
+    /// Create and immediately start.
+    pub fn started() -> Self {
+        let mut s = Self::new();
+        s.start();
+        s
+    }
+
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.acc += t0.elapsed();
+        }
+    }
+
+    /// Total accumulated time (includes the running segment, if any).
+    pub fn elapsed(&self) -> Duration {
+        match self.started {
+            Some(t0) => self.acc + t0.elapsed(),
+            None => self.acc,
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = Duration::ZERO;
+        self.started = None;
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_segments() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let a = sw.elapsed();
+        assert!(a >= Duration::from_millis(4));
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.elapsed() > a);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, secs) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut sw = Stopwatch::started();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.reset();
+        assert_eq!(sw.elapsed(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,313 @@
+//! Property-based tests over the engine's core invariants, via the
+//! crate-local mini harness (`sambaten::testing`) — the offline substitute
+//! for proptest (DESIGN.md §4).
+
+use sambaten::coordinator::{SamBaTen, SamBaTenConfig};
+use sambaten::cp::CpModel;
+use sambaten::datagen::SyntheticSpec;
+use sambaten::linalg::{hungarian_min, pinv, svd_jacobi, Matrix};
+use sambaten::matching::{match_components, MatchPolicy};
+use sambaten::metrics::fms;
+use sambaten::sampling::{draw_sample, weighted_sample_without_replacement, SamplerConfig};
+use sambaten::tensor::{CooTensor, DenseTensor, Tensor3, TensorData};
+use sambaten::testing::{check, close, small_biased, PropConfig};
+
+const CFG: PropConfig = PropConfig { cases: 40, seed: 0xBEEF };
+
+/// Weighted sampling: distinct, in-range, and never picks a zero-weight
+/// index while positive-weight ones remain.
+#[test]
+fn prop_weighted_sampling_soundness() {
+    check("weighted-sampling", CFG, |rng, _| {
+        let n = small_biased(rng, 1, 60);
+        let mut weights: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        // Randomly zero some weights.
+        let zeros = rng.below(n.min(8));
+        for _ in 0..zeros {
+            let at = rng.below(n);
+            weights[at] = 0.0;
+        }
+        let positive = weights.iter().filter(|&&w| w > 0.0).count();
+        let k = 1 + rng.below(n);
+        let picked = weighted_sample_without_replacement(&weights, k, rng);
+        if picked.len() != k {
+            return Err(format!("asked {k}, got {}", picked.len()));
+        }
+        let mut sorted = picked.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != k {
+            return Err("duplicate indices".into());
+        }
+        if sorted.iter().any(|&i| i >= n) {
+            return Err("out of range".into());
+        }
+        if k <= positive {
+            let zero_picked = picked.iter().filter(|&&i| weights[i] == 0.0).count();
+            if zero_picked > 0 {
+                return Err(format!("picked {zero_picked} zero-weight indices with {positive} positive available"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// draw_sample: shapes consistent with the sampler config, index sets
+/// sorted, all new slices present.
+#[test]
+fn prop_draw_sample_shape_contract() {
+    check("draw-sample", CFG, |rng, _| {
+        let ni = small_biased(rng, 2, 20);
+        let nj = small_biased(rng, 2, 20);
+        let nk_old = small_biased(rng, 1, 15);
+        let nk_new = small_biased(rng, 1, 6);
+        let old = DenseTensor::rand(ni, nj, nk_old, rng);
+        let new = DenseTensor::rand(ni, nj, nk_new, rng);
+        let s = 1 + rng.below(4);
+        let sample = draw_sample(
+            &old.into(),
+            &new.into(),
+            SamplerConfig::new(s),
+            rng,
+        );
+        let expect = |d: usize| d.div_ceil(s).max(1).min(d);
+        if sample.is.len() != expect(ni) || sample.js.len() != expect(nj) {
+            return Err(format!("mode 1/2 sample sizes wrong for s={s}"));
+        }
+        if sample.ks_old.len() != expect(nk_old) || sample.k_new != nk_new {
+            return Err("mode 3 sample sizes wrong".into());
+        }
+        let dims = sample.tensor.dims();
+        if dims != (sample.is.len(), sample.js.len(), sample.ks_old.len() + nk_new) {
+            return Err(format!("tensor dims {dims:?} inconsistent"));
+        }
+        if sample.is.windows(2).any(|w| w[0] >= w[1]) {
+            return Err("is not sorted".into());
+        }
+        Ok(())
+    });
+}
+
+/// Matching is exactly inverse to a random permutation + scaling + sign
+/// flips, for any size (noiseless Lemma 1).
+#[test]
+fn prop_matching_inverts_permutation() {
+    check("matching-inverts", CFG, |rng, _| {
+        let n = small_biased(rng, 4, 20);
+        let r = 1 + rng.below(5.min(n));
+        let anchors = [
+            Matrix::rand_gaussian(n, r, rng),
+            Matrix::rand_gaussian(n, r, rng),
+            Matrix::rand_gaussian(n, r, rng),
+        ];
+        let mut perm: Vec<usize> = (0..r).collect();
+        rng.shuffle(&mut perm);
+        let mut sample = [
+            anchors[0].gather_cols(&perm),
+            anchors[1].gather_cols(&perm),
+            anchors[2].gather_cols(&perm),
+        ];
+        for f in sample.iter_mut() {
+            for t in 0..r {
+                let scale = (0.1 + rng.uniform() * 3.0) * if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+                f.scale_col(t, scale);
+            }
+        }
+        let m = match_components(&anchors, &sample, MatchPolicy::Hungarian);
+        if m.perm != perm {
+            return Err(format!("got {:?}, want {perm:?}", m.perm));
+        }
+        Ok(())
+    });
+}
+
+/// SVD reconstruction + orthogonality for arbitrary shapes.
+#[test]
+fn prop_svd_reconstructs() {
+    check("svd", CFG, |rng, _| {
+        let m = small_biased(rng, 1, 24);
+        let n = small_biased(rng, 1, 24);
+        let a = Matrix::rand_gaussian(m, n, rng);
+        let svd = svd_jacobi(&a);
+        let k = svd.s.len();
+        let mut us = svd.u.clone();
+        for t in 0..k {
+            us.scale_col(t, svd.s[t]);
+        }
+        let rec = us.matmul_t(&svd.v);
+        close(rec.max_abs_diff(&a), 0.0, 1e-8, "reconstruction")?;
+        for w in svd.s.windows(2) {
+            if w[0] < w[1] {
+                return Err("singular values not sorted".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// pinv satisfies the two defining Moore-Penrose identities.
+#[test]
+fn prop_pinv_moore_penrose() {
+    check("pinv", CFG, |rng, _| {
+        let m = small_biased(rng, 1, 16);
+        let n = small_biased(rng, 1, 16);
+        let a = Matrix::rand_gaussian(m, n, rng);
+        let p = pinv(&a, None);
+        let apa = a.matmul(&p).matmul(&a);
+        close(apa.max_abs_diff(&a), 0.0, 1e-7, "A A+ A = A")?;
+        let pap = p.matmul(&a).matmul(&p);
+        close(pap.max_abs_diff(&p), 0.0, 1e-7, "A+ A A+ = A+")?;
+        Ok(())
+    });
+}
+
+/// Hungarian ≤ any random assignment (optimality sanity on random costs).
+#[test]
+fn prop_hungarian_not_worse_than_random() {
+    check("hungarian", CFG, |rng, _| {
+        let n = small_biased(rng, 1, 10);
+        let cost: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..n).map(|_| rng.uniform()).collect()).collect();
+        let h = hungarian_min(&cost);
+        let h_cost: f64 = h.iter().enumerate().map(|(i, &j)| cost[i][j]).sum();
+        let mut perm: Vec<usize> = (0..n).collect();
+        for _ in 0..10 {
+            rng.shuffle(&mut perm);
+            let p_cost: f64 = perm.iter().enumerate().map(|(i, &j)| cost[i][j]).sum();
+            if h_cost > p_cost + 1e-12 {
+                return Err(format!("hungarian {h_cost} > random {p_cost}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Dense and sparse MTTKRP agree on random tensors (all modes).
+#[test]
+fn prop_mttkrp_dense_sparse_agree() {
+    check("mttkrp-agree", CFG, |rng, _| {
+        let ni = small_biased(rng, 1, 12);
+        let nj = small_biased(rng, 1, 12);
+        let nk = small_biased(rng, 1, 12);
+        let r = 1 + rng.below(4);
+        let coo = CooTensor::rand(ni, nj, nk, 0.4, rng);
+        let dense = coo.to_dense();
+        let a = Matrix::rand_gaussian(ni, r, rng);
+        let b = Matrix::rand_gaussian(nj, r, rng);
+        let c = Matrix::rand_gaussian(nk, r, rng);
+        for mode in 0..3 {
+            let ms = coo.mttkrp(mode, &a, &b, &c);
+            let md = dense.mttkrp(mode, &a, &b, &c);
+            close(ms.max_abs_diff(&md), 0.0, 1e-9, &format!("mode {mode}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Engine invariant: after any ingest sequence, the model stays canonical
+/// (unit columns, finite λ ≥ 0, C rows == slices) and the fit is finite.
+#[test]
+fn prop_engine_state_invariants() {
+    let cfg = PropConfig { cases: 12, seed: 0xFACE };
+    check("engine-state", cfg, |rng, case| {
+        let dim = small_biased(rng, 6, 14);
+        let nk = small_biased(rng, 6, 16);
+        let rank = 1 + rng.below(3);
+        let density = if case % 2 == 0 { 1.0 } else { 0.6 };
+        let spec = SyntheticSpec {
+            i: dim,
+            j: dim,
+            k: nk,
+            rank,
+            density,
+            noise: 0.03,
+            seed: rng.next_u64(),
+        };
+        let batch = 1 + rng.below(4);
+        let (existing, batches, _) = spec.generate_stream(0.3, batch);
+        let mut engine = SamBaTen::init(
+            &existing,
+            SamBaTenConfig::new(rank, 1 + rng.below(3), 1 + rng.below(3), rng.next_u64()),
+        )
+        .map_err(|e| e.to_string())?;
+        let mut slices = existing.dims().2;
+        for b in &batches {
+            engine.ingest(b).map_err(|e| e.to_string())?;
+            slices += b.dims().2;
+            let m = engine.model();
+            if m.factors[2].rows() != slices {
+                return Err(format!("C rows {} != slices {slices}", m.factors[2].rows()));
+            }
+            for f in 0..3 {
+                for t in 0..m.rank() {
+                    let norm = m.factors[f].col_norm(t);
+                    if norm > 0.0 && (norm - 1.0).abs() > 1e-6 {
+                        return Err(format!("factor {f} col {t} norm {norm}"));
+                    }
+                }
+            }
+            if m.lambda.iter().any(|l| !l.is_finite() || *l < 0.0) {
+                return Err(format!("bad lambda {:?}", m.lambda));
+            }
+            let fit = m.fit(engine.tensor());
+            if !fit.is_finite() {
+                return Err("non-finite fit".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// FMS is symmetric and equals 1 for permuted/rescaled copies.
+#[test]
+fn prop_fms_symmetry_and_identity() {
+    check("fms", CFG, |rng, _| {
+        let dim = small_biased(rng, 3, 12);
+        let r = 1 + rng.below(4.min(dim));
+        let model = CpModel::new(
+            Matrix::rand_gaussian(dim, r, rng),
+            Matrix::rand_gaussian(dim, r, rng),
+            Matrix::rand_gaussian(dim, r, rng),
+            (0..r).map(|_| 0.5 + rng.uniform()).collect(),
+        );
+        let mut permuted = model.clone();
+        let mut perm: Vec<usize> = (0..r).collect();
+        rng.shuffle(&mut perm);
+        permuted.permute_components(&perm);
+        close(fms(&model, &permuted), 1.0, 1e-6, "permuted copy")?;
+        let other = CpModel::new(
+            Matrix::rand_gaussian(dim, r, rng),
+            Matrix::rand_gaussian(dim, r, rng),
+            Matrix::rand_gaussian(dim, r, rng),
+            vec![1.0; r],
+        );
+        let ab = fms(&model, &other);
+        let ba = fms(&other, &model);
+        close(ab, ba, 1e-9, "symmetry")?;
+        Ok(())
+    });
+}
+
+/// Extraction then norm: extracted sub-tensor norm never exceeds the
+/// original, and extraction with full index sets is the identity.
+#[test]
+fn prop_extraction_identity_and_monotone() {
+    check("extraction", CFG, |rng, _| {
+        let ni = small_biased(rng, 1, 10);
+        let nj = small_biased(rng, 1, 10);
+        let nk = small_biased(rng, 1, 10);
+        let t = CooTensor::rand(ni, nj, nk, 0.5, rng);
+        let td: TensorData = t.clone().into();
+        let all_i: Vec<usize> = (0..ni).collect();
+        let all_j: Vec<usize> = (0..nj).collect();
+        let all_k: Vec<usize> = (0..nk).collect();
+        let full = td.extract(&all_i, &all_j, &all_k);
+        close(full.norm(), td.norm(), 1e-12, "identity extraction")?;
+        let ki = 1 + rng.below(ni);
+        let sub = td.extract(&all_i[..ki], &all_j, &all_k);
+        if sub.norm() > td.norm() + 1e-12 {
+            return Err("sub-tensor norm exceeds original".into());
+        }
+        Ok(())
+    });
+}
