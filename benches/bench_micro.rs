@@ -2,18 +2,19 @@
 //! optimization pass works from:
 //!   * dense MTTKRP (all three modes)
 //!   * sparse MTTKRP (serial vs parallel nnz chunks)
+//!   * CSF vs COO MTTKRP at paper-shaped scale (1K³, 1e-4 density)
 //!   * weighted sampling without replacement
 //!   * component matching (congruence + Hungarian)
 //!   * Jacobi SVD / Cholesky solve
-//!   * sample extraction (dense + sparse)
+//!   * sample extraction (dense + sparse + CSF fiber-tree walk)
 //!
 //! Run: `cargo bench --bench bench_micro`
 
 use sambaten::linalg::{hungarian_min, pinv, svd_jacobi, Matrix};
 use sambaten::matching::{match_components, MatchPolicy};
 use sambaten::sampling::weighted_sample_without_replacement;
-use sambaten::tensor::{CooTensor, DenseTensor, Tensor3};
-use sambaten::util::benchkit::bench;
+use sambaten::tensor::{CooTensor, CsfTensor, DenseTensor, Tensor3};
+use sambaten::util::benchkit::{bench, report};
 use sambaten::util::Rng;
 
 fn main() {
@@ -40,6 +41,50 @@ fn main() {
         bench(&format!("micro/mttkrp_sparse_200_1pct/mode{mode}"), 1, 5, || {
             std::hint::black_box(xs.mttkrp(mode, &sa, &sb, &sc));
         });
+    }
+
+    // CSF vs COO at the acceptance shape: 1K×1K×1K, 1e-4 density (~100K
+    // nnz), rank 16 (monomorphised in both backends — an apples-to-apples
+    // kernel comparison). At this hyper-sparsity fibers hold ~1 entry, so
+    // the CSF win comes from the walk itself: register-accumulated output
+    // rows stored once per root, two factor-row loads per entry instead of
+    // three plus an output row load/store, no full-size per-thread
+    // accumulators and no reduction pass.
+    {
+        let xc = CooTensor::rand(1000, 1000, 1000, 1e-4, &mut rng);
+        println!("csf/coo 1K tensor nnz = {}", xc.nnz());
+        let xf = CsfTensor::from_coo(xc.clone());
+        let fa = Matrix::rand_gaussian(1000, 16, &mut rng);
+        let fb = Matrix::rand_gaussian(1000, 16, &mut rng);
+        let fc = Matrix::rand_gaussian(1000, 16, &mut rng);
+        let mut speedups = Vec::new();
+        for mode in 0..3 {
+            let coo = bench(&format!("micro/mttkrp_coo_1k_1e-4_r16/mode{mode}"), 2, 9, || {
+                std::hint::black_box(xc.mttkrp(mode, &fa, &fb, &fc));
+            });
+            let csf = bench(&format!("micro/mttkrp_csf_1k_1e-4_r16/mode{mode}"), 2, 9, || {
+                std::hint::black_box(xf.mttkrp(mode, &fa, &fb, &fc));
+            });
+            let s = coo.median_s / csf.median_s.max(1e-12);
+            report(&format!("micro/mttkrp_csf_speedup_1k/mode{mode}"), s, "x (coo/csf)");
+            speedups.push(s);
+        }
+        let gm = speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64;
+        report("micro/mttkrp_csf_speedup_1k/geomean", gm.exp(), "x (coo/csf)");
+        // Sampled extraction: the fiber tree skips unsampled subtrees; the
+        // COO scan touches every nonzero regardless of the sample size.
+        let is: Vec<usize> = (0..1000).step_by(4).collect(); // s = 4 sample
+        let coo_x = bench("micro/extract_coo_1k_s4", 1, 9, || {
+            std::hint::black_box(xc.extract(&is, &is, &is));
+        });
+        let csf_x = bench("micro/extract_csf_1k_s4", 1, 9, || {
+            std::hint::black_box(xf.extract(&is, &is, &is));
+        });
+        report(
+            "micro/extract_csf_speedup_1k",
+            coo_x.median_s / csf_x.median_s.max(1e-12),
+            "x (coo/csf)",
+        );
     }
 
     // Weighted sampling.

@@ -138,17 +138,24 @@ impl SamBaTen {
     /// obtain the starting factors (the paper assumes "a pre-existing set of
     /// decomposition results" — this constructor produces them).
     pub fn init(x_old: &TensorData, cfg: SamBaTenConfig) -> Result<Self> {
+        // Promote up front so the initial full decomposition already runs
+        // on the CSF kernels when the pre-existing tensor is large.
+        let x_old = x_old.clone().promoted();
         let als = AlsOptions { seed: cfg.seed, ..cfg.als.clone() };
-        let (mut model, _) = cp_als(x_old, cfg.rank, &als).context("initial decomposition")?;
+        let (mut model, _) = cp_als(&x_old, cfg.rank, &als).context("initial decomposition")?;
         model.normalize();
-        Ok(Self::from_model(x_old.clone(), model, cfg))
+        Ok(Self::from_model(x_old, model, cfg))
     }
 
     /// Initialise from an existing decomposition (e.g. loaded from disk).
+    /// Large COO tensors are promoted to the CSF backend here — the
+    /// accumulated tensor is read by `3 · iters · reps` MTTKRPs per ingest
+    /// plus MoI and extraction passes, so the one-time fiber-tree build
+    /// amortises immediately (see `tensor::csf`).
     pub fn from_model(x_old: TensorData, mut model: CpModel, cfg: SamBaTenConfig) -> Self {
         model.normalize();
         let rng = Rng::new(cfg.seed ^ 0x5A3B_A7E9);
-        SamBaTen { cfg, model, x: x_old, rng, history: Vec::new() }
+        SamBaTen { cfg, model, x: x_old.promoted(), rng, history: Vec::new() }
     }
 
     /// Current model (unit-norm columns, weights in λ).
@@ -287,8 +294,10 @@ impl SamBaTen {
         if self.cfg.refine_c {
             self.refine_new_c_rows(x_new, k_old, k_new)?;
         }
-        // 7. Grow the accumulated tensor.
+        // 7. Grow the accumulated tensor (COO accumulators promote to CSF
+        // once past the nnz bar; CSF accumulators rebuild their fiber trees).
         self.x.append_mode3(x_new);
+        self.x.maybe_promote();
         let phase_merge_s = t0.elapsed().as_secs_f64();
         debug_assert_eq!(self.model.factors[2].rows(), k_old + k_new);
         let stats = BatchStats {

@@ -2,9 +2,12 @@
 //!
 //! One of the two inner engines of the system (the other is the AOT-compiled
 //! JAX/Pallas sweep executed through PJRT — `crate::runtime`). This native
-//! implementation works on dense *and* sparse tensors through [`Tensor3`]
-//! and is the one the sparse path must use (a dense AOT kernel cannot
-//! exploit sparsity — same asymmetry as the paper's Matlab baselines).
+//! implementation works on dense *and* sparse tensors through [`Tensor3`] —
+//! COO and the fiber-tree CSF backend (`tensor::csf`) dispatch through the
+//! same MTTKRP call, so every sweep speeds up when the accumulated tensor
+//! has been promoted, with no changes here. It is the engine the sparse
+//! path must use (a dense AOT kernel cannot exploit sparsity — same
+//! asymmetry as the paper's Matlab baselines).
 
 use super::{init_factors, CpModel, InitMethod};
 use crate::linalg::{solve_gram_system, Matrix};

@@ -113,6 +113,10 @@ impl SyntheticSpec {
                 let (a, b) = s.split_mode3(k0);
                 (TensorData::Sparse(a), TensorData::Sparse(b))
             }
+            TensorData::Csf(c) => {
+                let (a, b) = c.split_mode3(k0);
+                (TensorData::Sparse(a), TensorData::Sparse(b))
+            }
         };
         let mut batches = Vec::new();
         let mut remaining = rest;
@@ -129,6 +133,10 @@ impl SyntheticSpec {
                 }
                 TensorData::Sparse(s) => {
                     let (a, b) = s.split_mode3(take);
+                    (TensorData::Sparse(a), TensorData::Sparse(b))
+                }
+                TensorData::Csf(c) => {
+                    let (a, b) = c.split_mode3(take);
                     (TensorData::Sparse(a), TensorData::Sparse(b))
                 }
             };

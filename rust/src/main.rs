@@ -161,6 +161,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let coo = match &x {
         TensorData::Sparse(s) => s.clone(),
         TensorData::Dense(d) => CooTensor::from_dense(d, 0.0),
+        TensorData::Csf(c) => c.to_coo(),
     };
     write_tns(&PathBuf::from(out), &coo)?;
     println!(
@@ -245,6 +246,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         TensorData::Sparse(s) => {
             let (a, b) = s.split_mode3(k0);
+            (TensorData::Sparse(a), TensorData::Sparse(b))
+        }
+        TensorData::Csf(c) => {
+            let (a, b) = c.split_mode3(k0);
             (TensorData::Sparse(a), TensorData::Sparse(b))
         }
     };

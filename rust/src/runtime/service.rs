@@ -8,16 +8,27 @@
 //! under-provisioned bank (the fallback is counted and reported).
 
 use super::bank::ArtifactBank;
+#[cfg(feature = "xla")]
 use super::pad::{pad_dense_c_order, pad_factor, unpad_factor};
 use crate::coordinator::solver::{InnerSolver, NativeAlsSolver};
 use crate::cp::{AlsOptions, CpModel};
+#[cfg(feature = "xla")]
 use crate::linalg::Matrix;
-use crate::tensor::{Tensor3, TensorData};
+use crate::tensor::TensorData;
+#[cfg(feature = "xla")]
+use crate::tensor::Tensor3;
+#[cfg(feature = "xla")]
 use crate::util::Rng;
 use anyhow::{anyhow, Context, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+
+/// Marker every bank-miss error carries. [`PjrtAlsSolver::decompose`]
+/// matches on it to decide native fallback, so the producer sites (the
+/// covering-entry search and the no-`xla` stub) and the matcher must stay
+/// in sync — hence one shared constant.
+const BANK_MISS_MARKER: &str = "no bank entry";
 
 struct Job {
     tensor: TensorData,
@@ -71,6 +82,22 @@ impl PjrtService {
     }
 }
 
+/// Built without the `xla` feature (the offline default): the service
+/// thread drains its queue answering every job as a bank miss, so
+/// [`PjrtAlsSolver::decompose`] falls back to the native ALS solver (the
+/// fallback is counted) and the engine keeps serving — just without AOT
+/// acceleration. Rebuild with `--features xla` and a vendored `xla` crate
+/// for the real PJRT execution path.
+#[cfg(not(feature = "xla"))]
+fn service_loop(_bank: ArtifactBank, rx: mpsc::Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        let _ = job.reply.send(Err(anyhow!(
+            "{BANK_MISS_MARKER} executable: PJRT compiled out (rebuild with `--features xla`)"
+        )));
+    }
+}
+
+#[cfg(feature = "xla")]
 fn service_loop(bank: ArtifactBank, rx: mpsc::Receiver<Job>) {
     // The client and executable cache live (only) on this thread.
     let client = match xla::PjRtClient::cpu() {
@@ -91,6 +118,7 @@ fn service_loop(bank: ArtifactBank, rx: mpsc::Receiver<Job>) {
     }
 }
 
+#[cfg(feature = "xla")]
 fn run_job(
     bank: &ArtifactBank,
     client: &xla::PjRtClient,
@@ -106,7 +134,7 @@ fn run_job(
         .min_by_key(|(_, e)| e.volume())
         .map(|(idx, _)| idx)
         .ok_or_else(|| {
-            anyhow!("no bank entry covers sample {}x{}x{} rank {}", ni, nj, nk, job.rank)
+            anyhow!("{BANK_MISS_MARKER} covers sample {}x{}x{} rank {}", ni, nj, nk, job.rank)
         })?;
     let entry = &bank.entries[entry_idx];
     if compiled[entry_idx].is_none() {
@@ -189,7 +217,7 @@ impl InnerSolver for PjrtAlsSolver {
     ) -> Result<CpModel> {
         match self.service.submit(x.clone(), rank, self.sweeps, seed) {
             Ok(m) => Ok(m),
-            Err(e) if e.to_string().contains("no bank entry") => {
+            Err(e) if e.to_string().contains(BANK_MISS_MARKER) => {
                 // Bank miss → native fallback (counted).
                 self.service.fallbacks.fetch_add(1, Ordering::Relaxed);
                 self.fallback.decompose(x, rank, opts, seed)
@@ -215,6 +243,29 @@ mod tests {
             return None;
         }
         Some(PjrtService::start(artifacts_dir()).unwrap())
+    }
+
+    /// Default (no-`xla`) build: a PJRT-configured solver must keep serving
+    /// by falling back to the native ALS — the stub's bank-miss reply and
+    /// the fallback matcher stay coupled through `BANK_MISS_MARKER`.
+    #[test]
+    #[cfg(not(feature = "xla"))]
+    fn default_build_falls_back_to_native() {
+        let dir = std::env::temp_dir().join(format!("sambaten_noxla_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "als_sweep_i64_j64_k64_r8.hlo.txt\t64\t64\t64\t8\n",
+        )
+        .unwrap();
+        let svc = PjrtService::start(dir.clone()).unwrap();
+        let solver = PjrtAlsSolver::new(svc.clone());
+        let (x, _) = SyntheticSpec::dense(8, 8, 8, 2, 0.0, 9).generate();
+        let model = solver.decompose(&x, 2, &AlsOptions::quick(), 3).unwrap();
+        assert_eq!(model.rank(), 2);
+        assert!(model.fit(&x) > 0.9, "fallback fit {}", model.fit(&x));
+        assert_eq!(svc.fallback_count(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -5,6 +5,11 @@
 //! sampling factor `s`, a mode of size `n` yields `⌈n/s⌉` indices. The
 //! mode-3 sample is then merged with *all* indices of the incoming batch,
 //! producing the summary `X_s = X(I_s, J_s, K_s ∪ [K+1..K_new])`.
+//!
+//! Extraction dispatches through [`TensorData::extract`]: on a CSF-promoted
+//! accumulator the fiber tree skips unsampled subtrees wholesale instead of
+//! filtering every nonzero, which matters because extraction runs once per
+//! repetition per ingest.
 
 use crate::tensor::{Tensor3, TensorData};
 use crate::util::Rng;
@@ -257,6 +262,29 @@ mod tests {
         assert_eq!(sample.is.len(), 4);
         assert_eq!(sample.ks_old.len(), 5); // ceil(9/2)
         assert_eq!(sample.tensor.dims(), (4, 4, 8));
+    }
+
+    #[test]
+    fn draw_sample_csf_path() {
+        use crate::tensor::CsfTensor;
+        let mut rng = Rng::new(8);
+        let old = CooTensor::rand(14, 13, 10, 0.3, &mut rng);
+        let new = CooTensor::rand(14, 13, 2, 0.3, &mut rng);
+        let old_csf = TensorData::Csf(CsfTensor::from_coo(old.clone()));
+        let sample = draw_sample(&old_csf, &new.clone().into(), SamplerConfig::new(2), &mut rng);
+        assert!(sample.tensor.is_sparse());
+        assert_eq!(sample.is.len(), 7);
+        assert_eq!(sample.js.len(), 7);
+        assert_eq!(sample.ks_old.len(), 5);
+        assert_eq!(sample.tensor.dims(), (7, 7, 7));
+        // The fiber-tree extraction must agree entry-for-entry with the COO
+        // scan on the same index sets.
+        let mut want = old.extract(&sample.is, &sample.js, &sample.ks_old);
+        let all_new: Vec<usize> = vec![0, 1];
+        want.append_mode3(&new.extract(&sample.is, &sample.js, &all_new));
+        let (d1, d2) = (sample.tensor.to_dense(), want.to_dense());
+        assert_eq!(d1.dims(), d2.dims());
+        assert_eq!(d1.data(), d2.data());
     }
 
     #[test]

@@ -82,6 +82,9 @@ impl SliceSource for TensorReplay {
                     .collect();
                 Slice::Sparse { i: ni, j: nj, entries }
             }
+            // CSF's mode-3 fiber tree hands out a slice without scanning
+            // the full entry list.
+            TensorData::Csf(t) => Slice::Sparse { i: ni, j: nj, entries: t.slice_entries(k) },
         })
     }
 }
@@ -159,7 +162,9 @@ impl Batcher {
             }
             TensorData::Dense(t)
         };
-        Some(out)
+        // Large sparse batches promote to the CSF backend before the engine
+        // runs its per-repetition MoI/extraction passes over them.
+        Some(out.promoted())
     }
 }
 

@@ -1,0 +1,635 @@
+//! Compressed Sparse Fiber (CSF) tensor backend.
+//!
+//! The COO backend walks a flat entry list, which makes MTTKRP — the
+//! dominant cost inside every sample ALS sweep — pay per *entry* for work
+//! that is shared per *fiber* and per *root slice*: re-loading factor rows,
+//! scattering into the output, and (in the parallel path) allocating,
+//! zeroing and reducing full-size per-thread accumulators. CSF stores one
+//! mode-rooted fiber tree per mode (built once, by sorting), so MTTKRP for
+//! mode `n` walks orientation `n`:
+//!
+//! ```text
+//! root r (output row)            — accumulated in registers, stored once
+//! └── fiber (r, m)               — one mid-factor row load per fiber
+//!     └── leaf entries (l, v)    — v · leaf_factor[l, :], contiguous
+//! ```
+//!
+//! Parallelism: root ranges are disjoint output rows, so workers write
+//! range-local scratch with **no contention and no reduction pass** —
+//! unlike the COO path, which must merge full `out_dim × R` partials.
+//! Ranges are balanced by entry count (heavy-tailed real data concentrates
+//! nnz on few roots).
+//!
+//! Memory: each orientation owns its values in its own order (3× the COO
+//! value payload). That trade is deliberate — the accumulated tensor is
+//! read by `3 · iters · reps` MTTKRPs per ingest and rebuilt once.
+
+use super::sparse::inverse_map;
+use super::{mode_dim, CooTensor, DenseTensor, Tensor3};
+use crate::linalg::Matrix;
+use crate::util::par::workers_for;
+use crate::util::parallel_map;
+
+/// One mode-rooted fiber tree. All pointer arrays are `u32` (nnz beyond 4B
+/// entries is out of scope for this testbed, as in the COO backend).
+#[derive(Clone, Default)]
+struct Orientation {
+    /// Distinct root indices, ascending.
+    roots: Vec<u32>,
+    /// Fibers of root `f` are `fiber_ptr[f]..fiber_ptr[f+1]` (into `mids`).
+    fiber_ptr: Vec<u32>,
+    /// Mid-level index per fiber.
+    mids: Vec<u32>,
+    /// Entries of fiber `g` are `entry_ptr[g]..entry_ptr[g+1]`.
+    entry_ptr: Vec<u32>,
+    /// Leaf-level index per entry, fiber-contiguous.
+    leaves: Vec<u32>,
+    /// Value per entry, in this orientation's order.
+    vals: Vec<f64>,
+}
+
+impl Orientation {
+    /// Entry range (into `leaves`/`vals`) owned by root `f` — contiguous
+    /// because fibers and entries are laid out in root-major order.
+    #[inline]
+    fn root_entries(&self, f: usize) -> std::ops::Range<usize> {
+        let e0 = self.entry_ptr[self.fiber_ptr[f] as usize] as usize;
+        let e1 = self.entry_ptr[self.fiber_ptr[f + 1] as usize] as usize;
+        e0..e1
+    }
+}
+
+/// Build the orientation whose root level is `mode`. `(root, mid, leaf)`
+/// per mode: 0 → (i, j, k), 1 → (j, i, k), 2 → (k, j, i) — the leaf/mid
+/// assignment pairs each orientation with the factor matrices its MTTKRP
+/// needs (`mode 0: Σ_j B[j] ∘ Σ_k v·C[k]`, etc.).
+fn build_orientation(ii: &[u32], jj: &[u32], kk: &[u32], vv: &[f64], mode: usize) -> Orientation {
+    let (rs, ms, ls): (&[u32], &[u32], &[u32]) = match mode {
+        0 => (ii, jj, kk),
+        1 => (jj, ii, kk),
+        2 => (kk, jj, ii),
+        _ => panic!("mode {mode} out of range for a 3-mode tensor"),
+    };
+    let n = vv.len();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_unstable_by_key(|&e| {
+        let e = e as usize;
+        (rs[e], ms[e], ls[e])
+    });
+    let mut o = Orientation {
+        leaves: Vec::with_capacity(n),
+        vals: Vec::with_capacity(n),
+        ..Orientation::default()
+    };
+    for &e in &order {
+        let e = e as usize;
+        let (root, mid, leaf, v) = (rs[e], ms[e], ls[e], vv[e]);
+        let new_root = o.roots.last() != Some(&root);
+        if new_root {
+            o.roots.push(root);
+            o.fiber_ptr.push(o.mids.len() as u32);
+        }
+        if new_root || o.mids.last() != Some(&mid) {
+            o.mids.push(mid);
+            o.entry_ptr.push(o.leaves.len() as u32);
+        }
+        o.leaves.push(leaf);
+        o.vals.push(v);
+    }
+    o.fiber_ptr.push(o.mids.len() as u32);
+    o.entry_ptr.push(o.leaves.len() as u32);
+    o
+}
+
+/// CSF sparse tensor: three mode-rooted fiber trees over one coalesced
+/// entry set. Immutable once built (mode-3 growth rebuilds — see
+/// [`CsfTensor::append_mode3`]).
+#[derive(Clone)]
+pub struct CsfTensor {
+    dims: (usize, usize, usize),
+    nnz: usize,
+    orient: [Orientation; 3],
+}
+
+impl std::fmt::Debug for CsfTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CsfTensor({}x{}x{}, nnz={}, roots={}/{}/{})",
+            self.dims.0,
+            self.dims.1,
+            self.dims.2,
+            self.nnz,
+            self.orient[0].roots.len(),
+            self.orient[1].roots.len(),
+            self.orient[2].roots.len()
+        )
+    }
+}
+
+impl CsfTensor {
+    /// Build from COO. Coalesces first (CSF requires unique coordinates;
+    /// duplicates sum, exact zeros drop — standard COO semantics).
+    pub fn from_coo(mut coo: CooTensor) -> Self {
+        coo.coalesce();
+        let dims = coo.dims();
+        let n = coo.nnz();
+        let mut ii = Vec::with_capacity(n);
+        let mut jj = Vec::with_capacity(n);
+        let mut kk = Vec::with_capacity(n);
+        let mut vv = Vec::with_capacity(n);
+        for (i, j, k, v) in coo.iter() {
+            ii.push(i as u32);
+            jj.push(j as u32);
+            kk.push(k as u32);
+            vv.push(v);
+        }
+        CsfTensor {
+            dims,
+            nnz: n,
+            orient: [
+                build_orientation(&ii, &jj, &kk, &vv, 0),
+                build_orientation(&ii, &jj, &kk, &vv, 1),
+                build_orientation(&ii, &jj, &kk, &vv, 2),
+            ],
+        }
+    }
+
+    pub fn from_dense(d: &DenseTensor, threshold: f64) -> Self {
+        Self::from_coo(CooTensor::from_dense(d, threshold))
+    }
+
+    /// Entry iterator `(i, j, k, v)` in `(i, j, k)`-sorted order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, usize, f64)> + '_ {
+        let o = &self.orient[0];
+        (0..o.roots.len()).flat_map(move |f| {
+            let i = o.roots[f] as usize;
+            (o.fiber_ptr[f] as usize..o.fiber_ptr[f + 1] as usize).flat_map(move |g| {
+                let j = o.mids[g] as usize;
+                (o.entry_ptr[g] as usize..o.entry_ptr[g + 1] as usize)
+                    .map(move |e| (i, j, o.leaves[e] as usize, o.vals[e]))
+            })
+        })
+    }
+
+    pub fn to_coo(&self) -> CooTensor {
+        let mut out =
+            CooTensor::with_capacity(self.dims.0, self.dims.1, self.dims.2, self.nnz);
+        for (i, j, k, v) in self.iter() {
+            out.push(i, j, k, v);
+        }
+        out
+    }
+
+    pub fn to_dense(&self) -> DenseTensor {
+        let (ni, nj, nk) = self.dims;
+        let mut d = DenseTensor::zeros(ni, nj, nk);
+        for (i, j, k, v) in self.iter() {
+            d.add_at(i, j, k, v);
+        }
+        d
+    }
+
+    /// Extract the sub-tensor at the given index lists by walking the
+    /// mode-1 fiber tree: a root absent from `is` skips its whole subtree
+    /// and a fiber absent from `js` skips all its leaves — the win over the
+    /// COO scan, which tests every nonzero against all three maps. This
+    /// runs `r` times per ingest (once per sampling repetition).
+    pub fn extract(&self, is: &[usize], js: &[usize], ks: &[usize]) -> CooTensor {
+        let inv_i = inverse_map(self.dims.0, is);
+        let inv_j = inverse_map(self.dims.1, js);
+        let inv_k = inverse_map(self.dims.2, ks);
+        let o = &self.orient[0];
+        let mut out = CooTensor::new(is.len(), js.len(), ks.len());
+        for f in 0..o.roots.len() {
+            let Some(ni) = inv_i[o.roots[f] as usize] else {
+                continue;
+            };
+            for g in o.fiber_ptr[f] as usize..o.fiber_ptr[f + 1] as usize {
+                let Some(nj) = inv_j[o.mids[g] as usize] else {
+                    continue;
+                };
+                for e in o.entry_ptr[g] as usize..o.entry_ptr[g + 1] as usize {
+                    let Some(nk) = inv_k[o.leaves[e] as usize] else {
+                        continue;
+                    };
+                    out.push(ni as usize, nj as usize, nk as usize, o.vals[e]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Entries of frontal slice `k` as `(i, j, v)` triples, straight off
+    /// the mode-3 tree (root = k) — the streaming replay primitive.
+    pub fn slice_entries(&self, k: usize) -> Vec<(u32, u32, f64)> {
+        let o = &self.orient[2];
+        let Ok(f) = o.roots.binary_search(&(k as u32)) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for g in o.fiber_ptr[f] as usize..o.fiber_ptr[f + 1] as usize {
+            let j = o.mids[g];
+            for e in o.entry_ptr[g] as usize..o.entry_ptr[g + 1] as usize {
+                // Orientation 2 is (root k, mid j, leaf i).
+                out.push((o.leaves[e], j, o.vals[e]));
+            }
+        }
+        out
+    }
+
+    /// Append `other` along mode 3. The fiber trees are positional indexes,
+    /// so growth is a rebuild: `O(nnz log nnz)` — about one MTTKRP sweep of
+    /// work, paid once per ingest vs the `3 · iters · reps` MTTKRPs that
+    /// read the result.
+    pub fn append_mode3(&mut self, other: &CooTensor) {
+        let mut coo = self.to_coo();
+        coo.append_mode3(other);
+        *self = CsfTensor::from_coo(coo);
+    }
+
+    /// Split along mode 3 at `at` (COO out: splits are transient stream
+    /// plumbing, promotion re-applies where it pays).
+    pub fn split_mode3(&self, at: usize) -> (CooTensor, CooTensor) {
+        self.to_coo().split_mode3(at)
+    }
+
+    pub fn norm_sq(&self) -> f64 {
+        self.orient[0].vals.iter().map(|v| v * v).sum()
+    }
+
+    /// Density in `[0, 1]`.
+    pub fn density(&self) -> f64 {
+        let total = self.dims.0 * self.dims.1 * self.dims.2;
+        if total == 0 {
+            0.0
+        } else {
+            self.nnz as f64 / total as f64
+        }
+    }
+}
+
+/// Contiguous root ranges with near-equal *entry* counts (roots are a poor
+/// balance unit on heavy-tailed data where a few slices hold most nonzeros).
+fn balanced_root_ranges(o: &Orientation, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let nroots = o.roots.len();
+    if parts <= 1 || nroots <= 1 {
+        return vec![0..nroots];
+    }
+    let per = o.vals.len().div_ceil(parts).max(1);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    let mut acc = 0;
+    for f in 0..nroots {
+        acc += o.root_entries(f).len();
+        if acc >= per && f + 1 < nroots {
+            out.push(start..f + 1);
+            start = f + 1;
+            acc = 0;
+        }
+    }
+    out.push(start..nroots);
+    out
+}
+
+/// Fiber-tree MTTKRP over a root range, compile-time rank: the output row
+/// accumulates in registers and stores once per root; each fiber loads its
+/// mid-factor row once; leaf entries stream contiguously.
+fn mttkrp_roots_const<const R: usize>(
+    o: &Orientation,
+    midf: &Matrix,
+    leaff: &Matrix,
+    range: std::ops::Range<usize>,
+    local: &mut Matrix,
+) {
+    for (row, f) in range.enumerate() {
+        let mut acc = [0.0f64; R];
+        for g in o.fiber_ptr[f] as usize..o.fiber_ptr[f + 1] as usize {
+            let mut fib = [0.0f64; R];
+            let es = o.entry_ptr[g] as usize..o.entry_ptr[g + 1] as usize;
+            for (leaf, v) in o.leaves[es.clone()].iter().zip(&o.vals[es]) {
+                let lrow = leaff.row(*leaf as usize);
+                for t in 0..R {
+                    fib[t] += v * lrow[t];
+                }
+            }
+            let mrow = midf.row(o.mids[g] as usize);
+            for t in 0..R {
+                acc[t] += fib[t] * mrow[t];
+            }
+        }
+        local.row_mut(row)[..R].copy_from_slice(&acc);
+    }
+}
+
+/// Runtime-rank fallback of [`mttkrp_roots_const`].
+fn mttkrp_roots_generic(
+    o: &Orientation,
+    midf: &Matrix,
+    leaff: &Matrix,
+    range: std::ops::Range<usize>,
+    local: &mut Matrix,
+) {
+    let r = midf.cols();
+    let mut fib = vec![0.0f64; r];
+    for (row, f) in range.enumerate() {
+        let out = local.row_mut(row);
+        for g in o.fiber_ptr[f] as usize..o.fiber_ptr[f + 1] as usize {
+            fib.iter_mut().for_each(|x| *x = 0.0);
+            let es = o.entry_ptr[g] as usize..o.entry_ptr[g + 1] as usize;
+            for (leaf, v) in o.leaves[es.clone()].iter().zip(&o.vals[es]) {
+                let lrow = leaff.row(*leaf as usize);
+                for t in 0..r {
+                    fib[t] += v * lrow[t];
+                }
+            }
+            let mrow = midf.row(o.mids[g] as usize);
+            for t in 0..r {
+                out[t] += fib[t] * mrow[t];
+            }
+        }
+    }
+}
+
+impl Tensor3 for CsfTensor {
+    fn dims(&self) -> (usize, usize, usize) {
+        self.dims
+    }
+
+    fn norm(&self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    fn mttkrp(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix {
+        let r = a.cols();
+        debug_assert_eq!(b.cols(), r);
+        debug_assert_eq!(c.cols(), r);
+        // Mid/leaf factors per orientation — see `build_orientation`.
+        let (midf, leaff) = match mode {
+            0 => (b, c),
+            1 => (a, c),
+            2 => (b, a),
+            _ => panic!("mode {mode} out of range"),
+        };
+        let o = &self.orient[mode];
+        let mut out = Matrix::zeros(mode_dim(self.dims, mode), r);
+        if o.roots.is_empty() {
+            return out;
+        }
+        let nw = workers_for(self.nnz / 4096 + 1).min(o.roots.len());
+        let ranges = balanced_root_ranges(o, nw);
+        let locals = parallel_map(&ranges, |_, range| {
+            let mut local = Matrix::zeros(range.len(), r);
+            match r {
+                1 => mttkrp_roots_const::<1>(o, midf, leaff, range.clone(), &mut local),
+                2 => mttkrp_roots_const::<2>(o, midf, leaff, range.clone(), &mut local),
+                3 => mttkrp_roots_const::<3>(o, midf, leaff, range.clone(), &mut local),
+                4 => mttkrp_roots_const::<4>(o, midf, leaff, range.clone(), &mut local),
+                5 => mttkrp_roots_const::<5>(o, midf, leaff, range.clone(), &mut local),
+                6 => mttkrp_roots_const::<6>(o, midf, leaff, range.clone(), &mut local),
+                8 => mttkrp_roots_const::<8>(o, midf, leaff, range.clone(), &mut local),
+                10 => mttkrp_roots_const::<10>(o, midf, leaff, range.clone(), &mut local),
+                16 => mttkrp_roots_const::<16>(o, midf, leaff, range.clone(), &mut local),
+                _ => mttkrp_roots_generic(o, midf, leaff, range.clone(), &mut local),
+            }
+            local
+        });
+        // Scatter range-local rows to their (disjoint) global root rows.
+        for (range, local) in ranges.iter().zip(&locals) {
+            for (row, f) in range.clone().enumerate() {
+                out.row_mut(o.roots[f] as usize).copy_from_slice(local.row(row));
+            }
+        }
+        out
+    }
+
+    fn mode_sum_squares(&self, mode: usize) -> Vec<f64> {
+        let o = &self.orient[mode];
+        let mut out = vec![0.0; mode_dim(self.dims, mode)];
+        for f in 0..o.roots.len() {
+            out[o.roots[f] as usize] =
+                o.vals[o.root_entries(f)].iter().map(|v| v * v).sum();
+        }
+        out
+    }
+
+    fn inner_with_kruskal(&self, lambda: &[f64], a: &Matrix, b: &Matrix, c: &Matrix) -> f64 {
+        let r = lambda.len();
+        let o = &self.orient[0];
+        let mut acc = 0.0;
+        let mut rootacc = vec![0.0f64; r];
+        let mut fib = vec![0.0f64; r];
+        for f in 0..o.roots.len() {
+            rootacc.iter_mut().for_each(|x| *x = 0.0);
+            for g in o.fiber_ptr[f] as usize..o.fiber_ptr[f + 1] as usize {
+                fib.iter_mut().for_each(|x| *x = 0.0);
+                let es = o.entry_ptr[g] as usize..o.entry_ptr[g + 1] as usize;
+                for (leaf, v) in o.leaves[es.clone()].iter().zip(&o.vals[es]) {
+                    let crow = c.row(*leaf as usize);
+                    for t in 0..r {
+                        fib[t] += v * crow[t];
+                    }
+                }
+                let brow = b.row(o.mids[g] as usize);
+                for t in 0..r {
+                    rootacc[t] += fib[t] * brow[t];
+                }
+            }
+            let arow = a.row(o.roots[f] as usize);
+            for t in 0..r {
+                acc += lambda[t] * arow[t] * rootacc[t];
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrips_coo_exactly() {
+        let mut rng = Rng::new(1);
+        let coo = CooTensor::rand(7, 6, 5, 0.3, &mut rng);
+        let csf = CsfTensor::from_coo(coo.clone());
+        assert_eq!(csf.nnz(), coo.nnz());
+        assert!((csf.norm() - coo.norm()).abs() < 1e-12);
+        let d1 = csf.to_coo().to_dense();
+        let d2 = coo.to_dense();
+        assert_eq!(d1.data(), d2.data());
+        assert_eq!(csf.to_dense().data(), d2.data());
+    }
+
+    #[test]
+    fn from_coo_coalesces_duplicates() {
+        let mut coo = CooTensor::new(3, 3, 3);
+        coo.push(1, 1, 1, 2.0);
+        coo.push(1, 1, 1, 3.0);
+        coo.push(0, 2, 2, 1.0);
+        coo.push(0, 2, 2, -1.0); // cancels
+        let csf = CsfTensor::from_coo(coo);
+        assert_eq!(csf.nnz(), 1);
+        assert_eq!(csf.iter().next().unwrap(), (1, 1, 1, 5.0));
+    }
+
+    #[test]
+    fn mttkrp_matches_dense_all_modes() {
+        let mut rng = Rng::new(2);
+        for r in [1usize, 2, 3, 4, 7, 8, 16] {
+            let coo = CooTensor::rand(9, 8, 7, 0.3, &mut rng);
+            let dense = coo.to_dense();
+            let csf = CsfTensor::from_coo(coo);
+            let a = Matrix::rand_gaussian(9, r, &mut rng);
+            let b = Matrix::rand_gaussian(8, r, &mut rng);
+            let c = Matrix::rand_gaussian(7, r, &mut rng);
+            for mode in 0..3 {
+                let mc = csf.mttkrp(mode, &a, &b, &c);
+                let md = dense.mttkrp(mode, &a, &b, &c);
+                assert!(mc.max_abs_diff(&md) < 1e-10, "rank {r} mode {mode}");
+            }
+        }
+    }
+
+    #[test]
+    fn mttkrp_parallel_ranges_cover_all_roots() {
+        // Large enough nnz to force multiple worker ranges.
+        let mut rng = Rng::new(3);
+        let coo = CooTensor::rand(50, 40, 30, 0.4, &mut rng);
+        assert!(coo.nnz() > 8192);
+        let dense = coo.to_dense();
+        let csf = CsfTensor::from_coo(coo);
+        let a = Matrix::rand_gaussian(50, 4, &mut rng);
+        let b = Matrix::rand_gaussian(40, 4, &mut rng);
+        let c = Matrix::rand_gaussian(30, 4, &mut rng);
+        for mode in 0..3 {
+            let mc = csf.mttkrp(mode, &a, &b, &c);
+            let md = dense.mttkrp(mode, &a, &b, &c);
+            assert!(mc.max_abs_diff(&md) < 1e-9, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn mode_sum_squares_and_inner_match_dense() {
+        let mut rng = Rng::new(4);
+        let coo = CooTensor::rand(8, 7, 6, 0.4, &mut rng);
+        let dense = coo.to_dense();
+        let csf = CsfTensor::from_coo(coo);
+        for mode in 0..3 {
+            let sc = csf.mode_sum_squares(mode);
+            let sd = dense.mode_sum_squares(mode);
+            for (x, y) in sc.iter().zip(&sd) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+        let a = Matrix::rand_gaussian(8, 3, &mut rng);
+        let b = Matrix::rand_gaussian(7, 3, &mut rng);
+        let c = Matrix::rand_gaussian(6, 3, &mut rng);
+        let lam = vec![1.2, 0.5, 2.0];
+        let ic = csf.inner_with_kruskal(&lam, &a, &b, &c);
+        let id = dense.inner_with_kruskal(&lam, &a, &b, &c);
+        assert!((ic - id).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extract_matches_coo_extract() {
+        let mut rng = Rng::new(5);
+        let coo = CooTensor::rand(10, 9, 8, 0.35, &mut rng);
+        let csf = CsfTensor::from_coo(coo.clone());
+        let is = vec![0, 3, 7, 9];
+        let js = vec![8, 1, 4];
+        let ks = vec![2, 5];
+        let dc = csf.extract(&is, &js, &ks).to_dense();
+        let dd = coo.extract(&is, &js, &ks).to_dense();
+        assert_eq!(dc.data(), dd.data());
+    }
+
+    #[test]
+    fn slice_entries_match_iter_filter() {
+        let mut rng = Rng::new(6);
+        let coo = CooTensor::rand(6, 6, 6, 0.4, &mut rng);
+        let csf = CsfTensor::from_coo(coo.clone());
+        for k in 0..6 {
+            let mut got: Vec<(usize, usize, f64)> = csf
+                .slice_entries(k)
+                .into_iter()
+                .map(|(i, j, v)| (i as usize, j as usize, v))
+                .collect();
+            got.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+            let mut want: Vec<(usize, usize, f64)> = csf
+                .iter()
+                .filter(|&(_, _, kk, _)| kk == k)
+                .map(|(i, j, _, v)| (i, j, v))
+                .collect();
+            want.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+            assert_eq!(got, want, "slice {k}");
+        }
+    }
+
+    #[test]
+    fn append_and_split_roundtrip() {
+        let mut rng = Rng::new(7);
+        let coo = CooTensor::rand(5, 5, 8, 0.4, &mut rng);
+        let batch = CooTensor::rand(5, 5, 3, 0.4, &mut rng);
+        let mut csf = CsfTensor::from_coo(coo.clone());
+        csf.append_mode3(&batch);
+        assert_eq!(csf.dims(), (5, 5, 11));
+        let mut want = coo.clone();
+        want.append_mode3(&batch);
+        want.coalesce();
+        assert_eq!(csf.to_dense().data(), want.to_dense().data());
+        let (head, tail) = csf.split_mode3(8);
+        let mut coalesced = coo;
+        coalesced.coalesce();
+        let want_head = coalesced.to_dense();
+        assert_eq!(head.to_dense().data(), want_head.data());
+        assert_eq!(tail.dims().2, 3);
+    }
+
+    #[test]
+    fn empty_and_degenerate_safe() {
+        let empty = CsfTensor::from_coo(CooTensor::new(4, 4, 4));
+        assert_eq!(empty.nnz(), 0);
+        assert_eq!(empty.norm(), 0.0);
+        let a = Matrix::zeros(4, 2);
+        for mode in 0..3 {
+            assert_eq!(empty.mttkrp(mode, &a, &a, &a).frob_norm(), 0.0);
+            assert_eq!(empty.mode_sum_squares(mode), vec![0.0; 4]);
+        }
+        assert_eq!(empty.inner_with_kruskal(&[1.0, 1.0], &a, &a, &a), 0.0);
+        // Single fiber: all entries share (i, j).
+        let mut coo = CooTensor::new(3, 3, 5);
+        for k in 0..5 {
+            coo.push(1, 2, k, (k + 1) as f64);
+        }
+        let csf = CsfTensor::from_coo(coo.clone());
+        let dense = coo.to_dense();
+        let mut rng = Rng::new(8);
+        let fa = Matrix::rand_gaussian(3, 2, &mut rng);
+        let fb = Matrix::rand_gaussian(3, 2, &mut rng);
+        let fc = Matrix::rand_gaussian(5, 2, &mut rng);
+        for mode in 0..3 {
+            assert!(
+                csf.mttkrp(mode, &fa, &fb, &fc)
+                    .max_abs_diff(&dense.mttkrp(mode, &fa, &fb, &fc))
+                    < 1e-10
+            );
+        }
+        assert!(csf.slice_entries(4).len() == 1);
+        assert!(CsfTensor::from_coo(CooTensor::new(2, 2, 2)).slice_entries(0).is_empty());
+    }
+
+    #[test]
+    fn density_reports_fill() {
+        let mut coo = CooTensor::new(2, 2, 2);
+        coo.push(0, 0, 0, 1.0);
+        coo.push(1, 1, 1, 1.0);
+        let csf = CsfTensor::from_coo(coo);
+        assert!((csf.density() - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,16 +1,19 @@
-//! Third-order tensor substrate: dense and sparse (COO) storage, unfoldings,
-//! MTTKRP, mode-wise sums of squares (the paper's Measure of Importance),
-//! sub-tensor extraction for sampling, and mode-3 splitting/appending for the
-//! incremental setting.
+//! Third-order tensor substrate: dense, sparse-COO and sparse-CSF storage,
+//! unfoldings, MTTKRP, mode-wise sums of squares (the paper's Measure of
+//! Importance), sub-tensor extraction for sampling, and mode-3
+//! splitting/appending for the incremental setting. See DESIGN.md §2 for
+//! the backend matrix and the automatic COO→CSF promotion policy.
 //!
 //! The paper (and this reproduction) works with three-mode tensors
 //! throughout; the problem definition extends to higher orders, and the
 //! module keeps mode-generic signatures (`mode: usize`) so a higher-order
 //! extension stays mechanical.
 
+pub mod csf;
 pub mod dense;
 pub mod sparse;
 
+pub use csf::CsfTensor;
 pub use dense::DenseTensor;
 pub use sparse::CooTensor;
 
@@ -41,11 +44,13 @@ pub trait Tensor3 {
     fn inner_with_kruskal(&self, lambda: &[f64], a: &Matrix, b: &Matrix, c: &Matrix) -> f64;
 }
 
-/// Owned dense-or-sparse tensor used by engine APIs.
+/// Owned tensor used by engine APIs: dense, flat sparse (COO) or
+/// fiber-tree sparse (CSF — see [`csf`] for when each is chosen).
 #[derive(Clone, Debug)]
 pub enum TensorData {
     Dense(DenseTensor),
     Sparse(CooTensor),
+    Csf(CsfTensor),
 }
 
 impl From<DenseTensor> for TensorData {
@@ -60,16 +65,53 @@ impl From<CooTensor> for TensorData {
     }
 }
 
+impl From<CsfTensor> for TensorData {
+    fn from(t: CsfTensor) -> Self {
+        TensorData::Csf(t)
+    }
+}
+
+/// nnz threshold above which sparse data is promoted COO → CSF. Below it
+/// the fiber-tree build (a sort per mode) costs more than the MTTKRP sweeps
+/// it accelerates; above it the sweeps dominate every ingest. Promotion
+/// happens at engine init, after each mode-3 append, and when the streaming
+/// [`crate::streaming::Batcher`] emits a large batch.
+pub const CSF_PROMOTION_NNZ: usize = 16_384;
+
 impl TensorData {
+    /// True for both sparse representations (COO and CSF).
     pub fn is_sparse(&self) -> bool {
-        matches!(self, TensorData::Sparse(_))
+        matches!(self, TensorData::Sparse(_) | TensorData::Csf(_))
+    }
+
+    pub fn is_csf(&self) -> bool {
+        matches!(self, TensorData::Csf(_))
+    }
+
+    /// Promote COO → CSF when nnz is past [`CSF_PROMOTION_NNZ`]. Dense and
+    /// already-promoted tensors pass through unchanged.
+    pub fn promoted(mut self) -> TensorData {
+        self.maybe_promote();
+        self
+    }
+
+    /// In-place [`TensorData::promoted`].
+    pub fn maybe_promote(&mut self) {
+        if let TensorData::Sparse(s) = self {
+            if s.nnz() >= CSF_PROMOTION_NNZ {
+                *self = TensorData::Csf(CsfTensor::from_coo(std::mem::take(s)));
+            }
+        }
     }
 
     /// Extract the sub-tensor at the given (sorted or unsorted) index sets.
+    /// CSF extraction walks the fiber tree (skipping unsampled subtrees)
+    /// and yields COO — samples are summary-sized, below the promotion bar.
     pub fn extract(&self, is: &[usize], js: &[usize], ks: &[usize]) -> TensorData {
         match self {
             TensorData::Dense(t) => TensorData::Dense(t.extract(is, js, ks)),
             TensorData::Sparse(t) => TensorData::Sparse(t.extract(is, js, ks)),
+            TensorData::Csf(t) => TensorData::Sparse(t.extract(is, js, ks)),
         }
     }
 
@@ -77,11 +119,18 @@ impl TensorData {
     pub fn append_mode3(&mut self, other: &TensorData) {
         match (self, other) {
             (TensorData::Dense(a), TensorData::Dense(b)) => a.append_mode3(b),
-            (TensorData::Sparse(a), TensorData::Sparse(b)) => a.append_mode3(b),
             (TensorData::Dense(a), TensorData::Sparse(b)) => a.append_mode3(&b.to_dense()),
+            (TensorData::Dense(a), TensorData::Csf(b)) => a.append_mode3(&b.to_dense()),
+            (TensorData::Sparse(a), TensorData::Sparse(b)) => a.append_mode3(b),
             (TensorData::Sparse(a), TensorData::Dense(b)) => {
                 a.append_mode3(&CooTensor::from_dense(b, 0.0))
             }
+            (TensorData::Sparse(a), TensorData::Csf(b)) => a.append_mode3(&b.to_coo()),
+            (TensorData::Csf(a), TensorData::Sparse(b)) => a.append_mode3(b),
+            (TensorData::Csf(a), TensorData::Dense(b)) => {
+                a.append_mode3(&CooTensor::from_dense(b, 0.0))
+            }
+            (TensorData::Csf(a), TensorData::Csf(b)) => a.append_mode3(&b.to_coo()),
         }
     }
 
@@ -89,6 +138,7 @@ impl TensorData {
         match self {
             TensorData::Dense(t) => t.clone(),
             TensorData::Sparse(t) => t.to_dense(),
+            TensorData::Csf(t) => t.to_dense(),
         }
     }
 }
@@ -98,36 +148,42 @@ impl Tensor3 for TensorData {
         match self {
             TensorData::Dense(t) => t.dims(),
             TensorData::Sparse(t) => t.dims(),
+            TensorData::Csf(t) => t.dims(),
         }
     }
     fn norm(&self) -> f64 {
         match self {
             TensorData::Dense(t) => t.norm(),
             TensorData::Sparse(t) => t.norm(),
+            TensorData::Csf(t) => t.norm(),
         }
     }
     fn nnz(&self) -> usize {
         match self {
             TensorData::Dense(t) => t.nnz(),
             TensorData::Sparse(t) => t.nnz(),
+            TensorData::Csf(t) => t.nnz(),
         }
     }
     fn mttkrp(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix {
         match self {
             TensorData::Dense(t) => t.mttkrp(mode, a, b, c),
             TensorData::Sparse(t) => t.mttkrp(mode, a, b, c),
+            TensorData::Csf(t) => t.mttkrp(mode, a, b, c),
         }
     }
     fn mode_sum_squares(&self, mode: usize) -> Vec<f64> {
         match self {
             TensorData::Dense(t) => t.mode_sum_squares(mode),
             TensorData::Sparse(t) => t.mode_sum_squares(mode),
+            TensorData::Csf(t) => t.mode_sum_squares(mode),
         }
     }
     fn inner_with_kruskal(&self, lambda: &[f64], a: &Matrix, b: &Matrix, c: &Matrix) -> f64 {
         match self {
             TensorData::Dense(t) => t.inner_with_kruskal(lambda, a, b, c),
             TensorData::Sparse(t) => t.inner_with_kruskal(lambda, a, b, c),
+            TensorData::Csf(t) => t.inner_with_kruskal(lambda, a, b, c),
         }
     }
 }
@@ -177,6 +233,44 @@ mod tests {
         let ipd = td.inner_with_kruskal(&lam, &a, &b, &c);
         let ips = ts.inner_with_kruskal(&lam, &a, &b, &c);
         assert!((ipd - ips).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csf_dispatch_promotion_and_mixed_append() {
+        let mut rng = Rng::new(3);
+        let coo = CooTensor::rand(6, 5, 4, 0.5, &mut rng);
+        let td: TensorData = coo.clone().into();
+        let tc: TensorData = CsfTensor::from_coo(coo).into();
+        assert!(tc.is_sparse() && tc.is_csf());
+        assert_eq!(td.dims(), tc.dims());
+        assert!((td.norm() - tc.norm()).abs() < 1e-12);
+        let a = Matrix::rand_gaussian(6, 2, &mut rng);
+        let b = Matrix::rand_gaussian(5, 2, &mut rng);
+        let c = Matrix::rand_gaussian(4, 2, &mut rng);
+        for mode in 0..3 {
+            let diff = td
+                .mttkrp(mode, &a, &b, &c)
+                .max_abs_diff(&tc.mttkrp(mode, &a, &b, &c));
+            assert!(diff < 1e-10, "mode {mode}: {diff}");
+        }
+        // Extraction from CSF yields COO (samples are summary-sized).
+        let sub = tc.extract(&[0, 2], &[1, 3], &[0, 1, 2]);
+        assert!(sub.is_sparse() && !sub.is_csf());
+        // CSF accumulators accept COO and dense batches.
+        let mut grown = tc.clone();
+        grown.append_mode3(&td.extract(&[0, 1, 2, 3, 4, 5], &[0, 1, 2, 3, 4], &[0, 1]));
+        assert!(grown.is_csf());
+        assert_eq!(grown.dims(), (6, 5, 6));
+        grown.append_mode3(&TensorData::Dense(DenseTensor::zeros(6, 5, 1)));
+        assert_eq!(grown.dims(), (6, 5, 7));
+        // Promotion: below the nnz bar stays COO, above becomes CSF.
+        let small: TensorData = CooTensor::rand(5, 5, 5, 0.2, &mut rng).into();
+        assert!(!small.promoted().is_csf());
+        let big: TensorData = CooTensor::rand(40, 40, 40, 0.5, &mut rng).into();
+        assert!(big.nnz() >= CSF_PROMOTION_NNZ, "nnz {}", big.nnz());
+        let promoted = big.clone().promoted();
+        assert!(promoted.is_csf());
+        assert!((promoted.norm() - big.norm()).abs() < 1e-9);
     }
 
     #[test]

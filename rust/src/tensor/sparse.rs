@@ -259,7 +259,9 @@ impl CooTensor {
     }
 }
 
-fn inverse_map(dim: usize, idx: &[usize]) -> Vec<Option<u32>> {
+/// Old-index → new-position map for extraction (shared with the CSF
+/// backend's fiber-tree walk).
+pub(crate) fn inverse_map(dim: usize, idx: &[usize]) -> Vec<Option<u32>> {
     let mut inv = vec![None; dim];
     for (new, &old) in idx.iter().enumerate() {
         inv[old] = Some(new as u32);

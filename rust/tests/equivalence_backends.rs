@@ -1,0 +1,168 @@
+//! Backend-equivalence suite: dense, COO and CSF must agree on every
+//! `Tensor3` operation — the contract that makes automatic COO→CSF
+//! promotion (and the `TensorData` dispatch generally) safe. Tolerances are
+//! 1e-10 absolute on matrix entries (the backends sum in different orders).
+
+use sambaten::linalg::Matrix;
+use sambaten::tensor::{CooTensor, CsfTensor, DenseTensor, Tensor3, TensorData};
+use sambaten::util::Rng;
+
+/// Assert all three backends agree on every trait operation at rank `r`.
+fn assert_backends_agree(coo: &CooTensor, r: usize, seed: u64, what: &str) {
+    let dense = coo.to_dense();
+    let csf = CsfTensor::from_coo(coo.clone());
+    let (ni, nj, nk) = dense.dims();
+    assert_eq!(coo.dims(), (ni, nj, nk), "{what}: coo dims");
+    assert_eq!(csf.dims(), (ni, nj, nk), "{what}: csf dims");
+    assert_eq!(csf.nnz(), coo.nnz(), "{what}: nnz");
+    assert!((csf.norm() - dense.norm()).abs() < 1e-10, "{what}: norm");
+    assert!((coo.norm() - dense.norm()).abs() < 1e-10, "{what}: norm coo");
+    let mut rng = Rng::new(seed);
+    let a = Matrix::rand_gaussian(ni, r, &mut rng);
+    let b = Matrix::rand_gaussian(nj, r, &mut rng);
+    let c = Matrix::rand_gaussian(nk, r, &mut rng);
+    for mode in 0..3 {
+        let md = dense.mttkrp(mode, &a, &b, &c);
+        let ms = coo.mttkrp(mode, &a, &b, &c);
+        let mc = csf.mttkrp(mode, &a, &b, &c);
+        assert!(
+            ms.max_abs_diff(&md) < 1e-10,
+            "{what}: coo vs dense mttkrp mode {mode}"
+        );
+        assert!(
+            mc.max_abs_diff(&md) < 1e-10,
+            "{what}: csf vs dense mttkrp mode {mode}"
+        );
+        let sd = dense.mode_sum_squares(mode);
+        let ss = coo.mode_sum_squares(mode);
+        let sc = csf.mode_sum_squares(mode);
+        for i in 0..sd.len() {
+            assert!((ss[i] - sd[i]).abs() < 1e-10, "{what}: coo msq mode {mode}");
+            assert!((sc[i] - sd[i]).abs() < 1e-10, "{what}: csf msq mode {mode}");
+        }
+    }
+    let lam: Vec<f64> = (0..r).map(|_| 0.25 + rng.uniform()).collect();
+    let id = dense.inner_with_kruskal(&lam, &a, &b, &c);
+    let is_ = coo.inner_with_kruskal(&lam, &a, &b, &c);
+    let ic = csf.inner_with_kruskal(&lam, &a, &b, &c);
+    assert!((is_ - id).abs() < 1e-9, "{what}: coo inner {is_} vs {id}");
+    assert!((ic - id).abs() < 1e-9, "{what}: csf inner {ic} vs {id}");
+}
+
+#[test]
+fn random_tensors_agree_across_backends() {
+    let mut rng = Rng::new(1);
+    for (case, &(ni, nj, nk, density, r)) in [
+        (8usize, 7usize, 6usize, 0.3f64, 3usize),
+        (12, 5, 9, 0.1, 2),
+        (4, 4, 4, 0.9, 4),
+        (20, 3, 11, 0.05, 1),
+        (10, 10, 10, 0.2, 7), // runtime-rank (non-monomorphised) kernels
+    ]
+    .iter()
+    .enumerate()
+    {
+        let coo = CooTensor::rand(ni, nj, nk, density, &mut rng);
+        assert_backends_agree(&coo, r, 100 + case as u64, &format!("case {case}"));
+    }
+}
+
+#[test]
+fn empty_tensor_agrees() {
+    let coo = CooTensor::new(5, 6, 7);
+    assert_backends_agree(&coo, 2, 7, "empty");
+}
+
+#[test]
+fn empty_slices_agree() {
+    // Slices k=0, k=2 and k=4 carry no entries; row i=3 carries none either.
+    let mut coo = CooTensor::new(5, 4, 5);
+    coo.push(0, 0, 1, 2.0);
+    coo.push(4, 3, 1, -1.5);
+    coo.push(2, 1, 3, 0.75);
+    assert_backends_agree(&coo, 3, 8, "empty-slices");
+}
+
+#[test]
+fn single_fiber_agrees() {
+    // All entries share (i, j) — one fiber in the mode-1 tree, degenerate
+    // single-entry fibers in the others.
+    let mut coo = CooTensor::new(6, 6, 8);
+    for k in 0..8 {
+        coo.push(2, 4, k, (k as f64) - 3.5);
+    }
+    assert_backends_agree(&coo, 2, 9, "single-fiber");
+}
+
+#[test]
+fn single_entry_agrees() {
+    let mut coo = CooTensor::new(3, 1, 9);
+    coo.push(2, 0, 8, 4.25);
+    assert_backends_agree(&coo, 2, 10, "single-entry");
+}
+
+#[test]
+fn duplicate_pushes_agree_after_coalesce() {
+    // CSF coalesces on build; COO must be coalesced to match nnz, and the
+    // *values* must agree either way.
+    let mut coo = CooTensor::new(4, 4, 4);
+    coo.push(1, 2, 3, 1.0);
+    coo.push(1, 2, 3, 2.0);
+    coo.push(0, 0, 0, -1.0);
+    let mut coalesced = coo.clone();
+    coalesced.coalesce();
+    let csf = CsfTensor::from_coo(coo);
+    assert_eq!(csf.nnz(), coalesced.nnz());
+    assert_eq!(csf.to_dense().data(), coalesced.to_dense().data());
+    assert_backends_agree(&coalesced, 2, 11, "coalesced-duplicates");
+}
+
+#[test]
+fn extraction_agrees_across_backends() {
+    let mut rng = Rng::new(2);
+    let coo = CooTensor::rand(9, 8, 7, 0.35, &mut rng);
+    let csf = CsfTensor::from_coo(coo.clone());
+    let dense = coo.to_dense();
+    let is = vec![8, 0, 3];
+    let js = vec![2, 5];
+    let ks = vec![6, 1, 4];
+    let dd = dense.extract(&is, &js, &ks);
+    let ds = coo.extract(&is, &js, &ks).to_dense();
+    let dc = csf.extract(&is, &js, &ks).to_dense();
+    assert_eq!(ds.dims(), dd.dims());
+    assert_eq!(dc.dims(), dd.dims());
+    for i in 0..3 {
+        for j in 0..2 {
+            for k in 0..3 {
+                assert_eq!(ds.get(i, j, k), dd.get(i, j, k), "coo ({i},{j},{k})");
+                assert_eq!(dc.get(i, j, k), dd.get(i, j, k), "csf ({i},{j},{k})");
+            }
+        }
+    }
+}
+
+#[test]
+fn tensordata_csf_roundtrip_through_append() {
+    // Growing a CSF TensorData by sparse and dense batches matches the COO
+    // accumulator grown the same way.
+    let mut rng = Rng::new(3);
+    let base = CooTensor::rand(6, 5, 4, 0.4, &mut rng);
+    let sparse_batch = CooTensor::rand(6, 5, 2, 0.4, &mut rng);
+    let dense_batch = DenseTensor::rand(6, 5, 1, &mut rng);
+    let mut via_csf: TensorData = CsfTensor::from_coo(base.clone()).into();
+    let mut via_coo: TensorData = base.into();
+    for b in [
+        TensorData::Sparse(sparse_batch),
+        TensorData::Dense(dense_batch),
+    ] {
+        via_csf.append_mode3(&b);
+        via_coo.append_mode3(&b);
+    }
+    assert!(via_csf.is_csf());
+    assert_eq!(via_csf.dims(), (6, 5, 7));
+    assert_eq!(via_csf.dims(), via_coo.dims());
+    let (d1, d2) = (via_csf.to_dense(), via_coo.to_dense());
+    for (x, y) in d1.data().iter().zip(d2.data()) {
+        assert!((x - y).abs() < 1e-12);
+    }
+}

@@ -7,7 +7,7 @@ use sambaten::datagen::{RealDatasetSim, SyntheticSpec};
 use sambaten::io::{load_model, read_tns, save_model, write_tns};
 use sambaten::metrics::{relative_error, relative_fitness};
 use sambaten::streaming::{StreamPump, TensorReplay};
-use sambaten::tensor::{CooTensor, Tensor3, TensorData};
+use sambaten::tensor::{CooTensor, CsfTensor, Tensor3, TensorData};
 
 fn tmp(name: &str) -> std::path::PathBuf {
     std::env::temp_dir().join(format!("sambaten_it_{}_{}", std::process::id(), name))
@@ -107,6 +107,50 @@ fn methods_agree_on_easy_stream() {
     assert!(rf < 3.0, "relative fitness {rf}");
     assert!(relative_error(&full, samba.model()) < 0.2);
     assert!(relative_error(&full, &online.model()) < 0.2);
+}
+
+/// Regression pin: end-to-end engine fitness relative to the CP_ALS
+/// recompute baseline stays inside a tolerance band, for BOTH sparse
+/// backends. The COO and CSF runs see numerically identical streams (CSF
+/// only reorders summation), so a band breach on one backend but not the
+/// other localises a kernel bug; a breach on both flags an engine
+/// regression against the recompute reference.
+#[test]
+fn engine_fitness_band_vs_cpals_for_coo_and_csf() {
+    let spec = SyntheticSpec::sparse(16, 16, 20, 2, 0.6, 0.02, 77);
+    let (existing, batches, _) = spec.generate_stream(0.3, 4);
+    let (full, _) = spec.generate();
+    let TensorData::Sparse(existing_coo) = &existing else { unreachable!() };
+    // Shared recompute baseline.
+    let mut cpals = CpAlsFull::init(&existing, 2, 10).unwrap();
+    for b in &batches {
+        IncrementalDecomposer::ingest(&mut cpals, b).unwrap();
+    }
+    let as_csf = |t: &TensorData| -> TensorData {
+        let TensorData::Sparse(s) = t else { unreachable!() };
+        TensorData::Csf(CsfTensor::from_coo(s.clone()))
+    };
+    for promote in [false, true] {
+        let existing_v = if promote {
+            TensorData::Csf(CsfTensor::from_coo(existing_coo.clone()))
+        } else {
+            existing.clone()
+        };
+        let mut samba =
+            SamBaTen::init(&existing_v, SamBaTenConfig::new(2, 2, 4, 9)).unwrap();
+        for b in &batches {
+            let bv = if promote { as_csf(b) } else { b.clone() };
+            samba.ingest(&bv).unwrap();
+        }
+        assert_eq!(samba.model().factors[2].rows(), 20, "promote={promote}");
+        let rf = relative_fitness(&full, samba.model(), &cpals.model());
+        assert!(
+            rf.is_finite() && rf > 0.0 && rf < 4.0,
+            "promote={promote}: relative fitness {rf} outside band"
+        );
+        let re = relative_error(&full, samba.model());
+        assert!(re < 0.8, "promote={promote}: relative error {re}");
+    }
 }
 
 /// Real-sim stream: every dataset generator feeds the engine without error.
