@@ -12,7 +12,9 @@ use sambaten::metrics::{fms, relative_error};
 use sambaten::tensor::TensorData;
 use sambaten::util::benchkit::{bench, report};
 
-fn stream(dim: usize, density: f64, batch: usize, seed: u64) -> (TensorData, Vec<TensorData>, TensorData, sambaten::cp::CpModel) {
+type StreamParts = (TensorData, Vec<TensorData>, TensorData, sambaten::cp::CpModel);
+
+fn stream(dim: usize, density: f64, batch: usize, seed: u64) -> StreamParts {
     let spec = SyntheticSpec::cube(dim, 4, density, 0.05, seed);
     let (existing, batches, truth) = spec.generate_stream(0.1, batch);
     let (full, _) = spec.generate();

@@ -113,8 +113,10 @@ impl RunConfig {
     /// Build the engine configuration (solver attached by the caller, which
     /// knows whether a PJRT service is running).
     pub fn to_engine_config(&self) -> SamBaTenConfig {
-        let mut cfg = SamBaTenConfig::new(self.rank, self.sampling_factor, self.repetitions, self.seed);
-        cfg.als = AlsOptions { max_iters: self.als_max_iters, tol: self.als_tol, ..Default::default() };
+        let mut cfg =
+            SamBaTenConfig::new(self.rank, self.sampling_factor, self.repetitions, self.seed);
+        cfg.als =
+            AlsOptions { max_iters: self.als_max_iters, tol: self.als_tol, ..Default::default() };
         cfg.refine_c = self.refine_c;
         cfg.match_policy = if self.match_policy == "greedy" {
             MatchPolicy::Greedy
@@ -178,7 +180,12 @@ als_tol = 1e-6
 
     #[test]
     fn engine_config_mapping() {
-        let cfg = RunConfig { rank: 3, repetitions: 5, match_policy: "greedy".into(), ..Default::default() };
+        let cfg = RunConfig {
+            rank: 3,
+            repetitions: 5,
+            match_policy: "greedy".into(),
+            ..Default::default()
+        };
         let ec = cfg.to_engine_config();
         assert_eq!(ec.rank, 3);
         assert_eq!(ec.repetitions, 5);

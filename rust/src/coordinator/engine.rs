@@ -288,14 +288,18 @@ impl SamBaTen {
         }
         // 6. Merge into the global model (single synchronisation point).
         let t0 = std::time::Instant::now();
-        super::update::merge_updates_with(&mut self.model, &samples, &updates, k_new, self.cfg.blend);
+        let blend = self.cfg.blend;
+        super::update::merge_updates_with(&mut self.model, &samples, &updates, k_new, blend);
         // 6b. Optional stabilisation: overwrite the appended C rows with the
         // closed-form LS solution against the batch (A, B fixed).
         if self.cfg.refine_c {
             self.refine_new_c_rows(x_new, k_old, k_new)?;
         }
-        // 7. Grow the accumulated tensor (COO accumulators promote to CSF
-        // once past the nnz bar; CSF accumulators rebuild their fiber trees).
+        // 7. Grow the accumulated tensor. COO accumulators promote to CSF
+        // once past the nnz bar (one-way — see `TensorData::maybe_promote`);
+        // CSF accumulators merge the batch into their fiber trees
+        // incrementally — only the batch is sorted, the history pays at
+        // most a linear copy, never an `O(nnz log nnz)` re-sort.
         self.x.append_mode3(x_new);
         self.x.maybe_promote();
         let phase_merge_s = t0.elapsed().as_secs_f64();

@@ -239,7 +239,8 @@ mod tests {
             truth.factors[2].clone(),
         ];
         let (_, warm) = cp_als_from(&xd, warm_factors, &opts).unwrap();
-        assert!(warm.iterations <= cold.iterations, "warm {} cold {}", warm.iterations, cold.iterations);
+        let (wi, ci) = (warm.iterations, cold.iterations);
+        assert!(wi <= ci, "warm {wi} cold {ci}");
     }
 
     #[test]

@@ -193,11 +193,13 @@ pub fn fig7(ctx: &EvalContext) -> Result<()> {
         let without = run_qc(&existing, &batches, &full, &truth, &base, false)?;
         let improvement = (without.rel_err - with.rel_err) / without.rel_err.max(1e-12);
         println!(
-            "  dim {dim:>4}: time w/ {:.2}s  w/o {:.2}s  | rel_err w/ {:.3} w/o {:.3}  (fitness improvement {:+.1}%)",
+            "  dim {dim:>4}: time w/ {:.2}s  w/o {:.2}s  | rel_err w/ {:.3} w/o {:.3}  \
+             (fitness improvement {:+.1}%)",
             with.seconds, without.seconds, with.rel_err, without.rel_err, improvement * 100.0
         );
         for (variant, o) in [("with", &with), ("without", &without)] {
-            csv.row(&[dim.to_string(), variant.into(), num(o.seconds), num(o.rel_err), num(o.fms)])?;
+            let row = [dim.to_string(), variant.into(), num(o.seconds), num(o.rel_err), num(o.fms)];
+            csv.row(&row)?;
         }
     }
     csv.flush()

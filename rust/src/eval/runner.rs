@@ -134,9 +134,8 @@ pub fn run_stream(
     for kind in ordered {
         let built: Result<Box<dyn IncrementalDecomposer>> = (|| {
             Ok(match kind {
-                MethodKind::CpAls => {
-                    Box::new(CpAlsFull::init(&w.existing, w.rank, 11)?) as Box<dyn IncrementalDecomposer>
-                }
+                MethodKind::CpAls => Box::new(CpAlsFull::init(&w.existing, w.rank, 11)?)
+                    as Box<dyn IncrementalDecomposer>,
                 MethodKind::OnlineCp => Box::new(OnlineCp::init(&w.existing, w.rank, 12)?),
                 MethodKind::Sdt => Box::new(Sdt::init(&w.existing, w.rank, 13)?),
                 MethodKind::Rlst => Box::new(Rlst::init(&w.existing, w.rank, 14)?),

@@ -8,6 +8,15 @@ use crate::datagen::SyntheticSpec;
 use crate::io::csv::{num, CsvWriter};
 use anyhow::Result;
 
+/// `N/A`-aware 3-decimal formatter for table cells.
+fn fmt3(x: f64) -> String {
+    if x.is_nan() {
+        "N/A".into()
+    } else {
+        format!("{x:.3}")
+    }
+}
+
 /// One scaled grid row (paper Table II, shrunk).
 #[derive(Clone, Debug)]
 pub struct GridRow {
@@ -178,7 +187,8 @@ pub fn fig1(ctx: &EvalContext) -> Result<()> {
         .iter()
         .rev()
         .find(|(_, iters)| {
-            iters.iter().flatten().filter(|o| o.completed).count() == iters.len() * MethodKind::ALL.len()
+            let done = iters.iter().flatten().filter(|o| o.completed).count();
+            done == iters.len() * MethodKind::ALL.len()
         })
         .or_else(|| data.last())
         .expect("non-empty grid");
@@ -203,7 +213,7 @@ pub fn fig1(ctx: &EvalContext) -> Result<()> {
             .collect();
         let (ms, _) = crate::metrics::mean_std(&secs);
         let (me, _) = crate::metrics::mean_std(&errs);
-        println!("  {:>9}: {:>8} s   rel_err {}", m.name(), if ms.is_nan() { "N/A".into() } else { format!("{ms:.3}") }, if me.is_nan() { "N/A".into() } else { format!("{me:.3}") });
+        println!("  {:>9}: {:>8} s   rel_err {}", m.name(), fmt3(ms), fmt3(me));
         csv.row(&[m.name().into(), num(ms), num(me)])?;
     }
     csv.flush()
@@ -216,7 +226,8 @@ pub fn fig5(ctx: &EvalContext) -> Result<()> {
         &["variant", "dim", "method", "seconds"],
     )?;
     for (variant, dense) in [("dense", true), ("sparse", false)] {
-        let data = error_table(ctx, dense, &format!("Figure 5 ({variant}) source data"), "fig5_tmp.csv")?;
+        let title = format!("Figure 5 ({variant}) source data");
+        let data = error_table(ctx, dense, &title, "fig5_tmp.csv")?;
         println!("\nFigure 5 ({variant}): CPU time (s) vs dimension");
         for (row, iters) in &data {
             for m in MethodKind::ALL {
@@ -227,7 +238,7 @@ pub fn fig5(ctx: &EvalContext) -> Result<()> {
                     .map(|o| o.seconds)
                     .collect();
                 let (ms, _) = crate::metrics::mean_std(&secs);
-                println!("  dim {:>4} {:>9}: {}", row.dim, m.name(), if ms.is_nan() { "N/A".into() } else { format!("{ms:.3}") });
+                println!("  dim {:>4} {:>9}: {}", row.dim, m.name(), fmt3(ms));
                 csv.row(&[variant.into(), row.dim.to_string(), m.name().into(), num(ms)])?;
             }
         }
@@ -243,10 +254,13 @@ pub fn fig6(ctx: &EvalContext) -> Result<()> {
         &["variant", "dim", "method", "relative_fitness"],
     )?;
     for (variant, dense) in [("dense", true), ("sparse", false)] {
-        let data = error_table(ctx, dense, &format!("Figure 6 ({variant}) source data"), "fig6_tmp.csv")?;
+        let title = format!("Figure 6 ({variant}) source data");
+        let data = error_table(ctx, dense, &title, "fig6_tmp.csv")?;
         println!("\nFigure 6 ({variant}): relative fitness vs CP_ALS");
         for (row, iters) in &data {
-            for m in [MethodKind::OnlineCp, MethodKind::Sdt, MethodKind::Rlst, MethodKind::SamBaTen] {
+            let methods =
+                [MethodKind::OnlineCp, MethodKind::Sdt, MethodKind::Rlst, MethodKind::SamBaTen];
+            for m in methods {
                 let fit: Vec<f64> = iters
                     .iter()
                     .flatten()
@@ -254,7 +268,7 @@ pub fn fig6(ctx: &EvalContext) -> Result<()> {
                     .filter_map(|o| o.fitness_vs_cpals)
                     .collect();
                 let (mf, _) = crate::metrics::mean_std(&fit);
-                println!("  dim {:>4} {:>9}: {}", row.dim, m.name(), if mf.is_nan() { "N/A".into() } else { format!("{mf:.3}") });
+                println!("  dim {:>4} {:>9}: {}", row.dim, m.name(), fmt3(mf));
                 csv.row(&[variant.into(), row.dim.to_string(), m.name().into(), num(mf)])?;
             }
         }

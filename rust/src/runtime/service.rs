@@ -141,8 +141,10 @@ fn run_job(
         let proto = xla::HloModuleProto::from_text_file(&entry.file)
             .with_context(|| format!("loading {}", entry.file.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        compiled[entry_idx] =
-            Some(client.compile(&comp).with_context(|| format!("compiling {}", entry.file.display()))?);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", entry.file.display()))?;
+        compiled[entry_idx] = Some(exe);
     }
     let exe = compiled[entry_idx].as_ref().unwrap();
     let (pi, pj, pk, pr) = (entry.i, entry.j, entry.k, entry.r);

@@ -46,6 +46,11 @@ impl Sample {
 /// case they are drawn uniformly from the remainder (the paper's sampler
 /// never needs indices with zero energy, but rank-deficient batches can
 /// leave a mode with fewer positive weights than the sample size).
+///
+/// The returned indices are **sorted ascending** — that is the contract
+/// [`Sample`] documents for `is`/`js`/`ks_old` and what the CSF `extract`
+/// tree-walk and anchor gathering rely on. `select_nth_unstable_by` yields
+/// partition order, so the final sort here is load-bearing, not cosmetic.
 pub fn weighted_sample_without_replacement(
     weights: &[f64],
     k: usize,
@@ -78,6 +83,7 @@ pub fn weighted_sample_without_replacement(
         let extra = rng.sample_indices(zeros.len(), need);
         out.extend(extra.into_iter().map(|e| zeros[e]));
     }
+    out.sort_unstable();
     out
 }
 
@@ -131,14 +137,12 @@ pub fn draw_sample(
     let xc = x_old.mode_sum_squares(2);
     let s = cfg.factor;
     let s3 = cfg.factor_mode3.unwrap_or(s);
-    let mut is = weighted_sample_without_replacement(&xa, SamplerConfig::count(ni, s), rng);
-    let mut js = weighted_sample_without_replacement(&xb, SamplerConfig::count(nj, s), rng);
-    let mut ks = weighted_sample_without_replacement(&xc, SamplerConfig::count(nk_old, s3), rng);
-    // Sorted index sets keep extraction and scatter cache-friendly and make
-    // the anchor rows deterministic given the set.
-    is.sort_unstable();
-    js.sort_unstable();
-    ks.sort_unstable();
+    // The sampler returns each index set sorted ascending (its documented
+    // contract) — extraction and scatter stay cache-friendly and the anchor
+    // rows are deterministic given the set.
+    let is = weighted_sample_without_replacement(&xa, SamplerConfig::count(ni, s), rng);
+    let js = weighted_sample_without_replacement(&xb, SamplerConfig::count(nj, s), rng);
+    let ks = weighted_sample_without_replacement(&xc, SamplerConfig::count(nk_old, s3), rng);
     // Extract old part and new part, then concatenate along mode 3.
     let mut sub = x_old.extract(&is, &js, &ks);
     let all_new_k: Vec<usize> = (0..nk_new).collect();
@@ -195,6 +199,17 @@ mod tests {
         // Forced case: k exceeds positive-weight count.
         let s = weighted_sample_without_replacement(&w, 3, &mut rng);
         assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn weighted_sample_returns_sorted_ascending() {
+        let mut rng = Rng::new(9);
+        let w: Vec<f64> = (0..200).map(|i| ((i * 37) % 19 + 1) as f64).collect();
+        for k in [1, 5, 50, 200] {
+            let s = weighted_sample_without_replacement(&w, k, &mut rng);
+            assert_eq!(s.len(), k);
+            assert!(s.windows(2).all(|p| p[0] < p[1]), "k={k}: {s:?}");
+        }
     }
 
     #[test]

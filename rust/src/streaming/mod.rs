@@ -162,8 +162,10 @@ impl Batcher {
             }
             TensorData::Dense(t)
         };
-        // Large sparse batches promote to the CSF backend before the engine
-        // runs its per-repetition MoI/extraction passes over them.
+        // Large sparse batches promote to the CSF backend: the engine runs
+        // its per-repetition MoI/extraction passes over them, and a CSF
+        // batch merges tree-to-tree into a CSF accumulator (the incremental
+        // append never round-trips either side through COO).
         Some(out.promoted())
     }
 }

@@ -5,8 +5,9 @@
 //! that is shared per *fiber* and per *root slice*: re-loading factor rows,
 //! scattering into the output, and (in the parallel path) allocating,
 //! zeroing and reducing full-size per-thread accumulators. CSF stores one
-//! mode-rooted fiber tree per mode (built once, by sorting), so MTTKRP for
-//! mode `n` walks orientation `n`:
+//! mode-rooted fiber tree per mode (built by sorting, then grown
+//! incrementally on mode-3 append), so MTTKRP for mode `n` walks
+//! orientation `n`:
 //!
 //! ```text
 //! root r (output row)            — accumulated in registers, stored once
@@ -22,9 +23,11 @@
 //!
 //! Memory: each orientation owns its values in its own order (3× the COO
 //! value payload). That trade is deliberate — the accumulated tensor is
-//! read by `3 · iters · reps` MTTKRPs per ingest and rebuilt once.
+//! read by `3 · iters · reps` MTTKRPs per ingest, while mode-3 growth only
+//! pays a sort of the *batch* plus a linear splice (see
+//! [`CsfTensor::append_mode3`]); the history is never re-sorted.
 
-use super::sparse::inverse_map;
+use super::sparse::{inverse_map, mode3_shift};
 use super::{mode_dim, CooTensor, DenseTensor, Tensor3};
 use crate::linalg::Matrix;
 use crate::util::par::workers_for;
@@ -57,6 +60,173 @@ impl Orientation {
         let e1 = self.entry_ptr[self.fiber_ptr[f + 1] as usize] as usize;
         e0..e1
     }
+
+    /// Copy with every leaf index rebased by `shift` — turns a batch's
+    /// mode-0/1 tree (leaf level = `k`) into the run a mode-3 append
+    /// merges. The caller guarantees the shift cannot wrap (`mode3_shift`).
+    fn with_shifted_leaves(&self, shift: u32) -> Orientation {
+        let mut o = self.clone();
+        for l in &mut o.leaves {
+            *l += shift;
+        }
+        o
+    }
+
+    /// Copy with every root index rebased by `shift` — the adopt-the-batch
+    /// fallback of [`append_orientation_tail`] when the accumulator is
+    /// empty (the non-empty path rebases during the extend instead).
+    fn with_shifted_roots(&self, shift: u32) -> Orientation {
+        let mut o = self.clone();
+        for r in &mut o.roots {
+            *r += shift;
+        }
+        o
+    }
+}
+
+/// Bulk-copy fibers `g0..g1` of `src` (mids, entry pointers, leaves,
+/// values) onto the tail of `out`, rebasing `entry_ptr`. Entries of a
+/// contiguous fiber span are themselves contiguous, so this is four slice
+/// copies plus one pointer rebase — the unit the merge gallops over.
+fn copy_fiber_span(out: &mut Orientation, src: &Orientation, g0: usize, g1: usize) {
+    if g0 == g1 {
+        return;
+    }
+    let e0 = src.entry_ptr[g0] as usize;
+    let e1 = src.entry_ptr[g1] as usize;
+    out.mids.extend_from_slice(&src.mids[g0..g1]);
+    let leaf_base = out.leaves.len() as u32;
+    out.entry_ptr.extend(src.entry_ptr[g0..g1].iter().map(|&e| e - e0 as u32 + leaf_base));
+    out.leaves.extend_from_slice(&src.leaves[e0..e1]);
+    out.vals.extend_from_slice(&src.vals[e0..e1]);
+}
+
+/// Bulk-copy roots `f0..f1` of `src` with their whole subtrees onto the
+/// tail of `out`.
+fn copy_root_span(out: &mut Orientation, src: &Orientation, f0: usize, f1: usize) {
+    if f0 == f1 {
+        return;
+    }
+    let g0 = src.fiber_ptr[f0] as usize;
+    let g1 = src.fiber_ptr[f1] as usize;
+    out.roots.extend_from_slice(&src.roots[f0..f1]);
+    let fiber_base = out.mids.len() as u32;
+    out.fiber_ptr.extend(src.fiber_ptr[f0..f1].iter().map(|&g| g - g0 as u32 + fiber_base));
+    copy_fiber_span(out, src, g0, g1);
+}
+
+/// Merge one root present in both trees: fibers interleave in mid order;
+/// a fiber present in both emits the old entries then the batch's —
+/// correct because a mode-3 append guarantees every batch leaf in a shared
+/// fiber sorts strictly after every old one (`k` indices are rebased past
+/// the existing extent).
+fn merge_shared_root(
+    out: &mut Orientation,
+    old: &Orientation,
+    fa: usize,
+    new: &Orientation,
+    fb: usize,
+) {
+    out.roots.push(old.roots[fa]);
+    out.fiber_ptr.push(out.mids.len() as u32);
+    let (mut ga, a1) = (old.fiber_ptr[fa] as usize, old.fiber_ptr[fa + 1] as usize);
+    let (mut gb, b1) = (new.fiber_ptr[fb] as usize, new.fiber_ptr[fb + 1] as usize);
+    while ga < a1 && gb < b1 {
+        match old.mids[ga].cmp(&new.mids[gb]) {
+            std::cmp::Ordering::Less => {
+                let run = ga + old.mids[ga..a1].partition_point(|&m| m < new.mids[gb]);
+                copy_fiber_span(out, old, ga, run);
+                ga = run;
+            }
+            std::cmp::Ordering::Greater => {
+                let run = gb + new.mids[gb..b1].partition_point(|&m| m < old.mids[ga]);
+                copy_fiber_span(out, new, gb, run);
+                gb = run;
+            }
+            std::cmp::Ordering::Equal => {
+                out.mids.push(old.mids[ga]);
+                out.entry_ptr.push(out.leaves.len() as u32);
+                let ea = old.entry_ptr[ga] as usize..old.entry_ptr[ga + 1] as usize;
+                let eb = new.entry_ptr[gb] as usize..new.entry_ptr[gb + 1] as usize;
+                out.leaves.extend_from_slice(&old.leaves[ea.clone()]);
+                out.vals.extend_from_slice(&old.vals[ea]);
+                out.leaves.extend_from_slice(&new.leaves[eb.clone()]);
+                out.vals.extend_from_slice(&new.vals[eb]);
+                ga += 1;
+                gb += 1;
+            }
+        }
+    }
+    copy_fiber_span(out, old, ga, a1);
+    copy_fiber_span(out, new, gb, b1);
+}
+
+/// Merge a batch tree into an existing one under the mode-3-append
+/// precondition (shared fibers: batch leaves strictly after old leaves).
+/// A gallop/merge pass over the sorted root lists: untouched spans —
+/// the overwhelming majority when `nnz_batch ≪ nnz` — bulk-copy whole
+/// subtree ranges, so the cost is linear memmove plus work proportional
+/// to the batch, never a re-sort of the accumulated entries.
+fn merge_orientation(old: &Orientation, new: &Orientation) -> Orientation {
+    let mut out = Orientation {
+        roots: Vec::with_capacity(old.roots.len() + new.roots.len()),
+        fiber_ptr: Vec::with_capacity(old.roots.len() + new.roots.len() + 1),
+        mids: Vec::with_capacity(old.mids.len() + new.mids.len()),
+        entry_ptr: Vec::with_capacity(old.mids.len() + new.mids.len() + 1),
+        leaves: Vec::with_capacity(old.leaves.len() + new.leaves.len()),
+        vals: Vec::with_capacity(old.vals.len() + new.vals.len()),
+    };
+    let (mut a, mut b) = (0, 0);
+    while a < old.roots.len() && b < new.roots.len() {
+        match old.roots[a].cmp(&new.roots[b]) {
+            std::cmp::Ordering::Less => {
+                let run = a + old.roots[a..].partition_point(|&r| r < new.roots[b]);
+                copy_root_span(&mut out, old, a, run);
+                a = run;
+            }
+            std::cmp::Ordering::Greater => {
+                let run = b + new.roots[b..].partition_point(|&r| r < old.roots[a]);
+                copy_root_span(&mut out, new, b, run);
+                b = run;
+            }
+            std::cmp::Ordering::Equal => {
+                merge_shared_root(&mut out, old, a, new, b);
+                a += 1;
+                b += 1;
+            }
+        }
+    }
+    copy_root_span(&mut out, old, a, old.roots.len());
+    copy_root_span(&mut out, new, b, new.roots.len());
+    out.fiber_ptr.push(out.mids.len() as u32);
+    out.entry_ptr.push(out.leaves.len() as u32);
+    out
+}
+
+/// Append a tree whose roots (after adding `root_shift`) all sort strictly
+/// after `old`'s — the mode-3 tree under a mode-3 append. Pure
+/// concatenation with pointer rebasing: `O(nnz_batch)`, the existing
+/// arrays are extended in place and the batch payload is copied exactly
+/// once (roots rebase during the extend — no shifted intermediate clone).
+fn append_orientation_tail(old: &mut Orientation, new: &Orientation, root_shift: u32) {
+    if new.roots.is_empty() {
+        return;
+    }
+    if old.roots.is_empty() {
+        *old = new.with_shifted_roots(root_shift);
+        return;
+    }
+    debug_assert!(*old.roots.last().unwrap() < new.roots[0] + root_shift);
+    old.fiber_ptr.pop();
+    old.entry_ptr.pop();
+    let fiber_base = old.mids.len() as u32;
+    let leaf_base = old.leaves.len() as u32;
+    old.roots.extend(new.roots.iter().map(|&r| r + root_shift));
+    old.fiber_ptr.extend(new.fiber_ptr.iter().map(|&g| g + fiber_base));
+    old.mids.extend_from_slice(&new.mids);
+    old.entry_ptr.extend(new.entry_ptr.iter().map(|&e| e + leaf_base));
+    old.leaves.extend_from_slice(&new.leaves);
+    old.vals.extend_from_slice(&new.vals);
 }
 
 /// Build the orientation whose root level is `mode`. `(root, mid, leaf)`
@@ -102,8 +272,9 @@ fn build_orientation(ii: &[u32], jj: &[u32], kk: &[u32], vv: &[f64], mode: usize
 }
 
 /// CSF sparse tensor: three mode-rooted fiber trees over one coalesced
-/// entry set. Immutable once built (mode-3 growth rebuilds — see
-/// [`CsfTensor::append_mode3`]).
+/// entry set. Mode-3 growth is incremental — new slices concatenate onto
+/// the mode-3 tree and merge into the other two without re-sorting the
+/// accumulated entries (see [`CsfTensor::append_mode3`]).
 #[derive(Clone)]
 pub struct CsfTensor {
     dims: (usize, usize, usize),
@@ -238,14 +409,98 @@ impl CsfTensor {
         out
     }
 
-    /// Append `other` along mode 3. The fiber trees are positional indexes,
-    /// so growth is a rebuild: `O(nnz log nnz)` — about one MTTKRP sweep of
-    /// work, paid once per ingest vs the `3 · iters · reps` MTTKRPs that
-    /// read the result.
+    /// Append `other` along mode 3 **incrementally**. Every batch `k`
+    /// index is rebased past the existing mode-3 extent, so:
+    ///
+    /// * the mode-3-rooted tree gains its new roots by concatenation
+    ///   (`O(nnz_batch)`, in place);
+    /// * the mode-1/mode-2 trees merge the batch's sorted runs into the
+    ///   existing fiber runs with a gallop/merge pass — new fibers splice
+    ///   in, shared fibers extend at their tail, untouched subtree spans
+    ///   bulk-copy.
+    ///
+    /// Only the batch is ever *sorted* (`O(nnz_batch log nnz_batch)`);
+    /// trees 0/1 still pay an `O(nnz)` linear copy into fresh arrays
+    /// (sequential memmove — bandwidth-bound, far cheaper than the old
+    /// rebuild's `O(nnz log nnz)` re-sort of the whole history through
+    /// COO; see ROADMAP "In-place mode-1/2 merge" for eliminating the
+    /// copy too).
     pub fn append_mode3(&mut self, other: &CooTensor) {
-        let mut coo = self.to_coo();
-        coo.append_mode3(other);
-        *self = CsfTensor::from_coo(coo);
+        let (oi, oj, k_new) = other.dims();
+        assert_eq!(
+            (self.dims.0, self.dims.1),
+            (oi, oj),
+            "mode-3 append requires matching modes 1-2"
+        );
+        let shift = mode3_shift(self.dims.2, k_new);
+        // Batch-local coalesce matches the old global rebuild exactly: the
+        // rebased `k` indices are disjoint from every existing entry, so
+        // duplicates can only occur within the batch.
+        let mut batch = other.clone();
+        batch.coalesce();
+        if batch.nnz() == 0 {
+            self.dims.2 += k_new;
+            return;
+        }
+        let (ii, jj, kk, vv) = batch.raw_parts();
+        let kk: Vec<u32> = kk.iter().map(|&k| k + shift).collect();
+        let b0 = build_orientation(ii, jj, &kk, vv, 0);
+        let b1 = build_orientation(ii, jj, &kk, vv, 1);
+        let b2 = build_orientation(ii, jj, &kk, vv, 2);
+        let nnz = vv.len();
+        // `kk` is pre-shifted, so b2's roots need no further rebase.
+        self.merge_batch(b0, b1, &b2, 0, nnz, k_new);
+    }
+
+    /// [`CsfTensor::append_mode3`] for a CSF batch, without materializing
+    /// it as COO: each batch orientation is already the sorted run the
+    /// merge needs — only its `k` level (leaves of trees 0–1, roots of
+    /// tree 2) is rebased.
+    pub fn append_mode3_csf(&mut self, other: &CsfTensor) {
+        assert_eq!(
+            (self.dims.0, self.dims.1),
+            (other.dims.0, other.dims.1),
+            "mode-3 append requires matching modes 1-2"
+        );
+        let shift = mode3_shift(self.dims.2, other.dims.2);
+        if other.nnz == 0 {
+            self.dims.2 += other.dims.2;
+            return;
+        }
+        let b0 = other.orient[0].with_shifted_leaves(shift);
+        let b1 = other.orient[1].with_shifted_leaves(shift);
+        // The mode-3 tree needs no shifted copy: its roots rebase during
+        // the tail concatenation itself.
+        self.merge_batch(b0, b1, &other.orient[2], shift, other.nnz, other.dims.2);
+    }
+
+    /// Shared tail of the two append paths: merge per-orientation batch
+    /// runs (`b0`/`b1` leaf-rebased by the caller, `b2`'s roots rebased by
+    /// `b2_root_shift` during the concat), then grow the bookkeeping.
+    fn merge_batch(
+        &mut self,
+        b0: Orientation,
+        b1: Orientation,
+        b2: &Orientation,
+        b2_root_shift: u32,
+        nnz: usize,
+        k_new: usize,
+    ) {
+        // The fiber/entry pointer arrays are u32 (like the COO indices);
+        // `mode3_shift` bounds the slice count, this bounds the entry
+        // count — without it the `as u32` pointer rebases would wrap
+        // silently in release builds once nnz crosses 4B.
+        let total = self.nnz as u64 + nnz as u64;
+        assert!(
+            total <= u32::MAX as u64,
+            "mode-3 append would grow nnz to {total}, past the u32 pointer \
+             space of the CSF fiber trees"
+        );
+        self.orient[0] = merge_orientation(&self.orient[0], &b0);
+        self.orient[1] = merge_orientation(&self.orient[1], &b1);
+        append_orientation_tail(&mut self.orient[2], b2, b2_root_shift);
+        self.nnz += nnz;
+        self.dims.2 += k_new;
     }
 
     /// Split along mode 3 at `at` (COO out: splits are transient stream
@@ -589,6 +844,115 @@ mod tests {
         let want_head = coalesced.to_dense();
         assert_eq!(head.to_dense().data(), want_head.data());
         assert_eq!(tail.dims().2, 3);
+    }
+
+    /// Incremental append must be bit-identical to a rebuild from COO —
+    /// the shared checker probes entry order plus MTTKRP on all three
+    /// orientations.
+    fn assert_matches_rebuild(incremental: &CsfTensor, reference: &CooTensor, what: &str) {
+        crate::testing::assert_csf_matches_rebuild(incremental, reference, 3, 0xA11E, what);
+    }
+
+    #[test]
+    fn incremental_append_equals_rebuild_over_rounds() {
+        let mut rng = Rng::new(11);
+        let mut reference = CooTensor::rand(9, 8, 5, 0.3, &mut rng);
+        let mut csf = CsfTensor::from_coo(reference.clone());
+        for round in 0..5 {
+            let kb = 1 + round % 3;
+            let batch = CooTensor::rand(9, 8, kb, 0.3, &mut rng);
+            csf.append_mode3(&batch);
+            reference.append_mode3(&batch);
+            assert_matches_rebuild(&csf, &reference, &format!("round {round}"));
+        }
+    }
+
+    #[test]
+    fn incremental_append_csf_batch_equals_rebuild() {
+        let mut rng = Rng::new(12);
+        let mut reference = CooTensor::rand(7, 9, 6, 0.35, &mut rng);
+        let mut csf = CsfTensor::from_coo(reference.clone());
+        for round in 0..3 {
+            let batch = CooTensor::rand(7, 9, 2, 0.35, &mut rng);
+            csf.append_mode3_csf(&CsfTensor::from_coo(batch.clone()));
+            reference.append_mode3(&batch);
+            assert_matches_rebuild(&csf, &reference, &format!("csf-batch round {round}"));
+        }
+    }
+
+    #[test]
+    fn incremental_append_empty_and_into_empty() {
+        let mut rng = Rng::new(13);
+        // Empty batch (slices with no entries) still grows the extent.
+        let mut reference = CooTensor::rand(6, 6, 4, 0.4, &mut rng);
+        let mut csf = CsfTensor::from_coo(reference.clone());
+        let empty = CooTensor::new(6, 6, 3);
+        csf.append_mode3(&empty);
+        reference.append_mode3(&empty);
+        assert_matches_rebuild(&csf, &reference, "empty batch");
+        // Appending into an empty accumulator adopts the batch's trees.
+        let mut reference = CooTensor::new(6, 6, 0);
+        let mut csf = CsfTensor::from_coo(reference.clone());
+        let batch = CooTensor::rand(6, 6, 4, 0.4, &mut rng);
+        csf.append_mode3(&batch);
+        reference.append_mode3(&batch);
+        assert_matches_rebuild(&csf, &reference, "into empty");
+        let mut csf2 = CsfTensor::from_coo(CooTensor::new(6, 6, 0));
+        csf2.append_mode3_csf(&CsfTensor::from_coo(batch));
+        assert_eq!(csf2.to_dense().data(), csf.to_dense().data());
+    }
+
+    #[test]
+    fn incremental_append_uncoalesced_batch() {
+        // Duplicates and cancellations inside the batch coalesce exactly as
+        // the old global rebuild did.
+        let mut rng = Rng::new(14);
+        let mut reference = CooTensor::rand(5, 5, 3, 0.4, &mut rng);
+        let mut csf = CsfTensor::from_coo(reference.clone());
+        let mut batch = CooTensor::new(5, 5, 2);
+        batch.push(1, 2, 0, 2.0);
+        batch.push(1, 2, 0, 3.0); // duplicate: sums to 5.0
+        batch.push(4, 4, 1, 1.5);
+        batch.push(4, 4, 1, -1.5); // cancels: dropped
+        batch.push(0, 0, 1, -2.0);
+        csf.append_mode3(&batch);
+        reference.append_mode3(&batch);
+        reference.coalesce();
+        assert_matches_rebuild(&csf, &reference, "uncoalesced batch");
+        assert_eq!(csf.to_dense().get(1, 2, 3), 5.0);
+    }
+
+    #[test]
+    fn incremental_append_new_rows_cols_and_single_fiber() {
+        // Batch confined to (i, j) pairs the accumulator has never seen —
+        // splices brand-new roots and fibers into trees 0/1 — plus a
+        // single-fiber batch extending one existing fiber.
+        let mut reference = CooTensor::new(8, 8, 2);
+        reference.push(0, 0, 0, 1.0);
+        reference.push(0, 0, 1, 2.0);
+        reference.push(3, 3, 0, -1.0);
+        let mut csf = CsfTensor::from_coo(reference.clone());
+        let mut fresh = CooTensor::new(8, 8, 1);
+        fresh.push(7, 1, 0, 4.0); // new i=7 root, new fiber
+        fresh.push(5, 6, 0, -3.0); // new i=5 and j=6
+        fresh.push(1, 0, 0, 0.5); // new i=1, existing j=0
+        csf.append_mode3(&fresh);
+        reference.append_mode3(&fresh);
+        assert_matches_rebuild(&csf, &reference, "new rows/cols");
+        let mut single = CooTensor::new(8, 8, 3);
+        for k in 0..3 {
+            single.push(0, 0, k, (k + 1) as f64);
+        }
+        csf.append_mode3(&single);
+        reference.append_mode3(&single);
+        assert_matches_rebuild(&csf, &reference, "single fiber");
+    }
+
+    #[test]
+    #[should_panic(expected = "matching modes 1-2")]
+    fn incremental_append_rejects_mode_mismatch() {
+        let mut csf = CsfTensor::from_coo(CooTensor::new(4, 4, 2));
+        csf.append_mode3(&CooTensor::new(4, 5, 1));
     }
 
     #[test]

@@ -75,7 +75,9 @@ impl From<CsfTensor> for TensorData {
 /// the fiber-tree build (a sort per mode) costs more than the MTTKRP sweeps
 /// it accelerates; above it the sweeps dominate every ingest. Promotion
 /// happens at engine init, after each mode-3 append, and when the streaming
-/// [`crate::streaming::Batcher`] emits a large batch.
+/// [`crate::streaming::Batcher`] emits a large batch. The bar is one-way:
+/// crossing it promotes once, and falling back below never demotes (see
+/// [`TensorData::maybe_promote`]).
 pub const CSF_PROMOTION_NNZ: usize = 16_384;
 
 impl TensorData {
@@ -96,12 +98,22 @@ impl TensorData {
     }
 
     /// In-place [`TensorData::promoted`].
+    ///
+    /// The policy is deliberately **one-way** (hysteresis): a COO tensor
+    /// promotes the moment its nnz reaches [`CSF_PROMOTION_NNZ`], and a CSF
+    /// tensor never demotes — even if later splits or sparse windows drop
+    /// its nnz back below the bar, it keeps its fiber trees (mode-3 appends
+    /// grow them incrementally). A stream oscillating around the threshold
+    /// therefore pays the tree build exactly once instead of thrashing
+    /// between rebuilds and demotions.
     pub fn maybe_promote(&mut self) {
         if let TensorData::Sparse(s) = self {
             if s.nnz() >= CSF_PROMOTION_NNZ {
                 *self = TensorData::Csf(CsfTensor::from_coo(std::mem::take(s)));
             }
         }
+        // All other variants (Dense, and Csf regardless of nnz) pass
+        // through untouched — demotion is never performed.
     }
 
     /// Extract the sub-tensor at the given (sorted or unsorted) index sets.
@@ -115,7 +127,10 @@ impl TensorData {
         }
     }
 
-    /// Concatenate `other` after `self` along mode 3.
+    /// Concatenate `other` after `self` along mode 3. No arm ever
+    /// materializes the *accumulator* in another format — conversions are
+    /// confined to the (batch-sized) right-hand side, and a CSF batch
+    /// merges tree-to-tree into a CSF accumulator with no COO round trip.
     pub fn append_mode3(&mut self, other: &TensorData) {
         match (self, other) {
             (TensorData::Dense(a), TensorData::Dense(b)) => a.append_mode3(b),
@@ -130,7 +145,7 @@ impl TensorData {
             (TensorData::Csf(a), TensorData::Dense(b)) => {
                 a.append_mode3(&CooTensor::from_dense(b, 0.0))
             }
-            (TensorData::Csf(a), TensorData::Csf(b)) => a.append_mode3(&b.to_coo()),
+            (TensorData::Csf(a), TensorData::Csf(b)) => a.append_mode3_csf(b),
         }
     }
 
@@ -271,6 +286,41 @@ mod tests {
         let promoted = big.clone().promoted();
         assert!(promoted.is_csf());
         assert!((promoted.norm() - big.norm()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn promotion_is_one_way_hysteresis() {
+        // A CSF tensor far below the promotion bar stays CSF through every
+        // promotion checkpoint: no demotion, so an oscillating stream never
+        // re-pays tree builds.
+        let mut rng = Rng::new(5);
+        let small = CooTensor::rand(6, 6, 6, 0.2, &mut rng);
+        assert!(small.nnz() < CSF_PROMOTION_NNZ);
+        let mut t = TensorData::Csf(CsfTensor::from_coo(small));
+        t.maybe_promote();
+        assert!(t.is_csf(), "maybe_promote must not demote");
+        assert!(t.clone().promoted().is_csf());
+        // Growth keeps the variant too: appends merge into the trees
+        // in place rather than dropping back to COO.
+        let batch: TensorData = CooTensor::rand(6, 6, 2, 0.2, &mut rng).into();
+        t.append_mode3(&batch);
+        t.maybe_promote();
+        assert!(t.is_csf());
+        assert_eq!(t.dims(), (6, 6, 8));
+    }
+
+    #[test]
+    fn csf_csf_append_merges_without_coo_roundtrip() {
+        let mut rng = Rng::new(6);
+        let base = CooTensor::rand(7, 6, 5, 0.4, &mut rng);
+        let batch = CooTensor::rand(7, 6, 3, 0.4, &mut rng);
+        let mut via_csf = TensorData::Csf(CsfTensor::from_coo(base.clone()));
+        via_csf.append_mode3(&TensorData::Csf(CsfTensor::from_coo(batch.clone())));
+        assert!(via_csf.is_csf());
+        let mut want = base;
+        want.append_mode3(&batch);
+        assert_eq!(via_csf.dims(), want.dims());
+        assert_eq!(via_csf.to_dense().data(), want.to_dense().data());
     }
 
     #[test]

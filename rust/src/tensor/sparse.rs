@@ -70,8 +70,10 @@ impl CooTensor {
         let n = self.vv.len();
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_unstable_by_key(|&e| (self.kk[e], self.jj[e], self.ii[e]));
-        let (mut ii, mut jj, mut kk, mut vv) =
-            (Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n));
+        let mut ii = Vec::with_capacity(n);
+        let mut jj = Vec::with_capacity(n);
+        let mut kk = Vec::with_capacity(n);
+        let mut vv = Vec::with_capacity(n);
         for &e in &order {
             let key = (self.ii[e], self.jj[e], self.kk[e]);
             if let (Some(&li), Some(&lj), Some(&lk)) = (ii.last(), jj.last(), kk.last()) {
@@ -98,6 +100,13 @@ impl CooTensor {
         (0..self.vv.len()).map(move |e| {
             (self.ii[e] as usize, self.jj[e] as usize, self.kk[e] as usize, self.vv[e])
         })
+    }
+
+    /// Borrowed struct-of-arrays view `(ii, jj, kk, vv)`. This is how the
+    /// CSF backend reads a batch to build its per-mode sorted runs without
+    /// an entry-by-entry `iter`/`push` round trip.
+    pub(crate) fn raw_parts(&self) -> (&[u32], &[u32], &[u32], &[f64]) {
+        (&self.ii, &self.jj, &self.kk, &self.vv)
     }
 
     pub fn values(&self) -> &[f64] {
@@ -178,12 +187,16 @@ impl CooTensor {
         (a, b)
     }
 
-    /// Append `other` along mode 3 (its `k` indices are shifted by our `K`).
+    /// Append `other` along mode 3 (its `k` indices are shifted by our `K`;
+    /// the shift is checked against the `u32` index space — see
+    /// [`mode3_shift`]).
     pub fn append_mode3(&mut self, other: &CooTensor) {
         assert_eq!((self.dims.0, self.dims.1), (other.dims.0, other.dims.1));
-        let shift = self.dims.2 as u32;
+        let shift = mode3_shift(self.dims.2, other.dims.2);
         self.ii.extend_from_slice(&other.ii);
         self.jj.extend_from_slice(&other.jj);
+        // `k + shift < k_old + k_new ≤ u32::MAX` is guaranteed by
+        // `mode3_shift`, so the per-entry addition cannot wrap.
         self.kk.extend(other.kk.iter().map(|&k| k + shift));
         self.vv.extend_from_slice(&other.vv);
         self.dims.2 += other.dims.2;
@@ -257,6 +270,19 @@ impl CooTensor {
             }
         }
     }
+}
+
+/// Checked mode-3 k-shift for appends: growing a `k_old`-deep tensor by
+/// `k_new` slices must keep every shifted index inside the `u32` space the
+/// sparse backends store (shared by the COO and CSF append paths).
+pub(crate) fn mode3_shift(k_old: usize, k_new: usize) -> u32 {
+    let end = k_old as u64 + k_new as u64;
+    assert!(
+        end <= u32::MAX as u64,
+        "mode-3 append would grow the tensor to {end} slices, past the u32 \
+         index space of the sparse backends ({k_old} existing + {k_new} new)"
+    );
+    k_old as u32
 }
 
 /// Old-index → new-position map for extraction (shared with the CSF
@@ -449,6 +475,16 @@ mod tests {
         let d1 = a.to_dense();
         let d2 = t.to_dense();
         assert_eq!(d1.data(), d2.data());
+    }
+
+    #[test]
+    #[should_panic(expected = "past the u32 index space")]
+    fn append_mode3_rejects_u32_overflow() {
+        // Dims alone don't allocate, so the overflow guard is testable at
+        // the real boundary: u32::MAX existing slices + 1 must refuse.
+        let mut t = CooTensor::new(1, 1, u32::MAX as usize);
+        let b = CooTensor::new(1, 1, 1);
+        t.append_mode3(&b);
     }
 
     #[test]

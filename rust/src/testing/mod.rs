@@ -7,7 +7,63 @@
 //! generators that draw sizes from small-biased distributions (small cases
 //! are tried densely, so the failing case reported is usually near-minimal).
 
+use crate::linalg::Matrix;
+use crate::tensor::{CooTensor, CsfTensor, Tensor3};
 use crate::util::Rng;
+
+/// Check an incrementally grown CSF tensor is exactly what a rebuild from
+/// `reference` produces: same dims and nnz, identical entry stream, and
+/// MTTKRP agreement (≤1e-12) on all three orientations — probing the
+/// merged mode-1/2 trees and the concatenated mode-3 tree. `Result`-based
+/// so the property harness (which needs `Err`, not panics) shares the
+/// exact checker with the panicking [`assert_csf_matches_rebuild`].
+pub fn csf_matches_rebuild(
+    grown: &CsfTensor,
+    reference: &CooTensor,
+    rank: usize,
+    seed: u64,
+) -> Result<(), String> {
+    let rebuilt = CsfTensor::from_coo(reference.clone());
+    if grown.dims() != rebuilt.dims() {
+        return Err(format!("dims {:?} vs rebuilt {:?}", grown.dims(), rebuilt.dims()));
+    }
+    if grown.nnz() != rebuilt.nnz() {
+        return Err(format!("nnz {} vs rebuilt {}", grown.nnz(), rebuilt.nnz()));
+    }
+    let got: Vec<_> = grown.iter().collect();
+    let want: Vec<_> = rebuilt.iter().collect();
+    if got != want {
+        return Err("entry stream diverged from rebuild".into());
+    }
+    let (ni, nj, nk) = rebuilt.dims();
+    let mut rng = Rng::new(seed);
+    let a = Matrix::rand_gaussian(ni, rank, &mut rng);
+    let b = Matrix::rand_gaussian(nj, rank, &mut rng);
+    let c = Matrix::rand_gaussian(nk, rank, &mut rng);
+    for mode in 0..3 {
+        let mg = grown.mttkrp(mode, &a, &b, &c);
+        let mr = rebuilt.mttkrp(mode, &a, &b, &c);
+        let diff = mg.max_abs_diff(&mr);
+        if diff > 1e-12 {
+            return Err(format!("mttkrp mode {mode} diff {diff}"));
+        }
+    }
+    Ok(())
+}
+
+/// Panicking wrapper over [`csf_matches_rebuild`] for unit/integration
+/// tests (`what` labels the failing case).
+pub fn assert_csf_matches_rebuild(
+    grown: &CsfTensor,
+    reference: &CooTensor,
+    rank: usize,
+    seed: u64,
+    what: &str,
+) {
+    if let Err(msg) = csf_matches_rebuild(grown, reference, rank, seed) {
+        panic!("{what}: {msg}");
+    }
+}
 
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]

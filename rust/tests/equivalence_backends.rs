@@ -141,6 +141,66 @@ fn extraction_agrees_across_backends() {
     }
 }
 
+/// Incremental CSF append must equal a from-scratch rebuild *exactly* —
+/// delegate to the shared checker (same dims/nnz, identical entry stream,
+/// MTTKRP agreement on all three orientations).
+fn assert_append_equals_rebuild(grown: &CsfTensor, reference: &CooTensor, what: &str) {
+    sambaten::testing::assert_csf_matches_rebuild(grown, reference, 4, 0xC5F, what);
+}
+
+#[test]
+fn incremental_append_equals_rebuild_streamed() {
+    // A realistic ingest stream: COO batches, CSF batches, an empty batch,
+    // a single-fiber batch and one confined to brand-new (i, j) indices.
+    let mut rng = Rng::new(21);
+    let mut reference = CooTensor::rand(12, 10, 6, 0.25, &mut rng);
+    let mut grown = CsfTensor::from_coo(reference.clone());
+    // Round 1: plain COO batch.
+    let b1 = CooTensor::rand(12, 10, 3, 0.25, &mut rng);
+    grown.append_mode3(&b1);
+    reference.append_mode3(&b1);
+    assert_append_equals_rebuild(&grown, &reference, "coo batch");
+    // Round 2: CSF batch, merged tree-to-tree.
+    let b2 = CooTensor::rand(12, 10, 2, 0.3, &mut rng);
+    grown.append_mode3_csf(&CsfTensor::from_coo(b2.clone()));
+    reference.append_mode3(&b2);
+    assert_append_equals_rebuild(&grown, &reference, "csf batch");
+    // Round 3: empty batch — extent grows, entries don't.
+    let b3 = CooTensor::new(12, 10, 2);
+    grown.append_mode3(&b3);
+    reference.append_mode3(&b3);
+    assert_append_equals_rebuild(&grown, &reference, "empty batch");
+    // Round 4: single-fiber batch (every entry shares one (i, j)).
+    let mut b4 = CooTensor::new(12, 10, 2);
+    for k in 0..2 {
+        b4.push(3, 7, k, 1.0 + k as f64);
+    }
+    grown.append_mode3(&b4);
+    reference.append_mode3(&b4);
+    assert_append_equals_rebuild(&grown, &reference, "single-fiber batch");
+    // Round 5: batch on rows/columns the accumulator has never touched.
+    let mut b5 = CooTensor::new(12, 10, 1);
+    b5.push(11, 9, 0, -2.5);
+    b5.push(0, 9, 0, 4.0);
+    b5.push(11, 0, 0, 0.125);
+    grown.append_mode3(&b5);
+    reference.append_mode3(&b5);
+    assert_append_equals_rebuild(&grown, &reference, "new-index batch");
+}
+
+#[test]
+fn incremental_append_from_empty_accumulator() {
+    let mut rng = Rng::new(22);
+    let mut reference = CooTensor::new(8, 8, 0);
+    let mut grown = CsfTensor::from_coo(reference.clone());
+    for round in 0..3 {
+        let batch = CooTensor::rand(8, 8, 2, 0.3, &mut rng);
+        grown.append_mode3(&batch);
+        reference.append_mode3(&batch);
+        assert_append_equals_rebuild(&grown, &reference, &format!("round {round}"));
+    }
+}
+
 #[test]
 fn tensordata_csf_roundtrip_through_append() {
     // Growing a CSF TensorData by sparse and dense batches matches the COO

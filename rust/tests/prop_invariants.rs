@@ -10,7 +10,7 @@ use sambaten::matching::{match_components, MatchPolicy};
 use sambaten::metrics::fms;
 use sambaten::sampling::{draw_sample, weighted_sample_without_replacement, SamplerConfig};
 use sambaten::tensor::{CooTensor, CsfTensor, DenseTensor, Tensor3, TensorData};
-use sambaten::testing::{check, close, small_biased, PropConfig};
+use sambaten::testing::{check, close, csf_matches_rebuild, small_biased, PropConfig};
 use sambaten::util::Rng;
 
 const CFG: PropConfig = PropConfig { cases: 40, seed: 0xBEEF };
@@ -46,10 +46,67 @@ fn prop_weighted_sampling_soundness() {
         if k <= positive {
             let zero_picked = picked.iter().filter(|&&i| weights[i] == 0.0).count();
             if zero_picked > 0 {
-                return Err(format!("picked {zero_picked} zero-weight indices with {positive} positive available"));
+                return Err(format!(
+                    "picked {zero_picked} zero-weight indices with {positive} positive available"
+                ));
             }
         }
         Ok(())
+    });
+}
+
+/// Sampler ordering contract: returned index sets are strictly increasing
+/// (sorted and distinct) — `Sample.is/js/ks_old` document it and the CSF
+/// `extract` tree-walk depends on ordered sets, including when the
+/// zero-weight uniform top-up engages.
+#[test]
+fn prop_weighted_sampling_sorted_ascending() {
+    check("weighted-sampling-sorted", CFG, |rng, _| {
+        let n = small_biased(rng, 1, 80);
+        let mut weights: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        // Zero out a random subset so some cases must top up uniformly.
+        for _ in 0..rng.below(n + 1) {
+            let at = rng.below(n);
+            weights[at] = 0.0;
+        }
+        let k = 1 + rng.below(n);
+        let picked = weighted_sample_without_replacement(&weights, k, rng);
+        if picked.len() != k {
+            return Err(format!("asked {k}, got {}", picked.len()));
+        }
+        if picked.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(format!("not strictly increasing: {picked:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Incremental CSF mode-3 append ≡ rebuild from COO: identical entry
+/// order, dims, nnz and MTTKRP agreement on all three modes, across
+/// random multi-round streams (including empty and width-zero batches).
+#[test]
+fn prop_csf_incremental_append_equals_rebuild() {
+    check("csf-append-equals-rebuild", CFG, |rng, _| {
+        let ni = small_biased(rng, 1, 12);
+        let nj = small_biased(rng, 1, 12);
+        let nk = rng.below(8);
+        let mut reference = CooTensor::rand(ni, nj, nk, 0.4, rng);
+        let mut grown = CsfTensor::from_coo(reference.clone());
+        for _ in 0..3 {
+            let kb = rng.below(4); // 0 included: width-zero batches append too
+            let density = if rng.below(4) == 0 { 0.0 } else { 0.5 };
+            let batch = CooTensor::rand(ni, nj, kb, density, rng);
+            if rng.below(2) == 0 {
+                grown.append_mode3(&batch);
+            } else {
+                grown.append_mode3_csf(&CsfTensor::from_coo(batch.clone()));
+            }
+            reference.append_mode3(&batch);
+        }
+        // Same checker the unit/integration suites assert with — shared
+        // via `testing::csf_matches_rebuild` so the contract can't drift.
+        let rank = 1 + rng.below(4);
+        csf_matches_rebuild(&grown, &reference, rank, rng.next_u64())
     });
 }
 
@@ -202,7 +259,8 @@ fn prop_matching_inverts_permutation() {
         ];
         for f in sample.iter_mut() {
             for t in 0..r {
-                let scale = (0.1 + rng.uniform() * 3.0) * if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+                let sign = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+                let scale = (0.1 + rng.uniform() * 3.0) * sign;
                 f.scale_col(t, scale);
             }
         }
