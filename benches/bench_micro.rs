@@ -3,6 +3,8 @@
 //!   * dense MTTKRP (all three modes)
 //!   * sparse MTTKRP (serial vs parallel nnz chunks)
 //!   * CSF vs COO MTTKRP at paper-shaped scale (1K³, 1e-4 density)
+//!   * ALS sweep throughput: COO vs CSF × fresh-alloc vs reused workspace,
+//!     with the workspace allocation counter (steady state must be 0)
 //!   * incremental CSF mode-3 append vs the rebuild-from-COO path
 //!   * weighted sampling without replacement
 //!   * component matching (congruence + Hungarian)
@@ -11,10 +13,13 @@
 //!
 //! Run: `cargo bench --bench bench_micro`
 
+use sambaten::cp::{
+    cp_als_from, cp_als_from_with, init_factors, AlsOptions, AlsWorkspace, InitMethod,
+};
 use sambaten::linalg::{hungarian_min, pinv, svd_jacobi, Matrix};
 use sambaten::matching::{match_components, MatchPolicy};
 use sambaten::sampling::weighted_sample_without_replacement;
-use sambaten::tensor::{CooTensor, CsfTensor, DenseTensor, Tensor3};
+use sambaten::tensor::{CooTensor, CsfTensor, DenseTensor, Tensor3, TensorData};
 use sambaten::util::benchkit::{bench, report};
 use sambaten::util::Rng;
 
@@ -86,6 +91,68 @@ fn main() {
             coo_x.median_s / csf_x.median_s.max(1e-12),
             "x (coo/csf)",
         );
+    }
+
+    // ALS sweep throughput at the acceptance shape (1K×1K×1K, 1e-4, rank
+    // 16): time per sweep, COO vs CSF backend, fresh-alloc (a new workspace
+    // per decomposition — what a cold caller pays) vs a reused workspace
+    // (the engine's per-repetition pool — steady state). The workspace's
+    // allocation counter across the timed reused-path runs must be ZERO:
+    // every MTTKRP output, Gram product, normal matrix and Cholesky solve
+    // lands in a buffer grown once. (The COO backend still allocates
+    // *internal* per-thread partials on its parallel path — an accepted
+    // cost of overlapping output rows; the CSF path writes caller-owned
+    // row spans and allocates nothing.)
+    {
+        const SWEEPS: usize = 4;
+        let mut srng = Rng::new(11);
+        let coo = CooTensor::rand(1000, 1000, 1000, 1e-4, &mut srng);
+        println!("sweep tensor nnz = {}", coo.nnz());
+        let csf = CsfTensor::from_coo(coo.clone());
+        let td_coo: TensorData = coo.into();
+        let td_csf: TensorData = csf.into();
+        // tol = 0 never triggers early convergence → exactly SWEEPS sweeps.
+        let opts = AlsOptions { max_iters: SWEEPS, tol: 0.0, seed: 12, ..Default::default() };
+        let factors = init_factors(&td_coo, 16, InitMethod::Random, &mut srng);
+        let clone3 = |f: &[Matrix; 3]| [f[0].clone(), f[1].clone(), f[2].clone()];
+        for (name, td) in [("coo", &td_coo), ("csf", &td_csf)] {
+            let fresh = bench(&format!("micro/als_sweep_1k_r16_{name}/fresh_alloc"), 1, 5, || {
+                std::hint::black_box(cp_als_from(td, clone3(&factors), &opts).unwrap());
+            });
+            let mut ws = AlsWorkspace::new();
+            // Warm the workspace to its steady-state footprint.
+            cp_als_from_with(td, clone3(&factors), &opts, &mut ws).unwrap();
+            let warmed = ws.allocations();
+            let reused = bench(&format!("micro/als_sweep_1k_r16_{name}/workspace"), 1, 5, || {
+                let got = cp_als_from_with(td, clone3(&factors), &opts, &mut ws).unwrap();
+                std::hint::black_box(got);
+            });
+            let steady_allocs = ws.allocations() - warmed;
+            report(
+                &format!("micro/als_sweep_1k_r16_{name}/per_sweep_fresh"),
+                fresh.median_s / SWEEPS as f64,
+                "s/sweep",
+            );
+            report(
+                &format!("micro/als_sweep_1k_r16_{name}/per_sweep_workspace"),
+                reused.median_s / SWEEPS as f64,
+                "s/sweep",
+            );
+            report(
+                &format!("micro/als_sweep_1k_r16_{name}/speedup"),
+                fresh.median_s / reused.median_s.max(1e-12),
+                "x (fresh/workspace)",
+            );
+            report(
+                &format!("micro/als_sweep_1k_r16_{name}/steady_state_allocs"),
+                steady_allocs as f64,
+                "Matrix allocs (must be 0)",
+            );
+            assert_eq!(
+                steady_allocs, 0,
+                "steady-state sweeps allocated {steady_allocs} workspace buffers"
+            );
+        }
     }
 
     // Incremental CSF mode-3 append vs the old rebuild: ingest cost must

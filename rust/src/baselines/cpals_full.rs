@@ -3,7 +3,7 @@
 //! reference that motivates incremental methods in the first place.
 
 use super::IncrementalDecomposer;
-use crate::cp::{cp_als, AlsOptions, CpModel};
+use crate::cp::{cp_als_with, AlsOptions, AlsWorkspace, CpModel};
 use crate::tensor::TensorData;
 use anyhow::Result;
 
@@ -13,6 +13,10 @@ pub struct CpAlsFull {
     opts: AlsOptions,
     model: CpModel,
     batch_counter: u64,
+    /// Reused across every recompute: the workspace grows once to the
+    /// largest `(dims, rank)` seen and every later batch's sweeps run
+    /// allocation-free.
+    ws: AlsWorkspace,
 }
 
 impl CpAlsFull {
@@ -21,8 +25,9 @@ impl CpAlsFull {
     }
 
     pub fn init_with(x_old: &TensorData, rank: usize, opts: AlsOptions) -> Result<Self> {
-        let (model, _) = cp_als(x_old, rank, &opts)?;
-        Ok(CpAlsFull { x: x_old.clone(), rank, opts, model, batch_counter: 0 })
+        let mut ws = AlsWorkspace::new();
+        let (model, _) = cp_als_with(x_old, rank, &opts, &mut ws)?;
+        Ok(CpAlsFull { x: x_old.clone(), rank, opts, model, batch_counter: 0, ws })
     }
 }
 
@@ -40,7 +45,7 @@ impl IncrementalDecomposer for CpAlsFull {
             seed: self.opts.seed.wrapping_add(self.batch_counter),
             ..self.opts.clone()
         };
-        let (model, _) = cp_als(&self.x, self.rank, &opts)?;
+        let (model, _) = cp_als_with(&self.x, self.rank, &opts, &mut self.ws)?;
         self.model = model;
         Ok(())
     }

@@ -11,8 +11,10 @@
 //!   the tracked subspace onto the structured Khatri-Rao basis.
 
 use super::IncrementalDecomposer;
-use crate::cp::{cp_als, AlsOptions, CpModel};
-use crate::linalg::{pinv, qr_thin, solve_gram_system, svd_truncated, Matrix};
+use crate::cp::{cp_als_with, AlsOptions, AlsWorkspace, CpModel};
+use crate::linalg::{
+    pinv, qr_thin, solve_gram_system_into, svd_truncated, GramSolveScratch, Matrix,
+};
 use crate::tensor::{Tensor3, TensorData};
 use anyhow::Result;
 
@@ -30,6 +32,8 @@ pub struct Sdt {
     a: Matrix,
     b: Matrix,
     c: Matrix,
+    /// Cholesky scratch reused by every per-batch `recompute_c`.
+    solve_scratch: GramSolveScratch,
 }
 
 impl Sdt {
@@ -59,7 +63,7 @@ impl Sdt {
             (svd.u, svd.s, svd.v)
         };
         let opts = AlsOptions { seed, max_iters: 200, ..Default::default() };
-        let (model, _) = cp_als(x_old, rank, &opts)?;
+        let (model, _) = cp_als_with(x_old, rank, &opts, &mut AlsWorkspace::new())?;
         let mut sdt = Sdt {
             ni,
             nj,
@@ -71,6 +75,7 @@ impl Sdt {
             a: model.factors[0].clone(),
             b: model.factors[1].clone(),
             c: model.factors[2].clone(),
+            solve_scratch: GramSolveScratch::new(),
         };
         // Absorb λ into C.
         for t in 0..rank {
@@ -197,7 +202,9 @@ impl Sdt {
         }
         let m = us.matmul(&vt_kr); // K × R
         let g = self.a.gram().hadamard(&self.b.gram());
-        self.c = solve_gram_system(&g, &m)?;
+        // In-place: `c` is reshaped to the grown K and fully overwritten;
+        // the Cholesky scratch is reused across batches.
+        solve_gram_system_into(&g, &m, &mut self.solve_scratch, &mut self.c)?;
         Ok(())
     }
 }
@@ -254,6 +261,7 @@ mod tests {
             a: Matrix::zeros(5, 3),
             b: Matrix::zeros(6, 3),
             c: Matrix::zeros(8, 3),
+            solve_scratch: GramSolveScratch::new(),
         };
         sdt.svd_append_rows(&tail);
         let truth = svd_truncated(&full, 3);

@@ -5,14 +5,14 @@
 
 use super::solver::{InnerSolver, NativeAlsSolver};
 use super::update::{normalize_sample_model, project_sample, ProjectedUpdate};
-use crate::cp::{cp_als, AlsOptions, CpModel};
-use crate::corcondia::{getrank, GetRankOptions};
+use crate::corcondia::{getrank_with, GetRankOptions};
+use crate::cp::{cp_als, AlsOptions, AlsWorkspace, CpModel};
 use crate::matching::{match_components, MatchPolicy};
 use crate::sampling::{draw_sample, Sample, SamplerConfig};
 use crate::tensor::{Tensor3, TensorData};
 use crate::util::{parallel_map, Rng, Stopwatch};
 use anyhow::{Context, Result};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Configuration of the SamBaTen engine.
 #[derive(Clone)]
@@ -131,6 +131,12 @@ pub struct SamBaTen {
     rng: Rng,
     /// History of per-batch stats.
     history: Vec<BatchStats>,
+    /// One reusable ALS workspace per sampling repetition: repetition `i`
+    /// always locks slot `i` (its own slot — zero contention), so its
+    /// GETRANK trials and sample decomposition reuse the same buffers
+    /// across every sweep of every ingest. The Mutex exists only to hand
+    /// `&mut` access through the parallel-map closure.
+    ws_pool: Vec<Mutex<AlsWorkspace>>,
 }
 
 impl SamBaTen {
@@ -155,7 +161,9 @@ impl SamBaTen {
     pub fn from_model(x_old: TensorData, mut model: CpModel, cfg: SamBaTenConfig) -> Self {
         model.normalize();
         let rng = Rng::new(cfg.seed ^ 0x5A3B_A7E9);
-        SamBaTen { cfg, model, x: x_old.promoted(), rng, history: Vec::new() }
+        let ws_pool =
+            (0..cfg.repetitions.max(1)).map(|_| Mutex::new(AlsWorkspace::new())).collect();
+        SamBaTen { cfg, model, x: x_old.promoted(), rng, history: Vec::new(), ws_pool }
     }
 
     /// Current model (unit-norm columns, weights in λ).
@@ -216,12 +224,25 @@ impl SamBaTen {
             .zip(seeds)
             .map(|(rng, seed)| RepInput { rng, seed })
             .collect();
+        // Per-repetition workspace pool (normally sized at construction;
+        // re-grown defensively if the pool is ever shorter than `reps`).
+        while self.ws_pool.len() < reps {
+            self.ws_pool.push(Mutex::new(AlsWorkspace::new()));
+        }
         let cfg = &self.cfg;
         let x = &self.x;
         let model = &self.model;
+        let ws_pool = &self.ws_pool;
         type RepOut = (Sample, ProjectedUpdate, usize, f64, [f64; 3]);
-        let results: Vec<Result<RepOut>> = parallel_map(&inputs, |_, inp| {
+        let results: Vec<Result<RepOut>> = parallel_map(&inputs, |rep, inp| {
             let mut rng = inp.rng.clone();
+            // Repetition `rep` owns pool slot `rep` — uncontended lock. A
+            // poisoned slot (a past repetition panicked mid-solve) is
+            // recovered rather than propagated: the workspace holds only
+            // scratch buffers that every use fully overwrites, and the
+            // engine's failure contract is Result-based, so one panicking
+            // batch must not brick every later ingest.
+            let mut ws = ws_pool[rep].lock().unwrap_or_else(|e| e.into_inner());
             // 1. Sample.
             let t0 = std::time::Instant::now();
             let sample = draw_sample(x, x_new, sampler, &mut rng);
@@ -232,7 +253,7 @@ impl SamBaTen {
                 let mut gopts = cfg.getrank.clone();
                 gopts.max_rank = cfg.rank;
                 gopts.seed = inp.seed;
-                getrank(&sample.tensor, &gopts)?
+                getrank_with(&sample.tensor, &gopts, &mut ws)?
             } else {
                 cfg.rank
             };
@@ -242,7 +263,8 @@ impl SamBaTen {
                 .min(sample.ks_old.len() + sample.k_new)
                 .max(1);
             // 3. Decompose the summary.
-            let mut model_s = cfg.solver.decompose(&sample.tensor, rank, &cfg.als, inp.seed)?;
+            let mut model_s =
+                cfg.solver.decompose(&sample.tensor, rank, &cfg.als, inp.seed, &mut ws)?;
             normalize_sample_model(&mut model_s, sample.ks_old.len());
             let t_decompose = t0.elapsed().as_secs_f64();
             // 4. Match against the anchors (Lemma 1).

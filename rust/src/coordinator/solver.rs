@@ -7,15 +7,27 @@
 //! Matlab baselines). The engine takes the solver as a trait object so the
 //! two paths stay interchangeable and ablatable.
 
-use crate::cp::{cp_als, AlsOptions, CpModel};
+use crate::cp::{cp_als_with, AlsOptions, AlsWorkspace, CpModel};
 use crate::tensor::TensorData;
 use anyhow::Result;
 
 /// A CP decomposition engine for sample summaries.
 pub trait InnerSolver: Send + Sync {
     /// Decompose `x` at `rank`, seeding any randomness from `seed`.
-    fn decompose(&self, x: &TensorData, rank: usize, opts: &AlsOptions, seed: u64)
-        -> Result<CpModel>;
+    ///
+    /// `ws` is the caller-owned ALS scratch: the engine hands each parallel
+    /// repetition its own pooled workspace, reused across every sweep of
+    /// every ingest, so a native solve in steady state allocates no
+    /// `Matrix` buffers. Solvers that do not run native sweeps (PJRT) pass
+    /// it through to their fallback.
+    fn decompose(
+        &self,
+        x: &TensorData,
+        rank: usize,
+        opts: &AlsOptions,
+        seed: u64,
+        ws: &mut AlsWorkspace,
+    ) -> Result<CpModel>;
 
     /// Human-readable name for reports.
     fn name(&self) -> &'static str;
@@ -32,9 +44,10 @@ impl InnerSolver for NativeAlsSolver {
         rank: usize,
         opts: &AlsOptions,
         seed: u64,
+        ws: &mut AlsWorkspace,
     ) -> Result<CpModel> {
         let opts = AlsOptions { seed, ..opts.clone() };
-        Ok(cp_als(x, rank, &opts)?.0)
+        Ok(cp_als_with(x, rank, &opts, ws)?.0)
     }
 
     fn name(&self) -> &'static str {
@@ -59,18 +72,25 @@ mod tests {
         );
         let x: TensorData = truth.to_dense().into();
         let solver = NativeAlsSolver;
-        let model = solver.decompose(&x, 2, &AlsOptions::default(), 7).unwrap();
+        let mut ws = AlsWorkspace::new();
+        let model = solver.decompose(&x, 2, &AlsOptions::default(), 7, &mut ws).unwrap();
         assert!(model.fit(&x) > 0.999);
         assert_eq!(solver.name(), "native-als");
     }
 
     #[test]
-    fn solver_is_deterministic_per_seed() {
+    fn solver_is_deterministic_per_seed_and_workspace_reuse() {
         let mut rng = Rng::new(2);
         let x: TensorData = crate::tensor::DenseTensor::rand(5, 5, 5, &mut rng).into();
         let solver = NativeAlsSolver;
-        let a = solver.decompose(&x, 2, &AlsOptions::quick(), 3).unwrap();
-        let b = solver.decompose(&x, 2, &AlsOptions::quick(), 3).unwrap();
+        // One reused workspace and one fresh per call must agree exactly.
+        let mut ws = AlsWorkspace::new();
+        let a = solver.decompose(&x, 2, &AlsOptions::quick(), 3, &mut ws).unwrap();
+        let b = solver.decompose(&x, 2, &AlsOptions::quick(), 3, &mut ws).unwrap();
+        let c = solver
+            .decompose(&x, 2, &AlsOptions::quick(), 3, &mut AlsWorkspace::new())
+            .unwrap();
         assert!(a.factors[0].max_abs_diff(&b.factors[0]) < 1e-12);
+        assert_eq!(b.factors[0].max_abs_diff(&c.factors[0]), 0.0);
     }
 }

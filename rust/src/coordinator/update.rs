@@ -256,8 +256,9 @@ pub fn merge_updates_with(
         }
     }
     // --- entry updates (accumulate mean of contributions per entry):
-    // zero entries are always filled; non-zero entries blend.
-    let fill = |target: &mut Matrix, acc: &mut Matrix, count: &mut Matrix| {
+    // zero entries are always filled; non-zero entries blend. The
+    // accumulators are read-only here — only `target` is written.
+    let fill = |target: &mut Matrix, acc: &Matrix, count: &Matrix| {
         for i in 0..target.rows() {
             for q in 0..r {
                 if count[(i, q)] > 0.0 {
@@ -304,9 +305,9 @@ pub fn merge_updates_with(
             }
         }
     }
-    fill(&mut global.factors[0], &mut acc_a, &mut cnt_a);
-    fill(&mut global.factors[1], &mut acc_b, &mut cnt_b);
-    fill(&mut global.factors[2], &mut acc_c, &mut cnt_c);
+    fill(&mut global.factors[0], &acc_a, &cnt_a);
+    fill(&mut global.factors[1], &acc_b, &cnt_b);
+    fill(&mut global.factors[2], &acc_c, &cnt_c);
     // --- C_new: column-wise average across repetitions that matched q.
     let mut c_new = Matrix::zeros(k_new, r);
     for q in 0..r {

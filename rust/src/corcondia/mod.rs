@@ -13,7 +13,7 @@
 //! sub-tensors, which are bank-shaped and small, so the dense computation is
 //! cheap (see DESIGN.md §4).
 
-use crate::cp::{cp_als, AlsOptions, CpModel};
+use crate::cp::{cp_als_with, AlsOptions, AlsWorkspace, CpModel};
 use crate::linalg::pinv;
 use crate::tensor::{DenseTensor, Tensor3, TensorData};
 use anyhow::Result;
@@ -81,6 +81,17 @@ impl Default for GetRankOptions {
 /// GETRANK (Algorithm 2): estimate the number of CP components in `x` by
 /// scoring trial decompositions of rank `1..=max_rank` with CORCONDIA.
 pub fn getrank(x: &TensorData, opts: &GetRankOptions) -> Result<usize> {
+    getrank_with(x, opts, &mut AlsWorkspace::new())
+}
+
+/// [`getrank`] reusing a caller-owned [`AlsWorkspace`] across all
+/// `max_rank · iterations` trial decompositions — in the engine, the same
+/// per-repetition workspace the sample decomposition uses.
+pub fn getrank_with(
+    x: &TensorData,
+    opts: &GetRankOptions,
+    ws: &mut AlsWorkspace,
+) -> Result<usize> {
     let dense = x.to_dense();
     let (ni, nj, nk) = dense.dims();
     let cap = opts.max_rank.min(ni).min(nj).min(nk).max(1);
@@ -96,7 +107,7 @@ pub fn getrank(x: &TensorData, opts: &GetRankOptions) -> Result<usize> {
                     .wrapping_add(j as u64),
                 ..opts.als.clone()
             };
-            let (model, _) = cp_als(x, rank, &als)?;
+            let (model, _) = cp_als_with(x, rank, &als, ws)?;
             let score = corcondia(&dense, &model);
             best_score = best_score.max(score);
         }
@@ -110,6 +121,7 @@ pub fn getrank(x: &TensorData, opts: &GetRankOptions) -> Result<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cp::cp_als;
     use crate::linalg::Matrix;
     use crate::util::Rng;
 

@@ -9,8 +9,8 @@
 //! path must use (a dense AOT kernel cannot exploit sparsity — same
 //! asymmetry as the paper's Matlab baselines).
 
-use super::{init_factors, CpModel, InitMethod};
-use crate::linalg::{solve_gram_system, Matrix};
+use super::{init_factors, AlsWorkspace, CpModel, InitMethod};
+use crate::linalg::{solve_gram_system_into, Matrix};
 use crate::tensor::{Tensor3, TensorData};
 use crate::util::Rng;
 use anyhow::Result;
@@ -61,9 +61,21 @@ pub struct AlsReport {
 /// `G_n = ⊛_{m≠n} F_mᵀF_m`, then column-normalise into λ. Terminates when
 /// the fit change drops below `opts.tol` or `opts.max_iters` is reached.
 pub fn cp_als(x: &TensorData, r: usize, opts: &AlsOptions) -> Result<(CpModel, AlsReport)> {
+    cp_als_with(x, r, opts, &mut AlsWorkspace::new())
+}
+
+/// [`cp_als`] reusing a caller-owned [`AlsWorkspace`] — the engine's
+/// per-repetition decomposition path, where the workspace is reused across
+/// every sweep of every ingest.
+pub fn cp_als_with(
+    x: &TensorData,
+    r: usize,
+    opts: &AlsOptions,
+    ws: &mut AlsWorkspace,
+) -> Result<(CpModel, AlsReport)> {
     let mut rng = Rng::new(opts.seed);
     let [a, b, c] = init_factors(x, r, opts.init, &mut rng);
-    cp_als_from(x, [a, b, c], opts)
+    cp_als_from_with(x, [a, b, c], opts, ws)
 }
 
 /// CP-ALS starting from the supplied factors (warm start — used by the
@@ -73,20 +85,32 @@ pub fn cp_als_from(
     factors: [Matrix; 3],
     opts: &AlsOptions,
 ) -> Result<(CpModel, AlsReport)> {
+    cp_als_from_with(x, factors, opts, &mut AlsWorkspace::new())
+}
+
+/// [`cp_als_from`] reusing a caller-owned [`AlsWorkspace`].
+///
+/// The sweep loop is allocation-free in steady state: MTTKRP outputs, Gram
+/// products, the Gram-Hadamard normal matrix and the Cholesky solve all
+/// land in workspace buffers (grown monotonically, never shrunk), and each
+/// solve writes straight into the model's factor matrix. Arithmetic order
+/// is identical to the historical allocate-per-call implementation, so
+/// results are bit-for-bit unchanged.
+pub fn cp_als_from_with(
+    x: &TensorData,
+    factors: [Matrix; 3],
+    opts: &AlsOptions,
+    ws: &mut AlsWorkspace,
+) -> Result<(CpModel, AlsReport)> {
     let r = factors[0].cols();
     let norm_x = x.norm();
-    let mut model = CpModel::new(
-        factors[0].clone(),
-        factors[1].clone(),
-        factors[2].clone(),
-        vec![1.0; r],
-    );
+    let [fa, fb, fc] = factors;
+    let mut model = CpModel::new(fa, fb, fc, vec![1.0; r]);
+    ws.reserve(x.dims(), r);
     // Cache Gram matrices of each factor; refresh the updated one per step.
-    let mut grams = [
-        model.factors[0].gram(),
-        model.factors[1].gram(),
-        model.factors[2].gram(),
-    ];
+    for mode in 0..3 {
+        model.factors[mode].gram_into(&mut ws.grams[mode]);
+    }
     let mut prev_fit = f64::NEG_INFINITY;
     let mut converged = false;
     let mut iters = 0;
@@ -97,9 +121,23 @@ pub fn cp_als_from(
         let mut inner = 0.0;
         for mode in 0..3 {
             let (o1, o2) = ((mode + 1) % 3, (mode + 2) % 3);
-            let gram = grams[o1].hadamard(&grams[o2]);
-            let m = x.mttkrp(mode, &model.factors[0], &model.factors[1], &model.factors[2]);
-            let mut f = solve_gram_system(&gram, &m)?;
+            ws.grams[o1].hadamard_into(&ws.grams[o2], &mut ws.gram_had);
+            x.mttkrp_into(
+                mode,
+                &model.factors[0],
+                &model.factors[1],
+                &model.factors[2],
+                &mut ws.mttkrp[mode],
+            );
+            // Solve straight into the model's factor matrix (fully
+            // overwritten; untouched on error).
+            solve_gram_system_into(
+                &ws.gram_had,
+                &ws.mttkrp[mode],
+                &mut ws.solve,
+                &mut model.factors[mode],
+            )?;
+            let f = &mut model.factors[mode];
             // Column-normalise, absorbing scale into λ.
             let norms = f.normalize_cols();
             for t in 0..r {
@@ -115,6 +153,7 @@ pub fn cp_als_from(
             if mode == 2 {
                 // ⟨X, X̂⟩ = Σ_{k,t} M₃[k,t] · λ_t · C[k,t] with the factors
                 // of modes 1-2 already at their new values inside M₃.
+                let m = &ws.mttkrp[2];
                 for k in 0..f.rows() {
                     let (mr, fr) = (m.row(k), f.row(k));
                     for t in 0..r {
@@ -122,8 +161,7 @@ pub fn cp_als_from(
                     }
                 }
             }
-            grams[mode] = f.gram();
-            model.factors[mode] = f;
+            model.factors[mode].gram_into(&mut ws.grams[mode]);
         }
         // Fit via cached quantities (no reconstruction, no extra MTTKRP):
         // ‖X−X̂‖² = ‖X‖² − 2⟨X,X̂⟩ + ‖X̂‖².
@@ -248,5 +286,33 @@ mod tests {
         let xd: TensorData = DenseTensor::zeros(4, 4, 4).into();
         let (model, _) = cp_als(&xd, 2, &AlsOptions::quick()).unwrap();
         assert!(model.norm_sq() < 1e-6);
+    }
+
+    /// A reused workspace must change nothing about the result (bit-for-bit
+    /// against a fresh workspace per call, dense and sparse) and must stop
+    /// allocating after the first call at a given shape.
+    #[test]
+    fn workspace_reuse_is_bit_identical_and_allocation_free() {
+        let (x, _) = exact_rank((8, 7, 6), 3, 21);
+        let sparse: TensorData = CooTensor::from_dense(&x, 0.0).into();
+        let dense: TensorData = x.into();
+        let opts = AlsOptions::quick().with_seed(22);
+        let mut ws = AlsWorkspace::new();
+        for xd in [&dense, &sparse] {
+            let (fresh, rep_fresh) = cp_als(xd, 3, &opts).unwrap();
+            let (reused, rep_reused) = cp_als_with(xd, 3, &opts, &mut ws).unwrap();
+            assert_eq!(rep_fresh.iterations, rep_reused.iterations);
+            assert_eq!(fresh.lambda, reused.lambda);
+            for f in 0..3 {
+                assert_eq!(fresh.factors[f].max_abs_diff(&reused.factors[f]), 0.0);
+            }
+        }
+        // Steady state: further calls at the same shapes grow nothing.
+        let settled = ws.allocations();
+        for _ in 0..3 {
+            cp_als_with(&dense, 3, &opts, &mut ws).unwrap();
+            cp_als_with(&sparse, 3, &opts, &mut ws).unwrap();
+        }
+        assert_eq!(ws.allocations(), settled, "steady-state sweeps must not allocate");
     }
 }

@@ -5,7 +5,9 @@
 pub mod als;
 pub mod init;
 pub mod model;
+pub mod workspace;
 
-pub use als::{cp_als, AlsOptions, AlsReport};
+pub use als::{cp_als, cp_als_from, cp_als_from_with, cp_als_with, AlsOptions, AlsReport};
 pub use init::{init_factors, InitMethod};
 pub use model::CpModel;
+pub use workspace::AlsWorkspace;

@@ -1,0 +1,86 @@
+//! Reusable scratch for the ALS sweep loop.
+//!
+//! The hot path of every ingest is `3 · iters · reps` MTTKRP-plus-solve
+//! steps, and before this workspace existed each step paid a fresh `Matrix`
+//! allocation for the MTTKRP output, each Gram product, the Gram-Hadamard
+//! normal matrix, the Cholesky factor and the solve result. An
+//! [`AlsWorkspace`] owns all of those buffers, sized by `(dims, rank)` and
+//! grown **monotonically** (capacity never shrinks), so steady-state sweeps
+//! allocate zero `Matrix` buffers — the allocation counter proves it (see
+//! `benches/bench_micro.rs`).
+//!
+//! Ownership model: one workspace per concurrent decomposition. The
+//! SamBaTen engine keeps a per-repetition pool (`coordinator::engine`), so
+//! each parallel repetition reuses its own workspace across every sweep of
+//! every ingest; baselines and one-shot callers create one locally.
+
+use crate::linalg::{GramSolveScratch, Matrix};
+
+/// Scratch buffers threaded through `cp_als` / `cp_als_from` (and, via
+/// [`crate::coordinator::solver::InnerSolver`], through every sample
+/// decomposition): per-mode MTTKRP outputs, per-mode factor Grams, the
+/// Gram-Hadamard normal matrix and the gram-solve scratch.
+#[derive(Default)]
+pub struct AlsWorkspace {
+    /// MTTKRP output per mode, `dim_mode × R`.
+    pub(crate) mttkrp: [Matrix; 3],
+    /// Gram matrix per factor, `R × R` (refreshed after each mode update).
+    pub(crate) grams: [Matrix; 3],
+    /// Hadamard of the two off-mode Grams — the ALS normal matrix.
+    pub(crate) gram_had: Matrix,
+    /// Cholesky factor + ridge scratch for the gram solves.
+    pub(crate) solve: GramSolveScratch,
+    allocs: usize,
+}
+
+impl AlsWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Shape every buffer for a `(dims, rank)` problem, reusing backing
+    /// storage wherever capacity allows. Called once per `cp_als_from`
+    /// invocation; after the first call at the largest shape seen, it
+    /// allocates nothing.
+    pub fn reserve(&mut self, dims: (usize, usize, usize), rank: usize) {
+        let mode_dims = [dims.0, dims.1, dims.2];
+        for (buf, dim) in self.mttkrp.iter_mut().zip(mode_dims) {
+            self.allocs += usize::from(buf.ensure_shape(dim, rank));
+        }
+        for g in &mut self.grams {
+            self.allocs += usize::from(g.ensure_shape(rank, rank));
+        }
+        self.allocs += usize::from(self.gram_had.ensure_shape(rank, rank));
+    }
+
+    /// Buffer allocations/growths since creation (including the gram-solve
+    /// scratch). Steady-state sweeps at a fixed problem shape report zero
+    /// growth between calls.
+    pub fn allocations(&self) -> usize {
+        self.allocs + self.solve.allocations()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_grows_once_per_shape() {
+        let mut ws = AlsWorkspace::new();
+        ws.reserve((6, 5, 4), 3);
+        let first = ws.allocations();
+        assert!(first > 0);
+        // Same shape, and any smaller shape, reuse capacity.
+        ws.reserve((6, 5, 4), 3);
+        ws.reserve((4, 4, 4), 2);
+        assert_eq!(ws.allocations(), first);
+        // A larger shape grows again — monotone capacity.
+        ws.reserve((9, 9, 9), 4);
+        assert!(ws.allocations() > first);
+        ws.reserve((9, 9, 9), 4);
+        let grown = ws.allocations();
+        ws.reserve((6, 5, 4), 3);
+        assert_eq!(ws.allocations(), grown);
+    }
+}

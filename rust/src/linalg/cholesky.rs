@@ -8,6 +8,57 @@
 use super::Matrix;
 use anyhow::{bail, Result};
 
+/// Factor `a` (symmetric positive definite) into the caller-owned `l`,
+/// which must be pre-shaped `n × n` with a zero upper triangle. Only the
+/// lower triangle is ever written, so a buffer first shaped by
+/// [`Matrix::ensure_shape`] (which zero-fills on shape change) keeps a
+/// zero upper triangle across reuses. Fails on non-PD input.
+fn cholesky_into(a: &Matrix, l: &mut Matrix) -> Result<()> {
+    let n = a.rows();
+    if a.cols() != n {
+        bail!("cholesky: matrix not square ({}x{})", a.rows(), a.cols());
+    }
+    debug_assert_eq!((l.rows(), l.cols()), (n, n));
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 || !sum.is_finite() {
+                    bail!("cholesky: not positive definite at pivot {i} (sum={sum})");
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// In-place triangular solve `L Lᵀ x = x` (forward then backward
+/// substitution) — the per-row kernel of every gram solve.
+fn solve_vec_in_place(l: &Matrix, x: &mut [f64]) {
+    let n = l.rows();
+    debug_assert_eq!(x.len(), n);
+    // Forward: L y = b
+    for i in 0..n {
+        for k in 0..i {
+            x[i] -= l[(i, k)] * x[k];
+        }
+        x[i] /= l[(i, i)];
+    }
+    // Backward: Lᵀ x = y
+    for i in (0..n).rev() {
+        for k in i + 1..n {
+            x[i] -= l[(k, i)] * x[k];
+        }
+        x[i] /= l[(i, i)];
+    }
+}
+
 /// Cholesky factor `L` (lower triangular) of an SPD matrix.
 pub struct Cholesky {
     l: Matrix,
@@ -16,27 +67,8 @@ pub struct Cholesky {
 impl Cholesky {
     /// Factor `a` (symmetric positive definite). Fails on non-PD input.
     pub fn new(a: &Matrix) -> Result<Self> {
-        let n = a.rows();
-        if a.cols() != n {
-            bail!("cholesky: matrix not square ({}x{})", a.rows(), a.cols());
-        }
-        let mut l = Matrix::zeros(n, n);
-        for i in 0..n {
-            for j in 0..=i {
-                let mut sum = a[(i, j)];
-                for k in 0..j {
-                    sum -= l[(i, k)] * l[(j, k)];
-                }
-                if i == j {
-                    if sum <= 0.0 || !sum.is_finite() {
-                        bail!("cholesky: not positive definite at pivot {i} (sum={sum})");
-                    }
-                    l[(i, j)] = sum.sqrt();
-                } else {
-                    l[(i, j)] = sum / l[(j, j)];
-                }
-            }
-        }
+        let mut l = Matrix::zeros(a.rows(), a.cols());
+        cholesky_into(a, &mut l)?;
         Ok(Cholesky { l })
     }
 
@@ -44,21 +76,8 @@ impl Cholesky {
     pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
         let n = self.l.rows();
         assert_eq!(b.len(), n);
-        // Forward: L y = b
         let mut y = b.to_vec();
-        for i in 0..n {
-            for k in 0..i {
-                y[i] -= self.l[(i, k)] * y[k];
-            }
-            y[i] /= self.l[(i, i)];
-        }
-        // Backward: Lᵀ x = y
-        for i in (0..n).rev() {
-            for k in i + 1..n {
-                y[i] -= self.l[(k, i)] * y[k];
-            }
-            y[i] /= self.l[(i, i)];
-        }
+        solve_vec_in_place(&self.l, &mut y);
         y
     }
 
@@ -102,11 +121,83 @@ pub fn spd_solve(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     bail!("spd_solve: matrix irrecoverably non-PD (n={})", a.rows())
 }
 
+/// Reusable scratch for [`solve_gram_system_into`]: the Cholesky factor and
+/// the ridge-regularised copy of the Gram matrix. Buffers grow monotonically
+/// (never shrink capacity) and the growth count is exposed so workspace
+/// owners can prove steady-state solves allocate nothing.
+#[derive(Default)]
+pub struct GramSolveScratch {
+    l: Matrix,
+    reg: Matrix,
+    allocs: usize,
+}
+
+impl GramSolveScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Buffer allocations/growths since creation.
+    pub fn allocations(&self) -> usize {
+        self.allocs
+    }
+}
+
+/// [`solve_gram_system`] into caller-owned buffers: factors `G` (with the
+/// same ridge escalation as [`spd_solve`]) into `scratch`, then solves each
+/// row of `M` in place into `out`. `out` is reshaped to `M`'s shape and
+/// fully overwritten (dirty contents are fine); on error it is untouched.
+/// Arithmetic order matches the allocating path exactly, so the results are
+/// bit-identical.
+pub fn solve_gram_system_into(
+    gram: &Matrix,
+    mttkrp: &Matrix,
+    scratch: &mut GramSolveScratch,
+    out: &mut Matrix,
+) -> Result<()> {
+    let n = gram.rows();
+    assert_eq!(gram.cols(), n, "gram matrix must be square");
+    assert_eq!(mttkrp.cols(), n, "gram solve shape mismatch");
+    scratch.allocs += usize::from(scratch.l.ensure_shape(n, n));
+    if cholesky_into(gram, &mut scratch.l).is_err() {
+        // Ridge escalations relative to the matrix scale (same schedule as
+        // `spd_solve` — rank-deficient updates, §III-B, land here).
+        let scale = (0..n).map(|i| gram[(i, i)].abs()).fold(0.0, f64::max).max(1e-300);
+        let mut factored = false;
+        for mag in [1e-12, 1e-9, 1e-6, 1e-3] {
+            scratch.allocs += usize::from(scratch.reg.ensure_shape(n, n));
+            scratch.reg.data_mut().copy_from_slice(gram.data());
+            let eps = scale * mag;
+            for i in 0..n {
+                scratch.reg[(i, i)] += eps;
+            }
+            scratch.allocs += usize::from(scratch.l.ensure_shape(n, n));
+            if cholesky_into(&scratch.reg, &mut scratch.l).is_ok() {
+                factored = true;
+                break;
+            }
+        }
+        if !factored {
+            bail!("spd_solve: matrix irrecoverably non-PD (n={n})");
+        }
+    }
+    scratch.allocs += usize::from(out.ensure_shape(mttkrp.rows(), mttkrp.cols()));
+    for i in 0..mttkrp.rows() {
+        let row = out.row_mut(i);
+        row.copy_from_slice(mttkrp.row(i));
+        solve_vec_in_place(&scratch.l, row);
+    }
+    Ok(())
+}
+
 /// Solve the row-wise ALS system `X · G = M`, i.e. `X = M G⁻¹`, where `G` is
 /// the `R×R` Gram-Hadamard matrix and `M` is the `n×R` MTTKRP result.
-/// Equivalent to solving `G Xᵀ = Mᵀ` (G symmetric).
+/// Equivalent to solving `G Xᵀ = Mᵀ` (G symmetric). Allocating wrapper over
+/// [`solve_gram_system_into`].
 pub fn solve_gram_system(gram: &Matrix, mttkrp: &Matrix) -> Result<Matrix> {
-    Ok(spd_solve(gram, &mttkrp.transpose())?.transpose())
+    let mut out = Matrix::zeros(mttkrp.rows(), mttkrp.cols());
+    solve_gram_system_into(gram, mttkrp, &mut GramSolveScratch::new(), &mut out)?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -176,5 +267,35 @@ mod tests {
         let m = x_true.matmul(&g); // X G = M
         let x = solve_gram_system(&g, &m).unwrap();
         assert!(x.max_abs_diff(&x_true) < 1e-9);
+    }
+
+    #[test]
+    fn solve_gram_system_into_matches_allocating_and_stops_allocating() {
+        let g = spd(5, 7);
+        let mut rng = Rng::new(8);
+        let m = Matrix::rand_gaussian(9, 5, &mut rng);
+        let want = solve_gram_system(&g, &m).unwrap();
+        let mut scratch = GramSolveScratch::new();
+        let mut out = Matrix::from_fn(2, 2, |_, _| 1e30); // wrong shape + dirty
+        solve_gram_system_into(&g, &m, &mut scratch, &mut out).unwrap();
+        assert_eq!(out.max_abs_diff(&want), 0.0, "must be bit-identical");
+        // Steady state: repeat solves grow nothing.
+        let after_first = scratch.allocations();
+        for _ in 0..3 {
+            solve_gram_system_into(&g, &m, &mut scratch, &mut out).unwrap();
+        }
+        assert_eq!(scratch.allocations(), after_first);
+    }
+
+    #[test]
+    fn solve_gram_system_into_ridge_matches_allocating() {
+        // Rank-1 Gram: both paths must take the same ridge escalation.
+        let v = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let g = v.t_matmul(&v);
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.5, 2.0]);
+        let want = solve_gram_system(&g, &m).unwrap();
+        let mut out = Matrix::zeros(0, 0);
+        solve_gram_system_into(&g, &m, &mut GramSolveScratch::new(), &mut out).unwrap();
+        assert_eq!(out.max_abs_diff(&want), 0.0);
     }
 }

@@ -15,6 +15,14 @@ pub struct Matrix {
     data: Vec<f64>,
 }
 
+/// An empty `0 × 0` matrix — the starting state of workspace buffers,
+/// which [`Matrix::ensure_shape`] grows on first use.
+impl Default for Matrix {
+    fn default() -> Self {
+        Matrix::zeros(0, 0)
+    }
+}
+
 impl fmt::Debug for Matrix {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
@@ -113,6 +121,37 @@ impl Matrix {
         &mut self.data
     }
 
+    /// Backing-buffer capacity in elements — lets workspace owners detect
+    /// whether an [`Matrix::ensure_shape`] call had to reallocate.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
+    }
+
+    /// Overwrite every entry with `v`.
+    pub fn fill(&mut self, v: f64) {
+        self.data.fill(v);
+    }
+
+    /// Reshape to `rows × cols`, reusing the backing buffer whenever its
+    /// capacity allows. A shape *change* resets contents to zero; an
+    /// exact-shape call is a no-op that keeps the contents (every caller
+    /// fully overwrites them — the steady-state path must not pay a memset
+    /// per call). Returns `true` when the buffer had to grow (the signal
+    /// allocation-counting workspaces record).
+    pub fn ensure_shape(&mut self, rows: usize, cols: usize) -> bool {
+        if (self.rows, self.cols) == (rows, cols) {
+            return false;
+        }
+        let need = rows * cols;
+        let grew = self.data.capacity() < need;
+        self.data.clear();
+        self.data.resize(need, 0.0);
+        self.rows = rows;
+        self.cols = cols;
+        grew
+    }
+
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
@@ -197,9 +236,23 @@ impl Matrix {
 
     /// `selfᵀ * other` without forming the transpose.
     pub fn t_matmul(&self, other: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, other.cols);
+        self.t_matmul_into(other, &mut out);
+        out
+    }
+
+    /// [`Matrix::t_matmul`] into a caller-owned `cols × other.cols` buffer
+    /// (fully overwritten — dirty contents are fine). The one kernel behind
+    /// both the allocating path and [`Matrix::gram_into`].
+    pub fn t_matmul_into(&self, other: &Matrix, out: &mut Matrix) {
         assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        assert_eq!(
+            (out.rows, out.cols),
+            (self.cols, other.cols),
+            "t_matmul_into out-buffer shape mismatch"
+        );
+        out.fill(0.0);
         let (k, m, n) = (self.rows, self.cols, other.cols);
-        let mut out = Matrix::zeros(m, n);
         for p in 0..k {
             let a_row = &self.data[p * m..(p + 1) * m];
             let b_row = &other.data[p * n..(p + 1) * n];
@@ -213,7 +266,6 @@ impl Matrix {
                 }
             }
         }
-        out
     }
 
     /// `self * otherᵀ` without forming the transpose.
@@ -237,14 +289,38 @@ impl Matrix {
 
     /// Gram matrix `selfᵀ self` (symmetric; computed once per ALS update).
     pub fn gram(&self) -> Matrix {
-        self.t_matmul(self)
+        let mut out = Matrix::zeros(self.cols, self.cols);
+        self.gram_into(&mut out);
+        out
+    }
+
+    /// [`Matrix::gram`] into a caller-owned `cols × cols` buffer (fully
+    /// overwritten — dirty contents are fine). Shares its kernel with
+    /// [`Matrix::t_matmul_into`], so the results are bit-identical to the
+    /// allocating path.
+    pub fn gram_into(&self, out: &mut Matrix) {
+        self.t_matmul_into(self, out);
     }
 
     /// Element-wise (Hadamard) product.
     pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        self.hadamard_into(other, &mut out);
+        out
+    }
+
+    /// [`Matrix::hadamard`] into a caller-owned same-shape buffer (fully
+    /// overwritten — dirty contents are fine).
+    pub fn hadamard_into(&self, other: &Matrix, out: &mut Matrix) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
-        Matrix { rows: self.rows, cols: self.cols, data }
+        assert_eq!(
+            (out.rows, out.cols),
+            (self.rows, self.cols),
+            "hadamard_into out-buffer shape mismatch"
+        );
+        for (o, (a, b)) in out.data.iter_mut().zip(self.data.iter().zip(&other.data)) {
+            *o = a * b;
+        }
     }
 
     /// Khatri-Rao product (column-wise Kronecker): `(self ⊙ other)` of shapes
@@ -322,6 +398,15 @@ impl Matrix {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
         Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `self += other` without allocating (the reduction step of the
+    /// parallel MTTKRP paths).
+    pub fn add_in_place(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
     }
 
     pub fn sub(&self, other: &Matrix) -> Matrix {
@@ -469,5 +554,53 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn gram_into_overwrites_dirty_buffer() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::rand_gaussian(9, 4, &mut rng);
+        let want = a.t_matmul(&a);
+        let mut out = Matrix::from_fn(4, 4, |_, _| 1e30);
+        a.gram_into(&mut out);
+        assert_eq!(out.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn hadamard_into_overwrites_dirty_buffer() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::rand_gaussian(5, 3, &mut rng);
+        let b = Matrix::rand_gaussian(5, 3, &mut rng);
+        let mut out = Matrix::from_fn(5, 3, |_, _| 99.0);
+        a.hadamard_into(&b, &mut out);
+        assert_eq!(out.max_abs_diff(&a.hadamard(&b)), 0.0);
+    }
+
+    #[test]
+    fn ensure_shape_reuses_capacity_and_reports_growth() {
+        let mut m = Matrix::zeros(4, 4);
+        let cap = m.capacity();
+        assert!(!m.ensure_shape(2, 3), "shrink must reuse the buffer");
+        assert_eq!((m.rows(), m.cols()), (2, 3));
+        assert!(m.data().iter().all(|&x| x == 0.0));
+        assert_eq!(m.capacity(), cap);
+        assert!(m.ensure_shape(8, 8), "growth must be reported");
+        assert_eq!((m.rows(), m.cols()), (8, 8));
+        // Exact-shape call: no growth and contents untouched (callers
+        // fully overwrite — the steady state must not pay a memset).
+        m[(0, 0)] = 7.0;
+        assert!(!m.ensure_shape(8, 8));
+        assert_eq!(m[(0, 0)], 7.0);
+    }
+
+    #[test]
+    fn add_in_place_matches_add() {
+        let mut rng = Rng::new(9);
+        let a = Matrix::rand_gaussian(6, 5, &mut rng);
+        let b = Matrix::rand_gaussian(6, 5, &mut rng);
+        let want = a.add(&b);
+        let mut got = a.clone();
+        got.add_in_place(&b);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
     }
 }

@@ -14,7 +14,9 @@ pub mod qr;
 pub mod svd;
 
 pub use assignment::hungarian_min;
-pub use cholesky::{solve_gram_system, spd_solve, Cholesky};
+pub use cholesky::{
+    solve_gram_system, solve_gram_system_into, spd_solve, Cholesky, GramSolveScratch,
+};
 pub use matrix::Matrix;
 pub use qr::qr_thin;
 pub use svd::{orth, pinv, svd_jacobi, svd_truncated, Svd};

@@ -11,7 +11,7 @@ use super::bank::ArtifactBank;
 #[cfg(feature = "xla")]
 use super::pad::{pad_dense_c_order, pad_factor, unpad_factor};
 use crate::coordinator::solver::{InnerSolver, NativeAlsSolver};
-use crate::cp::{AlsOptions, CpModel};
+use crate::cp::{AlsOptions, AlsWorkspace, CpModel};
 #[cfg(feature = "xla")]
 use crate::linalg::Matrix;
 use crate::tensor::TensorData;
@@ -216,13 +216,15 @@ impl InnerSolver for PjrtAlsSolver {
         rank: usize,
         opts: &AlsOptions,
         seed: u64,
+        ws: &mut AlsWorkspace,
     ) -> Result<CpModel> {
         match self.service.submit(x.clone(), rank, self.sweeps, seed) {
             Ok(m) => Ok(m),
             Err(e) if e.to_string().contains(BANK_MISS_MARKER) => {
-                // Bank miss → native fallback (counted).
+                // Bank miss → native fallback (counted); the fallback runs
+                // native sweeps, so it gets the caller's workspace.
                 self.service.fallbacks.fetch_add(1, Ordering::Relaxed);
-                self.fallback.decompose(x, rank, opts, seed)
+                self.fallback.decompose(x, rank, opts, seed, ws)
             }
             Err(e) => Err(e),
         }
@@ -263,7 +265,9 @@ mod tests {
         let svc = PjrtService::start(dir.clone()).unwrap();
         let solver = PjrtAlsSolver::new(svc.clone());
         let (x, _) = SyntheticSpec::dense(8, 8, 8, 2, 0.0, 9).generate();
-        let model = solver.decompose(&x, 2, &AlsOptions::quick(), 3).unwrap();
+        let model = solver
+            .decompose(&x, 2, &AlsOptions::quick(), 3, &mut AlsWorkspace::new())
+            .unwrap();
         assert_eq!(model.rank(), 2);
         assert!(model.fit(&x) > 0.9, "fallback fit {}", model.fit(&x));
         assert_eq!(svc.fallback_count(), 1);
@@ -275,7 +279,9 @@ mod tests {
         let Some(svc) = service() else { return };
         let solver = PjrtAlsSolver::new(svc).with_sweeps(40);
         let (x, _) = SyntheticSpec::dense(12, 12, 12, 2, 0.0, 1).generate();
-        let model = solver.decompose(&x, 2, &AlsOptions::default(), 5).unwrap();
+        let model = solver
+            .decompose(&x, 2, &AlsOptions::default(), 5, &mut AlsWorkspace::new())
+            .unwrap();
         let fit = model.fit(&x);
         assert!(fit > 0.99, "fit {fit}");
     }
@@ -286,8 +292,12 @@ mod tests {
         let solver = PjrtAlsSolver::new(svc).with_sweeps(40);
         let native = NativeAlsSolver;
         let (x, _) = SyntheticSpec::dense(14, 10, 12, 3, 0.05, 2).generate();
-        let mp = solver.decompose(&x, 3, &AlsOptions::default(), 7).unwrap();
-        let mn = native.decompose(&x, 3, &AlsOptions::default(), 7).unwrap();
+        let mp = solver
+            .decompose(&x, 3, &AlsOptions::default(), 7, &mut AlsWorkspace::new())
+            .unwrap();
+        let mn = native
+            .decompose(&x, 3, &AlsOptions::default(), 7, &mut AlsWorkspace::new())
+            .unwrap();
         let (fp, fn_) = (mp.fit(&x), mn.fit(&x));
         assert!((fp - fn_).abs() < 0.05, "pjrt fit {fp} vs native {fn_}");
     }
@@ -301,11 +311,13 @@ mod tests {
         let mut big = x.to_dense();
         // Fake a big tensor cheaply: 8x8x8 is fine, use rank > bank max (16).
         let _ = &mut big;
-        let model = solver.decompose(&x, 2, &AlsOptions::quick(), 11);
+        let model = solver.decompose(&x, 2, &AlsOptions::quick(), 11, &mut AlsWorkspace::new());
         assert!(model.is_ok());
         let before = svc.fallback_count();
         // rank 16 > any bank entry rank → fallback.
-        let model = solver.decompose(&x, 9, &AlsOptions::quick(), 11).unwrap();
+        let model = solver
+            .decompose(&x, 9, &AlsOptions::quick(), 11, &mut AlsWorkspace::new())
+            .unwrap();
         assert_eq!(model.rank(), 9);
         assert_eq!(svc.fallback_count(), before + 1);
     }
@@ -320,7 +332,9 @@ mod tests {
                 let solver = Arc::clone(&solver);
                 let x = x.clone();
                 s.spawn(move || {
-                    let m = solver.decompose(&x, 2, &AlsOptions::quick(), t).unwrap();
+                    let m = solver
+                        .decompose(&x, 2, &AlsOptions::quick(), t, &mut AlsWorkspace::new())
+                        .unwrap();
                     assert!(m.fit(&x) > 0.9);
                 });
             }

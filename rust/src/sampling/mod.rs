@@ -9,7 +9,11 @@
 //! Extraction dispatches through [`TensorData::extract`]: on a CSF-promoted
 //! accumulator the fiber tree skips unsampled subtrees wholesale instead of
 //! filtering every nonzero, which matters because extraction runs once per
-//! repetition per ingest.
+//! repetition per ingest. Large samples (small `s`) come back as CSF
+//! directly — the sorted index sets this module guarantees are what make
+//! that sort-free (see [`crate::tensor::CSF_EXTRACT_NNZ`]) — so their
+//! sample-ALS runs on the fiber-tree kernels too; summary-sized samples
+//! stay COO.
 
 use crate::tensor::{Tensor3, TensorData};
 use crate::util::Rng;

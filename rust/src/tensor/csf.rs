@@ -15,11 +15,11 @@
 //!     └── leaf entries (l, v)    — v · leaf_factor[l, :], contiguous
 //! ```
 //!
-//! Parallelism: root ranges are disjoint output rows, so workers write
-//! range-local scratch with **no contention and no reduction pass** —
-//! unlike the COO path, which must merge full `out_dim × R` partials.
-//! Ranges are balanced by entry count (heavy-tailed real data concentrates
-//! nnz on few roots).
+//! Parallelism: root ranges own disjoint output rows, so workers write
+//! **disjoint spans of the caller-owned output buffer directly** — no
+//! contention, no local accumulators, no reduction pass — unlike the COO
+//! path, which must merge full `out_dim × R` partials. Ranges are balanced
+//! by entry count (heavy-tailed real data concentrates nnz on few roots).
 //!
 //! Memory: each orientation owns its values in its own order (3× the COO
 //! value payload). That trade is deliberate — the accumulated tensor is
@@ -31,7 +31,6 @@ use super::sparse::{inverse_map, mode3_shift};
 use super::{mode_dim, CooTensor, DenseTensor, Tensor3};
 use crate::linalg::Matrix;
 use crate::util::par::workers_for;
-use crate::util::parallel_map;
 
 /// One mode-rooted fiber tree. All pointer arrays are `u32` (nnz beyond 4B
 /// entries is out of scope for this testbed, as in the COO backend).
@@ -61,17 +60,6 @@ impl Orientation {
         e0..e1
     }
 
-    /// Copy with every leaf index rebased by `shift` — turns a batch's
-    /// mode-0/1 tree (leaf level = `k`) into the run a mode-3 append
-    /// merges. The caller guarantees the shift cannot wrap (`mode3_shift`).
-    fn with_shifted_leaves(&self, shift: u32) -> Orientation {
-        let mut o = self.clone();
-        for l in &mut o.leaves {
-            *l += shift;
-        }
-        o
-    }
-
     /// Copy with every root index rebased by `shift` — the adopt-the-batch
     /// fallback of [`append_orientation_tail`] when the accumulator is
     /// empty (the non-empty path rebases during the extend instead).
@@ -84,11 +72,30 @@ impl Orientation {
     }
 }
 
+/// Extend `out` with `leaves` rebased by `shift` — bulk slice copy when the
+/// shift is zero (the accumulator side of every merge). Threading the shift
+/// into the copy itself is what lets the mode-3 append merge a batch tree
+/// without first materialising a leaf-shifted clone of it.
+fn extend_shifted_leaves(out: &mut Vec<u32>, leaves: &[u32], shift: u32) {
+    if shift == 0 {
+        out.extend_from_slice(leaves);
+    } else {
+        out.extend(leaves.iter().map(|&l| l + shift));
+    }
+}
+
 /// Bulk-copy fibers `g0..g1` of `src` (mids, entry pointers, leaves,
-/// values) onto the tail of `out`, rebasing `entry_ptr`. Entries of a
-/// contiguous fiber span are themselves contiguous, so this is four slice
-/// copies plus one pointer rebase — the unit the merge gallops over.
-fn copy_fiber_span(out: &mut Orientation, src: &Orientation, g0: usize, g1: usize) {
+/// values) onto the tail of `out`, rebasing `entry_ptr` and adding
+/// `leaf_shift` to every copied leaf. Entries of a contiguous fiber span
+/// are themselves contiguous, so this is four slice copies plus pointer
+/// rebases — the unit the merge gallops over.
+fn copy_fiber_span(
+    out: &mut Orientation,
+    src: &Orientation,
+    g0: usize,
+    g1: usize,
+    leaf_shift: u32,
+) {
     if g0 == g1 {
         return;
     }
@@ -97,13 +104,19 @@ fn copy_fiber_span(out: &mut Orientation, src: &Orientation, g0: usize, g1: usiz
     out.mids.extend_from_slice(&src.mids[g0..g1]);
     let leaf_base = out.leaves.len() as u32;
     out.entry_ptr.extend(src.entry_ptr[g0..g1].iter().map(|&e| e - e0 as u32 + leaf_base));
-    out.leaves.extend_from_slice(&src.leaves[e0..e1]);
+    extend_shifted_leaves(&mut out.leaves, &src.leaves[e0..e1], leaf_shift);
     out.vals.extend_from_slice(&src.vals[e0..e1]);
 }
 
 /// Bulk-copy roots `f0..f1` of `src` with their whole subtrees onto the
-/// tail of `out`.
-fn copy_root_span(out: &mut Orientation, src: &Orientation, f0: usize, f1: usize) {
+/// tail of `out`, leaf-rebasing by `leaf_shift`.
+fn copy_root_span(
+    out: &mut Orientation,
+    src: &Orientation,
+    f0: usize,
+    f1: usize,
+    leaf_shift: u32,
+) {
     if f0 == f1 {
         return;
     }
@@ -112,20 +125,22 @@ fn copy_root_span(out: &mut Orientation, src: &Orientation, f0: usize, f1: usize
     out.roots.extend_from_slice(&src.roots[f0..f1]);
     let fiber_base = out.mids.len() as u32;
     out.fiber_ptr.extend(src.fiber_ptr[f0..f1].iter().map(|&g| g - g0 as u32 + fiber_base));
-    copy_fiber_span(out, src, g0, g1);
+    copy_fiber_span(out, src, g0, g1, leaf_shift);
 }
 
 /// Merge one root present in both trees: fibers interleave in mid order;
-/// a fiber present in both emits the old entries then the batch's —
-/// correct because a mode-3 append guarantees every batch leaf in a shared
-/// fiber sorts strictly after every old one (`k` indices are rebased past
-/// the existing extent).
+/// a fiber present in both emits the old entries then the batch's (leaves
+/// rebased by `new_leaf_shift` as they are copied) — correct because a
+/// mode-3 append guarantees every batch leaf in a shared fiber sorts
+/// strictly after every old one (`k` indices are rebased past the existing
+/// extent).
 fn merge_shared_root(
     out: &mut Orientation,
     old: &Orientation,
     fa: usize,
     new: &Orientation,
     fb: usize,
+    new_leaf_shift: u32,
 ) {
     out.roots.push(old.roots[fa]);
     out.fiber_ptr.push(out.mids.len() as u32);
@@ -135,12 +150,12 @@ fn merge_shared_root(
         match old.mids[ga].cmp(&new.mids[gb]) {
             std::cmp::Ordering::Less => {
                 let run = ga + old.mids[ga..a1].partition_point(|&m| m < new.mids[gb]);
-                copy_fiber_span(out, old, ga, run);
+                copy_fiber_span(out, old, ga, run, 0);
                 ga = run;
             }
             std::cmp::Ordering::Greater => {
                 let run = gb + new.mids[gb..b1].partition_point(|&m| m < old.mids[ga]);
-                copy_fiber_span(out, new, gb, run);
+                copy_fiber_span(out, new, gb, run, new_leaf_shift);
                 gb = run;
             }
             std::cmp::Ordering::Equal => {
@@ -150,15 +165,15 @@ fn merge_shared_root(
                 let eb = new.entry_ptr[gb] as usize..new.entry_ptr[gb + 1] as usize;
                 out.leaves.extend_from_slice(&old.leaves[ea.clone()]);
                 out.vals.extend_from_slice(&old.vals[ea]);
-                out.leaves.extend_from_slice(&new.leaves[eb.clone()]);
+                extend_shifted_leaves(&mut out.leaves, &new.leaves[eb.clone()], new_leaf_shift);
                 out.vals.extend_from_slice(&new.vals[eb]);
                 ga += 1;
                 gb += 1;
             }
         }
     }
-    copy_fiber_span(out, old, ga, a1);
-    copy_fiber_span(out, new, gb, b1);
+    copy_fiber_span(out, old, ga, a1, 0);
+    copy_fiber_span(out, new, gb, b1, new_leaf_shift);
 }
 
 /// Merge a batch tree into an existing one under the mode-3-append
@@ -166,8 +181,11 @@ fn merge_shared_root(
 /// A gallop/merge pass over the sorted root lists: untouched spans —
 /// the overwhelming majority when `nnz_batch ≪ nnz` — bulk-copy whole
 /// subtree ranges, so the cost is linear memmove plus work proportional
-/// to the batch, never a re-sort of the accumulated entries.
-fn merge_orientation(old: &Orientation, new: &Orientation) -> Orientation {
+/// to the batch, never a re-sort of the accumulated entries. The batch's
+/// leaves (`k` indices in a mode-3 append) are rebased by `new_leaf_shift`
+/// *during* the copies, so no pre-shifted clone of the batch tree is ever
+/// built (rebasing is monotone, so the batch's sort order is unchanged).
+fn merge_orientation(old: &Orientation, new: &Orientation, new_leaf_shift: u32) -> Orientation {
     let mut out = Orientation {
         roots: Vec::with_capacity(old.roots.len() + new.roots.len()),
         fiber_ptr: Vec::with_capacity(old.roots.len() + new.roots.len() + 1),
@@ -181,23 +199,23 @@ fn merge_orientation(old: &Orientation, new: &Orientation) -> Orientation {
         match old.roots[a].cmp(&new.roots[b]) {
             std::cmp::Ordering::Less => {
                 let run = a + old.roots[a..].partition_point(|&r| r < new.roots[b]);
-                copy_root_span(&mut out, old, a, run);
+                copy_root_span(&mut out, old, a, run, 0);
                 a = run;
             }
             std::cmp::Ordering::Greater => {
                 let run = b + new.roots[b..].partition_point(|&r| r < old.roots[a]);
-                copy_root_span(&mut out, new, b, run);
+                copy_root_span(&mut out, new, b, run, new_leaf_shift);
                 b = run;
             }
             std::cmp::Ordering::Equal => {
-                merge_shared_root(&mut out, old, a, new, b);
+                merge_shared_root(&mut out, old, a, new, b, new_leaf_shift);
                 a += 1;
                 b += 1;
             }
         }
     }
-    copy_root_span(&mut out, old, a, old.roots.len());
-    copy_root_span(&mut out, new, b, new.roots.len());
+    copy_root_span(&mut out, old, a, old.roots.len(), 0);
+    copy_root_span(&mut out, new, b, new.roots.len(), new_leaf_shift);
     out.fiber_ptr.push(out.mids.len() as u32);
     out.entry_ptr.push(out.leaves.len() as u32);
     out
@@ -265,6 +283,54 @@ fn build_orientation(ii: &[u32], jj: &[u32], kk: &[u32], vv: &[f64], mode: usize
         }
         o.leaves.push(leaf);
         o.vals.push(v);
+    }
+    o.fiber_ptr.push(o.mids.len() as u32);
+    o.entry_ptr.push(o.leaves.len() as u32);
+    o
+}
+
+/// Filter one orientation through per-level inverse maps (old index →
+/// sampled position, `None` = unsampled), producing the extracted
+/// orientation directly. A root absent from the sample skips its whole
+/// subtree, an absent fiber skips its leaves; roots/fibers are emitted only
+/// when at least one leaf survives (the same only-non-empty invariant
+/// [`build_orientation`] maintains). Requires monotone maps — i.e. sorted
+/// index sets — so the surviving runs stay in sorted order.
+fn extract_orientation(
+    src: &Orientation,
+    inv_root: &[Option<u32>],
+    inv_mid: &[Option<u32>],
+    inv_leaf: &[Option<u32>],
+) -> Orientation {
+    let mut o = Orientation::default();
+    for f in 0..src.roots.len() {
+        let Some(nr) = inv_root[src.roots[f] as usize] else {
+            continue;
+        };
+        let mut root_open = false;
+        for g in src.fiber_ptr[f] as usize..src.fiber_ptr[f + 1] as usize {
+            let Some(nm) = inv_mid[src.mids[g] as usize] else {
+                continue;
+            };
+            let mut fiber_open = false;
+            for e in src.entry_ptr[g] as usize..src.entry_ptr[g + 1] as usize {
+                let Some(nl) = inv_leaf[src.leaves[e] as usize] else {
+                    continue;
+                };
+                if !root_open {
+                    o.roots.push(nr);
+                    o.fiber_ptr.push(o.mids.len() as u32);
+                    root_open = true;
+                }
+                if !fiber_open {
+                    o.mids.push(nm);
+                    o.entry_ptr.push(o.leaves.len() as u32);
+                    fiber_open = true;
+                }
+                o.leaves.push(nl);
+                o.vals.push(src.vals[e]);
+            }
+        }
     }
     o.fiber_ptr.push(o.mids.len() as u32);
     o.entry_ptr.push(o.leaves.len() as u32);
@@ -391,6 +457,40 @@ impl CsfTensor {
         out
     }
 
+    /// [`CsfTensor::extract`] emitting CSF directly — the large-sample path
+    /// (small `s`) of [`super::TensorData::extract`], where the extracted
+    /// tensor is big enough that its own sample-ALS sweeps should run on
+    /// the fiber-tree kernels.
+    ///
+    /// With **sorted-ascending** index sets (the sampler's documented
+    /// contract) the inverse maps are monotone, so walking each source
+    /// orientation yields the output's entries already in that
+    /// orientation's sort order: all three output trees build in one
+    /// filtered pass each, with **no sort and no COO round trip** —
+    /// `O(nnz_source)` total instead of the `O(nnz_out log nnz_out)` per
+    /// orientation a `from_coo` rebuild would pay. Unsorted index sets
+    /// (never produced by the sampler) fall back to extract-then-rebuild.
+    pub fn extract_csf(&self, is: &[usize], js: &[usize], ks: &[usize]) -> CsfTensor {
+        let ascending = |idx: &[usize]| idx.windows(2).all(|w| w[0] < w[1]);
+        if !(ascending(is) && ascending(js) && ascending(ks)) {
+            return CsfTensor::from_coo(self.extract(is, js, ks));
+        }
+        let inv_i = inverse_map(self.dims.0, is);
+        let inv_j = inverse_map(self.dims.1, js);
+        let inv_k = inverse_map(self.dims.2, ks);
+        // Per-orientation (root, mid, leaf) index levels mirror
+        // `build_orientation`: 0 → (i, j, k), 1 → (j, i, k), 2 → (k, j, i).
+        let orient = [
+            extract_orientation(&self.orient[0], &inv_i, &inv_j, &inv_k),
+            extract_orientation(&self.orient[1], &inv_j, &inv_i, &inv_k),
+            extract_orientation(&self.orient[2], &inv_k, &inv_j, &inv_i),
+        ];
+        let nnz = orient[0].vals.len();
+        debug_assert_eq!(nnz, orient[1].vals.len());
+        debug_assert_eq!(nnz, orient[2].vals.len());
+        CsfTensor { dims: (is.len(), js.len(), ks.len()), nnz, orient }
+    }
+
     /// Entries of frontal slice `k` as `(i, j, v)` triples, straight off
     /// the mode-3 tree (root = k) — the streaming replay primitive.
     pub fn slice_entries(&self, k: usize) -> Vec<(u32, u32, f64)> {
@@ -443,19 +543,21 @@ impl CsfTensor {
             return;
         }
         let (ii, jj, kk, vv) = batch.raw_parts();
-        let kk: Vec<u32> = kk.iter().map(|&k| k + shift).collect();
-        let b0 = build_orientation(ii, jj, &kk, vv, 0);
-        let b1 = build_orientation(ii, jj, &kk, vv, 1);
-        let b2 = build_orientation(ii, jj, &kk, vv, 2);
+        // The batch's `k` level is NOT pre-shifted: the rebase is monotone
+        // (sort order unchanged), so the merge applies it during its copies
+        // instead — one pass over the batch payload, no shifted clone.
+        let b0 = build_orientation(ii, jj, kk, vv, 0);
+        let b1 = build_orientation(ii, jj, kk, vv, 1);
+        let b2 = build_orientation(ii, jj, kk, vv, 2);
         let nnz = vv.len();
-        // `kk` is pre-shifted, so b2's roots need no further rebase.
-        self.merge_batch(b0, b1, &b2, 0, nnz, k_new);
+        self.merge_batch(&b0, &b1, &b2, shift, nnz, k_new);
     }
 
     /// [`CsfTensor::append_mode3`] for a CSF batch, without materializing
     /// it as COO: each batch orientation is already the sorted run the
-    /// merge needs — only its `k` level (leaves of trees 0–1, roots of
-    /// tree 2) is rebased.
+    /// merge needs — its `k` level (leaves of trees 0–1, roots of tree 2)
+    /// is rebased during the merge copies themselves, so the batch trees
+    /// are read in place and never cloned.
     pub fn append_mode3_csf(&mut self, other: &CsfTensor) {
         assert_eq!(
             (self.dims.0, self.dims.1),
@@ -467,22 +569,26 @@ impl CsfTensor {
             self.dims.2 += other.dims.2;
             return;
         }
-        let b0 = other.orient[0].with_shifted_leaves(shift);
-        let b1 = other.orient[1].with_shifted_leaves(shift);
-        // The mode-3 tree needs no shifted copy: its roots rebase during
-        // the tail concatenation itself.
-        self.merge_batch(b0, b1, &other.orient[2], shift, other.nnz, other.dims.2);
+        self.merge_batch(
+            &other.orient[0],
+            &other.orient[1],
+            &other.orient[2],
+            shift,
+            other.nnz,
+            other.dims.2,
+        );
     }
 
     /// Shared tail of the two append paths: merge per-orientation batch
-    /// runs (`b0`/`b1` leaf-rebased by the caller, `b2`'s roots rebased by
-    /// `b2_root_shift` during the concat), then grow the bookkeeping.
+    /// runs, rebasing the batch's `k` level by `k_shift` as it is copied
+    /// (leaves of `b0`/`b1` during the gallop/merge, roots of `b2` during
+    /// the tail concat), then grow the bookkeeping.
     fn merge_batch(
         &mut self,
-        b0: Orientation,
-        b1: Orientation,
+        b0: &Orientation,
+        b1: &Orientation,
         b2: &Orientation,
-        b2_root_shift: u32,
+        k_shift: u32,
         nnz: usize,
         k_new: usize,
     ) {
@@ -496,9 +602,9 @@ impl CsfTensor {
             "mode-3 append would grow nnz to {total}, past the u32 pointer \
              space of the CSF fiber trees"
         );
-        self.orient[0] = merge_orientation(&self.orient[0], &b0);
-        self.orient[1] = merge_orientation(&self.orient[1], &b1);
-        append_orientation_tail(&mut self.orient[2], b2, b2_root_shift);
+        self.orient[0] = merge_orientation(&self.orient[0], b0, k_shift);
+        self.orient[1] = merge_orientation(&self.orient[1], b1, k_shift);
+        append_orientation_tail(&mut self.orient[2], b2, k_shift);
         self.nnz += nnz;
         self.dims.2 += k_new;
     }
@@ -547,17 +653,21 @@ fn balanced_root_ranges(o: &Orientation, parts: usize) -> Vec<std::ops::Range<us
     out
 }
 
-/// Fiber-tree MTTKRP over a root range, compile-time rank: the output row
-/// accumulates in registers and stores once per root; each fiber loads its
-/// mid-factor row once; leaf entries stream contiguously.
+/// Fiber-tree MTTKRP over a root range, compile-time rank, writing each
+/// root's row into the **caller-owned** span `out_rows` (row-major, stride
+/// `R`, covering output rows `row_base..`): the output row accumulates in
+/// registers and stores once per root; each fiber loads its mid-factor row
+/// once; leaf entries stream contiguously. Rows without a root in `range`
+/// are never touched (the caller zeroes the buffer).
 fn mttkrp_roots_const<const R: usize>(
     o: &Orientation,
     midf: &Matrix,
     leaff: &Matrix,
     range: std::ops::Range<usize>,
-    local: &mut Matrix,
+    row_base: usize,
+    out_rows: &mut [f64],
 ) {
-    for (row, f) in range.enumerate() {
+    for f in range {
         let mut acc = [0.0f64; R];
         for g in o.fiber_ptr[f] as usize..o.fiber_ptr[f + 1] as usize {
             let mut fib = [0.0f64; R];
@@ -573,22 +683,27 @@ fn mttkrp_roots_const<const R: usize>(
                 acc[t] += fib[t] * mrow[t];
             }
         }
-        local.row_mut(row)[..R].copy_from_slice(&acc);
+        let row = o.roots[f] as usize - row_base;
+        out_rows[row * R..row * R + R].copy_from_slice(&acc);
     }
 }
 
-/// Runtime-rank fallback of [`mttkrp_roots_const`].
+/// Runtime-rank fallback of [`mttkrp_roots_const`]. The `fib` scratch is
+/// the only allocation on the runtime-rank path (one `Vec<f64>` of length
+/// `r` per worker per call).
 fn mttkrp_roots_generic(
     o: &Orientation,
     midf: &Matrix,
     leaff: &Matrix,
     range: std::ops::Range<usize>,
-    local: &mut Matrix,
+    row_base: usize,
+    out_rows: &mut [f64],
 ) {
     let r = midf.cols();
     let mut fib = vec![0.0f64; r];
-    for (row, f) in range.enumerate() {
-        let out = local.row_mut(row);
+    for f in range {
+        let row = o.roots[f] as usize - row_base;
+        let out = &mut out_rows[row * r..row * r + r];
         for g in o.fiber_ptr[f] as usize..o.fiber_ptr[f + 1] as usize {
             fib.iter_mut().for_each(|x| *x = 0.0);
             let es = o.entry_ptr[g] as usize..o.entry_ptr[g + 1] as usize;
@@ -606,6 +721,31 @@ fn mttkrp_roots_generic(
     }
 }
 
+/// Rank dispatch shared by the serial and parallel paths of
+/// [`CsfTensor::mttkrp_into`].
+fn mttkrp_roots_dispatch(
+    o: &Orientation,
+    midf: &Matrix,
+    leaff: &Matrix,
+    r: usize,
+    range: std::ops::Range<usize>,
+    row_base: usize,
+    out_rows: &mut [f64],
+) {
+    match r {
+        1 => mttkrp_roots_const::<1>(o, midf, leaff, range, row_base, out_rows),
+        2 => mttkrp_roots_const::<2>(o, midf, leaff, range, row_base, out_rows),
+        3 => mttkrp_roots_const::<3>(o, midf, leaff, range, row_base, out_rows),
+        4 => mttkrp_roots_const::<4>(o, midf, leaff, range, row_base, out_rows),
+        5 => mttkrp_roots_const::<5>(o, midf, leaff, range, row_base, out_rows),
+        6 => mttkrp_roots_const::<6>(o, midf, leaff, range, row_base, out_rows),
+        8 => mttkrp_roots_const::<8>(o, midf, leaff, range, row_base, out_rows),
+        10 => mttkrp_roots_const::<10>(o, midf, leaff, range, row_base, out_rows),
+        16 => mttkrp_roots_const::<16>(o, midf, leaff, range, row_base, out_rows),
+        _ => mttkrp_roots_generic(o, midf, leaff, range, row_base, out_rows),
+    }
+}
+
 impl Tensor3 for CsfTensor {
     fn dims(&self) -> (usize, usize, usize) {
         self.dims
@@ -619,7 +759,7 @@ impl Tensor3 for CsfTensor {
         self.nnz
     }
 
-    fn mttkrp(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix {
+    fn mttkrp_into(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix, out: &mut Matrix) {
         let r = a.cols();
         debug_assert_eq!(b.cols(), r);
         debug_assert_eq!(c.cols(), r);
@@ -631,35 +771,52 @@ impl Tensor3 for CsfTensor {
             _ => panic!("mode {mode} out of range"),
         };
         let o = &self.orient[mode];
-        let mut out = Matrix::zeros(mode_dim(self.dims, mode), r);
+        let nrows = mode_dim(self.dims, mode);
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (nrows, r),
+            "mttkrp_into out-buffer shape mismatch"
+        );
+        out.fill(0.0);
         if o.roots.is_empty() {
-            return out;
+            return;
         }
         let nw = workers_for(self.nnz / 4096 + 1).min(o.roots.len());
         let ranges = balanced_root_ranges(o, nw);
-        let locals = parallel_map(&ranges, |_, range| {
-            let mut local = Matrix::zeros(range.len(), r);
-            match r {
-                1 => mttkrp_roots_const::<1>(o, midf, leaff, range.clone(), &mut local),
-                2 => mttkrp_roots_const::<2>(o, midf, leaff, range.clone(), &mut local),
-                3 => mttkrp_roots_const::<3>(o, midf, leaff, range.clone(), &mut local),
-                4 => mttkrp_roots_const::<4>(o, midf, leaff, range.clone(), &mut local),
-                5 => mttkrp_roots_const::<5>(o, midf, leaff, range.clone(), &mut local),
-                6 => mttkrp_roots_const::<6>(o, midf, leaff, range.clone(), &mut local),
-                8 => mttkrp_roots_const::<8>(o, midf, leaff, range.clone(), &mut local),
-                10 => mttkrp_roots_const::<10>(o, midf, leaff, range.clone(), &mut local),
-                16 => mttkrp_roots_const::<16>(o, midf, leaff, range.clone(), &mut local),
-                _ => mttkrp_roots_generic(o, midf, leaff, range.clone(), &mut local),
-            }
-            local
-        });
-        // Scatter range-local rows to their (disjoint) global root rows.
-        for (range, local) in ranges.iter().zip(&locals) {
-            for (row, f) in range.clone().enumerate() {
-                out.row_mut(o.roots[f] as usize).copy_from_slice(local.row(row));
-            }
+        if ranges.len() == 1 {
+            mttkrp_roots_dispatch(o, midf, leaff, r, 0..o.roots.len(), 0, out.data_mut());
+            return;
         }
-        out
+        // Root ranges partition the ascending root list, so the workers own
+        // disjoint, ascending *output-row* intervals: split the caller's
+        // buffer at each range's first root row and hand every worker its
+        // own span. No local accumulators, no reduction, no scatter pass —
+        // the caller-owned buffer is the only output memory touched.
+        let nranges = ranges.len();
+        let mut tasks = Vec::with_capacity(nranges);
+        let mut rest: &mut [f64] = out.data_mut();
+        let mut consumed = 0usize; // output rows already split off
+        for (w, range) in ranges.iter().enumerate() {
+            let base = o.roots[range.start] as usize;
+            let end = if w + 1 < nranges {
+                o.roots[ranges[w + 1].start] as usize
+            } else {
+                nrows
+            };
+            let tail = std::mem::take(&mut rest);
+            // Rows `consumed..base` hold no root of any range in this
+            // split; they stay zero and belong to no worker.
+            let (_gap, tail) = tail.split_at_mut((base - consumed) * r);
+            let (span, tail) = tail.split_at_mut((end - base) * r);
+            rest = tail;
+            consumed = end;
+            tasks.push((range.clone(), base, span));
+        }
+        std::thread::scope(|s| {
+            for (range, base, span) in tasks {
+                s.spawn(move || mttkrp_roots_dispatch(o, midf, leaff, r, range, base, span));
+            }
+        });
     }
 
     fn mode_sum_squares(&self, mode: usize) -> Vec<f64> {
@@ -802,6 +959,88 @@ mod tests {
         let dc = csf.extract(&is, &js, &ks).to_dense();
         let dd = coo.extract(&is, &js, &ks).to_dense();
         assert_eq!(dc.data(), dd.data());
+    }
+
+    /// `extract_csf` must be *tree-identical* to rebuilding from the COO
+    /// extraction — the shared checker probes dims, nnz, entry order and
+    /// MTTKRP on all three orientations.
+    #[test]
+    fn extract_csf_matches_coo_extract_rebuild() {
+        let mut rng = Rng::new(15);
+        let coo = CooTensor::rand(12, 11, 10, 0.4, &mut rng);
+        let csf = CsfTensor::from_coo(coo.clone());
+        // Sorted sets (the sampler contract) — native tree-walk path.
+        let is = vec![0, 2, 5, 9, 11];
+        let js = vec![1, 4, 8];
+        let ks = vec![0, 3, 7, 9];
+        let got = csf.extract_csf(&is, &js, &ks);
+        let want = coo.extract(&is, &js, &ks);
+        crate::testing::assert_csf_matches_rebuild(&got, &want, 3, 0xE57, "sorted sets");
+        // Degenerate sets: empty mode-3 sample, single index per mode.
+        let got = csf.extract_csf(&[3], &[4], &[]);
+        assert_eq!(got.dims(), (1, 1, 0));
+        assert_eq!(got.nnz(), 0);
+        let got = csf.extract_csf(&[3], &[4], &[5]);
+        let want = coo.extract(&[3], &[4], &[5]);
+        crate::testing::assert_csf_matches_rebuild(&got, &want, 1, 0xE58, "single indices");
+    }
+
+    /// Unsorted index sets (never produced by the sampler) take the
+    /// rebuild fallback and must still be exactly right.
+    #[test]
+    fn extract_csf_unsorted_sets_fall_back_correctly() {
+        let mut rng = Rng::new(16);
+        let coo = CooTensor::rand(9, 8, 7, 0.4, &mut rng);
+        let csf = CsfTensor::from_coo(coo.clone());
+        let is = vec![7, 0, 3];
+        let js = vec![2, 6];
+        let ks = vec![5, 1, 4];
+        let got = csf.extract_csf(&is, &js, &ks);
+        let want = coo.extract(&is, &js, &ks);
+        assert_eq!(got.nnz(), want.nnz());
+        assert_eq!(got.to_dense().data(), want.to_dense().data());
+    }
+
+    /// A full-index extraction is the identity: the rebuilt trees must
+    /// match the source exactly.
+    #[test]
+    fn extract_csf_full_sets_is_identity() {
+        let mut rng = Rng::new(17);
+        let coo = CooTensor::rand(6, 5, 4, 0.5, &mut rng);
+        let csf = CsfTensor::from_coo(coo.clone());
+        let is: Vec<usize> = (0..6).collect();
+        let js: Vec<usize> = (0..5).collect();
+        let ks: Vec<usize> = (0..4).collect();
+        let got = csf.extract_csf(&is, &js, &ks);
+        crate::testing::assert_csf_matches_rebuild(&got, &coo, 2, 0xE59, "identity");
+    }
+
+    /// `mttkrp_into` into a dirty reused buffer must be bit-identical to
+    /// the allocating `mttkrp`, on both the serial and the parallel
+    /// (multi-range, caller-owned-span) paths.
+    #[test]
+    fn mttkrp_into_dirty_buffer_matches_serial_and_parallel() {
+        let mut rng = Rng::new(18);
+        // Small (serial) and large (parallel root ranges) tensors.
+        for (dim, density) in [(8usize, 0.4f64), (40, 0.5)] {
+            let coo = CooTensor::rand(dim, dim, dim, density, &mut rng);
+            let csf = CsfTensor::from_coo(coo);
+            for r in [4usize, 7] {
+                let a = Matrix::rand_gaussian(dim, r, &mut rng);
+                let b = Matrix::rand_gaussian(dim, r, &mut rng);
+                let c = Matrix::rand_gaussian(dim, r, &mut rng);
+                for mode in 0..3 {
+                    let want = csf.mttkrp(mode, &a, &b, &c);
+                    let mut out = Matrix::from_fn(dim, r, |_, _| 1e30);
+                    csf.mttkrp_into(mode, &a, &b, &c, &mut out);
+                    assert_eq!(
+                        out.max_abs_diff(&want),
+                        0.0,
+                        "dim {dim} rank {r} mode {mode}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -292,25 +292,31 @@ impl Tensor3 for DenseTensor {
         self.data.iter().filter(|&&x| x != 0.0).count()
     }
 
-    fn mttkrp(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix {
+    fn mttkrp_into(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix, out: &mut Matrix) {
         let r = match mode {
             0 => b.cols(),
             1 | 2 => a.cols(),
             _ => panic!("mode {mode} out of range"),
         };
         let (ni, nj, nk) = (self.i, self.j, self.k);
-        let mut out = Matrix::zeros(mode_dim(self.dims(), mode), r);
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (mode_dim(self.dims(), mode), r),
+            "mttkrp_into out-buffer shape mismatch"
+        );
+        // Dirty-buffer contract: the kernels accumulate, so reset first.
+        out.fill(0.0);
         // Monomorphised fast path for the common small ranks.
         match r {
-            1 => return { self.mttkrp_const::<1>(mode, a, b, c, &mut out); out },
-            2 => return { self.mttkrp_const::<2>(mode, a, b, c, &mut out); out },
-            3 => return { self.mttkrp_const::<3>(mode, a, b, c, &mut out); out },
-            4 => return { self.mttkrp_const::<4>(mode, a, b, c, &mut out); out },
-            5 => return { self.mttkrp_const::<5>(mode, a, b, c, &mut out); out },
-            6 => return { self.mttkrp_const::<6>(mode, a, b, c, &mut out); out },
-            8 => return { self.mttkrp_const::<8>(mode, a, b, c, &mut out); out },
-            10 => return { self.mttkrp_const::<10>(mode, a, b, c, &mut out); out },
-            16 => return { self.mttkrp_const::<16>(mode, a, b, c, &mut out); out },
+            1 => return self.mttkrp_const::<1>(mode, a, b, c, out),
+            2 => return self.mttkrp_const::<2>(mode, a, b, c, out),
+            3 => return self.mttkrp_const::<3>(mode, a, b, c, out),
+            4 => return self.mttkrp_const::<4>(mode, a, b, c, out),
+            5 => return self.mttkrp_const::<5>(mode, a, b, c, out),
+            6 => return self.mttkrp_const::<6>(mode, a, b, c, out),
+            8 => return self.mttkrp_const::<8>(mode, a, b, c, out),
+            10 => return self.mttkrp_const::<10>(mode, a, b, c, out),
+            16 => return self.mttkrp_const::<16>(mode, a, b, c, out),
             _ => {}
         }
         match mode {
@@ -386,7 +392,6 @@ impl Tensor3 for DenseTensor {
             }
             _ => unreachable!(),
         }
-        out
     }
 
     fn mode_sum_squares(&self, mode: usize) -> Vec<f64> {

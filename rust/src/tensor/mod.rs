@@ -31,9 +31,30 @@ pub trait Tensor3 {
     /// Number of explicitly stored entries.
     fn nnz(&self) -> usize;
 
-    /// Matricized-tensor times Khatri-Rao product for `mode ∈ {0,1,2}`:
-    /// `mode 0 → X_(1)(C ⊙ B)`, `mode 1 → X_(2)(C ⊙ A)`, `mode 2 → X_(3)(B ⊙ A)`.
-    fn mttkrp(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix;
+    /// Matricized-tensor times Khatri-Rao product for `mode ∈ {0,1,2}`
+    /// into a caller-owned buffer: `mode 0 → X_(1)(C ⊙ B)`,
+    /// `mode 1 → X_(2)(C ⊙ A)`, `mode 2 → X_(3)(B ⊙ A)`.
+    ///
+    /// `out` must be pre-shaped `mode_dim × R` and is **fully overwritten**
+    /// — dirty contents from a previous sweep are fine; the result is
+    /// bit-identical to a write into a fresh zeroed buffer. This is the
+    /// primitive every backend implements natively; the allocating
+    /// [`Tensor3::mttkrp`] is a thin wrapper over it, so workspace-reusing
+    /// callers (the ALS sweep loop) and one-shot callers share one kernel.
+    fn mttkrp_into(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix, out: &mut Matrix);
+
+    /// Allocating [`Tensor3::mttkrp_into`]: returns a fresh `mode_dim × R`
+    /// result matrix.
+    fn mttkrp(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix {
+        let r = match mode {
+            0 => b.cols(),
+            1 | 2 => a.cols(),
+            _ => panic!("mode {mode} out of range for a 3-mode tensor"),
+        };
+        let mut out = Matrix::zeros(mode_dim(self.dims(), mode), r);
+        self.mttkrp_into(mode, a, b, c, &mut out);
+        out
+    }
 
     /// Per-index sum of squares along `mode` (Eq. 1 of the paper — the
     /// Measure of Importance used as the sampling weight).
@@ -80,6 +101,12 @@ impl From<CsfTensor> for TensorData {
 /// [`TensorData::maybe_promote`]).
 pub const CSF_PROMOTION_NNZ: usize = 16_384;
 
+/// Estimated-nnz bar above which [`TensorData::extract`] on a CSF source
+/// emits CSF directly instead of COO. Same break-even as the promotion bar:
+/// below it the per-orientation tree build costs more than the sample-ALS
+/// MTTKRPs it accelerates; above it the `3 · iters` sweeps dominate.
+pub const CSF_EXTRACT_NNZ: usize = CSF_PROMOTION_NNZ;
+
 impl TensorData {
     /// True for both sparse representations (COO and CSF).
     pub fn is_sparse(&self) -> bool {
@@ -117,13 +144,43 @@ impl TensorData {
     }
 
     /// Extract the sub-tensor at the given (sorted or unsorted) index sets.
-    /// CSF extraction walks the fiber tree (skipping unsampled subtrees)
-    /// and yields COO — samples are summary-sized, below the promotion bar.
+    ///
+    /// A CSF source walks its fiber trees (skipping unsampled subtrees)
+    /// either way; the *output* format depends on the expected size. Most
+    /// samples are summary-sized (`dims/s` per mode) and emit COO, but a
+    /// large sample (small `s`) whose estimated nnz crosses
+    /// [`CSF_EXTRACT_NNZ`] emits CSF directly ([`CsfTensor::extract_csf`])
+    /// so its entire sample-ALS runs on the fiber-tree kernels instead of
+    /// the COO entry scan — with no COO round trip and no re-sort, because
+    /// sorted index sets preserve each orientation's entry order.
     pub fn extract(&self, is: &[usize], js: &[usize], ks: &[usize]) -> TensorData {
         match self {
             TensorData::Dense(t) => TensorData::Dense(t.extract(is, js, ks)),
             TensorData::Sparse(t) => TensorData::Sparse(t.extract(is, js, ks)),
-            TensorData::Csf(t) => TensorData::Sparse(t.extract(is, js, ks)),
+            TensorData::Csf(t) => {
+                // Expected extracted nnz under index-independent fill: the
+                // kept fraction per mode, applied to the source nnz. MoI-
+                // biased samples keep high-energy indices, so this under-
+                // estimates — a conservative bar (only clearly-large
+                // samples pay the CSF build).
+                let (ni, nj, nk) = t.dims();
+                let frac = |kept: usize, dim: usize| {
+                    if dim == 0 {
+                        0.0
+                    } else {
+                        kept as f64 / dim as f64
+                    }
+                };
+                let est = t.nnz() as f64
+                    * frac(is.len(), ni)
+                    * frac(js.len(), nj)
+                    * frac(ks.len(), nk);
+                if est >= CSF_EXTRACT_NNZ as f64 {
+                    TensorData::Csf(t.extract_csf(is, js, ks))
+                } else {
+                    TensorData::Sparse(t.extract(is, js, ks))
+                }
+            }
         }
     }
 
@@ -180,11 +237,11 @@ impl Tensor3 for TensorData {
             TensorData::Csf(t) => t.nnz(),
         }
     }
-    fn mttkrp(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix {
+    fn mttkrp_into(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix, out: &mut Matrix) {
         match self {
-            TensorData::Dense(t) => t.mttkrp(mode, a, b, c),
-            TensorData::Sparse(t) => t.mttkrp(mode, a, b, c),
-            TensorData::Csf(t) => t.mttkrp(mode, a, b, c),
+            TensorData::Dense(t) => t.mttkrp_into(mode, a, b, c, out),
+            TensorData::Sparse(t) => t.mttkrp_into(mode, a, b, c, out),
+            TensorData::Csf(t) => t.mttkrp_into(mode, a, b, c, out),
         }
     }
     fn mode_sum_squares(&self, mode: usize) -> Vec<f64> {

@@ -308,41 +308,51 @@ impl Tensor3 for CooTensor {
         self.vv.len()
     }
 
-    fn mttkrp(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix {
+    fn mttkrp_into(&self, mode: usize, a: &Matrix, b: &Matrix, c: &Matrix, out: &mut Matrix) {
         let r = a.cols();
         debug_assert_eq!(b.cols(), r);
         debug_assert_eq!(c.cols(), r);
         let out_dim = mode_dim(self.dims, mode);
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (out_dim, r),
+            "mttkrp_into out-buffer shape mismatch"
+        );
+        out.fill(0.0);
         let nnz = self.vv.len();
         let nw = workers_for(nnz / 4096 + 1);
-        // Per-thread accumulators, reduced at the end — no locks in the
-        // loop; the inner rank loop is monomorphised for common ranks.
-        let acc_fn = |range: std::ops::Range<usize>| -> Matrix {
-            let mut local = Matrix::zeros(out_dim, r);
-            match r {
-                1 => self.mttkrp_range_const::<1>(mode, a, b, c, range, &mut local),
-                2 => self.mttkrp_range_const::<2>(mode, a, b, c, range, &mut local),
-                3 => self.mttkrp_range_const::<3>(mode, a, b, c, range, &mut local),
-                4 => self.mttkrp_range_const::<4>(mode, a, b, c, range, &mut local),
-                5 => self.mttkrp_range_const::<5>(mode, a, b, c, range, &mut local),
-                6 => self.mttkrp_range_const::<6>(mode, a, b, c, range, &mut local),
-                8 => self.mttkrp_range_const::<8>(mode, a, b, c, range, &mut local),
-                10 => self.mttkrp_range_const::<10>(mode, a, b, c, range, &mut local),
-                16 => self.mttkrp_range_const::<16>(mode, a, b, c, range, &mut local),
-                _ => self.mttkrp_range_generic(mode, a, b, c, range, &mut local),
-            }
-            local
+        // The inner rank loop is monomorphised for the common ranks.
+        let acc_fn = |range: std::ops::Range<usize>, local: &mut Matrix| match r {
+            1 => self.mttkrp_range_const::<1>(mode, a, b, c, range, local),
+            2 => self.mttkrp_range_const::<2>(mode, a, b, c, range, local),
+            3 => self.mttkrp_range_const::<3>(mode, a, b, c, range, local),
+            4 => self.mttkrp_range_const::<4>(mode, a, b, c, range, local),
+            5 => self.mttkrp_range_const::<5>(mode, a, b, c, range, local),
+            6 => self.mttkrp_range_const::<6>(mode, a, b, c, range, local),
+            8 => self.mttkrp_range_const::<8>(mode, a, b, c, range, local),
+            10 => self.mttkrp_range_const::<10>(mode, a, b, c, range, local),
+            16 => self.mttkrp_range_const::<16>(mode, a, b, c, range, local),
+            _ => self.mttkrp_range_generic(mode, a, b, c, range, local),
         };
         if nw <= 1 {
-            return acc_fn(0..nnz);
+            // Serial path (every sample-ALS sweep on summary-sized
+            // tensors): scatter straight into the caller's buffer —
+            // allocation-free.
+            acc_fn(0..nnz, out);
+            return;
         }
+        // Parallel path: COO entries scatter to overlapping output rows, so
+        // workers still need per-thread accumulators (unlike CSF, whose
+        // root ranges own disjoint rows); the reduction is in-place.
         let ranges = chunk_ranges(nnz, nw);
-        let partials = crate::util::parallel_map(&ranges, |_, range| acc_fn(range.clone()));
-        let mut out = Matrix::zeros(out_dim, r);
-        for p in partials {
-            out = out.add(&p);
+        let partials = crate::util::parallel_map(&ranges, |_, range| {
+            let mut local = Matrix::zeros(out_dim, r);
+            acc_fn(range.clone(), &mut local);
+            local
+        });
+        for p in &partials {
+            out.add_in_place(p);
         }
-        out
     }
 
     fn mode_sum_squares(&self, mode: usize) -> Vec<f64> {

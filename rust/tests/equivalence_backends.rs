@@ -201,6 +201,84 @@ fn incremental_append_from_empty_accumulator() {
     }
 }
 
+/// `mttkrp_into` ≡ `mttkrp` for all three backends on all three modes —
+/// including writes into a *dirty* (non-zero) reused buffer — bit-for-bit,
+/// since the allocating path is a thin wrapper over the into-path.
+#[test]
+fn mttkrp_into_equals_mttkrp_all_backends_dirty_buffer() {
+    let mut rng = Rng::new(31);
+    // Monomorphised (4, 16) and runtime-rank (7) kernels; the 40³ case
+    // exercises the parallel paths (COO nnz chunks, CSF root spans).
+    for &(dim, density, r) in &[(9usize, 0.35f64, 4usize), (10, 0.3, 7), (40, 0.5, 16)] {
+        let coo = CooTensor::rand(dim, dim, dim, density, &mut rng);
+        let dense = coo.to_dense();
+        let csf = CsfTensor::from_coo(coo.clone());
+        let a = Matrix::rand_gaussian(dim, r, &mut rng);
+        let b = Matrix::rand_gaussian(dim, r, &mut rng);
+        let c = Matrix::rand_gaussian(dim, r, &mut rng);
+        let backends: [&dyn Tensor3; 3] = [&dense, &coo, &csf];
+        for (which, t) in backends.iter().enumerate() {
+            for mode in 0..3 {
+                let want = t.mttkrp(mode, &a, &b, &c);
+                // A reused buffer arrives dirty: poison every entry.
+                let mut out = Matrix::from_fn(dim, r, |i, j| 1e30 + (i * r + j) as f64);
+                t.mttkrp_into(mode, &a, &b, &c, &mut out);
+                assert_eq!(
+                    out.max_abs_diff(&want),
+                    0.0,
+                    "backend {which} dim {dim} rank {r} mode {mode}"
+                );
+            }
+        }
+    }
+}
+
+/// `extract_csf` ≡ COO `extract`: same dims, nnz and entry set, and MTTKRP
+/// agreement on all three orientations (via the shared rebuild checker).
+#[test]
+fn extract_csf_equals_coo_extract() {
+    let mut rng = Rng::new(32);
+    let coo = CooTensor::rand(14, 12, 10, 0.35, &mut rng);
+    let csf = CsfTensor::from_coo(coo.clone());
+    let is = vec![1, 4, 6, 11, 13];
+    let js = vec![0, 3, 9];
+    let ks = vec![2, 5, 6, 8];
+    let got = csf.extract_csf(&is, &js, &ks);
+    let want = coo.extract(&is, &js, &ks);
+    assert_eq!(got.dims(), (5, 3, 4));
+    sambaten::testing::assert_csf_matches_rebuild(&got, &want, 3, 0xEC5F, "extract_csf");
+    // Entry sets equal (order-independent check on top of the checker's
+    // ordered-stream equality).
+    let mut got_entries: Vec<_> = got.iter().collect();
+    let mut want_entries: Vec<_> = want.iter().collect();
+    got_entries.sort_by(|x, y| (x.0, x.1, x.2).cmp(&(y.0, y.1, y.2)));
+    want_entries.sort_by(|x, y| (x.0, x.1, x.2).cmp(&(y.0, y.1, y.2)));
+    assert_eq!(got_entries, want_entries);
+}
+
+/// `TensorData::extract` on a CSF source emits CSF when the estimated
+/// sample nnz crosses the bar, COO below it — and both agree with the COO
+/// scan either way.
+#[test]
+fn tensordata_extract_csf_emission_bar() {
+    use sambaten::tensor::CSF_EXTRACT_NNZ;
+    let mut rng = Rng::new(33);
+    let coo = CooTensor::rand(40, 40, 40, 0.5, &mut rng);
+    assert!(coo.nnz() >= CSF_EXTRACT_NNZ, "nnz {}", coo.nnz());
+    let td = TensorData::Csf(CsfTensor::from_coo(coo.clone()));
+    // Full index sets: estimated nnz = source nnz ≥ bar → CSF out.
+    let all: Vec<usize> = (0..40).collect();
+    let big = td.extract(&all, &all, &all);
+    assert!(big.is_csf(), "large sample must emit CSF");
+    assert_eq!(big.to_dense().data(), coo.to_dense().data());
+    // A thin sample stays COO (summary-sized, below the bar).
+    let few = vec![0, 13, 26, 39];
+    let small = td.extract(&few, &few, &few);
+    assert!(small.is_sparse() && !small.is_csf(), "small sample must stay COO");
+    let want = coo.extract(&few, &few, &few);
+    assert_eq!(small.to_dense().data(), want.to_dense().data());
+}
+
 #[test]
 fn tensordata_csf_roundtrip_through_append() {
     // Growing a CSF TensorData by sparse and dense batches matches the COO

@@ -5,7 +5,7 @@
 use anyhow::bail;
 use sambaten::coordinator::solver::InnerSolver;
 use sambaten::coordinator::{SamBaTen, SamBaTenConfig};
-use sambaten::cp::{AlsOptions, CpModel};
+use sambaten::cp::{AlsOptions, AlsWorkspace, CpModel};
 use sambaten::datagen::SyntheticSpec;
 use sambaten::tensor::{CooTensor, DenseTensor, Tensor3, TensorData};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -25,12 +25,13 @@ impl InnerSolver for FlakySolver {
         rank: usize,
         opts: &AlsOptions,
         seed: u64,
+        ws: &mut AlsWorkspace,
     ) -> anyhow::Result<CpModel> {
         let n = self.calls.fetch_add(1, Ordering::SeqCst);
         if n < self.fail_first {
             bail!("injected failure #{n}");
         }
-        self.inner.decompose(x, rank, opts, seed)
+        self.inner.decompose(x, rank, opts, seed, ws)
     }
 
     fn name(&self) -> &'static str {

@@ -333,6 +333,65 @@ fn prop_hungarian_not_worse_than_random() {
     });
 }
 
+/// `mttkrp_into` into a dirty reused buffer is bit-identical to the
+/// allocating `mttkrp`, for all three backends on all three modes — the
+/// contract that makes the ALS workspace reuse safe.
+#[test]
+fn prop_mttkrp_into_equals_mttkrp() {
+    check("mttkrp-into", CFG, |rng, _| {
+        let ni = small_biased(rng, 1, 12);
+        let nj = small_biased(rng, 1, 12);
+        let nk = small_biased(rng, 1, 12);
+        let r = 1 + rng.below(6);
+        let coo = CooTensor::rand(ni, nj, nk, 0.4, rng);
+        let dense = coo.to_dense();
+        let csf = CsfTensor::from_coo(coo.clone());
+        let a = Matrix::rand_gaussian(ni, r, rng);
+        let b = Matrix::rand_gaussian(nj, r, rng);
+        let c = Matrix::rand_gaussian(nk, r, rng);
+        let backends: [&dyn Tensor3; 3] = [&dense, &coo, &csf];
+        for (which, t) in backends.iter().enumerate() {
+            for mode in 0..3 {
+                let want = t.mttkrp(mode, &a, &b, &c);
+                let mut out = Matrix::from_fn(want.rows(), r, |_, _| 1e30 + rng.uniform());
+                t.mttkrp_into(mode, &a, &b, &c, &mut out);
+                if out.max_abs_diff(&want) != 0.0 {
+                    return Err(format!("backend {which} mode {mode} diverged from mttkrp"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `extract_csf` ≡ COO `extract` rebuilt as CSF: identical dims, nnz,
+/// entry stream and 3-mode MTTKRP, for random sorted sample sets (the
+/// sampler contract) over random tensors.
+#[test]
+fn prop_extract_csf_equals_extract() {
+    check("extract-csf", CFG, |rng, _| {
+        let ni = small_biased(rng, 1, 14);
+        let nj = small_biased(rng, 1, 14);
+        let nk = small_biased(rng, 1, 14);
+        let coo = CooTensor::rand(ni, nj, nk, 0.4, rng);
+        let csf = CsfTensor::from_coo(coo.clone());
+        // Random sorted-distinct subset of each mode (possibly empty).
+        let mut subset = |dim: usize| -> Vec<usize> {
+            (0..dim).filter(|_| rng.below(3) > 0).collect()
+        };
+        let is = subset(ni);
+        let js = subset(nj);
+        let ks = subset(nk);
+        let got = csf.extract_csf(&is, &js, &ks);
+        if got.dims() != (is.len(), js.len(), ks.len()) {
+            return Err(format!("dims {:?}", got.dims()));
+        }
+        let want = coo.extract(&is, &js, &ks);
+        let rank = 1 + rng.below(4);
+        csf_matches_rebuild(&got, &want, rank, rng.next_u64())
+    });
+}
+
 /// Dense and sparse MTTKRP agree on random tensors (all modes).
 #[test]
 fn prop_mttkrp_dense_sparse_agree() {
