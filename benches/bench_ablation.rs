@@ -32,8 +32,7 @@ fn main() {
     for (name, policy) in [("hungarian", MatchPolicy::Hungarian), ("greedy", MatchPolicy::Greedy)] {
         let mut err = f64::NAN;
         bench(&format!("ablation/match_{name}"), 0, 2, || {
-            let mut cfg = SamBaTenConfig::new(4, 2, 4, 7);
-            cfg.match_policy = policy;
+            let cfg = SamBaTenConfig::builder(4, 2, 4, 7).match_policy(policy).build().unwrap();
             let e = run(&existing, &batches, cfg);
             err = relative_error(&full, e.model());
         });
@@ -44,8 +43,7 @@ fn main() {
     for (name, refine) in [("refine_on", true), ("refine_off", false)] {
         let mut err = f64::NAN;
         bench(&format!("ablation/{name}"), 0, 2, || {
-            let mut cfg = SamBaTenConfig::new(4, 2, 4, 7);
-            cfg.refine_c = refine;
+            let cfg = SamBaTenConfig::builder(4, 2, 4, 7).refine_c(refine).build().unwrap();
             let e = run(&existing, &batches, cfg);
             err = relative_error(&full, e.model());
         });
@@ -56,7 +54,7 @@ fn main() {
     {
         let mut err = f64::NAN;
         bench("ablation/engine_native", 0, 2, || {
-            let e = run(&existing, &batches, SamBaTenConfig::new(4, 2, 4, 7));
+            let e = run(&existing, &batches, SamBaTenConfig::builder(4, 2, 4, 7).build().unwrap());
             err = relative_error(&full, e.model());
         });
         report("ablation/engine_native/rel_err", err, "");
@@ -64,8 +62,10 @@ fn main() {
             let svc = PjrtService::start(artifacts_dir()).unwrap();
             let mut err = f64::NAN;
             bench("ablation/engine_pjrt", 0, 2, || {
-                let cfg = SamBaTenConfig::new(4, 2, 4, 7)
-                    .with_solver(Arc::new(PjrtAlsSolver::new(svc.clone())));
+                let cfg = SamBaTenConfig::builder(4, 2, 4, 7)
+                    .solver(Arc::new(PjrtAlsSolver::new(svc.clone())))
+                    .build()
+                    .unwrap();
                 let e = run(&existing, &batches, cfg);
                 err = relative_error(&full, e.model());
             });
@@ -86,7 +86,8 @@ fn main() {
     for s in [2usize, 4] {
         let mut err = f64::NAN;
         bench(&format!("ablation/skewed_s{s}"), 0, 1, || {
-            let e = run(&existing, &batches, SamBaTenConfig::new(ds.rank, s, 4, 17));
+            let cfg = SamBaTenConfig::builder(ds.rank, s, 4, 17).build().unwrap();
+            let e = run(&existing, &batches, cfg);
             err = relative_error(&full, e.model());
         });
         report(&format!("ablation/skewed_s{s}/rel_err"), err, "");

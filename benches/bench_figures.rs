@@ -36,7 +36,8 @@ fn main() {
             let (existing, batches, full, _) = stream(dim, density, (dim / 4).max(4), 42);
             let mut err = f64::NAN;
             bench(&format!("fig5/{variant}/dim{dim}/SamBaTen"), 0, 2, || {
-                let e = run(&existing, &batches, SamBaTenConfig::new(4, 2, 4, 7));
+                let cfg = SamBaTenConfig::builder(4, 2, 4, 7).build().unwrap();
+                let e = run(&existing, &batches, cfg);
                 err = relative_error(&full, e.model());
             });
             report(&format!("fig6/{variant}/dim{dim}/rel_err"), err, "");
@@ -48,7 +49,7 @@ fn main() {
     for s in [2usize, 3, 4, 6] {
         let mut err = f64::NAN;
         bench(&format!("fig9/s{s}"), 0, 2, || {
-            let e = run(&existing, &batches, SamBaTenConfig::new(4, s, 4, 13));
+            let e = run(&existing, &batches, SamBaTenConfig::builder(4, s, 4, 13).build().unwrap());
             err = relative_error(&full, e.model());
         });
         report(&format!("fig9/s{s}/rel_err"), err, "");
@@ -59,7 +60,7 @@ fn main() {
     for r in [1usize, 2, 4, 8] {
         let mut score = f64::NAN;
         bench(&format!("fig10/r{r}"), 0, 1, || {
-            let e = run(&existing, &batches, SamBaTenConfig::new(4, 2, r, 37));
+            let e = run(&existing, &batches, SamBaTenConfig::builder(4, 2, r, 37).build().unwrap());
             score = fms(e.model(), &truth);
         });
         report(&format!("fig10/r{r}/fms"), score, "");
@@ -77,7 +78,8 @@ fn main() {
         for s in [2usize, 3, 5] {
             let mut score = f64::NAN;
             bench(&format!("fig11/r{r}_s{s}"), 0, 1, || {
-                let e = run(&existing, &batches, SamBaTenConfig::new(ds.rank, s, r, 41));
+                let cfg = SamBaTenConfig::builder(ds.rank, s, r, 41).build().unwrap();
+                let e = run(&existing, &batches, cfg);
                 score = fms(e.model(), &truth);
             });
             report(&format!("fig11/r{r}_s{s}/fms"), score, "");
@@ -89,7 +91,7 @@ fn main() {
     for (variant, qc) in [("without_getrank", false), ("with_getrank", true)] {
         let mut err = f64::NAN;
         bench(&format!("fig7/{variant}"), 0, 1, || {
-            let cfg = SamBaTenConfig::new(4, 2, 3, 23).with_quality_control(qc);
+            let cfg = SamBaTenConfig::builder(4, 2, 3, 23).quality_control(qc).build().unwrap();
             let e = run(&existing, &batches, cfg);
             err = relative_error(&full, e.model());
         });

@@ -22,7 +22,7 @@ fn main() {
     {
         let w = workload(dim, density, batch, 200 + dim as u64);
         for m in MethodKind::ALL {
-            let cfg = SamBaTenConfig::new(4, 2, 4, 7);
+            let cfg = SamBaTenConfig::builder(4, 2, 4, 7).build().unwrap();
             let mut rel_err = f64::NAN;
             bench(&format!("table5/dim{dim}/{}", m.name()), 0, 1, || {
                 let out = run_stream(&w, &[m], &cfg, 120.0).unwrap();

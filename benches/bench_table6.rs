@@ -30,7 +30,9 @@ fn main() {
             sambaten::tensor::Tensor3::nnz(&w.full)
         );
         for m in methods {
-            let cfg = SamBaTenConfig::new(ds.rank, ds.sampling_factor.min(4).max(2), 4, 7);
+            let cfg = SamBaTenConfig::builder(ds.rank, ds.sampling_factor.min(4).max(2), 4, 7)
+                .build()
+                .unwrap();
             let mut rel_err = f64::NAN;
             let mut completed = false;
             bench(&format!("table6/{}/{}", ds.name, m.name()), 0, 1, || {

@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     let mut headline: Vec<String> = Vec::new();
     for (name, w) in [dense, sparse, nips] {
         println!("\n=== workload {name}: {:?}, {} batches ===", w.full.dims(), w.batches.len());
-        let cfg = SamBaTenConfig::new(w.rank, 2, 4, 7);
+        let cfg = SamBaTenConfig::builder(w.rank, 2, 4, 7).build()?;
         let outcomes = run_stream(&w, &MethodKind::ALL, &cfg, 120.0)?;
         let mut cpals_time = f64::NAN;
         let mut samba_time = f64::NAN;
@@ -106,8 +106,9 @@ fn main() -> anyhow::Result<()> {
         let (existing, batches, _) = spec.generate_stream(0.1, 8);
         let (full, _) = spec.generate();
         let svc = PjrtService::start(artifacts_dir())?;
-        let cfg = SamBaTenConfig::new(4, 2, 4, 7)
-            .with_solver(Arc::new(PjrtAlsSolver::new(svc.clone())));
+        let cfg = SamBaTenConfig::builder(4, 2, 4, 7)
+            .solver(Arc::new(PjrtAlsSolver::new(svc.clone())))
+            .build()?;
         let mut engine = SamBaTen::init(&existing, cfg)?;
         let sw = sambaten::util::Stopwatch::started();
         for b in &batches {

@@ -14,7 +14,8 @@ fn main() {
     for (name, density) in [("dense64", 1.0), ("sparse64", 0.55)] {
         let spec = SyntheticSpec::cube(64, 4, density, 0.05, 17);
         let (existing, batches, _) = spec.generate_stream(0.1, 12);
-        let mut e = SamBaTen::init(&existing, SamBaTenConfig::new(4, 2, 4, 7)).unwrap();
+        let cfg = SamBaTenConfig::builder(4, 2, 4, 7).build().unwrap();
+        let mut e = SamBaTen::init(&existing, cfg).unwrap();
         let (mut ts, mut td, mut tm, mut tg, mut tot) = (0.0, 0.0, 0.0, 0.0, 0.0);
         for b in &batches {
             let st = e.ingest(b).unwrap();

@@ -7,6 +7,13 @@
 //! Generates a rank-4 synthetic tensor, treats 20% of it as the
 //! pre-existing data, streams the rest in batches, and compares the
 //! incrementally-maintained model against a full CP-ALS recompute.
+//!
+//! API tour: configs come from the validating
+//! [`SamBaTenConfig::builder`]; `ingest` is the write path; and the
+//! engine's [`handle()`](SamBaTen::handle) exposes the wait-free read path
+//! — epoch-stamped snapshots with `entry` / `fit` / `top_k` queries that
+//! other threads may hit while `ingest` runs (see the `social_stream`
+//! example and the `serve` CLI command for the full multi-stream service).
 
 use sambaten::coordinator::{SamBaTen, SamBaTenConfig};
 use sambaten::cp::{cp_als, AlsOptions};
@@ -20,10 +27,12 @@ fn main() -> anyhow::Result<()> {
     let (existing, batches, _truth) = spec.generate_stream(0.2, 10);
     let (full, _) = spec.generate();
 
-    // rank 4, sampling factor s=2, r=4 repetitions.
-    let cfg = SamBaTenConfig::new(4, 2, 4, 7);
+    // rank 4, sampling factor s=2, r=4 repetitions — validated at build().
+    let cfg = SamBaTenConfig::builder(4, 2, 4, 7).build()?;
     let mut engine = SamBaTen::init(&existing, cfg)?;
-    println!("initial fit on existing slices: {:.4}", engine.model().fit(&existing));
+    // The wait-free read handle; cloneable into as many readers as needed.
+    let handle = engine.handle();
+    println!("initial fit on existing slices: {:.4}", handle.fit(&existing));
 
     let (_, incr_secs) = timed(|| -> anyhow::Result<()> {
         for (n, batch) in batches.iter().enumerate() {
@@ -44,8 +53,11 @@ fn main() -> anyhow::Result<()> {
         cp_als(&full, 4, &AlsOptions { seed: 1, ..Default::default() }).unwrap().0
     });
 
-    let model = engine.model();
-    println!("\n== results ==");
+    // Read through the published snapshot — the same view any concurrent
+    // reader would see, stamped with the number of ingests applied.
+    let snap = handle.snapshot();
+    let model = &snap.model;
+    println!("\n== results (snapshot epoch {}) ==", snap.epoch);
     println!("SamBaTen total ingest time : {incr_secs:.2}s");
     println!("full CP-ALS recompute time : {full_secs:.2}s (one final decomposition)");
     println!("SamBaTen relative error    : {:.4}", relative_error(&full, model));

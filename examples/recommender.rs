@@ -1,21 +1,28 @@
-//! Location-based recommendation (§II-B, Figure 3a): a
+//! Location-based recommendation (§II-B, Figure 3a), served: a
 //! (location × hot-spot × people) tensor whose updates are sometimes
 //! *rank-deficient* — e.g. a quiet week in which only one latent travel
-//! pattern is active. Demonstrates GETRANK quality control (§III-B):
-//! without it, matching degrades on deficient batches; with it, the engine
-//! estimates each summary's true rank and matches only those components.
+//! pattern is active. The workload runs through the serving-layer API: a
+//! [`DecompositionService`] stream ingests weekly batches while a reader
+//! thread polls the wait-free [`StreamHandle`] mid-ingest, and the final
+//! recommendations come from `top_k` on a published snapshot.
+//!
+//! Demonstrates GETRANK quality control (§III-B): without it, matching
+//! degrades on deficient batches; with it, the engine estimates each
+//! summary's true rank and matches only those components.
 //!
 //! ```bash
 //! cargo run --release --example recommender
 //! ```
 
-use sambaten::coordinator::{SamBaTen, SamBaTenConfig};
+use sambaten::coordinator::SamBaTenConfig;
 use sambaten::cp::CpModel;
 use sambaten::datagen::SyntheticSpec;
-use sambaten::linalg::Matrix;
 use sambaten::metrics::{fms, relative_error};
-use sambaten::tensor::{DenseTensor, TensorData};
+use sambaten::serve::DecompositionService;
+use sambaten::tensor::{Tensor3, TensorData};
 use sambaten::util::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 /// Build a stream whose later batches only contain 2 of the 4 latent
 /// patterns (rank-deficient updates).
@@ -54,28 +61,60 @@ fn build_workload() -> (TensorData, Vec<TensorData>, TensorData, CpModel) {
     (existing.into(), batches, acc, truth)
 }
 
-use sambaten::tensor::Tensor3;
-
 fn run(quality_control: bool) -> anyhow::Result<(f64, f64, f64)> {
     let (existing, batches, full, truth) = build_workload();
-    let cfg = SamBaTenConfig::new(4, 2, 4, 21).with_quality_control(quality_control);
-    let mut engine = SamBaTen::init(&existing, cfg)?;
+    let cfg = SamBaTenConfig::builder(4, 2, 4, 21).quality_control(quality_control).build()?;
+    let svc = DecompositionService::new();
+    let handle = svc.register("recommender", &existing, cfg)?;
+
+    // Reader polling the handle while the worker ingests: the epoch only
+    // moves forward and every observed snapshot is internally consistent.
+    let stop = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let handle = handle.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut last = 0u64;
+            let mut reads = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let snap = handle.snapshot();
+                assert!(snap.epoch >= last);
+                last = snap.epoch;
+                assert_eq!(snap.model.factors[2].rows(), snap.dims.2);
+                reads += 1;
+            }
+            reads
+        })
+    };
+
     let sw = sambaten::util::Stopwatch::started();
-    for b in &batches {
-        let stats = engine.ingest(b)?;
+    let tickets: Vec<_> = batches
+        .into_iter()
+        .map(|b| svc.ingest("recommender", b))
+        .collect::<anyhow::Result<_>>()?;
+    for t in tickets {
+        let stats = t.wait()?;
         if quality_control {
             println!("  batch ranks under GETRANK: {:?}", stats.ranks_used);
         }
     }
     let secs = sw.elapsed_secs();
-    Ok((fms(engine.model(), &truth), relative_error(&full, engine.model()), secs))
+    stop.store(true, Ordering::Relaxed);
+    let reads = reader.join().expect("reader thread");
+
+    let snap = handle.snapshot();
+    println!("  ({reads} wait-free reads during {:.2}s of ingest)", secs);
+    // Final serving query: hot-spots recommended for location 0, scored
+    // over the whole people mode.
+    let recs = snap.top_k(0, 0, 3);
+    let ids: Vec<usize> = recs.iter().map(|(j, _)| *j).collect();
+    println!("  top hot-spots for location 0: {ids:?}");
+    let result = (fms(&snap.model, &truth), relative_error(&full, &snap.model), secs);
+    svc.shutdown();
+    Ok(result)
 }
 
 fn main() -> anyhow::Result<()> {
-    // Silence an unused-import lint path for Matrix in docs.
-    let _ = Matrix::zeros(1, 1);
-    let _ = DenseTensor::zeros(1, 1, 1);
-
     println!("recommender workload: 24x24x24, rank-4 truth, rank-2 deficient updates\n");
     println!("without GETRANK:");
     let (fms_off, err_off, t_off) = run(false)?;

@@ -1,21 +1,32 @@
-//! Social-network stream: the paper's motivating scenario (§I) — a
+//! Social-network stream, served: the paper's motivating scenario (§I) — a
 //! (wall-owner × poster × day) interaction tensor growing one day at a
-//! time, served through the streaming layer with backpressure.
+//! time — running through the serving-layer API. Days are submitted to a
+//! [`DecompositionService`] stream (bounded queue, backpressure, a
+//! `Ticket` per day), while an *analyst thread* hammers the stream's
+//! wait-free [`StreamHandle`] the whole time: epoch reads, reconstructed
+//! entries and `top_k` wall-recommendations, all mid-ingest, never
+//! blocking the writer and never observing a half-merged model.
 //!
 //! ```bash
 //! cargo run --release --example social_stream
 //! ```
 //!
 //! Uses the Facebook-wall simulation (heavy-tailed user popularity, shallow
-//! time mode — Table III's shape signature) and reports per-batch ingest
-//! latency and slice throughput, the numbers a production deployment cares
-//! about.
+//! time mode — Table III's shape signature) and reports per-day ingest
+//! latency, slice throughput and concurrent read throughput — the numbers
+//! a production deployment cares about.
 
-use sambaten::coordinator::{SamBaTen, SamBaTenConfig};
+use sambaten::coordinator::SamBaTenConfig;
 use sambaten::datagen::RealDatasetSim;
 use sambaten::metrics::relative_error;
+use sambaten::serve::DecompositionService;
 use sambaten::streaming::{StreamPump, TensorReplay};
 use sambaten::tensor::{Tensor3, TensorData};
+use sambaten::util::Stopwatch;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const STREAM: &str = "facebook-wall";
 
 fn main() -> anyhow::Result<()> {
     let ds = RealDatasetSim::by_name("Facebook-wall").unwrap();
@@ -28,41 +39,89 @@ fn main() -> anyhow::Result<()> {
         100.0 * full.nnz() as f64 / (ni * nj * nk) as f64
     );
 
-    // First day is the pre-existing tensor; the rest arrives as a stream.
+    // First days are the pre-existing tensor; the rest arrives as a stream.
     let TensorData::Sparse(s) = &full else { unreachable!() };
     let (existing, rest) = s.split_mode3(2.max(nk / 8));
     let existing = TensorData::Sparse(existing);
 
-    let cfg = SamBaTenConfig::new(ds.rank, 2, 4, 11);
-    let mut engine = SamBaTen::init(&existing, cfg)?;
+    let cfg = SamBaTenConfig::builder(ds.rank, 2, 4, 11).build()?;
+    let svc = DecompositionService::with_queue_cap(2);
+    let handle = svc.register(STREAM, &existing, cfg)?;
 
-    // Stream day-by-day (batch = 1 slice) through the bounded pump.
+    // Analyst thread: continuous queries against whatever epoch is
+    // currently published, while days ingest concurrently.
+    let stop = Arc::new(AtomicBool::new(false));
+    let analyst = {
+        let handle = handle.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut queries = 0u64;
+            let mut last_epoch = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let snap = handle.snapshot();
+                assert!(snap.epoch >= last_epoch, "epoch must be monotone");
+                last_epoch = snap.epoch;
+                // A consistent read: C's row count always matches the
+                // published slice count, even mid-ingest.
+                assert_eq!(snap.model.factors[2].rows(), snap.dims.2);
+                let _recs = snap.top_k(0, 0, 3); // "who posts on wall 0?"
+                let _e = snap.entry(0, 0, 0);
+                queries += 3;
+            }
+            (queries, last_epoch)
+        })
+    };
+
+    // Stream day-by-day (batch = 1 slice) through the pump into the
+    // service's bounded queue; tickets join per-day ingest latencies.
+    let sw = Stopwatch::started();
     let pump = StreamPump::spawn(TensorReplay::new(TensorData::Sparse(rest)), 1, true, 2)?;
-    let mut latencies = Vec::new();
+    let mut tickets = Vec::new();
     while let Some(batch) = pump.next_batch() {
-        let stats = engine.ingest(&batch)?;
+        tickets.push(svc.ingest(STREAM, batch?)?);
+    }
+    // Label each line by the day its batch brought in (the existing slices
+    // plus this batch's position) — the handle's dims would race ahead of
+    // the log since the worker keeps ingesting while we join tickets.
+    let mut latencies = Vec::new();
+    let mut day = existing.dims().2;
+    for t in tickets {
+        let stats = t.wait()?;
         latencies.push(stats.seconds);
+        day += stats.k_new;
         println!(
             "day {:>3}: ingest {:.3}s (summary {:?}, ranks {:?})",
-            engine.model().factors[2].rows(),
-            stats.seconds,
-            stats.sample_dims[0],
-            stats.ranks_used
+            day, stats.seconds, stats.sample_dims[0], stats.ranks_used
         );
     }
+    let wall = sw.elapsed_secs();
+    stop.store(true, Ordering::Relaxed);
+    let (queries, last_seen) = analyst.join().expect("analyst thread");
 
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let p50 = latencies[latencies.len() / 2];
     let p99 = latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)];
     let total: f64 = latencies.iter().sum();
+    let snap = handle.snapshot();
     println!("\n== serving report ==");
     println!("days ingested    : {}", latencies.len());
     println!("latency p50 / p99: {:.3}s / {:.3}s", p50, p99);
     println!("throughput       : {:.2} slices/s", latencies.len() as f64 / total);
     println!(
-        "final model      : rank {}, rel_err {:.4}",
-        engine.model().rank(),
-        relative_error(engine.tensor(), engine.model())
+        "concurrent reads : {queries} queries during ingest ({:.0}/s), last epoch seen {last_seen}",
+        queries as f64 / wall
     );
+    println!(
+        "final model      : epoch {}, rank {}, rel_err {:.4}",
+        snap.epoch,
+        snap.rank(),
+        relative_error(&full, &snap.model)
+    );
+    for st in svc.shutdown() {
+        println!(
+            "stream stats     : {} batches, {} slices, {} errors, {:.2}s ingest",
+            st.batches, st.slices, st.errors, st.ingest_seconds
+        );
+    }
     Ok(())
 }

@@ -86,7 +86,8 @@ mod tests {
             Box::new(Sdt::init(&existing, 2, 13).unwrap()),
             Box::new(Rlst::init(&existing, 2, 14).unwrap()),
             Box::new(SamBaTenMethod(
-                SamBaTen::init(&existing, SamBaTenConfig::new(2, 2, 4, 15)).unwrap(),
+                SamBaTen::init(&existing, SamBaTenConfig::builder(2, 2, 4, 15).build().unwrap())
+                    .unwrap(),
             )),
         ];
         for m in &mut methods {

@@ -110,23 +110,24 @@ impl RunConfig {
         Ok(())
     }
 
-    /// Build the engine configuration (solver attached by the caller, which
-    /// knows whether a PJRT service is running).
-    pub fn to_engine_config(&self) -> SamBaTenConfig {
-        let mut cfg =
-            SamBaTenConfig::new(self.rank, self.sampling_factor, self.repetitions, self.seed);
-        cfg.als =
-            AlsOptions { max_iters: self.als_max_iters, tol: self.als_tol, ..Default::default() };
-        cfg.refine_c = self.refine_c;
-        cfg.match_policy = if self.match_policy == "greedy" {
-            MatchPolicy::Greedy
-        } else {
-            MatchPolicy::Hungarian
-        };
-        if self.quality_control {
-            cfg = cfg.with_quality_control(true);
-        }
-        cfg
+    /// Build the engine configuration through the validating builder
+    /// (solver attached by the caller, which knows whether a PJRT service
+    /// is running).
+    pub fn to_engine_config(&self) -> Result<SamBaTenConfig> {
+        SamBaTenConfig::builder(self.rank, self.sampling_factor, self.repetitions, self.seed)
+            .als(AlsOptions {
+                max_iters: self.als_max_iters,
+                tol: self.als_tol,
+                ..Default::default()
+            })
+            .refine_c(self.refine_c)
+            .match_policy(if self.match_policy == "greedy" {
+                MatchPolicy::Greedy
+            } else {
+                MatchPolicy::Hungarian
+            })
+            .quality_control(self.quality_control)
+            .build()
     }
 }
 
@@ -186,9 +187,9 @@ als_tol = 1e-6
             match_policy: "greedy".into(),
             ..Default::default()
         };
-        let ec = cfg.to_engine_config();
-        assert_eq!(ec.rank, 3);
-        assert_eq!(ec.repetitions, 5);
-        assert_eq!(ec.match_policy, MatchPolicy::Greedy);
+        let ec = cfg.to_engine_config().unwrap();
+        assert_eq!(ec.rank(), 3);
+        assert_eq!(ec.repetitions(), 5);
+        assert_eq!(ec.match_policy(), MatchPolicy::Greedy);
     }
 }

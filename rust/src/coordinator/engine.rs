@@ -3,6 +3,7 @@
 //! repetitions executed in parallel (§III-A: repetitions need no
 //! synchronisation until the final merge).
 
+use super::snapshot::{ModelSnapshot, SnapshotCell, StreamHandle};
 use super::solver::{InnerSolver, NativeAlsSolver};
 use super::update::{normalize_sample_model, project_sample, ProjectedUpdate};
 use crate::corcondia::{getrank_with, GetRankOptions};
@@ -15,41 +16,50 @@ use anyhow::{Context, Result};
 use std::sync::{Arc, Mutex};
 
 /// Configuration of the SamBaTen engine.
+///
+/// Construct through [`SamBaTenConfig::builder`], which validates every
+/// knob before an engine can be started from it (`rank ≥ 1`,
+/// `sampling_factor ≥ 1`, `congruence_threshold ∈ [0, 1]`,
+/// `blend ∈ [0, 1]`, …). Fields are read through getters; the two
+/// adjustments that cannot invalidate a built config —
+/// [`with_solver`](Self::with_solver) and
+/// [`with_quality_control`](Self::with_quality_control) — remain available
+/// as post-build combinators.
 #[derive(Clone)]
 pub struct SamBaTenConfig {
     /// Universal rank `R`.
-    pub rank: usize,
+    pub(crate) rank: usize,
     /// Sampling factor `s` (each mode keeps `⌈dim/s⌉` indices).
-    pub sampling_factor: usize,
+    pub(crate) sampling_factor: usize,
     /// Optional distinct sampling factor for mode 3.
-    pub sampling_factor_mode3: Option<usize>,
+    pub(crate) sampling_factor_mode3: Option<usize>,
     /// Number of sampling repetitions `r`.
-    pub repetitions: usize,
+    pub(crate) repetitions: usize,
     /// Master seed — everything downstream is derived from it.
-    pub seed: u64,
+    pub(crate) seed: u64,
     /// ALS options for sample decompositions.
-    pub als: AlsOptions,
+    pub(crate) als: AlsOptions,
     /// Quality control (§III-B): estimate `R_new` per sample via GETRANK.
-    pub quality_control: bool,
+    pub(crate) quality_control: bool,
     /// GETRANK options (used only when `quality_control`).
-    pub getrank: GetRankOptions,
+    pub(crate) getrank: GetRankOptions,
     /// Component matching policy.
-    pub match_policy: MatchPolicy,
+    pub(crate) match_policy: MatchPolicy,
     /// Matches with aggregate congruence below this are dropped (a weak
     /// match would pollute the factors — the same failure §III-B guards).
-    pub congruence_threshold: f64,
+    pub(crate) congruence_threshold: f64,
     /// After the sample-space merge, refine the appended `C` rows with one
     /// closed-form least-squares solve against the incoming batch
     /// (`O(nnz(X_new)·R + R³)`, the same step OnlineCP performs). Stabilises
     /// λ drift from sample-ALS local optima; ablated in
     /// `benches/bench_ablation.rs`.
-    pub refine_c: bool,
+    pub(crate) refine_c: bool,
     /// Blend weight for non-zero `A`/`B`/`C_old` entries on sampled indices
     /// (`0` = the paper's literal zero-fill-only rule; see
     /// `update::merge_updates_with`).
-    pub blend: f64,
+    pub(crate) blend: f64,
     /// Inner decomposition engine (native ALS or PJRT AOT).
-    pub solver: Arc<dyn InnerSolver>,
+    pub(crate) solver: Arc<dyn InnerSolver>,
 }
 
 impl std::fmt::Debug for SamBaTenConfig {
@@ -65,37 +75,224 @@ impl std::fmt::Debug for SamBaTenConfig {
 }
 
 impl SamBaTenConfig {
-    /// `rank R`, `sampling factor s`, `repetitions r`, `seed`.
-    pub fn new(rank: usize, sampling_factor: usize, repetitions: usize, seed: u64) -> Self {
-        SamBaTenConfig {
-            rank,
-            sampling_factor,
-            sampling_factor_mode3: None,
-            repetitions,
-            seed,
-            als: AlsOptions { max_iters: 100, tol: 1e-5, ..Default::default() },
-            quality_control: false,
-            getrank: GetRankOptions::default(),
-            match_policy: MatchPolicy::Hungarian,
-            // Low hard gate: the blend weight already downweights weak
-            // matches quadratically, so the hard gate only needs to drop
-            // hopeless ones (tuned on dense/sparse/real-sim probes).
-            congruence_threshold: 0.25,
-            refine_c: true,
-            blend: 0.5,
-            solver: Arc::new(NativeAlsSolver),
+    /// Start a validating builder from the four core parameters: `rank R`,
+    /// `sampling factor s`, `repetitions r`, master `seed`. Every other
+    /// knob has a tuned default; call
+    /// [`build`](SamBaTenConfigBuilder::build) to validate and finish.
+    pub fn builder(
+        rank: usize,
+        sampling_factor: usize,
+        repetitions: usize,
+        seed: u64,
+    ) -> SamBaTenConfigBuilder {
+        SamBaTenConfigBuilder {
+            cfg: SamBaTenConfig {
+                rank,
+                sampling_factor,
+                sampling_factor_mode3: None,
+                repetitions,
+                seed,
+                als: AlsOptions { max_iters: 100, tol: 1e-5, ..Default::default() },
+                quality_control: false,
+                getrank: GetRankOptions::default(),
+                match_policy: MatchPolicy::Hungarian,
+                // Low hard gate: the blend weight already downweights weak
+                // matches quadratically, so the hard gate only needs to drop
+                // hopeless ones (tuned on dense/sparse/real-sim probes).
+                congruence_threshold: 0.25,
+                refine_c: true,
+                blend: 0.5,
+                solver: Arc::new(NativeAlsSolver),
+            },
         }
     }
 
+    /// `rank R`, `sampling factor s`, `repetitions r`, `seed`.
+    ///
+    /// # Panics
+    /// On parameters the builder would reject (any core parameter of 0).
+    #[deprecated(note = "use `SamBaTenConfig::builder(..).build()` — it validates instead \
+                         of panicking")]
+    pub fn new(rank: usize, sampling_factor: usize, repetitions: usize, seed: u64) -> Self {
+        Self::builder(rank, sampling_factor, repetitions, seed)
+            .build()
+            .expect("rank, sampling_factor and repetitions must all be >= 1")
+    }
+
+    /// Universal rank `R`.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Sampling factor `s`.
+    pub fn sampling_factor(&self) -> usize {
+        self.sampling_factor
+    }
+
+    /// Distinct mode-3 sampling factor, if pinned (otherwise the engine
+    /// picks one per batch — see `ingest`'s imbalanced-mode guard).
+    pub fn sampling_factor_mode3(&self) -> Option<usize> {
+        self.sampling_factor_mode3
+    }
+
+    /// Number of sampling repetitions `r`.
+    pub fn repetitions(&self) -> usize {
+        self.repetitions
+    }
+
+    /// Master seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// ALS options for sample decompositions.
+    pub fn als(&self) -> &AlsOptions {
+        &self.als
+    }
+
+    /// Whether GETRANK quality control (§III-B) is enabled.
+    pub fn quality_control(&self) -> bool {
+        self.quality_control
+    }
+
+    /// GETRANK options (used only under quality control).
+    pub fn getrank(&self) -> &GetRankOptions {
+        &self.getrank
+    }
+
+    /// Component matching policy.
+    pub fn match_policy(&self) -> MatchPolicy {
+        self.match_policy
+    }
+
+    /// Hard congruence gate for component matches.
+    pub fn congruence_threshold(&self) -> f64 {
+        self.congruence_threshold
+    }
+
+    /// Whether the appended `C` rows are LS-refined against the batch.
+    pub fn refine_c(&self) -> bool {
+        self.refine_c
+    }
+
+    /// Blend weight for non-zero entries on sampled indices.
+    pub fn blend(&self) -> f64 {
+        self.blend
+    }
+
+    /// The inner decomposition engine.
+    pub fn solver(&self) -> &Arc<dyn InnerSolver> {
+        &self.solver
+    }
+
+    /// Toggle GETRANK quality control on a built config (validity-
+    /// preserving: also caps GETRANK's candidate rank at `R`).
     pub fn with_quality_control(mut self, on: bool) -> Self {
         self.quality_control = on;
         self.getrank.max_rank = self.rank;
         self
     }
 
+    /// Swap the inner solver on a built config (validity-preserving).
     pub fn with_solver(mut self, solver: Arc<dyn InnerSolver>) -> Self {
         self.solver = solver;
         self
+    }
+}
+
+/// Validating builder for [`SamBaTenConfig`]; obtained from
+/// [`SamBaTenConfig::builder`]. Setters are chainable and unchecked —
+/// [`build`](Self::build) performs all validation in one place so error
+/// messages name the offending knob.
+#[derive(Clone)]
+pub struct SamBaTenConfigBuilder {
+    cfg: SamBaTenConfig,
+}
+
+impl SamBaTenConfigBuilder {
+    /// Pin a distinct sampling factor for (shallow) mode 3.
+    pub fn sampling_factor_mode3(mut self, s3: usize) -> Self {
+        self.cfg.sampling_factor_mode3 = Some(s3);
+        self
+    }
+
+    /// ALS options for the sample decompositions.
+    pub fn als(mut self, als: AlsOptions) -> Self {
+        self.cfg.als = als;
+        self
+    }
+
+    /// Enable GETRANK quality control (§III-B). `build` caps the GETRANK
+    /// candidate rank at `R`.
+    pub fn quality_control(mut self, on: bool) -> Self {
+        self.cfg.quality_control = on;
+        self
+    }
+
+    /// GETRANK options (only consulted under quality control).
+    pub fn getrank(mut self, opts: GetRankOptions) -> Self {
+        self.cfg.getrank = opts;
+        self
+    }
+
+    /// Component matching policy.
+    pub fn match_policy(mut self, policy: MatchPolicy) -> Self {
+        self.cfg.match_policy = policy;
+        self
+    }
+
+    /// Hard congruence gate in `[0, 1]`.
+    pub fn congruence_threshold(mut self, threshold: f64) -> Self {
+        self.cfg.congruence_threshold = threshold;
+        self
+    }
+
+    /// Toggle the closed-form `C`-row refinement.
+    pub fn refine_c(mut self, on: bool) -> Self {
+        self.cfg.refine_c = on;
+        self
+    }
+
+    /// Blend weight in `[0, 1]` for non-zero entries on sampled indices.
+    pub fn blend(mut self, blend: f64) -> Self {
+        self.cfg.blend = blend;
+        self
+    }
+
+    /// Inner decomposition engine.
+    pub fn solver(mut self, solver: Arc<dyn InnerSolver>) -> Self {
+        self.cfg.solver = solver;
+        self
+    }
+
+    /// Validate and produce the configuration.
+    pub fn build(mut self) -> Result<SamBaTenConfig> {
+        let c = &self.cfg;
+        anyhow::ensure!(c.rank >= 1, "rank must be >= 1 (got {})", c.rank);
+        anyhow::ensure!(
+            c.sampling_factor >= 1,
+            "sampling_factor must be >= 1 (got {})",
+            c.sampling_factor
+        );
+        if let Some(s3) = c.sampling_factor_mode3 {
+            anyhow::ensure!(s3 >= 1, "sampling_factor_mode3 must be >= 1 (got {s3})");
+        }
+        anyhow::ensure!(c.repetitions >= 1, "repetitions must be >= 1 (got {})", c.repetitions);
+        anyhow::ensure!(c.als.max_iters >= 1, "als.max_iters must be >= 1");
+        anyhow::ensure!(
+            c.congruence_threshold.is_finite() && (0.0..=1.0).contains(&c.congruence_threshold),
+            "congruence_threshold must be in [0, 1] (got {})",
+            c.congruence_threshold
+        );
+        anyhow::ensure!(
+            c.blend.is_finite() && (0.0..=1.0).contains(&c.blend),
+            "blend must be in [0, 1] (got {})",
+            c.blend
+        );
+        if self.cfg.quality_control {
+            self.cfg.getrank.max_rank = self.cfg.rank;
+        }
+        Ok(self.cfg)
     }
 }
 
@@ -120,6 +317,10 @@ pub struct BatchStats {
     pub phase_match_s: f64,
     /// Wall-clock of the final single-threaded merge.
     pub phase_merge_s: f64,
+    /// The optional closed-form `C`-row refinement was requested but
+    /// unavailable for this batch (degenerate normal matrix); the appended
+    /// rows keep the sample-space estimate. See `ingest` step 6b.
+    pub refine_fallback: bool,
 }
 
 /// The incremental decomposition engine (Algorithm 1).
@@ -137,6 +338,10 @@ pub struct SamBaTen {
     /// across every sweep of every ingest. The Mutex exists only to hand
     /// `&mut` access through the parallel-map closure.
     ws_pool: Vec<Mutex<AlsWorkspace>>,
+    /// Publication slot for the wait-free read path: every successful
+    /// ingest stores a fresh epoch-stamped snapshot here; [`StreamHandle`]s
+    /// from [`SamBaTen::handle`] read it without ever borrowing the engine.
+    cell: Arc<SnapshotCell<ModelSnapshot>>,
 }
 
 impl SamBaTen {
@@ -163,12 +368,34 @@ impl SamBaTen {
         let rng = Rng::new(cfg.seed ^ 0x5A3B_A7E9);
         let ws_pool =
             (0..cfg.repetitions.max(1)).map(|_| Mutex::new(AlsWorkspace::new())).collect();
-        SamBaTen { cfg, model, x: x_old.promoted(), rng, history: Vec::new(), ws_pool }
+        let x = x_old.promoted();
+        let cell = Arc::new(SnapshotCell::new(Arc::new(ModelSnapshot {
+            epoch: 0,
+            dims: x.dims(),
+            model: model.clone(),
+            stats: None,
+        })));
+        SamBaTen { cfg, model, x, rng, history: Vec::new(), ws_pool, cell }
     }
 
     /// Current model (unit-norm columns, weights in λ).
+    ///
+    /// This borrows the engine; concurrent readers should instead hold a
+    /// [`StreamHandle`] from [`SamBaTen::handle`], which never contends
+    /// with `ingest`.
     pub fn model(&self) -> &CpModel {
         &self.model
+    }
+
+    /// A cheap `Clone + Send + Sync` reader over this engine's published
+    /// snapshots (the wait-free read path — see `coordinator::snapshot`).
+    pub fn handle(&self) -> StreamHandle {
+        StreamHandle::new(self.cell.clone())
+    }
+
+    /// Number of batches successfully ingested (the published epoch).
+    pub fn epoch(&self) -> u64 {
+        self.history.len() as u64
     }
 
     /// The accumulated tensor.
@@ -314,9 +541,20 @@ impl SamBaTen {
         super::update::merge_updates_with(&mut self.model, &samples, &updates, k_new, blend);
         // 6b. Optional stabilisation: overwrite the appended C rows with the
         // closed-form LS solution against the batch (A, B fixed).
-        if self.cfg.refine_c {
-            self.refine_new_c_rows(x_new, k_old, k_new)?;
-        }
+        // Best-effort past this point: the merge has already mutated the
+        // model, so a refine failure (a degenerate normal matrix — e.g. a
+        // zero-energy component past the ridge schedule) must NOT abort the
+        // ingest. Aborting here would leave C extended while the tensor is
+        // not, and a long-lived engine (the serving layer keeps streams
+        // alive across failed batches) would go on to publish snapshots
+        // whose C row count disagrees with the published dims. The
+        // sample-space estimate the merge produced is still a valid model;
+        // the skipped refinement is surfaced in `BatchStats`.
+        let refine_fallback = if self.cfg.refine_c {
+            self.refine_new_c_rows(x_new, k_old, k_new).is_err()
+        } else {
+            false
+        };
         // 7. Grow the accumulated tensor. COO accumulators promote to CSF
         // once past the nnz bar (one-way — see `TensorData::maybe_promote`);
         // CSF accumulators merge the batch into their fiber trees
@@ -336,8 +574,19 @@ impl SamBaTen {
             phase_decompose_s: phases[1],
             phase_match_s: phases[2],
             phase_merge_s,
+            refine_fallback,
         };
         self.history.push(stats.clone());
+        // Publish the new epoch for wait-free readers. The snapshot is
+        // immutable and internally consistent (model ↔ dims ↔ stats from
+        // the same batch); readers that still hold the previous Arc keep
+        // their consistent older view.
+        self.cell.store(Arc::new(ModelSnapshot {
+            epoch: self.history.len() as u64,
+            dims: self.x.dims(),
+            model: self.model.clone(),
+            stats: Some(stats.clone()),
+        }));
         Ok(stats)
     }
 
@@ -393,7 +642,7 @@ mod tests {
     #[test]
     fn dense_incremental_tracks_full_tensor() {
         let spec = SyntheticSpec::dense(16, 16, 20, 3, 0.02, 42);
-        let cfg = SamBaTenConfig::new(3, 2, 4, 7);
+        let cfg = SamBaTenConfig::builder(3, 2, 4, 7).build().unwrap();
         let (engine, full) = run_stream(&spec, cfg, 4);
         let re = relative_error(&full, engine.model());
         assert!(re < 0.35, "relative error {re}");
@@ -403,7 +652,7 @@ mod tests {
     #[test]
     fn sparse_incremental_tracks_full_tensor() {
         let spec = SyntheticSpec::sparse(16, 16, 20, 2, 0.6, 0.02, 43);
-        let cfg = SamBaTenConfig::new(2, 2, 6, 8);
+        let cfg = SamBaTenConfig::builder(2, 2, 6, 8).build().unwrap();
         let (engine, full) = run_stream(&spec, cfg, 5);
         let re = relative_error(&full, engine.model());
         // Uniformly-dropped support makes CP genuinely harder (missing
@@ -417,7 +666,8 @@ mod tests {
         let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, 1);
         let (existing, batches, _) = spec.generate_stream(0.5, 3);
         let run = || {
-            let mut e = SamBaTen::init(&existing, SamBaTenConfig::new(2, 2, 2, 99)).unwrap();
+            let cfg = SamBaTenConfig::builder(2, 2, 2, 99).build().unwrap();
+            let mut e = SamBaTen::init(&existing, cfg).unwrap();
             for b in &batches {
                 e.ingest(b).unwrap();
             }
@@ -433,20 +683,23 @@ mod tests {
     fn batch_stats_recorded() {
         let spec = SyntheticSpec::dense(10, 10, 10, 2, 0.0, 2);
         let (existing, batches, _) = spec.generate_stream(0.5, 5);
-        let mut e = SamBaTen::init(&existing, SamBaTenConfig::new(2, 2, 3, 5)).unwrap();
+        let cfg = SamBaTenConfig::builder(2, 2, 3, 5).build().unwrap();
+        let mut e = SamBaTen::init(&existing, cfg).unwrap();
         let stats = e.ingest(&batches[0]).unwrap();
         assert_eq!(stats.k_new, 5);
         assert_eq!(stats.ranks_used, vec![2, 2, 2]);
         assert_eq!(stats.sample_dims.len(), 3);
         assert_eq!(e.history().len(), 1);
         assert!(stats.seconds > 0.0);
+        assert!(!stats.refine_fallback, "healthy batch must not fall back");
     }
 
     #[test]
     fn mismatched_batch_modes_rejected() {
         let spec = SyntheticSpec::dense(8, 8, 8, 2, 0.0, 3);
         let (x, _) = spec.generate();
-        let mut e = SamBaTen::init(&x, SamBaTenConfig::new(2, 2, 2, 1)).unwrap();
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 1).build().unwrap();
+        let mut e = SamBaTen::init(&x, cfg).unwrap();
         let (bad, _) = SyntheticSpec::dense(9, 8, 2, 2, 0.0, 4).generate();
         assert!(e.ingest(&bad).is_err());
     }
@@ -457,7 +710,7 @@ mod tests {
         // quality control should use a lower rank for some repetition.
         let spec = SyntheticSpec::dense(12, 12, 12, 3, 0.0, 5);
         let (existing, batches, _) = spec.generate_stream(0.7, 4);
-        let cfg = SamBaTenConfig::new(3, 2, 2, 6).with_quality_control(true);
+        let cfg = SamBaTenConfig::builder(3, 2, 2, 6).quality_control(true).build().unwrap();
         let mut e = SamBaTen::init(&existing, cfg).unwrap();
         let stats = e.ingest(&batches[0]).unwrap();
         assert!(stats.ranks_used.iter().all(|&r| r >= 1 && r <= 3));
@@ -467,7 +720,8 @@ mod tests {
     fn singleton_batches_supported() {
         let spec = SyntheticSpec::dense(10, 10, 8, 2, 0.0, 6);
         let (existing, batches, _) = spec.generate_stream(0.5, 1);
-        let mut e = SamBaTen::init(&existing, SamBaTenConfig::new(2, 2, 2, 2)).unwrap();
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 2).build().unwrap();
+        let mut e = SamBaTen::init(&existing, cfg).unwrap();
         for b in &batches {
             assert_eq!(b.dims().2, 1);
             e.ingest(b).unwrap();
@@ -476,9 +730,101 @@ mod tests {
     }
 
     #[test]
+    fn builder_validates_every_knob() {
+        assert!(SamBaTenConfig::builder(0, 2, 2, 1).build().is_err(), "rank 0");
+        assert!(SamBaTenConfig::builder(2, 0, 2, 1).build().is_err(), "s = 0");
+        assert!(SamBaTenConfig::builder(2, 2, 0, 1).build().is_err(), "r = 0");
+        assert!(
+            SamBaTenConfig::builder(2, 2, 2, 1).sampling_factor_mode3(0).build().is_err(),
+            "s3 = 0"
+        );
+        assert!(SamBaTenConfig::builder(2, 2, 2, 1).blend(1.5).build().is_err(), "blend > 1");
+        assert!(SamBaTenConfig::builder(2, 2, 2, 1).blend(-0.1).build().is_err(), "blend < 0");
+        assert!(SamBaTenConfig::builder(2, 2, 2, 1).blend(f64::NAN).build().is_err(), "blend NaN");
+        assert!(
+            SamBaTenConfig::builder(2, 2, 2, 1).congruence_threshold(1.01).build().is_err(),
+            "congruence > 1"
+        );
+        assert!(
+            SamBaTenConfig::builder(2, 2, 2, 1)
+                .als(AlsOptions { max_iters: 0, ..Default::default() })
+                .build()
+                .is_err(),
+            "0 ALS iters"
+        );
+    }
+
+    #[test]
+    fn builder_roundtrips_through_getters() {
+        let cfg = SamBaTenConfig::builder(3, 4, 5, 6)
+            .blend(0.25)
+            .congruence_threshold(0.5)
+            .refine_c(false)
+            .match_policy(MatchPolicy::Greedy)
+            .sampling_factor_mode3(2)
+            .quality_control(true)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.rank(), 3);
+        assert_eq!(cfg.sampling_factor(), 4);
+        assert_eq!(cfg.repetitions(), 5);
+        assert_eq!(cfg.seed(), 6);
+        assert_eq!(cfg.sampling_factor_mode3(), Some(2));
+        assert!((cfg.blend() - 0.25).abs() < 1e-15);
+        assert!((cfg.congruence_threshold() - 0.5).abs() < 1e-15);
+        assert!(!cfg.refine_c());
+        assert_eq!(cfg.match_policy(), MatchPolicy::Greedy);
+        assert!(cfg.quality_control());
+        // build() caps the GETRANK candidate rank at R, exactly like the
+        // with_quality_control combinator.
+        assert_eq!(cfg.getrank().max_rank, 3);
+        assert_eq!(cfg.solver().name(), "native-als");
+    }
+
+    #[test]
+    fn ingest_publishes_epoch_stamped_snapshots() {
+        let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, 8);
+        let (existing, batches, _) = spec.generate_stream(0.5, 3);
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 4).build().unwrap();
+        let mut e = SamBaTen::init(&existing, cfg).unwrap();
+        let handle = e.handle();
+        // Epoch 0: the initial model, no batch stats.
+        let snap0 = handle.snapshot();
+        assert_eq!(snap0.epoch, 0);
+        assert_eq!(snap0.dims, existing.dims());
+        assert!(snap0.stats.is_none());
+        let mut k = existing.dims().2;
+        for (n, b) in batches.iter().enumerate() {
+            e.ingest(b).unwrap();
+            k += b.dims().2;
+            let snap = handle.snapshot();
+            assert_eq!(snap.epoch, (n + 1) as u64);
+            assert_eq!(handle.epoch(), e.epoch());
+            assert_eq!(snap.dims.2, k);
+            assert_eq!(snap.model.factors[2].rows(), k, "model ↔ dims consistency");
+            assert_eq!(snap.stats.as_ref().unwrap().k_new, b.dims().2);
+        }
+        // The pre-ingest snapshot a slow reader might still hold is intact.
+        assert_eq!(snap0.epoch, 0);
+        assert_eq!(snap0.model.factors[2].rows(), existing.dims().2);
+    }
+
+    #[test]
+    fn failed_ingest_does_not_publish() {
+        let spec = SyntheticSpec::dense(8, 8, 8, 2, 0.0, 9);
+        let (x, _) = spec.generate();
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 5).build().unwrap();
+        let mut e = SamBaTen::init(&x, cfg).unwrap();
+        let handle = e.handle();
+        let (bad, _) = SyntheticSpec::dense(9, 8, 2, 2, 0.0, 10).generate();
+        assert!(e.ingest(&bad).is_err());
+        assert_eq!(handle.epoch(), 0, "a rejected batch must not advance the epoch");
+    }
+
+    #[test]
     fn model_stays_canonical_after_ingests() {
         let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.01, 7);
-        let cfg = SamBaTenConfig::new(2, 2, 3, 3);
+        let cfg = SamBaTenConfig::builder(2, 2, 3, 3).build().unwrap();
         let (engine, _) = run_stream(&spec, cfg, 4);
         let m = engine.model();
         for f in 0..3 {

@@ -14,10 +14,19 @@
 //!
 //! Quality control (§III-B) runs GETRANK on each summary and matches only
 //! the `R_new ≤ R` components that are actually present.
+//!
+//! The public API is split into a **write path** (`SamBaTen::ingest`,
+//! `&mut self`) and a **wait-free read path** ([`snapshot`]): every ingest
+//! publishes an immutable epoch-stamped [`ModelSnapshot`], and cheap
+//! [`StreamHandle`] readers query it — `snapshot()`, `entry`, `fit`,
+//! `top_k` — without ever contending with the writer. The multi-stream
+//! serving layer ([`crate::serve`]) builds on exactly this split.
 
 pub mod engine;
+pub mod snapshot;
 pub mod solver;
 pub mod update;
 
-pub use engine::{BatchStats, SamBaTen, SamBaTenConfig};
+pub use engine::{BatchStats, SamBaTen, SamBaTenConfig, SamBaTenConfigBuilder};
+pub use snapshot::{ModelSnapshot, SnapshotCell, StreamHandle};
 pub use solver::{InnerSolver, NativeAlsSolver};

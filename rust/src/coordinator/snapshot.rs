@@ -1,0 +1,310 @@
+//! Lock-free-in-practice model publication: the engine's wait-free read
+//! path.
+//!
+//! The paper's motivating scenario (§I) is a *live* system — updates stream
+//! in while analysts continuously query the current decomposition. Before
+//! this module the only way to read the model was `SamBaTen::model(&self)`,
+//! which shares a borrow with `ingest(&mut self)`: every reader serialised
+//! behind the full ingest. The redesign splits the API:
+//!
+//! * **Write path** — `SamBaTen::ingest` stays `&mut self`; at the end of
+//!   each successful batch it publishes an immutable, epoch-stamped
+//!   [`ModelSnapshot`] into a [`SnapshotCell`].
+//! * **Read path** — [`StreamHandle`] is a cheap `Clone + Send + Sync`
+//!   handle over that cell. `snapshot()` returns an `Arc<ModelSnapshot>`
+//!   that stays internally consistent forever (it is never mutated);
+//!   readers keep querying mid-ingest and simply observe the previous
+//!   epoch until the next one lands.
+//!
+//! [`SnapshotCell`] is a hand-rolled `ArcSwap` (the offline crate set has
+//! no `arc-swap`): an `RwLock<Arc<T>>` whose critical sections are a single
+//! pointer clone/store — no allocation, no user code, no panic path. A raw
+//! `AtomicPtr` swap would shave the remaining nanoseconds but is unsound
+//! without hazard pointers or deferred reclamation (a reader could load a
+//! pointer the writer is concurrently dropping); the bounded lock buys the
+//! same practical wait-freedom — `bench_micro` measures sub-microsecond
+//! acquisition while a 1K³ ingest runs — with none of that machinery.
+
+use super::engine::BatchStats;
+use crate::cp::CpModel;
+use crate::tensor::Tensor3;
+use std::sync::{Arc, RwLock};
+
+/// A single-slot atomic publication cell: writers [`store`](Self::store) a
+/// new `Arc`, readers [`load`](Self::load) the current one. Both critical
+/// sections are a pointer copy (~ns); neither can panic while holding the
+/// lock, and a poisoned lock (impossible in practice) is recovered rather
+/// than propagated — the slot only ever holds a fully-formed `Arc`.
+pub struct SnapshotCell<T> {
+    slot: RwLock<Arc<T>>,
+}
+
+impl<T> SnapshotCell<T> {
+    pub fn new(initial: Arc<T>) -> Self {
+        SnapshotCell { slot: RwLock::new(initial) }
+    }
+
+    /// Current value (clones the `Arc`, never the payload).
+    pub fn load(&self) -> Arc<T> {
+        self.slot.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Publish a new value; readers that already hold the old `Arc` keep a
+    /// consistent view until they drop it.
+    pub fn store(&self, value: Arc<T>) {
+        *self.slot.write().unwrap_or_else(|e| e.into_inner()) = value;
+    }
+}
+
+/// An immutable, epoch-stamped view of a stream's decomposition state.
+///
+/// Epoch semantics: epoch `0` is the initial model (before any ingest);
+/// each successful `ingest` publishes epoch `n` = number of batches applied
+/// so far. Within one snapshot every field is mutually consistent — in
+/// particular `model.factors[2].rows() == dims.2` always holds, which is
+/// exactly the invariant a reader cannot get from two separate racing
+/// reads of a mutable engine.
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    /// Number of ingests applied when this snapshot was published.
+    pub epoch: u64,
+    /// Dims of the accumulated tensor at publication time.
+    pub dims: (usize, usize, usize),
+    /// The model (unit-norm factor columns, weights in λ).
+    pub model: CpModel,
+    /// Stats of the batch that produced this epoch (`None` at epoch 0).
+    pub stats: Option<BatchStats>,
+}
+
+impl ModelSnapshot {
+    /// Rank of the published model.
+    pub fn rank(&self) -> usize {
+        self.model.rank()
+    }
+
+    /// Reconstructed entry `X̂(i, j, k)`.
+    pub fn entry(&self, i: usize, j: usize, k: usize) -> f64 {
+        let (ni, nj, nk) = self.dims;
+        assert!(
+            i < ni && j < nj && k < nk,
+            "entry ({i}, {j}, {k}) out of range for a {ni}x{nj}x{nk} snapshot"
+        );
+        self.model.entry(i, j, k)
+    }
+
+    /// Fit `1 - ||X - X̂|| / ||X||` of this snapshot against any tensor.
+    pub fn fit<T: Tensor3 + ?Sized>(&self, x: &T) -> f64 {
+        self.model.fit(x)
+    }
+
+    /// Recommender scoring: rank the rows of mode `(mode + 1) % 3` by
+    /// predicted total interaction with row `row` of `mode`, marginalised
+    /// over the remaining mode —
+    /// `score(j) = Σ_t λ_t · F_m[row,t] · F_n[j,t] · (Σ_p F_o[p,t])`,
+    /// i.e. the sum of reconstructed entries `X̂(row, j, :)` (for
+    /// `mode = 0`) over the third mode. For the paper's wall-owner ×
+    /// poster × day tensor, `top_k(0, u, k)` is "the k posters most active
+    /// on user u's wall, totalled over all days".
+    ///
+    /// Returns `(row_index, score)` pairs, highest score first; `O(dim·R)`
+    /// plus a partial select — no tensor materialisation. Empty when `row`
+    /// is out of range or `k == 0`. Panics on `mode > 2`.
+    pub fn top_k(&self, mode: usize, row: usize, k: usize) -> Vec<(usize, f64)> {
+        assert!(mode < 3, "mode {mode} out of range");
+        let f_query = &self.model.factors[mode];
+        if row >= f_query.rows() || k == 0 {
+            return Vec::new();
+        }
+        let f_target = &self.model.factors[(mode + 1) % 3];
+        let f_other = &self.model.factors[(mode + 2) % 3];
+        let r = self.model.rank();
+        // Per-component weight: λ_t · F_m[row,t] · (column-sum of F_o).
+        let qrow = f_query.row(row);
+        let mut w = vec![0.0; r];
+        for t in 0..r {
+            let mut s = 0.0;
+            for p in 0..f_other.rows() {
+                s += f_other[(p, t)];
+            }
+            w[t] = self.model.lambda[t] * qrow[t] * s;
+        }
+        let mut scored: Vec<(usize, f64)> = (0..f_target.rows())
+            .map(|j| {
+                let fr = f_target.row(j);
+                (j, (0..r).map(|t| w[t] * fr[t]).sum())
+            })
+            .collect();
+        let k = k.min(scored.len());
+        let desc = |a: &(usize, f64), b: &(usize, f64)| {
+            b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal)
+        };
+        if k < scored.len() {
+            scored.select_nth_unstable_by(k - 1, desc);
+            scored.truncate(k);
+        }
+        scored.sort_by(desc);
+        scored
+    }
+}
+
+/// A cheap, `Clone + Send + Sync` reader over a stream's published
+/// snapshots. Obtained from [`SamBaTen::handle`](super::SamBaTen::handle)
+/// or [`DecompositionService::register`](crate::serve::DecompositionService::register);
+/// clones freely across threads. No method here ever contends with the
+/// writer beyond the cell's pointer-copy critical section.
+///
+/// The convenience accessors (`epoch`, `entry`, `fit`, `top_k`) each load
+/// the *current* snapshot; a reader that needs several mutually-consistent
+/// answers should take one [`snapshot`](Self::snapshot) and query that.
+#[derive(Clone)]
+pub struct StreamHandle {
+    cell: Arc<SnapshotCell<ModelSnapshot>>,
+}
+
+impl StreamHandle {
+    pub(crate) fn new(cell: Arc<SnapshotCell<ModelSnapshot>>) -> Self {
+        StreamHandle { cell }
+    }
+
+    /// The current published snapshot (wait-free; see module docs).
+    pub fn snapshot(&self) -> Arc<ModelSnapshot> {
+        self.cell.load()
+    }
+
+    /// Epoch of the current snapshot (number of ingests applied).
+    pub fn epoch(&self) -> u64 {
+        self.snapshot().epoch
+    }
+
+    /// Dims of the accumulated tensor at the current epoch.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        self.snapshot().dims
+    }
+
+    /// Rank of the current model.
+    pub fn rank(&self) -> usize {
+        self.snapshot().rank()
+    }
+
+    /// Reconstructed entry at the current epoch.
+    pub fn entry(&self, i: usize, j: usize, k: usize) -> f64 {
+        self.snapshot().entry(i, j, k)
+    }
+
+    /// Fit of the current model against `x` (see [`ModelSnapshot::fit`]).
+    pub fn fit<T: Tensor3 + ?Sized>(&self, x: &T) -> f64 {
+        self.snapshot().fit(x)
+    }
+
+    /// Top-k scoring at the current epoch (see [`ModelSnapshot::top_k`]).
+    pub fn top_k(&self, mode: usize, row: usize, k: usize) -> Vec<(usize, f64)> {
+        self.snapshot().top_k(mode, row, k)
+    }
+}
+
+impl std::fmt::Debug for StreamHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        f.debug_struct("StreamHandle")
+            .field("epoch", &s.epoch)
+            .field("dims", &s.dims)
+            .field("rank", &s.rank())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::util::Rng;
+
+    fn snapshot_for(dims: (usize, usize, usize), r: usize, seed: u64) -> ModelSnapshot {
+        let mut rng = Rng::new(seed);
+        let mut model = CpModel::new(
+            Matrix::rand_gaussian(dims.0, r, &mut rng),
+            Matrix::rand_gaussian(dims.1, r, &mut rng),
+            Matrix::rand_gaussian(dims.2, r, &mut rng),
+            (0..r).map(|_| 0.5 + rng.uniform()).collect(),
+        );
+        model.normalize();
+        ModelSnapshot { epoch: 0, dims, model, stats: None }
+    }
+
+    #[test]
+    fn cell_store_load_roundtrip() {
+        let cell = SnapshotCell::new(Arc::new(1u64));
+        assert_eq!(*cell.load(), 1);
+        let held = cell.load();
+        cell.store(Arc::new(2));
+        assert_eq!(*cell.load(), 2);
+        // A reader holding the old Arc keeps its consistent view.
+        assert_eq!(*held, 1);
+    }
+
+    #[test]
+    fn entry_matches_model() {
+        let s = snapshot_for((4, 5, 6), 3, 1);
+        assert!((s.entry(1, 2, 3) - s.model.entry(1, 2, 3)).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn entry_rejects_out_of_range() {
+        snapshot_for((3, 3, 3), 2, 2).entry(3, 0, 0);
+    }
+
+    #[test]
+    fn top_k_matches_brute_force_reconstruction() {
+        let s = snapshot_for((5, 7, 4), 3, 3);
+        let dense = s.model.to_dense();
+        // Brute force: total predicted interaction of row 2 of mode 0 with
+        // each mode-1 row, summed over mode 2.
+        let mut expect: Vec<(usize, f64)> = (0..7)
+            .map(|j| (j, (0..4).map(|k| dense.get(2, j, k)).sum::<f64>()))
+            .collect();
+        expect.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let got = s.top_k(0, 2, 3);
+        assert_eq!(got.len(), 3);
+        for (g, e) in got.iter().zip(&expect) {
+            assert_eq!(g.0, e.0);
+            assert!((g.1 - e.1).abs() < 1e-9, "score {} vs {}", g.1, e.1);
+        }
+        // Scores descending.
+        assert!(got.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    #[test]
+    fn top_k_edge_cases() {
+        let s = snapshot_for((3, 3, 3), 2, 4);
+        assert!(s.top_k(0, 99, 2).is_empty(), "out-of-range row");
+        assert!(s.top_k(1, 0, 0).is_empty(), "k = 0");
+        assert_eq!(s.top_k(2, 0, 99).len(), 3, "k clamps to the mode dim");
+    }
+
+    #[test]
+    fn handle_is_cloneable_across_threads() {
+        let cell = Arc::new(SnapshotCell::new(Arc::new(snapshot_for((3, 3, 3), 2, 5))));
+        let handle = StreamHandle::new(cell.clone());
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        let snap = h.snapshot();
+                        assert_eq!(snap.model.factors[2].rows(), snap.dims.2);
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..50 {
+            let mut next = snapshot_for((3, 3, 3), 2, 6);
+            next.epoch = handle.epoch() + 1;
+            cell.store(Arc::new(next));
+        }
+        for r in readers {
+            r.join().unwrap();
+        }
+        assert_eq!(handle.epoch(), 50);
+    }
+}

@@ -112,7 +112,7 @@ pub fn table7(ctx: &EvalContext) -> Result<()> {
     for dim in dims {
         let rank = 4;
         let (existing, batches, full, truth) = deficient_stream(dim, rank, 2, dim / 4, 31);
-        let base = SamBaTenConfig::new(rank, 2, 3, 17);
+        let base = SamBaTenConfig::builder(rank, 2, 3, 17).build()?;
         let with = run_qc(&existing, &batches, &full, &truth, &base, true)?;
         let without = run_qc(&existing, &batches, &full, &truth, &base, false)?;
         print_row(
@@ -152,7 +152,7 @@ pub fn table8(ctx: &EvalContext) -> Result<()> {
             full.append_mode3(b);
         }
         for &s in &s_values {
-            let base = SamBaTenConfig::new(ds.rank, s, 3, 19);
+            let base = SamBaTenConfig::builder(ds.rank, s, 3, 19).build()?;
             let with = run_qc(&existing, &batches, &full, &truth, &base, true)?;
             let without = run_qc(&existing, &batches, &full, &truth, &base, false)?;
             print_row(
@@ -188,7 +188,7 @@ pub fn fig7(ctx: &EvalContext) -> Result<()> {
     println!("Figure 7: GETRANK cost (s) and fitness improvement, synthetic (s=2)");
     for dim in dims {
         let (existing, batches, full, truth) = deficient_stream(dim, 4, 2, (dim / 4).max(2), 41);
-        let base = SamBaTenConfig::new(4, 2, 3, 23);
+        let base = SamBaTenConfig::builder(4, 2, 3, 23).build()?;
         let with = run_qc(&existing, &batches, &full, &truth, &base, true)?;
         let without = run_qc(&existing, &batches, &full, &truth, &base, false)?;
         let improvement = (without.rel_err - with.rel_err) / without.rel_err.max(1e-12);
@@ -221,7 +221,7 @@ pub fn fig8(ctx: &EvalContext) -> Result<()> {
             full.append_mode3(b);
         }
         for s in [2usize, 3, 5] {
-            let base = SamBaTenConfig::new(ds.rank, s, 3, 29);
+            let base = SamBaTenConfig::builder(ds.rank, s, 3, 29).build()?;
             let with = run_qc(&existing, &batches, &full, &truth, &base, true)?;
             let without = run_qc(&existing, &batches, &full, &truth, &base, false)?;
             println!(
@@ -266,7 +266,7 @@ mod tests {
     #[test]
     fn qc_runs_both_variants() {
         let (existing, batches, full, truth) = deficient_stream(10, 3, 2, 3, 9);
-        let base = SamBaTenConfig::new(3, 2, 2, 5);
+        let base = SamBaTenConfig::builder(3, 2, 2, 5).build().unwrap();
         let with = run_qc(&existing, &batches, &full, &truth, &base, true).unwrap();
         let without = run_qc(&existing, &batches, &full, &truth, &base, false).unwrap();
         assert!(with.seconds > 0.0 && without.seconds > 0.0);

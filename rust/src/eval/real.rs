@@ -105,7 +105,7 @@ pub fn table6(ctx: &EvalContext) -> Result<()> {
         // scaled samples keep ≥ 2R rows in the entity modes.
         let s_dims = (ni.min(nj) / (2 * ds.rank)).max(2);
         let s = ds.sampling_factor.min(3).min(s_dims).max(2);
-        let cfg = SamBaTenConfig::new(ds.rank, s, 4, 7);
+        let cfg = SamBaTenConfig::builder(ds.rank, s, 4, 7).build()?;
         let methods = methods_for(ds.name, ctx);
         let outcomes = run_stream(&w, &methods, &cfg, ctx.budget_s)?;
         for o in &outcomes {

@@ -222,7 +222,7 @@ mod tests {
     #[test]
     fn run_stream_all_methods_complete_small() {
         let w = workload();
-        let cfg = SamBaTenConfig::new(2, 2, 2, 7);
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 7).build().unwrap();
         let out = run_stream(&w, &MethodKind::ALL, &cfg, 60.0).unwrap();
         assert_eq!(out.len(), 5);
         for o in &out {
@@ -241,7 +241,7 @@ mod tests {
     #[test]
     fn budget_zero_yields_na() {
         let w = workload();
-        let cfg = SamBaTenConfig::new(2, 2, 2, 7);
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 7).build().unwrap();
         let out = run_stream(&w, &[MethodKind::SamBaTen], &cfg, 0.0).unwrap();
         assert!(!out[0].completed);
         assert!(out[0].rel_err.is_nan());

@@ -90,7 +90,7 @@ pub fn fig9(ctx: &EvalContext) -> Result<()> {
     for dim in dims {
         let (existing, batches, full, truth) = synthetic_workload(dim, 4, (dim / 4).max(2), 61);
         for s in [2usize, 3, 4, 6] {
-            let cfg = SamBaTenConfig::new(4, s, 4, 13);
+            let cfg = SamBaTenConfig::builder(4, s, 4, 13).build()?;
             let run = run_once(&existing, &batches, &full, &truth, cfg)?;
             println!(
                 "  dim {dim:>4} s={s}: {:.2}s rel_err {:.3} fitness {:.3}",
@@ -107,7 +107,7 @@ pub fn fig9(ctx: &EvalContext) -> Result<()> {
     }
     let (existing, batches, full, truth, rank) = nips_workload(ctx, 67);
     for s in [2usize, 3, 4, 6] {
-        let cfg = SamBaTenConfig::new(rank, s, 4, 13);
+        let cfg = SamBaTenConfig::builder(rank, s, 4, 13).build()?;
         let run = run_once(&existing, &batches, &full, &truth, cfg)?;
         println!(
             "  NIPS-sim s={s}: {:.2}s rel_err {:.3} fitness {:.3}",
@@ -135,7 +135,7 @@ pub fn fig10(ctx: &EvalContext) -> Result<()> {
     let dim = ctx.dim(32); // the paper's 500³ row, scaled
     let (existing, batches, full, truth) = synthetic_workload(dim, 4, (dim / 4).max(2), 71);
     for r in [1usize, 2, 4, 8] {
-        let cfg = SamBaTenConfig::new(4, 2, r, 37);
+        let cfg = SamBaTenConfig::builder(4, 2, r, 37).build()?;
         let run = run_once(&existing, &batches, &full, &truth, cfg)?;
         println!(
             "  synthetic-{dim} r={r}: FMS {:.3} fitness {:.3} ({:.2}s)",
@@ -151,7 +151,7 @@ pub fn fig10(ctx: &EvalContext) -> Result<()> {
     }
     let (existing, batches, full, truth, rank) = nips_workload(ctx, 73);
     for r in [1usize, 2, 4, 8] {
-        let cfg = SamBaTenConfig::new(rank, 2, r, 37);
+        let cfg = SamBaTenConfig::builder(rank, 2, r, 37).build()?;
         let run = run_once(&existing, &batches, &full, &truth, cfg)?;
         println!(
             "  NIPS-sim r={r}: FMS {:.3} fitness {:.3} ({:.2}s)",
@@ -178,7 +178,7 @@ pub fn fig11(ctx: &EvalContext) -> Result<()> {
     let (existing, batches, full, truth, rank) = nips_workload(ctx, 79);
     for r in [1usize, 2, 4] {
         for s in [2usize, 3, 5] {
-            let cfg = SamBaTenConfig::new(rank, s, r, 41);
+            let cfg = SamBaTenConfig::builder(rank, s, r, 41).build()?;
             let run = run_once(&existing, &batches, &full, &truth, cfg)?;
             println!(
                 "  r={r} s={s}: FMS {:.3} fitness {:.3} ({:.2}s)",
@@ -203,8 +203,8 @@ mod tests {
     #[test]
     fn run_once_produces_finite_metrics() {
         let (existing, batches, full, truth) = synthetic_workload(10, 2, 3, 5);
-        let run = run_once(&existing, &batches, &full, &truth, SamBaTenConfig::new(2, 2, 2, 3))
-            .unwrap();
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 3).build().unwrap();
+        let run = run_once(&existing, &batches, &full, &truth, cfg).unwrap();
         assert!(run.seconds > 0.0);
         assert!(run.rel_err.is_finite());
         assert!(run.fitness_vs_cpals.is_finite());

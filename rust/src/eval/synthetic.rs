@@ -53,7 +53,9 @@ pub const NOISE: f64 = 0.05;
 pub const EXISTING_FRAC: f64 = 0.1;
 
 fn samba_cfg(row: &GridRow, seed: u64, ctx: &EvalContext) -> SamBaTenConfig {
-    let mut cfg = SamBaTenConfig::new(RANK, row.sampling_factor, 4, seed);
+    let mut cfg = SamBaTenConfig::builder(RANK, row.sampling_factor, 4, seed)
+        .build()
+        .expect("grid parameters are valid");
     if ctx.use_pjrt && crate::runtime::artifacts_available() {
         if let Ok(svc) = crate::runtime::PjrtService::start(crate::runtime::artifacts_dir()) {
             cfg = cfg.with_solver(std::sync::Arc::new(crate::runtime::PjrtAlsSolver::new(svc)));

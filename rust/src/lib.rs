@@ -10,8 +10,10 @@
 //!   sampling ([`sampling`]), parallel sample decompositions ([`cp`]),
 //!   permutation matching ([`matching`]), quality control ([`corcondia`]),
 //!   factor merging ([`coordinator`]), baselines ([`baselines`]),
-//!   streaming ingestion ([`streaming`]) and the evaluation harness
-//!   ([`eval`]).
+//!   streaming ingestion ([`streaming`]), the multi-stream serving layer
+//!   ([`serve`] — wait-free [`coordinator::StreamHandle`] readers over a
+//!   write path that publishes epoch-stamped snapshots) and the evaluation
+//!   harness ([`eval`]).
 //! * **Layer 2/1 (build-time Python)** — a JAX ALS sweep calling a Pallas
 //!   MTTKRP kernel, AOT-lowered to HLO text and executed from Rust through
 //!   the PJRT runtime wrapper ([`runtime`]).
@@ -29,6 +31,7 @@ pub mod matching;
 pub mod metrics;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod streaming;
 pub mod tensor;
 pub mod testing;

@@ -4,13 +4,15 @@
 //!   generate    synthesize a tensor (.tns) with known factors
 //!   decompose   full CP-ALS of a .tns file
 //!   run         incremental SamBaTen over a streamed tensor
+//!   serve       multi-stream decomposition service demo (queries during
+//!               ingest through wait-free StreamHandles)
 //!   getrank     estimate CP rank via CORCONDIA
 //!   eval        regenerate a paper table/figure (see DESIGN.md §3)
 //!   info        artifact bank / environment report
 
 use anyhow::{bail, Context, Result};
 use sambaten::config::RunConfig;
-use sambaten::coordinator::SamBaTen;
+use sambaten::coordinator::{SamBaTen, SamBaTenConfig, StreamHandle};
 use sambaten::corcondia::{getrank, GetRankOptions};
 use sambaten::cp::{cp_als, AlsOptions};
 use sambaten::datagen::SyntheticSpec;
@@ -18,10 +20,12 @@ use sambaten::eval::{run_experiment, EvalContext, EXPERIMENTS};
 use sambaten::io::{read_tns, save_model, write_tns};
 use sambaten::metrics::relative_error;
 use sambaten::runtime::{artifacts_available, artifacts_dir, PjrtAlsSolver, PjrtService};
+use sambaten::serve::DecompositionService;
 use sambaten::streaming::{StreamPump, TensorReplay};
 use sambaten::tensor::{CooTensor, Tensor3, TensorData};
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Tiny flag parser: positional args + `--key value` pairs + `--flag`.
 struct Args {
@@ -84,6 +88,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "generate" => cmd_generate(&args),
         "decompose" => cmd_decompose(&args),
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
         "getrank" => cmd_getrank(&args),
         "eval" => cmd_eval(&args),
         "info" => cmd_info(),
@@ -107,6 +112,8 @@ COMMANDS:
   run        --input X.tns | --dims I,J,K  [--config run.toml] [--rank R] [--batch B]
              [--sampling-factor S] [--repetitions r] [--engine native|pjrt]
              [--quality-control] [--seed N] [--save model.cp]
+  serve      [--streams 2] [--dims 48,48,40] [--rank 4] [--batch 4] [--density 1.0]
+             [--queue-cap 4] [--seed 42]   multi-stream service demo
   getrank    --input X.tns [--max-rank 10] [--iters 2]
   eval       <{}|all> [--iters N] [--budget SECONDS] [--scale F] [--out-dir results] [--pjrt]
   info       artifact bank / environment report",
@@ -253,7 +260,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             (TensorData::Sparse(a), TensorData::Sparse(b))
         }
     };
-    let mut engine_cfg = cfg.to_engine_config();
+    let mut engine_cfg = cfg.to_engine_config()?;
     if cfg.engine == "pjrt" {
         anyhow::ensure!(
             artifacts_available(),
@@ -269,7 +276,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut n = 0;
     let mut total = 0.0;
     while let Some(batch) = pump.next_batch() {
-        let stats = engine.ingest(&batch)?;
+        let stats = engine.ingest(&batch?)?;
         total += stats.seconds;
         n += 1;
         println!(
@@ -294,6 +301,95 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(path) = args.get("save") {
         save_model(&PathBuf::from(path), model)?;
         println!("model saved to {path}");
+    }
+    Ok(())
+}
+
+/// Multi-stream serving demo: register N synthetic streams with the
+/// `DecompositionService`, feed each from its own producer thread through
+/// the bounded per-stream queues, and — while the ingest workers run —
+/// poll every stream's wait-free `StreamHandle` from this thread. The
+/// polling loop is the point: model reads never block on the writers.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n_streams = args.get_or("streams", 2usize)?;
+    let (i, j, k) = parse_dims(args.get("dims").unwrap_or("48,48,40"))?;
+    let rank = args.get_or("rank", 4usize)?;
+    let batch = args.get_or("batch", 4usize)?;
+    let density = args.get_or("density", 1.0f64)?;
+    let seed = args.get_or("seed", 42u64)?;
+    let queue_cap = args.get_or("queue-cap", 4usize)?;
+    anyhow::ensure!(n_streams >= 1, "--streams must be >= 1");
+
+    let svc = Arc::new(DecompositionService::with_queue_cap(queue_cap));
+    let mut feeds = Vec::new();
+    for s in 0..n_streams {
+        let name = format!("stream-{s}");
+        let spec = SyntheticSpec { i, j, k, rank, density, noise: 0.05, seed: seed + s as u64 };
+        let (existing, batches, _) = spec.generate_stream(0.25, batch);
+        let cfg = SamBaTenConfig::builder(rank, 2, 4, seed ^ ((s as u64) << 8)).build()?;
+        svc.register(&name, &existing, cfg)?;
+        println!(
+            "registered {name}: existing {:?}, {} batches pending",
+            existing.dims(),
+            batches.len()
+        );
+        feeds.push((name, batches));
+    }
+
+    // One producer thread per stream; tickets are collected and joined at
+    // the end so the queues stay the only synchronisation point.
+    let feeders: Vec<std::thread::JoinHandle<Result<f64>>> = feeds
+        .into_iter()
+        .map(|(name, batches)| {
+            let svc = svc.clone();
+            std::thread::spawn(move || -> Result<f64> {
+                let tickets: Vec<_> = batches
+                    .into_iter()
+                    .map(|b| svc.ingest(&name, b))
+                    .collect::<Result<_>>()?;
+                let mut secs = 0.0;
+                for t in tickets {
+                    secs += t.wait()?.seconds;
+                }
+                Ok(secs)
+            })
+        })
+        .collect();
+
+    // Live query loop over the wait-free handles.
+    let handles: Vec<(String, StreamHandle)> = svc
+        .stream_names()
+        .into_iter()
+        .map(|n| {
+            let h = svc.handle(&n).expect("just registered");
+            (n, h)
+        })
+        .collect();
+    while feeders.iter().any(|f| !f.is_finished()) {
+        for (name, h) in &handles {
+            let snap = h.snapshot();
+            let lmax = snap.model.lambda.iter().cloned().fold(0.0f64, f64::max);
+            println!(
+                "  [{name}] epoch {:>3}  dims {:?}  λ_max {:.3}  top-1 of row 0: {:?}",
+                snap.epoch,
+                snap.dims,
+                lmax,
+                snap.top_k(0, 0, 1).first().map(|(idx, s)| (*idx, (s * 1e3).round() / 1e3)),
+            );
+        }
+        std::thread::sleep(std::time::Duration::from_millis(150));
+    }
+    for f in feeders {
+        let secs = f.join().map_err(|_| anyhow::anyhow!("feeder thread panicked"))??;
+        println!("feeder done ({secs:.2}s ingest wall-clock)");
+    }
+
+    println!("\n== service report ==");
+    for st in svc.shutdown() {
+        println!(
+            "  {:<12} epoch {:>3}  batches {:>3}  slices {:>4}  errors {}  ingest {:.2}s",
+            st.name, st.epoch, st.batches, st.slices, st.errors, st.ingest_seconds
+        );
     }
     Ok(())
 }

@@ -1,0 +1,438 @@
+//! Multi-stream decomposition service: one process, many live tensors.
+//!
+//! GOCPT frames online CP as a *generalized service* covering many
+//! concurrent settings, and the ROADMAP north star is a production system
+//! serving heavy traffic — but a bare [`SamBaTen`] engine serves exactly
+//! one tensor and requires the caller to own its `&mut` write path. This
+//! module is the serving layer on top of the coordinator's snapshot split:
+//!
+//! * [`DecompositionService`] — a registry of named streams. Each stream
+//!   owns a dedicated ingest worker thread fed by a **bounded** channel
+//!   (the same backpressure contract as `streaming::StreamPump`: a full
+//!   queue blocks the producer, memory never grows unboundedly).
+//! * [`DecompositionService::ingest`] — hands a batch to a stream's worker
+//!   and returns a [`Ticket`] immediately; `Ticket::wait` joins the batch's
+//!   [`BatchStats`] (or its error) when the worker gets to it. A failed
+//!   batch marks the stream's stats but does not kill the stream.
+//! * [`StreamHandle`] — the wait-free read surface, shared with the
+//!   single-engine API: queries run *during* ingest, on whichever epoch is
+//!   currently published.
+//! * [`DecompositionService::shutdown`] — graceful: closes every queue,
+//!   lets the workers drain what was already accepted, then joins them.
+//!
+//! All registry methods take `&self`; wrap the service in an `Arc` to share
+//! it across producer threads.
+
+use crate::coordinator::{BatchStats, SamBaTen, SamBaTenConfig, StreamHandle};
+use crate::tensor::TensorData;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Completion receipt for one submitted batch.
+///
+/// Dropping a ticket is fine (fire-and-forget ingest); the worker processes
+/// the batch regardless and records the outcome in the stream's stats.
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<BatchStats>>,
+}
+
+impl Ticket {
+    /// Block until the worker has processed the batch; returns its stats
+    /// or the ingest error. Errors also if the stream shut down before the
+    /// batch was processed (only possible through an abrupt worker death —
+    /// a graceful [`DecompositionService::shutdown`] drains first).
+    pub fn wait(self) -> Result<BatchStats> {
+        match self.rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(anyhow!("stream worker terminated before processing the batch")),
+        }
+    }
+
+    /// Non-blocking poll: `None` while the batch is still queued or
+    /// in-flight.
+    pub fn try_wait(&self) -> Option<Result<BatchStats>> {
+        match self.rx.try_recv() {
+            Ok(result) => Some(result),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(anyhow!("stream worker terminated before processing the batch")))
+            }
+        }
+    }
+}
+
+/// Point-in-time aggregate statistics for one stream.
+#[derive(Clone, Debug)]
+pub struct StreamStats {
+    pub name: String,
+    /// Published epoch (successful ingests) at the time of the query.
+    pub epoch: u64,
+    /// Batches processed successfully.
+    pub batches: u64,
+    /// Slices ingested successfully (sum of `k_new`).
+    pub slices: u64,
+    /// Batches whose ingest returned an error.
+    pub errors: u64,
+    /// Batches submitted but not yet fully processed: waiting in the
+    /// bounded queue, currently mid-ingest, or held by a producer blocked
+    /// on backpressure.
+    pub queued: usize,
+    /// Worker CPU-side wall-clock spent inside `ingest`, summed.
+    pub ingest_seconds: f64,
+    /// Message of the most recent ingest error, if any.
+    pub last_error: Option<String>,
+}
+
+/// Lock-free counters the worker updates and `stats()` reads.
+#[derive(Default)]
+struct StatsInner {
+    batches: AtomicU64,
+    slices: AtomicU64,
+    errors: AtomicU64,
+    queued: AtomicUsize,
+    busy_ns: AtomicU64,
+    last_error: Mutex<Option<String>>,
+}
+
+struct Job {
+    batch: TensorData,
+    done: mpsc::Sender<Result<BatchStats>>,
+}
+
+struct StreamEntry {
+    tx: mpsc::SyncSender<Job>,
+    handle: StreamHandle,
+    stats: Arc<StatsInner>,
+    worker: JoinHandle<()>,
+}
+
+/// A registry of named decomposition streams, each with a dedicated ingest
+/// worker behind a bounded queue. See the module docs for the contract.
+pub struct DecompositionService {
+    queue_cap: usize,
+    streams: Mutex<HashMap<String, StreamEntry>>,
+}
+
+impl Default for DecompositionService {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DecompositionService {
+    /// Service with the default per-stream queue depth (4 batches — the
+    /// same bound the CLI's `StreamPump` path uses).
+    pub fn new() -> Self {
+        Self::with_queue_cap(4)
+    }
+
+    /// Service whose per-stream ingest queues hold up to `queue_cap`
+    /// batches before `ingest` blocks the producer (min 1).
+    pub fn with_queue_cap(queue_cap: usize) -> Self {
+        DecompositionService { queue_cap: queue_cap.max(1), streams: Mutex::new(HashMap::new()) }
+    }
+
+    /// Register a new stream: runs the initial full decomposition on the
+    /// caller's thread (so init errors surface here), then starts the
+    /// stream's ingest worker. Returns the stream's read handle.
+    pub fn register(
+        &self,
+        name: &str,
+        existing: &TensorData,
+        cfg: SamBaTenConfig,
+    ) -> Result<StreamHandle> {
+        let engine =
+            SamBaTen::init(existing, cfg).with_context(|| format!("initialising stream {name:?}"))?;
+        self.register_engine(name, engine)
+    }
+
+    /// Register a stream around an already-constructed engine (e.g. resumed
+    /// from a checkpointed model via `SamBaTen::from_model`).
+    pub fn register_engine(&self, name: &str, engine: SamBaTen) -> Result<StreamHandle> {
+        let mut streams = self.lock_streams();
+        anyhow::ensure!(!streams.contains_key(name), "stream {name:?} is already registered");
+        let (tx, rx) = mpsc::sync_channel::<Job>(self.queue_cap);
+        let handle = engine.handle();
+        let stats = Arc::new(StatsInner::default());
+        let worker_stats = stats.clone();
+        let worker = std::thread::Builder::new()
+            .name(format!("sambaten-serve-{name}"))
+            .spawn(move || worker_loop(engine, rx, worker_stats))
+            .context("spawning stream worker")?;
+        streams.insert(name.to_string(), StreamEntry { tx, handle: handle.clone(), stats, worker });
+        Ok(handle)
+    }
+
+    /// Submit a batch to a stream's worker. Blocks only when the stream's
+    /// bounded queue is full (backpressure); never waits for the ingest
+    /// itself — that is what the returned [`Ticket`] is for.
+    pub fn ingest(&self, name: &str, batch: TensorData) -> Result<Ticket> {
+        let (tx, stats) = {
+            let streams = self.lock_streams();
+            let entry = streams.get(name).ok_or_else(|| anyhow!("unknown stream {name:?}"))?;
+            (entry.tx.clone(), entry.stats.clone())
+        };
+        // Send outside the registry lock: a blocked producer must not stall
+        // every other stream's registry access.
+        let (done_tx, done_rx) = mpsc::channel();
+        stats.queued.fetch_add(1, Ordering::SeqCst);
+        if tx.send(Job { batch, done: done_tx }).is_err() {
+            stats.queued.fetch_sub(1, Ordering::SeqCst);
+            anyhow::bail!("stream {name:?} worker has shut down");
+        }
+        Ok(Ticket { rx: done_rx })
+    }
+
+    /// The read handle of a registered stream.
+    pub fn handle(&self, name: &str) -> Result<StreamHandle> {
+        let streams = self.lock_streams();
+        streams
+            .get(name)
+            .map(|e| e.handle.clone())
+            .ok_or_else(|| anyhow!("unknown stream {name:?}"))
+    }
+
+    /// Point-in-time stats of a registered stream.
+    pub fn stats(&self, name: &str) -> Result<StreamStats> {
+        let streams = self.lock_streams();
+        let entry = streams.get(name).ok_or_else(|| anyhow!("unknown stream {name:?}"))?;
+        Ok(snapshot_stats(name, &entry.handle, &entry.stats))
+    }
+
+    /// Registered stream names, sorted.
+    pub fn stream_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.lock_streams().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Deregister one stream: close its queue, let the worker drain every
+    /// batch already accepted, join it, and return the final stats.
+    pub fn remove(&self, name: &str) -> Result<StreamStats> {
+        let entry = self
+            .lock_streams()
+            .remove(name)
+            .ok_or_else(|| anyhow!("unknown stream {name:?}"))?;
+        Ok(stop_entry(name, entry))
+    }
+
+    /// Graceful shutdown of every stream: queues are closed, workers drain
+    /// what they already accepted (pending [`Ticket`]s resolve), then the
+    /// workers are joined. Returns the final stats, sorted by stream name.
+    /// The service stays usable afterwards — new streams can be registered.
+    pub fn shutdown(&self) -> Vec<StreamStats> {
+        let entries: Vec<(String, StreamEntry)> = self.lock_streams().drain().collect();
+        let mut finals: Vec<StreamStats> =
+            entries.into_iter().map(|(name, entry)| stop_entry(&name, entry)).collect();
+        finals.sort_by(|a, b| a.name.cmp(&b.name));
+        finals
+    }
+
+    fn lock_streams(&self) -> std::sync::MutexGuard<'_, HashMap<String, StreamEntry>> {
+        // The registry lock only ever guards map operations and Arc/sender
+        // clones — nothing in a critical section can panic, so poisoning is
+        // recovered rather than propagated.
+        self.streams.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl Drop for DecompositionService {
+    fn drop(&mut self) {
+        // Dropping the registry drops every sender; detached workers drain
+        // and exit on their own. An explicit `shutdown()` additionally
+        // joins them — prefer it when exit order matters.
+        self.lock_streams().clear();
+    }
+}
+
+fn stop_entry(name: &str, entry: StreamEntry) -> StreamStats {
+    let StreamEntry { tx, handle, stats, worker } = entry;
+    drop(tx); // close the queue; the worker drains buffered jobs then exits
+    if worker.join().is_err() {
+        // A panicking ingest is a bug, but shutdown must still report.
+        let mut last = stats.last_error.lock().unwrap_or_else(|e| e.into_inner());
+        *last = Some("stream worker panicked".to_string());
+        drop(last);
+        stats.errors.fetch_add(1, Ordering::SeqCst);
+    }
+    snapshot_stats(name, &handle, &stats)
+}
+
+fn snapshot_stats(name: &str, handle: &StreamHandle, stats: &StatsInner) -> StreamStats {
+    StreamStats {
+        name: name.to_string(),
+        epoch: handle.epoch(),
+        batches: stats.batches.load(Ordering::SeqCst),
+        slices: stats.slices.load(Ordering::SeqCst),
+        errors: stats.errors.load(Ordering::SeqCst),
+        queued: stats.queued.load(Ordering::SeqCst),
+        ingest_seconds: stats.busy_ns.load(Ordering::SeqCst) as f64 * 1e-9,
+        last_error: stats.last_error.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+    }
+}
+
+fn worker_loop(mut engine: SamBaTen, rx: mpsc::Receiver<Job>, stats: Arc<StatsInner>) {
+    // `recv` keeps yielding queued jobs after every sender is dropped and
+    // only then disconnects — that property *is* the drain-on-shutdown
+    // guarantee.
+    while let Ok(job) = rx.recv() {
+        let t0 = std::time::Instant::now();
+        let result = engine.ingest(&job.batch);
+        stats.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::SeqCst);
+        match &result {
+            Ok(batch_stats) => {
+                stats.batches.fetch_add(1, Ordering::SeqCst);
+                stats.slices.fetch_add(batch_stats.k_new as u64, Ordering::SeqCst);
+            }
+            Err(e) => {
+                stats.errors.fetch_add(1, Ordering::SeqCst);
+                let mut last = stats.last_error.lock().unwrap_or_else(|p| p.into_inner());
+                *last = Some(format!("{e:#}"));
+            }
+        }
+        // Decrement only once the batch is fully accounted (batches/errors
+        // updated), so `queued + batches + errors` never under-counts: a
+        // mid-ingest batch still shows as queued, and by the time a
+        // Ticket::wait returns the counters already reflect it.
+        stats.queued.fetch_sub(1, Ordering::SeqCst);
+        // The submitter may have dropped its ticket — fire-and-forget.
+        let _ = job.done.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::SyntheticSpec;
+    use crate::tensor::Tensor3;
+
+    fn small_stream(seed: u64) -> (TensorData, Vec<TensorData>) {
+        let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, seed);
+        let (existing, batches, _) = spec.generate_stream(0.5, 3);
+        (existing, batches)
+    }
+
+    fn cfg(seed: u64) -> SamBaTenConfig {
+        SamBaTenConfig::builder(2, 2, 2, seed).build().unwrap()
+    }
+
+    #[test]
+    fn register_ingest_query_shutdown() {
+        let svc = DecompositionService::new();
+        let (existing, batches) = small_stream(1);
+        let handle = svc.register("s0", &existing, cfg(7)).unwrap();
+        assert_eq!(handle.epoch(), 0);
+        let mut tickets = Vec::new();
+        for b in &batches {
+            tickets.push(svc.ingest("s0", b.clone()).unwrap());
+        }
+        let mut slices = 0;
+        for t in tickets {
+            slices += t.wait().unwrap().k_new;
+        }
+        assert_eq!(slices, 6);
+        assert_eq!(handle.epoch(), batches.len() as u64);
+        let st = svc.stats("s0").unwrap();
+        assert_eq!(st.batches, batches.len() as u64);
+        assert_eq!(st.slices, 6);
+        assert_eq!(st.errors, 0);
+        assert_eq!(st.queued, 0);
+        assert!(st.ingest_seconds > 0.0);
+        let finals = svc.shutdown();
+        assert_eq!(finals.len(), 1);
+        assert_eq!(finals[0].epoch, batches.len() as u64);
+    }
+
+    #[test]
+    fn shutdown_drains_pending_batches() {
+        let svc = DecompositionService::with_queue_cap(8);
+        let (existing, batches) = small_stream(2);
+        let handle = svc.register("drain", &existing, cfg(8)).unwrap();
+        // Submit everything and shut down immediately — nothing waits on
+        // tickets, yet every accepted batch must still be applied.
+        let tickets: Vec<Ticket> =
+            batches.iter().map(|b| svc.ingest("drain", b.clone()).unwrap()).collect();
+        let finals = svc.shutdown();
+        assert_eq!(finals[0].epoch, batches.len() as u64, "shutdown must drain the queue");
+        assert_eq!(finals[0].queued, 0);
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        assert_eq!(handle.epoch(), batches.len() as u64);
+    }
+
+    #[test]
+    fn multiple_streams_are_independent() {
+        let svc = Arc::new(DecompositionService::new());
+        let (ex_a, batches_a) = small_stream(3);
+        let (ex_b, batches_b) = small_stream(4);
+        svc.register("a", &ex_a, cfg(9)).unwrap();
+        svc.register("b", &ex_b, cfg(10)).unwrap();
+        assert_eq!(svc.stream_names(), vec!["a".to_string(), "b".to_string()]);
+        let feeders: Vec<_> = [("a", batches_a), ("b", batches_b)]
+            .into_iter()
+            .map(|(name, batches)| {
+                let svc = svc.clone();
+                std::thread::spawn(move || {
+                    for b in &batches {
+                        svc.ingest(name, b.clone()).unwrap().wait().unwrap();
+                    }
+                    batches.len() as u64
+                })
+            })
+            .collect();
+        let counts: Vec<u64> = feeders.into_iter().map(|f| f.join().unwrap()).collect();
+        assert_eq!(svc.handle("a").unwrap().epoch(), counts[0]);
+        assert_eq!(svc.handle("b").unwrap().epoch(), counts[1]);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn failed_batch_marks_stats_but_stream_survives() {
+        let svc = DecompositionService::new();
+        let (existing, batches) = small_stream(5);
+        svc.register("flaky", &existing, cfg(11)).unwrap();
+        // Wrong mode-1/2 dims: the engine rejects it.
+        let (bad, _) = SyntheticSpec::dense(9, 10, 2, 2, 0.0, 6).generate();
+        let err = svc.ingest("flaky", bad).unwrap().wait();
+        assert!(err.is_err());
+        let st = svc.stats("flaky").unwrap();
+        assert_eq!(st.errors, 1);
+        assert!(st.last_error.as_deref().unwrap_or("").contains("must match"));
+        // The stream keeps serving.
+        let ok = svc.ingest("flaky", batches[0].clone()).unwrap().wait().unwrap();
+        assert_eq!(ok.k_new, batches[0].dims().2);
+        assert_eq!(svc.stats("flaky").unwrap().epoch, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unknown_and_duplicate_streams_rejected() {
+        let svc = DecompositionService::new();
+        let (existing, batches) = small_stream(6);
+        assert!(svc.ingest("nope", batches[0].clone()).is_err());
+        assert!(svc.handle("nope").is_err());
+        assert!(svc.stats("nope").is_err());
+        svc.register("dup", &existing, cfg(12)).unwrap();
+        assert!(svc.register("dup", &existing, cfg(12)).is_err());
+        svc.shutdown();
+        // After shutdown the registry is empty and reusable.
+        assert!(svc.stream_names().is_empty());
+        svc.register("dup", &existing, cfg(13)).unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn remove_single_stream() {
+        let svc = DecompositionService::new();
+        let (existing, batches) = small_stream(7);
+        svc.register("gone", &existing, cfg(14)).unwrap();
+        svc.ingest("gone", batches[0].clone()).unwrap().wait().unwrap();
+        let st = svc.remove("gone").unwrap();
+        assert_eq!(st.epoch, 1);
+        assert!(svc.ingest("gone", batches[0].clone()).is_err());
+    }
+}

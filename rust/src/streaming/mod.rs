@@ -91,26 +91,67 @@ impl SliceSource for TensorReplay {
 
 /// Groups slices into batches of `batch_size` (the paper's "batch of
 /// incoming slices"; the final partial batch is flushed at end of stream).
+///
+/// Every slice is validated on [`push`](Self::push): the stream's `(I, J)`
+/// is pinned by the first slice (or up front via
+/// [`with_dims`](Self::with_dims)) and later slices must match, dense
+/// payloads must carry exactly `I·J` values, and sparse entries must index
+/// inside the slice. Without this, a mismatched slice would silently write
+/// out of range (growing the batch tensor's logical dims) or truncate.
 pub struct Batcher {
     batch_size: usize,
     sparse: bool,
+    /// `(I, J)` contract for the stream; pinned by the first slice.
+    dims: Option<(usize, usize)>,
     pending: VecDeque<Slice>,
 }
 
 impl Batcher {
     pub fn new(batch_size: usize, sparse: bool) -> Self {
         assert!(batch_size >= 1);
-        Batcher { batch_size, sparse, pending: VecDeque::new() }
+        Batcher { batch_size, sparse, dims: None, pending: VecDeque::new() }
     }
 
-    /// Add a slice; returns a full batch when ready.
-    pub fn push(&mut self, s: Slice) -> Option<TensorData> {
-        self.pending.push_back(s);
-        if self.pending.len() >= self.batch_size {
-            self.flush()
-        } else {
-            None
+    /// A batcher with the `(I, J)` contract pinned up front (e.g. from
+    /// [`SliceSource::slice_dims`]), so even the first slice is validated.
+    pub fn with_dims(batch_size: usize, sparse: bool, dims: (usize, usize)) -> Self {
+        let mut b = Self::new(batch_size, sparse);
+        b.dims = Some(dims);
+        b
+    }
+
+    /// Add a slice; returns a full batch when ready, or an error for a
+    /// malformed slice (which is dropped — the batcher state is unchanged
+    /// and subsequent well-formed slices keep working).
+    pub fn push(&mut self, s: Slice) -> Result<Option<TensorData>> {
+        // Internal consistency first — a malformed slice must be rejected
+        // WITHOUT pinning the stream dims, or a bad first slice would
+        // poison every well-formed slice after it.
+        match &s {
+            Slice::Dense { i, j, data } => anyhow::ensure!(
+                data.len() == i * j,
+                "dense slice carries {} values for an {i}x{j} slice",
+                data.len()
+            ),
+            Slice::Sparse { i, j, entries } => {
+                for &(ei, ej, _) in entries {
+                    anyhow::ensure!(
+                        (ei as usize) < *i && (ej as usize) < *j,
+                        "sparse entry ({ei}, {ej}) out of range for an {i}x{j} slice"
+                    );
+                }
+            }
         }
+        let (si, sj) = s.dims();
+        match self.dims {
+            Some((ni, nj)) => anyhow::ensure!(
+                (si, sj) == (ni, nj),
+                "slice dims {si}x{sj} do not match the stream's {ni}x{nj}"
+            ),
+            None => self.dims = Some((si, sj)),
+        }
+        self.pending.push_back(s);
+        Ok(if self.pending.len() >= self.batch_size { self.flush() } else { None })
     }
 
     /// Drain whatever is pending into a (possibly partial) batch.
@@ -118,7 +159,8 @@ impl Batcher {
         if self.pending.is_empty() {
             return None;
         }
-        let (ni, nj) = self.pending[0].dims();
+        // Every pending slice was validated against the pinned dims.
+        let (ni, nj) = self.dims.expect("dims pinned by the first push");
         let nk = self.pending.len();
         let out = if self.sparse {
             let mut t = CooTensor::new(ni, nj, nk);
@@ -173,8 +215,12 @@ impl Batcher {
 /// Runs a [`SliceSource`] on a producer thread, batching into a bounded
 /// queue (`queue_cap` batches). `next_batch` blocks the consumer; a full
 /// queue blocks the *producer* — backpressure instead of unbounded memory.
+///
+/// A malformed slice (see [`Batcher::push`]) terminates the stream with an
+/// `Err` item: the consumer observes the error in order, after every batch
+/// that was already well-formed.
 pub struct StreamPump {
-    rx: mpsc::Receiver<TensorData>,
+    rx: mpsc::Receiver<Result<TensorData>>,
 }
 
 impl StreamPump {
@@ -184,25 +230,37 @@ impl StreamPump {
         sparse: bool,
         queue_cap: usize,
     ) -> Result<Self> {
-        let (tx, rx) = mpsc::sync_channel::<TensorData>(queue_cap.max(1));
+        let (tx, rx) = mpsc::sync_channel::<Result<TensorData>>(queue_cap.max(1));
+        let dims = source.slice_dims();
         std::thread::Builder::new().name("stream-pump".into()).spawn(move || {
-            let mut batcher = Batcher::new(batch_size, sparse);
+            let mut batcher = Batcher::with_dims(batch_size, sparse, dims);
             while let Some(slice) = source.next_slice() {
-                if let Some(batch) = batcher.push(slice) {
-                    if tx.send(batch).is_err() {
-                        return; // consumer hung up
+                match batcher.push(slice) {
+                    Ok(Some(batch)) => {
+                        if tx.send(Ok(batch)).is_err() {
+                            return; // consumer hung up
+                        }
+                    }
+                    Ok(None) => {}
+                    Err(e) => {
+                        // Surface the malformed slice and end the stream —
+                        // a source that breaks its own dims contract cannot
+                        // be trusted to keep feeding the engine.
+                        let _ = tx.send(Err(e));
+                        return;
                     }
                 }
             }
             if let Some(batch) = batcher.flush() {
-                let _ = tx.send(batch);
+                let _ = tx.send(Ok(batch));
             }
         })?;
         Ok(StreamPump { rx })
     }
 
-    /// Blocking pull; `None` at end of stream.
-    pub fn next_batch(&self) -> Option<TensorData> {
+    /// Blocking pull; `None` at end of stream, `Some(Err(..))` if the
+    /// source emitted a malformed slice (the stream ends after it).
+    pub fn next_batch(&self) -> Option<Result<TensorData>> {
         self.rx.recv().ok()
     }
 }
@@ -220,7 +278,7 @@ mod tests {
         let mut batcher = Batcher::new(6, false);
         let mut out = None;
         while let Some(s) = replay.next_slice() {
-            if let Some(b) = batcher.push(s) {
+            if let Some(b) = batcher.push(s).unwrap() {
                 out = Some(b);
             }
         }
@@ -232,11 +290,11 @@ mod tests {
     fn batcher_emits_full_and_partial_batches() {
         let mut b = Batcher::new(3, false);
         let mk = || Slice::Dense { i: 2, j: 2, data: vec![1.0; 4] };
-        assert!(b.push(mk()).is_none());
-        assert!(b.push(mk()).is_none());
-        let full = b.push(mk()).unwrap();
+        assert!(b.push(mk()).unwrap().is_none());
+        assert!(b.push(mk()).unwrap().is_none());
+        let full = b.push(mk()).unwrap().unwrap();
         assert_eq!(full.dims(), (2, 2, 3));
-        assert!(b.push(mk()).is_none());
+        assert!(b.push(mk()).unwrap().is_none());
         let partial = b.flush().unwrap();
         assert_eq!(partial.dims(), (2, 2, 1));
         assert!(b.flush().is_none());
@@ -247,8 +305,8 @@ mod tests {
         let mut b = Batcher::new(2, true);
         let s0 = Slice::Sparse { i: 3, j: 3, entries: vec![(0, 1, 5.0), (2, 2, -1.0)] };
         let s1 = Slice::Sparse { i: 3, j: 3, entries: vec![(1, 0, 2.0)] };
-        assert!(b.push(s0).is_none());
-        let batch = b.push(s1).unwrap();
+        assert!(b.push(s0).unwrap().is_none());
+        let batch = b.push(s1).unwrap().unwrap();
         assert!(batch.is_sparse());
         assert_eq!(batch.nnz(), 3);
         let d = batch.to_dense();
@@ -261,11 +319,50 @@ mod tests {
         let mut b = Batcher::new(2, false);
         let s0 = Slice::Dense { i: 2, j: 1, data: vec![1.0, 2.0] };
         let s1 = Slice::Sparse { i: 2, j: 1, entries: vec![(1, 0, 7.0)] };
-        b.push(s0);
-        let batch = b.push(s1).unwrap();
+        b.push(s0).unwrap();
+        let batch = b.push(s1).unwrap().unwrap();
         let d = batch.to_dense();
         assert_eq!(d.get(0, 0, 0), 1.0);
         assert_eq!(d.get(1, 0, 1), 7.0);
+    }
+
+    #[test]
+    fn batcher_rejects_mismatched_slice_dims() {
+        let mut b = Batcher::new(4, false);
+        b.push(Slice::Dense { i: 2, j: 2, data: vec![1.0; 4] }).unwrap();
+        // Wrong (I, J) against the pinned stream dims.
+        let err = b.push(Slice::Dense { i: 3, j: 2, data: vec![1.0; 6] });
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("do not match"));
+        // The bad slice was dropped; well-formed slices keep flowing and
+        // the batch holds only validated ones.
+        b.push(Slice::Dense { i: 2, j: 2, data: vec![2.0; 4] }).unwrap();
+        assert_eq!(b.flush().unwrap().dims(), (2, 2, 2));
+    }
+
+    #[test]
+    fn batcher_rejects_internally_inconsistent_slices() {
+        // Dense payload of the wrong length (would silently truncate or
+        // read out of range when written into the batch tensor).
+        let mut b = Batcher::new(2, false);
+        assert!(b.push(Slice::Dense { i: 2, j: 2, data: vec![1.0; 3] }).is_err());
+        // The rejected slice must NOT have pinned the stream dims: a
+        // well-formed slice of a different shape still opens the stream.
+        assert!(b.push(Slice::Dense { i: 3, j: 3, data: vec![1.0; 9] }).is_ok());
+        // Sparse entry indexing outside the slice (would write out of
+        // range into the batch tensor).
+        let mut b = Batcher::new(2, true);
+        assert!(b.push(Slice::Sparse { i: 2, j: 2, entries: vec![(2, 0, 1.0)] }).is_err());
+        assert!(b.push(Slice::Sparse { i: 2, j: 2, entries: vec![(0, 5, 1.0)] }).is_err());
+        // In-range entries are fine.
+        assert!(b.push(Slice::Sparse { i: 2, j: 2, entries: vec![(1, 1, 1.0)] }).is_ok());
+    }
+
+    #[test]
+    fn batcher_with_dims_validates_first_slice() {
+        let mut b = Batcher::with_dims(2, false, (4, 4));
+        assert!(b.push(Slice::Dense { i: 2, j: 2, data: vec![1.0; 4] }).is_err());
+        assert!(b.push(Slice::Dense { i: 4, j: 4, data: vec![1.0; 16] }).is_ok());
     }
 
     #[test]
@@ -276,13 +373,42 @@ mod tests {
         let mut total_k = 0;
         let mut count = 0;
         while let Some(b) = pump.next_batch() {
-            total_k += b.dims().2;
+            total_k += b.unwrap().dims().2;
             count += 1;
             // Slow consumer: the producer must block, not drop.
             std::thread::sleep(std::time::Duration::from_millis(2));
         }
         assert_eq!(total_k, 10);
         assert_eq!(count, 4); // 3+3+3+1
+    }
+
+    #[test]
+    fn pump_surfaces_malformed_source_as_error() {
+        /// A source that violates its own dims contract on the 4th slice.
+        struct LyingSource {
+            emitted: usize,
+        }
+        impl SliceSource for LyingSource {
+            fn slice_dims(&self) -> (usize, usize) {
+                (2, 2)
+            }
+            fn next_slice(&mut self) -> Option<Slice> {
+                self.emitted += 1;
+                match self.emitted {
+                    1..=3 => Some(Slice::Dense { i: 2, j: 2, data: vec![1.0; 4] }),
+                    4 => Some(Slice::Dense { i: 3, j: 3, data: vec![1.0; 9] }),
+                    _ => None,
+                }
+            }
+        }
+        let pump = StreamPump::spawn(LyingSource { emitted: 0 }, 2, false, 2).unwrap();
+        // First batch (slices 1-2) is fine.
+        assert!(pump.next_batch().unwrap().is_ok());
+        // The stream then terminates with the validation error (slice 3 was
+        // still pending — a partial batch is not flushed past an error).
+        let err = pump.next_batch().unwrap();
+        assert!(err.is_err());
+        assert!(pump.next_batch().is_none(), "stream ends after the error");
     }
 
     #[test]

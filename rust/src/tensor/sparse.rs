@@ -10,16 +10,78 @@ use super::{mode_dim, DenseTensor, Tensor3};
 use crate::linalg::Matrix;
 use crate::util::par::{chunk_ranges, workers_for};
 use crate::util::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Pooled per-worker partial buffers for the parallel MTTKRP. COO entries
+/// scatter to overlapping output rows, so parallel workers need private
+/// accumulators (unlike CSF, whose root ranges own disjoint row spans) —
+/// before this pool every parallel MTTKRP call paid `workers × out_dim × R`
+/// fresh allocations. The pool hands shaped, zeroed buffers out per call
+/// and takes them back after the reduction, so steady-state sweeps on a
+/// long-lived tensor allocate nothing (`bench_micro` asserts it). Growth is
+/// monotone and counted, mirroring `cp::AlsWorkspace`.
+#[derive(Default)]
+struct PartialPool {
+    bufs: Mutex<Vec<Matrix>>,
+    allocs: AtomicUsize,
+}
+
+impl PartialPool {
+    /// `n` buffers shaped `rows × cols`, zero-filled; pooled storage is
+    /// reused wherever capacity allows. Thread-safe: concurrent callers
+    /// each get disjoint buffers (the pool simply grows to the high-water
+    /// concurrency).
+    fn take(&self, n: usize, rows: usize, cols: usize) -> Vec<Matrix> {
+        let mut out = {
+            let mut stash = self.bufs.lock().unwrap_or_else(|e| e.into_inner());
+            let keep = stash.len().saturating_sub(n);
+            stash.split_off(keep)
+        };
+        for b in &mut out {
+            if b.ensure_shape(rows, cols) {
+                self.allocs.fetch_add(1, Ordering::Relaxed);
+            }
+            b.fill(0.0);
+        }
+        while out.len() < n {
+            out.push(Matrix::zeros(rows, cols));
+            self.allocs.fetch_add(1, Ordering::Relaxed);
+        }
+        out
+    }
+
+    fn put(&self, bufs: Vec<Matrix>) {
+        let mut stash = self.bufs.lock().unwrap_or_else(|e| e.into_inner());
+        stash.extend(bufs);
+    }
+}
 
 /// COO sparse tensor. Indices are `u32` (dimensions beyond 4B indices are
 /// out of scope for this testbed) and values `f64`.
-#[derive(Clone, Default)]
+#[derive(Default)]
 pub struct CooTensor {
     dims: (usize, usize, usize),
     ii: Vec<u32>,
     jj: Vec<u32>,
     kk: Vec<u32>,
     vv: Vec<f64>,
+    /// Scratch, not data: pooled parallel-MTTKRP partials. Never cloned,
+    /// compared or serialised — a clone starts with an empty pool.
+    partials: PartialPool,
+}
+
+impl Clone for CooTensor {
+    fn clone(&self) -> Self {
+        CooTensor {
+            dims: self.dims,
+            ii: self.ii.clone(),
+            jj: self.jj.clone(),
+            kk: self.kk.clone(),
+            vv: self.vv.clone(),
+            partials: PartialPool::default(),
+        }
+    }
 }
 
 impl std::fmt::Debug for CooTensor {
@@ -215,6 +277,14 @@ impl CooTensor {
             self.vv.len() as f64 / total as f64
         }
     }
+
+    /// Partial-buffer allocations/growths since construction (the parallel
+    /// MTTKRP's pooled per-worker accumulators). Steady-state sweeps at a
+    /// fixed shape report zero growth between calls — the COO counterpart
+    /// of `AlsWorkspace::allocations`, asserted in `bench_micro`.
+    pub fn partial_allocations(&self) -> usize {
+        self.partials.allocs.load(Ordering::Relaxed)
+    }
 }
 
 impl CooTensor {
@@ -343,16 +413,28 @@ impl Tensor3 for CooTensor {
         }
         // Parallel path: COO entries scatter to overlapping output rows, so
         // workers still need per-thread accumulators (unlike CSF, whose
-        // root ranges own disjoint rows); the reduction is in-place.
+        // root ranges own disjoint rows). The accumulators come from the
+        // per-tensor pool — worker `w` owns slot `w`, uncontended — and go
+        // back after the in-place reduction, so a long-lived tensor's
+        // steady-state sweeps allocate nothing.
         let ranges = chunk_ranges(nnz, nw);
-        let partials = crate::util::parallel_map(&ranges, |_, range| {
-            let mut local = Matrix::zeros(out_dim, r);
-            acc_fn(range.clone(), &mut local);
-            local
+        let slots: Vec<Mutex<Matrix>> = self
+            .partials
+            .take(ranges.len(), out_dim, r)
+            .into_iter()
+            .map(Mutex::new)
+            .collect();
+        crate::util::parallel_for_each(ranges.len(), |w| {
+            let mut local = slots[w].lock().unwrap_or_else(|e| e.into_inner());
+            acc_fn(ranges[w].clone(), &mut local);
         });
-        for p in &partials {
-            out.add_in_place(p);
+        let mut bufs = Vec::with_capacity(slots.len());
+        for slot in slots {
+            let local = slot.into_inner().unwrap_or_else(|e| e.into_inner());
+            out.add_in_place(&local);
+            bufs.push(local);
         }
+        self.partials.put(bufs);
     }
 
     fn mode_sum_squares(&self, mode: usize) -> Vec<f64> {
@@ -449,6 +531,38 @@ mod tests {
         let par = t.mttkrp(0, &a, &b, &c);
         let ser = t.to_dense().mttkrp(0, &a, &b, &c);
         assert!(par.max_abs_diff(&ser) < 1e-9);
+    }
+
+    #[test]
+    fn parallel_mttkrp_pools_partial_buffers() {
+        let mut rng = Rng::new(9);
+        let t = CooTensor::rand(40, 40, 40, 0.5, &mut rng);
+        assert!(t.nnz() > 8192, "need the parallel path");
+        let a = Matrix::rand_gaussian(40, 4, &mut rng);
+        let b = Matrix::rand_gaussian(40, 4, &mut rng);
+        let c = Matrix::rand_gaussian(40, 4, &mut rng);
+        // Warm the pool across all three modes (same out shape here).
+        for mode in 0..3 {
+            let _ = t.mttkrp(mode, &a, &b, &c);
+        }
+        let warm = t.partial_allocations();
+        // (On a single-core runner the serial path allocates nothing and
+        // `warm` is 0 — the steady-state assertion below still holds.)
+        let reference = t.mttkrp(0, &a, &b, &c);
+        for _ in 0..3 {
+            for mode in 0..3 {
+                let _ = t.mttkrp(mode, &a, &b, &c);
+            }
+        }
+        assert_eq!(
+            t.partial_allocations(),
+            warm,
+            "steady-state parallel MTTKRP must reuse pooled partials"
+        );
+        // Reuse does not change results (buffers are re-zeroed on take).
+        assert_eq!(t.mttkrp(0, &a, &b, &c).max_abs_diff(&reference), 0.0);
+        // A clone starts with a fresh, empty pool.
+        assert_eq!(t.clone().partial_allocations(), 0);
     }
 
     #[test]

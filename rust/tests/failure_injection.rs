@@ -43,7 +43,8 @@ impl InnerSolver for FlakySolver {
 fn solver_failure_surfaces_as_error_not_panic() {
     let spec = SyntheticSpec::dense(10, 10, 10, 2, 0.0, 1);
     let (existing, batches, _) = spec.generate_stream(0.5, 3);
-    let cfg = SamBaTenConfig::new(2, 2, 2, 3).with_solver(Arc::new(FlakySolver {
+    let base = SamBaTenConfig::builder(2, 2, 2, 3).build().unwrap();
+    let cfg = base.with_solver(Arc::new(FlakySolver {
         inner: sambaten::coordinator::NativeAlsSolver,
         fail_first: 100, // always fails
         calls: AtomicUsize::new(0),
@@ -59,7 +60,8 @@ fn solver_failure_surfaces_as_error_not_panic() {
 fn engine_recovers_after_transient_failures() {
     let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, 2);
     let (existing, batches, _) = spec.generate_stream(0.5, 3);
-    let cfg = SamBaTenConfig::new(2, 2, 2, 4).with_solver(Arc::new(FlakySolver {
+    let base = SamBaTenConfig::builder(2, 2, 2, 4).build().unwrap();
+    let cfg = base.with_solver(Arc::new(FlakySolver {
         inner: sambaten::coordinator::NativeAlsSolver,
         fail_first: 2, // first batch's repetitions fail
         calls: AtomicUsize::new(0),
@@ -77,7 +79,8 @@ fn engine_recovers_after_transient_failures() {
 fn wrong_mode_shapes_rejected_without_state_change() {
     let spec = SyntheticSpec::dense(8, 8, 8, 2, 0.0, 5);
     let (x, _) = spec.generate();
-    let mut engine = SamBaTen::init(&x, SamBaTenConfig::new(2, 2, 2, 6)).unwrap();
+    let cfg = SamBaTenConfig::builder(2, 2, 2, 6).build().unwrap();
+    let mut engine = SamBaTen::init(&x, cfg).unwrap();
     let bad = TensorData::Dense(DenseTensor::zeros(9, 8, 2));
     assert!(engine.ingest(&bad).is_err());
     let bad2 = TensorData::Dense(DenseTensor::zeros(8, 7, 2));
@@ -89,7 +92,8 @@ fn wrong_mode_shapes_rejected_without_state_change() {
 fn empty_batch_rejected() {
     let spec = SyntheticSpec::dense(8, 8, 8, 2, 0.0, 7);
     let (x, _) = spec.generate();
-    let mut engine = SamBaTen::init(&x, SamBaTenConfig::new(2, 2, 2, 8)).unwrap();
+    let cfg = SamBaTenConfig::builder(2, 2, 2, 8).build().unwrap();
+    let mut engine = SamBaTen::init(&x, cfg).unwrap();
     let empty = TensorData::Sparse(CooTensor::new(8, 8, 0));
     assert!(engine.ingest(&empty).is_err());
 }
@@ -100,8 +104,10 @@ fn rank_exceeding_sample_dims_is_clamped_not_fatal() {
     // the engine must clamp the sample rank instead of crashing.
     let spec = SyntheticSpec::dense(8, 8, 8, 2, 0.01, 9);
     let (existing, batches, _) = spec.generate_stream(0.5, 2);
-    let mut cfg = SamBaTenConfig::new(6, 4, 2, 10);
-    cfg.als.max_iters = 30;
+    let cfg = SamBaTenConfig::builder(6, 4, 2, 10)
+        .als(AlsOptions { max_iters: 30, tol: 1e-5, ..Default::default() })
+        .build()
+        .unwrap();
     let mut engine = SamBaTen::init(&existing, cfg).unwrap();
     for b in &batches {
         engine.ingest(b).unwrap();
@@ -145,6 +151,6 @@ fn stream_pump_survives_consumer_drop() {
     // Take one batch then drop the pump — the producer thread must exit
     // (no hang; the test completing at all is the assertion).
     let first = pump.next_batch();
-    assert!(first.is_some());
+    assert!(first.unwrap().is_ok());
     drop(pump);
 }

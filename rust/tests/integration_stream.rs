@@ -22,10 +22,11 @@ fn dense_stream_end_to_end() {
     let (full, _) = spec.generate();
     let TensorData::Dense(full_dense) = &full else { unreachable!() };
     let (_, rest) = full_dense.split_mode3(6);
-    let mut engine = SamBaTen::init(&existing, SamBaTenConfig::new(3, 2, 3, 5)).unwrap();
+    let cfg = SamBaTenConfig::builder(3, 2, 3, 5).build().unwrap();
+    let mut engine = SamBaTen::init(&existing, cfg).unwrap();
     let pump = StreamPump::spawn(TensorReplay::new(rest.into()), 4, false, 2).unwrap();
     while let Some(batch) = pump.next_batch() {
-        engine.ingest(&batch).unwrap();
+        engine.ingest(&batch.unwrap()).unwrap();
     }
     assert_eq!(engine.model().factors[2].rows(), 24);
     let re = relative_error(&full, engine.model());
@@ -37,7 +38,8 @@ fn dense_stream_end_to_end() {
 fn checkpoint_resume_midstream() {
     let spec = SyntheticSpec::dense(16, 16, 20, 2, 0.02, 2);
     let (existing, batches, _) = spec.generate_stream(0.3, 4);
-    let mut engine = SamBaTen::init(&existing, SamBaTenConfig::new(2, 2, 3, 6)).unwrap();
+    let cfg = SamBaTenConfig::builder(2, 2, 3, 6).build().unwrap();
+    let mut engine = SamBaTen::init(&existing, cfg).unwrap();
     // First half.
     let mid = batches.len() / 2;
     let mut acc = existing.clone();
@@ -50,7 +52,8 @@ fn checkpoint_resume_midstream() {
     save_model(&path, engine.model()).unwrap();
     let restored = load_model(&path).unwrap();
     std::fs::remove_file(&path).ok();
-    let mut engine2 = SamBaTen::from_model(acc.clone(), restored, SamBaTenConfig::new(2, 2, 3, 6));
+    let cfg2 = SamBaTenConfig::builder(2, 2, 3, 6).build().unwrap();
+    let mut engine2 = SamBaTen::from_model(acc.clone(), restored, cfg2);
     for b in &batches[mid..] {
         engine.ingest(b).unwrap();
         engine2.ingest(b).unwrap();
@@ -76,11 +79,11 @@ fn tns_file_roundtrip_pipeline() {
     // empty; pad to the known dims for the check.
     assert!(loaded.nnz() == coo.nnz());
     let (existing, rest) = loaded.split_mode3(4);
-    let mut engine =
-        SamBaTen::init(&TensorData::Sparse(existing), SamBaTenConfig::new(2, 2, 3, 7)).unwrap();
+    let cfg = SamBaTenConfig::builder(2, 2, 3, 7).build().unwrap();
+    let mut engine = SamBaTen::init(&TensorData::Sparse(existing), cfg).unwrap();
     let pump = StreamPump::spawn(TensorReplay::new(TensorData::Sparse(rest)), 4, true, 2).unwrap();
     while let Some(b) = pump.next_batch() {
-        engine.ingest(&b).unwrap();
+        engine.ingest(&b.unwrap()).unwrap();
     }
     let re = relative_error(engine.tensor(), engine.model());
     assert!(re < 0.8, "sparse pipeline err {re}");
@@ -94,8 +97,8 @@ fn methods_agree_on_easy_stream() {
     let spec = SyntheticSpec::dense(14, 14, 16, 2, 0.05, 4);
     let (existing, batches, _) = spec.generate_stream(0.4, 4);
     let (full, _) = spec.generate();
-    let mut samba =
-        SamBaTen::init(&existing, SamBaTenConfig::new(2, 2, 3, 8)).unwrap();
+    let cfg = SamBaTenConfig::builder(2, 2, 3, 8).build().unwrap();
+    let mut samba = SamBaTen::init(&existing, cfg).unwrap();
     let mut cpals = CpAlsFull::init(&existing, 2, 9).unwrap();
     let mut online = OnlineCp::init(&existing, 2, 10).unwrap();
     for b in &batches {
@@ -136,8 +139,8 @@ fn engine_fitness_band_vs_cpals_for_coo_and_csf() {
         } else {
             existing.clone()
         };
-        let mut samba =
-            SamBaTen::init(&existing_v, SamBaTenConfig::new(2, 2, 4, 9)).unwrap();
+        let cfg = SamBaTenConfig::builder(2, 2, 4, 9).build().unwrap();
+        let mut samba = SamBaTen::init(&existing_v, cfg).unwrap();
         for b in &batches {
             let bv = if promote { as_csf(b) } else { b.clone() };
             samba.ingest(&bv).unwrap();
@@ -165,8 +168,8 @@ fn all_real_sims_ingest() {
             _ => 0.003,
         };
         let (existing, batches, _) = ds.generate_stream(scale, 11);
-        let mut engine =
-            SamBaTen::init(&existing, SamBaTenConfig::new(ds.rank.min(3), 2, 2, 12)).unwrap();
+        let cfg = SamBaTenConfig::builder(ds.rank.min(3), 2, 2, 12).build().unwrap();
+        let mut engine = SamBaTen::init(&existing, cfg).unwrap();
         // Ingest a couple of batches only (smoke).
         for b in batches.iter().take(2) {
             engine.ingest(b).unwrap();
@@ -180,7 +183,8 @@ fn all_real_sims_ingest() {
 fn c_rows_track_slice_count_exactly() {
     let spec = SyntheticSpec::dense(12, 12, 30, 2, 0.02, 5);
     let (existing, batches, _) = spec.generate_stream(0.2, 7);
-    let mut engine = SamBaTen::init(&existing, SamBaTenConfig::new(2, 2, 2, 13)).unwrap();
+    let cfg = SamBaTenConfig::builder(2, 2, 2, 13).build().unwrap();
+    let mut engine = SamBaTen::init(&existing, cfg).unwrap();
     let mut expect = existing.dims().2;
     for b in &batches {
         engine.ingest(b).unwrap();
@@ -196,7 +200,8 @@ fn c_rows_track_slice_count_exactly() {
 fn zero_batch_survives() {
     let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, 6);
     let (existing, _, _) = spec.generate_stream(0.5, 3);
-    let mut engine = SamBaTen::init(&existing, SamBaTenConfig::new(2, 2, 2, 14)).unwrap();
+    let cfg = SamBaTenConfig::builder(2, 2, 2, 14).build().unwrap();
+    let mut engine = SamBaTen::init(&existing, cfg).unwrap();
     let zero_batch = TensorData::Sparse(CooTensor::new(10, 10, 2));
     engine.ingest(&zero_batch).unwrap();
     assert_eq!(engine.model().factors[2].rows(), 8);

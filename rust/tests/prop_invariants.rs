@@ -437,7 +437,9 @@ fn prop_engine_state_invariants() {
         let (existing, batches, _) = spec.generate_stream(0.3, batch);
         let mut engine = SamBaTen::init(
             &existing,
-            SamBaTenConfig::new(rank, 1 + rng.below(3), 1 + rng.below(3), rng.next_u64()),
+            SamBaTenConfig::builder(rank, 1 + rng.below(3), 1 + rng.below(3), rng.next_u64())
+                .build()
+                .expect("valid config"),
         )
         .map_err(|e| e.to_string())?;
         let mut slices = existing.dims().2;

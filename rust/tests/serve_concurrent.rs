@@ -1,0 +1,175 @@
+//! Concurrency stress for the serving-layer API: N reader threads hammer a
+//! stream's wait-free `StreamHandle` while the writer ingests, asserting
+//! the snapshot invariants the redesign promises — monotone epochs,
+//! unit-norm factor columns, `C` row count equal to the published slice
+//! count, and readers that are never blocked by (or able to observe a
+//! half-merged state of) the writer.
+//!
+//! CI runs this file under `--release` as well (see `.github/workflows`):
+//! optimised codegen widens the real interleaving space the test explores.
+
+use sambaten::coordinator::{ModelSnapshot, SamBaTen, SamBaTenConfig};
+use sambaten::datagen::SyntheticSpec;
+use sambaten::serve::DecompositionService;
+use sambaten::tensor::Tensor3;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// The invariants every published snapshot must satisfy, at any epoch.
+fn assert_snapshot_invariants(snap: &ModelSnapshot) {
+    // Internal consistency: the model's C always matches the published k.
+    assert_eq!(
+        snap.model.factors[2].rows(),
+        snap.dims.2,
+        "epoch {}: C rows != published slice count",
+        snap.epoch
+    );
+    assert_eq!(snap.model.factors[0].rows(), snap.dims.0);
+    assert_eq!(snap.model.factors[1].rows(), snap.dims.1);
+    // Canonical form: unit-norm columns (zero-norm columns carry λ = 0).
+    for f in 0..3 {
+        for t in 0..snap.model.rank() {
+            let n = snap.model.factors[f].col_norm(t);
+            assert!(
+                (n - 1.0).abs() < 1e-6 || n.abs() < 1e-9,
+                "epoch {}: factor {f} col {t} norm {n} is neither unit nor zero",
+                snap.epoch
+            );
+        }
+    }
+    assert!(snap.model.lambda.iter().all(|l| l.is_finite()));
+    // Query surface stays well-defined mid-stream.
+    assert!(snap.entry(0, 0, 0).is_finite());
+    let top = snap.top_k(0, 0, 2);
+    assert!(top.len() <= 2);
+    assert!(top.iter().all(|(_, s)| s.is_finite()));
+    if let Some(stats) = &snap.stats {
+        assert!(stats.k_new >= 1);
+    } else {
+        assert_eq!(snap.epoch, 0, "only epoch 0 may lack batch stats");
+    }
+}
+
+/// N readers query a raw engine handle while the writer ingests on this
+/// thread. Readers must observe monotone epochs and only consistent
+/// snapshots; every reader must complete a healthy number of reads (they
+/// are wait-free — an ingest-long stall would show up as a tiny count).
+#[test]
+fn readers_observe_consistent_snapshots_while_writer_ingests() {
+    let spec = SyntheticSpec::dense(20, 20, 36, 3, 0.02, 42);
+    let (existing, batches, _) = spec.generate_stream(0.25, 3);
+    let cfg = SamBaTenConfig::builder(3, 2, 3, 7).build().unwrap();
+    let mut engine = SamBaTen::init(&existing, cfg).unwrap();
+    let handle = engine.handle();
+    let total = batches.len() as u64;
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let readers: Vec<_> = (0..4)
+        .map(|_| {
+            let h = handle.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut last_epoch = 0u64;
+                let mut reads = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let snap = h.snapshot();
+                    assert!(
+                        snap.epoch >= last_epoch,
+                        "epoch went backwards: {} after {last_epoch}",
+                        snap.epoch
+                    );
+                    last_epoch = snap.epoch;
+                    assert_snapshot_invariants(&snap);
+                    reads += 1;
+                }
+                (last_epoch, reads)
+            })
+        })
+        .collect();
+
+    for b in &batches {
+        engine.ingest(b).unwrap();
+    }
+    assert_eq!(handle.epoch(), total);
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        let (last_epoch, reads) = r.join().unwrap();
+        assert!(last_epoch <= total);
+        // Wait-free readers running for the whole multi-batch ingest must
+        // get far more than one read per epoch in.
+        assert!(reads > total, "reader made only {reads} reads over {total} ingests");
+    }
+}
+
+/// The same contract through the full service: concurrent readers on a
+/// registered stream, writer behind the bounded queue, plus a graceful
+/// shutdown that drains everything the producers submitted.
+#[test]
+fn service_stream_consistent_under_concurrent_load() {
+    let spec = SyntheticSpec::dense(16, 16, 30, 2, 0.02, 9);
+    let (existing, batches, _) = spec.generate_stream(0.3, 3);
+    let total = batches.len() as u64;
+    let svc = Arc::new(DecompositionService::with_queue_cap(2));
+    let cfg = SamBaTenConfig::builder(2, 2, 2, 5).build().unwrap();
+    let handle = svc.register("stress", &existing, cfg).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..3)
+        .map(|_| {
+            let h = handle.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut last = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let snap = h.snapshot();
+                    assert!(snap.epoch >= last);
+                    last = snap.epoch;
+                    assert_snapshot_invariants(&snap);
+                }
+            })
+        })
+        .collect();
+
+    // Producer submits everything, then the service shuts down gracefully:
+    // the queue must drain — every accepted batch lands before the worker
+    // is joined.
+    let tickets: Vec<_> = batches
+        .iter()
+        .map(|b| svc.ingest("stress", b.clone()).unwrap())
+        .collect();
+    let finals = svc.shutdown();
+    assert_eq!(finals.len(), 1);
+    assert_eq!(finals[0].epoch, total, "graceful shutdown must drain the queue");
+    assert_eq!(finals[0].errors, 0);
+    assert_eq!(finals[0].slices, batches.iter().map(|b| b.dims().2 as u64).sum::<u64>());
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        r.join().unwrap();
+    }
+    // Handles outlive the service: the last snapshot stays queryable.
+    assert_eq!(handle.epoch(), total);
+    assert!(handle.snapshot().entry(0, 0, 0).is_finite());
+}
+
+/// Snapshot immutability: a reader that holds an old epoch keeps a fully
+/// consistent stale view no matter how far the writer advances.
+#[test]
+fn held_snapshots_stay_consistent_across_future_ingests() {
+    let spec = SyntheticSpec::dense(12, 12, 20, 2, 0.0, 11);
+    let (existing, batches, _) = spec.generate_stream(0.4, 2);
+    let cfg = SamBaTenConfig::builder(2, 2, 2, 3).build().unwrap();
+    let mut engine = SamBaTen::init(&existing, cfg).unwrap();
+    let handle = engine.handle();
+    let held = handle.snapshot();
+    let held_rows = held.model.factors[2].rows();
+    for b in &batches {
+        engine.ingest(b).unwrap();
+    }
+    assert_eq!(held.epoch, 0);
+    assert_eq!(held.model.factors[2].rows(), held_rows, "held snapshot mutated");
+    assert_snapshot_invariants(&held);
+    assert!(handle.epoch() == batches.len() as u64);
+}
