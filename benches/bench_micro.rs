@@ -6,6 +6,8 @@
 //!   * ALS sweep throughput: COO vs CSF × fresh-alloc vs reused workspace,
 //!     with the workspace allocation counter (steady state must be 0)
 //!   * incremental CSF mode-3 append vs the rebuild-from-COO path
+//!   * 1 000-stream serving: shared 8-worker work-stealing pool vs the
+//!     dedicated-thread baseline (asserts pool throughput >= dedicated)
 //!   * weighted sampling without replacement
 //!   * component matching (congruence + Hungarian)
 //!   * Jacobi SVD / Cholesky solve
@@ -289,6 +291,84 @@ fn main() {
             median < 10_000.0,
             "snapshot acquisition median degraded under ingest: {median:.0} ns"
         );
+    }
+
+    // Scheduler acceptance (ISSUE 5): 1 000 idle-ish streams, a shared
+    // 8-worker work-stealing pool vs the dedicated-thread baseline (one OS
+    // thread per stream). Workload: every stream ingests BATCHES one-slice
+    // batches, round-robin, fire-and-forget, then all tickets join. The
+    // engines are deliberately tiny so per-batch scheduling overhead — the
+    // thing the pool exists to beat at this stream count — is a visible
+    // fraction of the work. Acceptance: the pool sustains at least the
+    // dedicated-thread ingest throughput on 8 threads instead of 1 000
+    // (asserted with a 10% allowance for noisy shared runners).
+    {
+        use sambaten::coordinator::SamBaTenConfig;
+        use sambaten::serve::{DecompositionService, ServiceConfig};
+        const STREAMS: usize = 1000;
+        const BATCHES: usize = 4;
+        const POOL_WORKERS: usize = 8;
+        let mut srng = Rng::new(31);
+        let existing: TensorData = DenseTensor::rand(6, 6, 4, &mut srng).into();
+        let batch: TensorData = DenseTensor::rand(6, 6, 1, &mut srng).into();
+        let run_mode = |svc: &DecompositionService, tag: &str| -> f64 {
+            let t0 = std::time::Instant::now();
+            for s in 0..STREAMS {
+                let cfg = SamBaTenConfig::builder(2, 2, 1, 7 + s as u64)
+                    .als(AlsOptions { max_iters: 2, tol: 0.0, seed: 1, ..Default::default() })
+                    .build()
+                    .unwrap();
+                svc.register(&format!("s{s}"), &existing, cfg).unwrap();
+            }
+            report(
+                &format!("micro/serve_1k_streams_{tag}/register"),
+                t0.elapsed().as_secs_f64(),
+                "s (incl. initial decompositions)",
+            );
+            let t0 = std::time::Instant::now();
+            let mut tickets = Vec::with_capacity(STREAMS * BATCHES);
+            for _ in 0..BATCHES {
+                for s in 0..STREAMS {
+                    tickets.push(svc.ingest(&format!("s{s}"), batch.clone()).unwrap());
+                }
+            }
+            for t in tickets {
+                t.wait().unwrap();
+            }
+            let ingest_s = t0.elapsed().as_secs_f64();
+            report(
+                &format!("micro/serve_1k_streams_{tag}/ingest"),
+                (STREAMS * BATCHES) as f64 / ingest_s,
+                "batches/s",
+            );
+            let finals = svc.shutdown();
+            assert_eq!(finals.len(), STREAMS);
+            assert!(
+                finals.iter().all(|st| st.epoch == BATCHES as u64 && st.errors == 0),
+                "{tag}: every stream must apply every batch in order"
+            );
+            ingest_s
+        };
+        let dedicated = DecompositionService::with_config(ServiceConfig::dedicated());
+        let ded_ingest_s = run_mode(&dedicated, "dedicated");
+        drop(dedicated);
+        let pooled =
+            DecompositionService::with_config(ServiceConfig::pooled(POOL_WORKERS));
+        let pool_ingest_s = run_mode(&pooled, "pool");
+        let ps = pooled.pool_stats().expect("pool mode");
+        assert_eq!(ps.workers, POOL_WORKERS, "1 000 streams on exactly 8 worker threads");
+        assert_eq!(ps.panics, 0);
+        report(
+            "micro/serve_1k_streams/pool_vs_dedicated",
+            ded_ingest_s / pool_ingest_s.max(1e-12),
+            "x (dedicated/pool, >= 1 wanted)",
+        );
+        assert!(
+            pool_ingest_s <= ded_ingest_s * 1.10,
+            "8-worker pool ({pool_ingest_s:.3}s) must sustain >= dedicated-thread \
+             throughput ({ded_ingest_s:.3}s) on the 1k-stream workload"
+        );
+        drop(pooled);
     }
 
     // Weighted sampling.

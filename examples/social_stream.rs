@@ -123,5 +123,14 @@ fn main() -> anyhow::Result<()> {
             st.batches, st.slices, st.errors, st.ingest_seconds
         );
     }
+    // The service runs on the shared work-stealing scheduler by default:
+    // this one stream used a key on a hardware-sized pool, and its
+    // per-repetition sample-ALS fan-out rode the same pool.
+    if let Some(ps) = svc.pool_stats() {
+        println!(
+            "scheduler        : {} workers, {} tasks ({} stolen, {} panics)",
+            ps.workers, ps.tasks_executed, ps.steals, ps.panics
+        );
+    }
     Ok(())
 }

@@ -33,6 +33,9 @@ pub struct RunConfig {
     pub engine: String,
     pub als_max_iters: usize,
     pub als_tol: f64,
+    /// nnz bar for COO→CSF promotion and CSF-native sample extraction
+    /// (`SamBaTenConfig::csf_nnz_bar`; ≥ 1).
+    pub csf_nnz_bar: usize,
 }
 
 impl Default for RunConfig {
@@ -50,6 +53,7 @@ impl Default for RunConfig {
             engine: "native".into(),
             als_max_iters: 100,
             als_tol: 1e-5,
+            csf_nnz_bar: crate::tensor::CSF_PROMOTION_NNZ,
         }
     }
 }
@@ -83,6 +87,7 @@ impl RunConfig {
                 "engine" => cfg.engine = value.as_str().context("engine")?.into(),
                 "als_max_iters" => cfg.als_max_iters = value.as_usize().context("als_max_iters")?,
                 "als_tol" => cfg.als_tol = value.as_f64().context("als_tol")?,
+                "csf_nnz_bar" => cfg.csf_nnz_bar = value.as_usize().context("csf_nnz_bar")?,
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
         }
@@ -107,6 +112,7 @@ impl RunConfig {
             matches!(self.engine.as_str(), "native" | "pjrt"),
             "engine must be native|pjrt"
         );
+        anyhow::ensure!(self.csf_nnz_bar >= 1, "csf_nnz_bar must be >= 1");
         Ok(())
     }
 
@@ -127,6 +133,7 @@ impl RunConfig {
                 MatchPolicy::Hungarian
             })
             .quality_control(self.quality_control)
+            .csf_nnz_bar(self.csf_nnz_bar)
             .build()
     }
 }
@@ -177,6 +184,17 @@ als_tol = 1e-6
         assert!(RunConfig::from_toml_str("rank = 0\n").is_err());
         assert!(RunConfig::from_toml_str("existing_frac = 1.5\n").is_err());
         assert!(RunConfig::from_toml_str("engine = \"gpu\"\n").is_err());
+        assert!(RunConfig::from_toml_str("csf_nnz_bar = 0\n").is_err());
+    }
+
+    #[test]
+    fn csf_bar_threads_into_engine_config() {
+        let cfg = RunConfig::from_toml_str("csf_nnz_bar = 777\n").unwrap();
+        assert_eq!(cfg.csf_nnz_bar, 777);
+        assert_eq!(cfg.to_engine_config().unwrap().csf_nnz_bar(), 777);
+        // Default stays the global promotion bar.
+        let d = RunConfig::default();
+        assert_eq!(d.csf_nnz_bar, crate::tensor::CSF_PROMOTION_NNZ);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use super::update::{normalize_sample_model, project_sample, ProjectedUpdate};
 use crate::corcondia::{getrank_with, GetRankOptions};
 use crate::cp::{cp_als, AlsOptions, AlsWorkspace, CpModel};
 use crate::matching::{match_components, MatchPolicy};
+use crate::pool::WorkPool;
 use crate::sampling::{draw_sample, Sample, SamplerConfig};
 use crate::tensor::{Tensor3, TensorData};
 use crate::util::{parallel_map, Rng, Stopwatch};
@@ -58,6 +59,17 @@ pub struct SamBaTenConfig {
     /// (`0` = the paper's literal zero-fill-only rule; see
     /// `update::merge_updates_with`).
     pub(crate) blend: f64,
+    /// nnz bar governing both COO→CSF promotion of the accumulated tensor
+    /// and CSF-native sample extraction (see `tensor::CSF_PROMOTION_NNZ`,
+    /// the default). The break-even is shape-dependent; deployments tune
+    /// it here instead of patching a global constant.
+    pub(crate) csf_nnz_bar: usize,
+    /// Optional shared executor: when set, the per-repetition sample-ALS
+    /// fan-out runs on this [`WorkPool`] instead of spawning scoped
+    /// threads, so intra-ingest and inter-stream parallelism share one
+    /// sized-to-the-hardware scheduler (the serving layer injects its own
+    /// pool here — see `serve`).
+    pub(crate) executor: Option<Arc<WorkPool>>,
     /// Inner decomposition engine (native ALS or PJRT AOT).
     pub(crate) solver: Arc<dyn InnerSolver>,
 }
@@ -69,6 +81,8 @@ impl std::fmt::Debug for SamBaTenConfig {
             .field("sampling_factor", &self.sampling_factor)
             .field("repetitions", &self.repetitions)
             .field("quality_control", &self.quality_control)
+            .field("csf_nnz_bar", &self.csf_nnz_bar)
+            .field("executor", &self.executor.as_ref().map(|p| p.workers()))
             .field("solver", &self.solver.name())
             .finish()
     }
@@ -102,6 +116,8 @@ impl SamBaTenConfig {
                 congruence_threshold: 0.25,
                 refine_c: true,
                 blend: 0.5,
+                csf_nnz_bar: crate::tensor::CSF_PROMOTION_NNZ,
+                executor: None,
                 solver: Arc::new(NativeAlsSolver),
             },
         }
@@ -180,6 +196,16 @@ impl SamBaTenConfig {
         self.blend
     }
 
+    /// nnz bar for COO→CSF promotion and CSF-native sample extraction.
+    pub fn csf_nnz_bar(&self) -> usize {
+        self.csf_nnz_bar
+    }
+
+    /// The shared fan-out executor, if one is attached.
+    pub fn executor(&self) -> Option<&Arc<WorkPool>> {
+        self.executor.as_ref()
+    }
+
     /// The inner decomposition engine.
     pub fn solver(&self) -> &Arc<dyn InnerSolver> {
         &self.solver
@@ -196,6 +222,14 @@ impl SamBaTenConfig {
     /// Swap the inner solver on a built config (validity-preserving).
     pub fn with_solver(mut self, solver: Arc<dyn InnerSolver>) -> Self {
         self.solver = solver;
+        self
+    }
+
+    /// Attach (or detach) a shared fan-out executor on a built config
+    /// (validity-preserving) — the serving layer uses this to route every
+    /// registered stream's intra-ingest parallelism through its own pool.
+    pub fn with_executor(mut self, executor: Option<Arc<WorkPool>>) -> Self {
+        self.executor = executor;
         self
     }
 }
@@ -259,6 +293,24 @@ impl SamBaTenConfigBuilder {
         self
     }
 
+    /// nnz bar (≥ 1) for COO→CSF promotion of the accumulated tensor and
+    /// for CSF-native sample extraction. Defaults to
+    /// [`crate::tensor::CSF_PROMOTION_NNZ`]; lower it for shapes whose
+    /// fiber-tree build amortises earlier, raise it for shallow tensors
+    /// that rebuild cheaply.
+    pub fn csf_nnz_bar(mut self, bar: usize) -> Self {
+        self.cfg.csf_nnz_bar = bar;
+        self
+    }
+
+    /// Shared executor for the per-repetition sample-ALS fan-out (e.g. the
+    /// serving layer's [`WorkPool`], sized via [`WorkPool::new`]). Without
+    /// one, the fan-out uses per-ingest scoped threads.
+    pub fn executor(mut self, executor: Arc<WorkPool>) -> Self {
+        self.cfg.executor = Some(executor);
+        self
+    }
+
     /// Inner decomposition engine.
     pub fn solver(mut self, solver: Arc<dyn InnerSolver>) -> Self {
         self.cfg.solver = solver;
@@ -289,6 +341,7 @@ impl SamBaTenConfigBuilder {
             "blend must be in [0, 1] (got {})",
             c.blend
         );
+        anyhow::ensure!(c.csf_nnz_bar >= 1, "csf_nnz_bar must be >= 1 (got 0)");
         if self.cfg.quality_control {
             self.cfg.getrank.max_rank = self.cfg.rank;
         }
@@ -351,7 +404,7 @@ impl SamBaTen {
     pub fn init(x_old: &TensorData, cfg: SamBaTenConfig) -> Result<Self> {
         // Promote up front so the initial full decomposition already runs
         // on the CSF kernels when the pre-existing tensor is large.
-        let x_old = x_old.clone().promoted();
+        let x_old = x_old.clone().promoted_at(cfg.csf_nnz_bar);
         let als = AlsOptions { seed: cfg.seed, ..cfg.als.clone() };
         let (mut model, _) = cp_als(&x_old, cfg.rank, &als).context("initial decomposition")?;
         model.normalize();
@@ -368,7 +421,7 @@ impl SamBaTen {
         let rng = Rng::new(cfg.seed ^ 0x5A3B_A7E9);
         let ws_pool =
             (0..cfg.repetitions.max(1)).map(|_| Mutex::new(AlsWorkspace::new())).collect();
-        let x = x_old.promoted();
+        let x = x_old.promoted_at(cfg.csf_nnz_bar);
         let cell = Arc::new(SnapshotCell::new(Arc::new(ModelSnapshot {
             epoch: 0,
             dims: x.dims(),
@@ -391,6 +444,13 @@ impl SamBaTen {
     /// snapshots (the wait-free read path — see `coordinator::snapshot`).
     pub fn handle(&self) -> StreamHandle {
         StreamHandle::new(self.cell.clone())
+    }
+
+    /// Attach (or detach) the shared fan-out executor after construction —
+    /// the serving layer uses this to route a pre-built engine's
+    /// per-repetition parallelism onto its pool at registration time.
+    pub fn set_executor(&mut self, executor: Option<Arc<WorkPool>>) {
+        self.cfg.executor = executor;
     }
 
     /// Number of batches successfully ingested (the published epoch).
@@ -437,6 +497,7 @@ impl SamBaTen {
         let sampler = SamplerConfig {
             factor: self.cfg.sampling_factor,
             factor_mode3: Some(s3),
+            csf_extract_nnz: self.cfg.csf_nnz_bar,
         };
         // Derive one RNG per repetition up front (sequential, deterministic),
         // then run the repetitions fully in parallel.
@@ -461,7 +522,7 @@ impl SamBaTen {
         let model = &self.model;
         let ws_pool = &self.ws_pool;
         type RepOut = (Sample, ProjectedUpdate, usize, f64, [f64; 3]);
-        let results: Vec<Result<RepOut>> = parallel_map(&inputs, |rep, inp| {
+        let run_rep = |rep: usize, inp: &RepInput| -> Result<RepOut> {
             let mut rng = inp.rng.clone();
             // Repetition `rep` owns pool slot `rep` — uncontended lock. A
             // poisoned slot (a past repetition panicked mid-solve) is
@@ -517,7 +578,17 @@ impl SamBaTen {
             let upd = project_sample(model, &sample, &model_s, &mres, cfg.congruence_threshold);
             let t_match = t0.elapsed().as_secs_f64();
             Ok((sample, upd, rank, mean_cong, [t_sample, t_decompose, t_match]))
-        });
+        };
+        // The repetitions run fully in parallel either way; with a shared
+        // executor attached they ride the serving layer's work-stealing
+        // pool (one sized-to-the-hardware scheduler for inter-stream AND
+        // intra-ingest parallelism — the fan-out caller participates, so
+        // this is deadlock-free even when every worker is busy), otherwise
+        // on per-ingest scoped threads.
+        let results: Vec<Result<RepOut>> = match cfg.executor.as_ref() {
+            Some(pool) => pool.parallel_map(&inputs, &run_rep),
+            None => parallel_map(&inputs, &run_rep),
+        };
         let mut samples = Vec::with_capacity(reps);
         let mut updates = Vec::with_capacity(reps);
         let mut ranks_used = Vec::with_capacity(reps);
@@ -561,7 +632,7 @@ impl SamBaTen {
         // incrementally — only the batch is sorted, the history pays at
         // most a linear copy, never an `O(nnz log nnz)` re-sort.
         self.x.append_mode3(x_new);
-        self.x.maybe_promote();
+        self.x.maybe_promote_at(self.cfg.csf_nnz_bar);
         let phase_merge_s = t0.elapsed().as_secs_f64();
         debug_assert_eq!(self.model.factors[2].rows(), k_old + k_new);
         let stats = BatchStats {
@@ -730,6 +801,56 @@ mod tests {
     }
 
     #[test]
+    fn executor_fanout_matches_scoped_threads() {
+        // Routing the per-repetition fan-out through a shared WorkPool
+        // must be an execution-strategy change only: bit-identical models.
+        let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, 31);
+        let (existing, batches, _) = spec.generate_stream(0.5, 3);
+        let run = |executor: Option<Arc<WorkPool>>| {
+            let mut b = SamBaTenConfig::builder(2, 2, 3, 77);
+            if let Some(p) = executor {
+                b = b.executor(p);
+            }
+            let mut e = SamBaTen::init(&existing, b.build().unwrap()).unwrap();
+            for batch in &batches {
+                e.ingest(batch).unwrap();
+            }
+            e.model().clone()
+        };
+        let scoped = run(None);
+        let pool = Arc::new(WorkPool::new(2));
+        let pooled = run(Some(pool.clone()));
+        for f in 0..3 {
+            assert!(scoped.factors[f].max_abs_diff(&pooled.factors[f]) < 1e-12, "factor {f}");
+        }
+        assert_eq!(scoped.lambda, pooled.lambda);
+        assert!(pool.stats().tasks_executed > 0, "the fan-out really ran on the pool");
+    }
+
+    #[test]
+    fn csf_bar_knob_controls_promotion() {
+        let spec = SyntheticSpec::sparse(12, 12, 10, 2, 0.5, 0.0, 44);
+        let (existing, batches, _) = spec.generate_stream(0.5, 2);
+        assert!(existing.is_sparse() && !existing.is_csf());
+        // Default bar (16 Ki): this tiny tensor stays COO.
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 9).build().unwrap();
+        let e = SamBaTen::init(&existing, cfg).unwrap();
+        assert!(!e.tensor().is_csf());
+        // Bar 1: the accumulator promotes at init and stays CSF through
+        // ingests (one-way hysteresis), and ingest still succeeds end to
+        // end on the fiber-tree kernels.
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 9).csf_nnz_bar(1).build().unwrap();
+        assert_eq!(cfg.csf_nnz_bar(), 1);
+        let mut e = SamBaTen::init(&existing, cfg).unwrap();
+        assert!(e.tensor().is_csf());
+        for b in &batches {
+            e.ingest(b).unwrap();
+        }
+        assert!(e.tensor().is_csf());
+        assert_eq!(e.model().factors[2].rows(), e.tensor().dims().2);
+    }
+
+    #[test]
     fn builder_validates_every_knob() {
         assert!(SamBaTenConfig::builder(0, 2, 2, 1).build().is_err(), "rank 0");
         assert!(SamBaTenConfig::builder(2, 0, 2, 1).build().is_err(), "s = 0");
@@ -752,10 +873,15 @@ mod tests {
                 .is_err(),
             "0 ALS iters"
         );
+        assert!(
+            SamBaTenConfig::builder(2, 2, 2, 1).csf_nnz_bar(0).build().is_err(),
+            "csf_nnz_bar = 0"
+        );
     }
 
     #[test]
     fn builder_roundtrips_through_getters() {
+        let pool = Arc::new(WorkPool::new(2));
         let cfg = SamBaTenConfig::builder(3, 4, 5, 6)
             .blend(0.25)
             .congruence_threshold(0.5)
@@ -763,8 +889,14 @@ mod tests {
             .match_policy(MatchPolicy::Greedy)
             .sampling_factor_mode3(2)
             .quality_control(true)
+            .csf_nnz_bar(123)
+            .executor(pool)
             .build()
             .unwrap();
+        assert_eq!(cfg.csf_nnz_bar(), 123);
+        assert_eq!(cfg.executor().map(|p| p.workers()), Some(2));
+        let cfg = cfg.with_executor(None);
+        assert!(cfg.executor().is_none());
         assert_eq!(cfg.rank(), 3);
         assert_eq!(cfg.sampling_factor(), 4);
         assert_eq!(cfg.repetitions(), 5);

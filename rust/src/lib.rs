@@ -10,10 +10,12 @@
 //!   sampling ([`sampling`]), parallel sample decompositions ([`cp`]),
 //!   permutation matching ([`matching`]), quality control ([`corcondia`]),
 //!   factor merging ([`coordinator`]), baselines ([`baselines`]),
-//!   streaming ingestion ([`streaming`]), the multi-stream serving layer
-//!   ([`serve`] — wait-free [`coordinator::StreamHandle`] readers over a
-//!   write path that publishes epoch-stamped snapshots) and the evaluation
-//!   harness ([`eval`]).
+//!   streaming ingestion ([`streaming`]), the shared work-stealing
+//!   scheduler ([`pool`] — keyed FIFO ordering, thousands of streams per
+//!   core), the multi-stream serving layer ([`serve`] — wait-free
+//!   [`coordinator::StreamHandle`] readers over a write path that
+//!   publishes epoch-stamped snapshots, multiplexed onto the pool) and the
+//!   evaluation harness ([`eval`]).
 //! * **Layer 2/1 (build-time Python)** — a JAX ALS sweep calling a Pallas
 //!   MTTKRP kernel, AOT-lowered to HLO text and executed from Rust through
 //!   the PJRT runtime wrapper ([`runtime`]).
@@ -29,6 +31,7 @@ pub mod io;
 pub mod linalg;
 pub mod matching;
 pub mod metrics;
+pub mod pool;
 pub mod runtime;
 pub mod sampling;
 pub mod serve;

@@ -20,7 +20,7 @@ use sambaten::eval::{run_experiment, EvalContext, EXPERIMENTS};
 use sambaten::io::{read_tns, save_model, write_tns};
 use sambaten::metrics::relative_error;
 use sambaten::runtime::{artifacts_available, artifacts_dir, PjrtAlsSolver, PjrtService};
-use sambaten::serve::DecompositionService;
+use sambaten::serve::{DecompositionService, ServiceConfig};
 use sambaten::streaming::{StreamPump, TensorReplay};
 use sambaten::tensor::{CooTensor, Tensor3, TensorData};
 use std::collections::HashMap;
@@ -113,7 +113,10 @@ COMMANDS:
              [--sampling-factor S] [--repetitions r] [--engine native|pjrt]
              [--quality-control] [--seed N] [--save model.cp]
   serve      [--streams 2] [--dims 48,48,40] [--rank 4] [--batch 4] [--density 1.0]
-             [--queue-cap 4] [--seed 42]   multi-stream service demo
+             [--queue-cap 4] [--seed 42] [--mode pool|dedicated] [--workers 0]
+             multi-stream service demo (pool mode shares a work-stealing
+             scheduler across all streams; --workers 0 sizes it to the
+             hardware; dedicated mode is the one-thread-per-stream baseline)
   getrank    --input X.tns [--max-rank 10] [--iters 2]
   eval       <{}|all> [--iters N] [--budget SECONDS] [--scale F] [--out-dir results] [--pjrt]
   info       artifact bank / environment report",
@@ -272,7 +275,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut engine = SamBaTen::init(&existing, engine_cfg)?;
     println!("init fit on existing: {:.4}", engine.model().fit(&existing));
     let sparse = rest.is_sparse();
-    let pump = StreamPump::spawn(TensorReplay::new(rest), cfg.batch_size, sparse, 4)?;
+    // The pump's batches cross the COO→CSF boundary at the same bar the
+    // engine promotes/extracts at, so the knob governs the whole pipeline.
+    let pump = StreamPump::spawn_with_promotion_bar(
+        TensorReplay::new(rest),
+        cfg.batch_size,
+        sparse,
+        4,
+        cfg.csf_nnz_bar,
+    )?;
     let mut n = 0;
     let mut total = 0.0;
     while let Some(batch) = pump.next_batch() {
@@ -309,7 +320,10 @@ fn cmd_run(args: &Args) -> Result<()> {
 /// `DecompositionService`, feed each from its own producer thread through
 /// the bounded per-stream queues, and — while the ingest workers run —
 /// poll every stream's wait-free `StreamHandle` from this thread. The
-/// polling loop is the point: model reads never block on the writers.
+/// polling loop is the point: model reads never block on the writers. In
+/// pool mode (the default) every stream shares one work-stealing scheduler
+/// sized by `--workers`; `--mode dedicated` is the one-thread-per-stream
+/// A/B baseline.
 fn cmd_serve(args: &Args) -> Result<()> {
     let n_streams = args.get_or("streams", 2usize)?;
     let (i, j, k) = parse_dims(args.get("dims").unwrap_or("48,48,40"))?;
@@ -318,9 +332,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let density = args.get_or("density", 1.0f64)?;
     let seed = args.get_or("seed", 42u64)?;
     let queue_cap = args.get_or("queue-cap", 4usize)?;
+    let workers = args.get_or("workers", 0usize)?;
+    let mode = args.get("mode").unwrap_or("pool");
     anyhow::ensure!(n_streams >= 1, "--streams must be >= 1");
 
-    let svc = Arc::new(DecompositionService::with_queue_cap(queue_cap));
+    let svc_cfg = match mode {
+        "pool" => ServiceConfig::pooled(workers),
+        "dedicated" => ServiceConfig::dedicated(),
+        other => bail!("--mode must be pool|dedicated (got {other:?})"),
+    };
+    let svc = Arc::new(DecompositionService::with_config(svc_cfg.queue_cap(queue_cap)));
+    match svc.pool() {
+        Some(pool) => println!(
+            "service mode: pool ({} workers for {n_streams} streams)",
+            pool.workers()
+        ),
+        None => println!("service mode: dedicated ({n_streams} worker threads)"),
+    }
     let mut feeds = Vec::new();
     for s in 0..n_streams {
         let name = format!("stream-{s}");
@@ -389,6 +417,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "  {:<12} epoch {:>3}  batches {:>3}  slices {:>4}  errors {}  ingest {:.2}s",
             st.name, st.epoch, st.batches, st.slices, st.errors, st.ingest_seconds
+        );
+    }
+    if let Some(ps) = svc.pool_stats() {
+        println!(
+            "  scheduler: {} workers, {} tasks ({} stolen, {} injected, {} panics)",
+            ps.workers, ps.tasks_executed, ps.steals, ps.injected, ps.panics
         );
     }
     Ok(())

@@ -1,0 +1,286 @@
+//! Scoped fan-out on the shared pool: intra-task parallelism without
+//! dedicated threads and without thread-starvation deadlocks.
+//!
+//! The engine's per-repetition sample-ALS fan-out used to spawn scoped
+//! threads per ingest (`util::par::parallel_map`). When many streams ingest
+//! concurrently that multiplies threads by repetitions; routing the fan-out
+//! through the *same* pool instead makes inter-stream and intra-ingest
+//! parallelism share one executor sized to the hardware.
+//!
+//! The classic hazard is a pool task blocking on a fan-out serviced by the
+//! same (fully busy) pool — deadlock. The shape here rules that out: the
+//! fan-out caller owns the task list and **drains it itself**; idle workers
+//! are invited to help through cheap helper stubs, but no stub is ever
+//! required for progress. The caller returns once every task *completed*
+//! (not merely started), which is also what makes the lifetime erasure
+//! below sound.
+
+use super::{Task, WorkPool};
+use crate::util::par::{collect_results, result_slots};
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A borrowed work item for [`WorkPool::fanout`]: may capture references
+/// into the caller's stack frame (`'env`), because `fanout` does not return
+/// until every task has run to completion.
+pub type ScopedTask<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// The shared state of one fan-out: the not-yet-started tasks, a
+/// completion latch, and the first panic payload. Helpers and the caller
+/// race to pop; whoever pops a task completes it, and a panicking task's
+/// payload is stashed here either way, so the caller re-raises it
+/// deterministically no matter which thread happened to run the task.
+struct FanoutQueue {
+    tasks: Mutex<Vec<Task>>,
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl FanoutQueue {
+    fn pop(&self) -> Option<Task> {
+        self.tasks.lock().unwrap_or_else(|e| e.into_inner()).pop()
+    }
+
+    fn complete_one(&self) {
+        let mut rem = self.remaining.lock().unwrap_or_else(|e| e.into_inner());
+        *rem -= 1;
+        if *rem == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Drain until the list is empty — run by helpers (as a pool task) and
+    /// by the caller alike. Panics are caught and deferred, never unwound
+    /// out of here: unwinding while other threads may still hold borrowed
+    /// tasks would be unsound on the caller, and on a helper it would
+    /// swallow the payload into the worker's backstop catch. Only the
+    /// first payload is kept; sibling tasks keep running regardless.
+    fn drain(&self) {
+        while let Some(task) = self.pop() {
+            let _complete = CompleteGuard(self);
+            if let Err(payload) = std::panic::catch_unwind(AssertUnwindSafe(task)) {
+                let mut slot = self.panic.lock().unwrap_or_else(|e| e.into_inner());
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+        }
+    }
+
+    fn wait_all_complete(&self) {
+        let mut rem = self.remaining.lock().unwrap_or_else(|e| e.into_inner());
+        while *rem > 0 {
+            rem = self.done.wait(rem).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn take_panic(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        self.panic.lock().unwrap_or_else(|e| e.into_inner()).take()
+    }
+}
+
+struct CompleteGuard<'a>(&'a FanoutQueue);
+
+impl Drop for CompleteGuard<'_> {
+    fn drop(&mut self) {
+        self.0.complete_one();
+    }
+}
+
+/// Erase a scoped task's borrow lifetime so it can sit in the pool's
+/// 'static queues.
+///
+/// # Safety
+/// The caller must not return (or unwind) past the borrowed data's scope
+/// until the task has completed — `WorkPool::fanout`'s completion barrier
+/// is exactly that guarantee.
+#[allow(clippy::needless_lifetimes)] // named so the transmute is fully explicit
+unsafe fn erase_lifetime<'env>(task: ScopedTask<'env>) -> Task {
+    std::mem::transmute::<ScopedTask<'env>, Task>(task)
+}
+
+impl WorkPool {
+    /// Run every task to completion, using idle pool workers as helpers
+    /// while the calling thread participates. Blocks until all tasks have
+    /// finished. Safe to call from inside a pool task (see module docs);
+    /// safe during shutdown (degrades to caller-only draining).
+    ///
+    /// A panicking task does not abandon its siblings: the remaining tasks
+    /// still run, and the first panic payload is re-raised on the caller
+    /// once the fan-out is complete — regardless of whether the caller or
+    /// a helper worker happened to run the panicking task.
+    pub fn fanout(&self, tasks: Vec<ScopedTask<'_>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            let task = tasks.into_iter().next().expect("n == 1");
+            task();
+            return;
+        }
+        // SAFETY: erasing 'env to 'static is sound because every closure is
+        // popped and *completed* before `fanout` returns (the completion
+        // barrier below counts completions, with panic-safe guards), and
+        // afterwards the shared list is empty — a helper stub that runs
+        // later only observes the empty list, never a borrowed closure.
+        // Caller-side panics are deferred past the barrier for the same
+        // reason.
+        let tasks: Vec<Task> = tasks.into_iter().map(|t| unsafe { erase_lifetime(t) }).collect();
+        let shared = Arc::new(FanoutQueue {
+            tasks: Mutex::new(tasks),
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        // Invite at most one helper per worker; helpers are best-effort
+        // (a closing pool simply declines and the caller drains alone).
+        let helpers = (n - 1).min(self.workers());
+        for _ in 0..helpers {
+            let queue = shared.clone();
+            if !self.inner.try_inject_task(Box::new(move || queue.drain())) {
+                break;
+            }
+        }
+        shared.drain();
+        shared.wait_all_complete();
+        if let Some(payload) = shared.take_panic() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Order-preserving parallel map on the pool — the drop-in counterpart
+    /// of [`crate::util::parallel_map`] for callers holding a shared
+    /// executor (the engine's per-repetition fan-out). Results come back in
+    /// input order; panics propagate like `fanout`'s.
+    pub fn parallel_map<T, U, F>(&self, items: &[T], f: F) -> Vec<U>
+    where
+        T: Sync,
+        U: Send,
+        F: Fn(usize, &T) -> U + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if n == 1 {
+            return vec![f(0, &items[0])];
+        }
+        let slots = result_slots::<U>(n);
+        {
+            let f = &f;
+            let slots = &slots;
+            let tasks: Vec<ScopedTask<'_>> = (0..n)
+                .map(|i| {
+                    Box::new(move || {
+                        let v = f(i, &items[i]);
+                        *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(v);
+                    }) as ScopedTask<'_>
+                })
+                .collect();
+            self.fanout(tasks);
+        }
+        collect_results(slots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    #[test]
+    fn fanout_runs_every_task() {
+        let pool = WorkPool::new(3);
+        let hits: Vec<AtomicU32> = (0..97).map(|_| AtomicU32::new(0)).collect();
+        let tasks: Vec<ScopedTask<'_>> = hits
+            .iter()
+            .map(|h| {
+                Box::new(move || {
+                    h.fetch_add(1, Ordering::SeqCst);
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        pool.fanout(tasks);
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn parallel_map_preserves_order_and_matches_serial() {
+        let pool = WorkPool::new(4);
+        let xs: Vec<usize> = (0..500).collect();
+        let ys = pool.parallel_map(&xs, |i, &x| x * 2 + i);
+        assert_eq!(ys, xs.iter().enumerate().map(|(i, x)| x * 2 + i).collect::<Vec<_>>());
+        assert!(pool.parallel_map(&Vec::<u8>::new(), |_, &b| b).is_empty());
+        assert_eq!(pool.parallel_map(&[7usize], |_, &x| x + 1), vec![8]);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn fanout_from_inside_a_pool_task_makes_progress() {
+        // One worker, and that worker's own task issues the fan-out: no
+        // other worker can ever help, so completion proves the caller
+        // drains its own queue (the no-deadlock-by-construction property).
+        let pool = Arc::new(WorkPool::new(1));
+        let key = pool.register_key("nested", 2).unwrap();
+        let total = Arc::new(AtomicU32::new(0));
+        {
+            let pool = pool.clone();
+            let total = total.clone();
+            key.submit(move || {
+                let xs: Vec<u32> = (0..32).collect();
+                let parts: Vec<u32> = pool.parallel_map(&xs, |_, &x| x);
+                total.fetch_add(parts.iter().sum::<u32>(), Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        key.wait_idle();
+        assert_eq!(total.load(Ordering::SeqCst), (0..32).sum::<u32>());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn fanout_panic_is_deferred_not_lost() {
+        let pool = WorkPool::new(2);
+        let hits = AtomicU32::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<ScopedTask<'_>> = (0..8)
+                .map(|i| {
+                    let hits = &hits;
+                    Box::new(move || {
+                        if i == 3 {
+                            panic!("task 3 failed");
+                        }
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }) as ScopedTask<'_>
+                })
+                .collect();
+            pool.fanout(tasks);
+        }));
+        // Siblings of the panicked task still ran, and the panic surfaced
+        // on the caller after the barrier — deterministically, no matter
+        // whether the caller or a helper worker popped the panicking task
+        // (helper-side payloads are stashed in the shared queue, not
+        // swallowed by the worker's backstop catch).
+        assert_eq!(hits.load(Ordering::SeqCst), 7);
+        assert!(result.is_err(), "the fan-out panic must re-raise on the caller");
+        let msg = result.unwrap_err().downcast::<&'static str>().unwrap();
+        assert_eq!(*msg, "task 3 failed", "the original payload is preserved");
+        assert_eq!(pool.stats().panics, 0, "fan-out panics belong to the caller, not the pool");
+        pool.shutdown();
+        // A fresh fan-out on the same pool still works.
+        let n = AtomicU32::new(0);
+        let tasks: Vec<ScopedTask<'_>> = (0..4)
+            .map(|_| {
+                let n = &n;
+                Box::new(move || {
+                    n.fetch_add(1, Ordering::SeqCst);
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        pool.fanout(tasks);
+        assert_eq!(n.load(Ordering::SeqCst), 4);
+    }
+}

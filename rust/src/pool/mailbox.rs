@@ -1,0 +1,238 @@
+//! Per-key bounded mailboxes: the ordering + backpressure half of the
+//! scheduler.
+//!
+//! A *key* is the scheduler's unit of ordering — one registered stream, one
+//! logical actor. Tasks submitted under the same key run **sequentially, in
+//! submission order, never concurrently**; independent keys are scheduled
+//! freely across the pool's workers. The mechanism is the classic actor
+//! trick: each key owns a bounded FIFO mailbox plus a `scheduled` bit, and
+//! the key itself — not its individual tasks — is what circulates through
+//! the pool's run queues. At any instant a key is in at most one run queue
+//! *or* held by at most one worker, so no two of its tasks can overlap.
+//!
+//! Invariant (checked by every transition under the mailbox lock):
+//! **a non-empty mailbox implies `scheduled`** — a submitted task can never
+//! be stranded with no worker responsible for it.
+//!
+//! The mailbox bound is the same backpressure contract as
+//! `streaming::StreamPump` and the dedicated-thread serving mode: a full
+//! mailbox blocks the *submitter* (memory never grows unboundedly), and a
+//! closed mailbox rejects the submission with an error instead of
+//! accepting work that would never run.
+
+use super::{PoolInner, Runnable, Task};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Mailbox state guarded by one mutex; see the module docs for the
+/// `scheduled` invariant.
+pub(crate) struct MailboxInner {
+    pub(crate) queue: VecDeque<Task>,
+    /// The key is in a run queue or currently held by a worker.
+    pub(crate) scheduled: bool,
+    /// Closed keys reject new submissions; already-accepted tasks drain.
+    pub(crate) closed: bool,
+}
+
+/// One ordering key: mailbox, condvars and lifetime counters.
+pub(crate) struct KeyState {
+    pub(crate) label: String,
+    /// Mailbox capacity; a full mailbox blocks the submitter.
+    pub(crate) cap: usize,
+    pub(crate) mailbox: Mutex<MailboxInner>,
+    /// Signalled on every pop — wakes submitters blocked on a full mailbox
+    /// (who then re-check the closed flags).
+    pub(crate) not_full: Condvar,
+    /// Signalled when the key goes unscheduled (mailbox drained) — what
+    /// [`KeyHandle::wait_idle`] sleeps on.
+    pub(crate) idle: Condvar,
+    pub(crate) submitted: AtomicU64,
+    pub(crate) completed: AtomicU64,
+    pub(crate) panicked: AtomicU64,
+}
+
+impl KeyState {
+    pub(crate) fn new(label: &str, cap: usize) -> Self {
+        KeyState {
+            label: label.to_string(),
+            cap: cap.max(1),
+            mailbox: Mutex::new(MailboxInner {
+                queue: VecDeque::new(),
+                scheduled: false,
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            idle: Condvar::new(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            panicked: AtomicU64::new(0),
+        }
+    }
+
+    /// The mailbox lock never guards user code, so poisoning (impossible in
+    /// practice) is recovered rather than propagated.
+    pub(crate) fn mailbox_lock(&self) -> MutexGuard<'_, MailboxInner> {
+        self.mailbox.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Point-in-time statistics of one key.
+#[derive(Clone, Debug)]
+pub struct KeyStats {
+    pub label: String,
+    /// Tasks accepted into the mailbox over the key's lifetime.
+    pub submitted: u64,
+    /// Tasks executed to completion (including panicked ones).
+    pub completed: u64,
+    /// Tasks that panicked (each also counted in `completed`).
+    pub panicked: u64,
+    /// Tasks currently waiting in the mailbox.
+    pub queued: usize,
+    /// The key is scheduled on (or queued for) a worker right now.
+    pub busy: bool,
+    pub closed: bool,
+}
+
+/// A cheap, cloneable handle to one ordering key of a
+/// [`WorkPool`](super::WorkPool). All tasks submitted through clones of the
+/// same handle share the key's FIFO ordering guarantee.
+#[derive(Clone)]
+pub struct KeyHandle {
+    pub(crate) key: Arc<KeyState>,
+    pub(crate) pool: Arc<PoolInner>,
+}
+
+impl KeyHandle {
+    /// Submit a task under this key. Blocks while the key's bounded mailbox
+    /// is full (backpressure — the same contract as `StreamPump`); errors
+    /// if the key was closed or the pool shut down, so a submission can
+    /// never be silently accepted into a queue nobody will drain.
+    ///
+    /// Ordering guarantee: tasks submitted by one thread through this key
+    /// run in exactly the order the `submit` calls returned, and no two
+    /// tasks of the same key ever run concurrently.
+    ///
+    /// Safe to call from inside a pool task: a submitter running *on* a
+    /// pool worker never parks on a full mailbox (parking a worker on work
+    /// only workers can drain could deadlock the pool) — it executes other
+    /// queued pool work until a slot frees, and a submission to a key this
+    /// very thread is currently running (a self-send, at any help-drain
+    /// nesting depth) bypasses the bound outright, since only this thread
+    /// could ever free the slot it would wait for. One caveat remains, as
+    /// in any bounded-mailbox actor system: a *cross-worker* cycle of
+    /// tasks submitting into each other's full mailboxes can still
+    /// deadlock — keep keyed submission graphs acyclic (the serving layer
+    /// submits only from external producers, so it is immune).
+    pub fn submit<F>(&self, f: F) -> Result<()>
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        // The in-flight-submission guard pairs with `WorkPool::shutdown`'s
+        // drain: once we passed the closed checks below, the drain cannot
+        // conclude before the task is visible in `pending`.
+        let _inflight = self.pool.enter_submit();
+        let mut mb = self.key.mailbox_lock();
+        loop {
+            anyhow::ensure!(!mb.closed, "key {:?} is closed", self.key.label);
+            anyhow::ensure!(
+                !self.pool.closed.load(Ordering::SeqCst),
+                "worker pool is shutting down"
+            );
+            if mb.queue.len() < self.key.cap {
+                break;
+            }
+            // Self-send: this thread is inside one of this key's own tasks,
+            // so no other worker can drain the mailbox — waiting (or help-
+            // draining) for a slot would spin forever. Bypass the bound;
+            // growth is limited to what one task emits before returning.
+            if super::key_held_by_this_thread(&self.key) {
+                break;
+            }
+            match self.pool.current_local() {
+                // On a pool worker: help drain instead of parking. The full
+                // mailbox's key is scheduled (non-empty ⇒ scheduled) and
+                // not held by this thread (checked above), so it is either
+                // in a run queue — where this worker can pop and run it
+                // right here — or held by another worker that is making
+                // progress on it.
+                Some(idx) => {
+                    drop(mb);
+                    self.pool.help_drain_one(idx);
+                    mb = self.key.mailbox_lock();
+                }
+                // External threads park on the condvar; every pop notifies.
+                None => {
+                    mb = self.key.not_full.wait(mb).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+        mb.queue.push_back(Box::new(f));
+        self.key.submitted.fetch_add(1, Ordering::Relaxed);
+        let schedule = !mb.scheduled;
+        if schedule {
+            mb.scheduled = true;
+        }
+        drop(mb);
+        if schedule {
+            let local = self.pool.current_local();
+            self.pool.push_runnable(Runnable::Key(self.key.clone()), local);
+        }
+        Ok(())
+    }
+
+    /// Close the key: subsequent submissions (and submitters currently
+    /// blocked on a full mailbox) fail with an error; tasks already
+    /// accepted still drain. Idempotent.
+    pub fn close(&self) {
+        let mut mb = self.key.mailbox_lock();
+        mb.closed = true;
+        drop(mb);
+        self.key.not_full.notify_all();
+    }
+
+    /// Block until the key is idle: mailbox empty and no task of this key
+    /// running anywhere. `close()` + `wait_idle()` is the graceful per-key
+    /// drain. Must not be called from one of this key's own tasks (the key
+    /// would wait on itself).
+    pub fn wait_idle(&self) {
+        let mut mb = self.key.mailbox_lock();
+        while mb.scheduled || !mb.queue.is_empty() {
+            mb = self.key.idle.wait(mb).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.key.mailbox_lock().closed
+    }
+
+    pub fn label(&self) -> &str {
+        &self.key.label
+    }
+
+    pub fn stats(&self) -> KeyStats {
+        let mb = self.key.mailbox_lock();
+        KeyStats {
+            label: self.key.label.clone(),
+            submitted: self.key.submitted.load(Ordering::Relaxed),
+            completed: self.key.completed.load(Ordering::Relaxed),
+            panicked: self.key.panicked.load(Ordering::Relaxed),
+            queued: mb.queue.len(),
+            busy: mb.scheduled,
+            closed: mb.closed,
+        }
+    }
+}
+
+impl std::fmt::Debug for KeyHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("KeyHandle")
+            .field("label", &s.label)
+            .field("queued", &s.queued)
+            .field("busy", &s.busy)
+            .field("closed", &s.closed)
+            .finish()
+    }
+}

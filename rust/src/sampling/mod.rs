@@ -99,12 +99,21 @@ pub struct SamplerConfig {
     /// Optional distinct factor for mode 3 (imbalanced modes — §III-A
     /// "different rates can be used for imbalanced modes").
     pub factor_mode3: Option<usize>,
+    /// Estimated-nnz bar above which a CSF source extracts its sample
+    /// CSF-natively instead of COO (see [`crate::tensor::CSF_EXTRACT_NNZ`],
+    /// the default). The engine threads its `csf_nnz_bar` config knob
+    /// through here so the break-even stays tunable per deployment.
+    pub csf_extract_nnz: usize,
 }
 
 impl SamplerConfig {
     pub fn new(factor: usize) -> Self {
         assert!(factor >= 1);
-        SamplerConfig { factor, factor_mode3: None }
+        SamplerConfig {
+            factor,
+            factor_mode3: None,
+            csf_extract_nnz: crate::tensor::CSF_EXTRACT_NNZ,
+        }
     }
 
     fn count(dim: usize, s: usize) -> usize {
@@ -147,10 +156,12 @@ pub fn draw_sample(
     let is = weighted_sample_without_replacement(&xa, SamplerConfig::count(ni, s), rng);
     let js = weighted_sample_without_replacement(&xb, SamplerConfig::count(nj, s), rng);
     let ks = weighted_sample_without_replacement(&xc, SamplerConfig::count(nk_old, s3), rng);
-    // Extract old part and new part, then concatenate along mode 3.
-    let mut sub = x_old.extract(&is, &js, &ks);
+    // Extract old part and new part, then concatenate along mode 3. The
+    // output-format bar comes from the config so the engine's `csf_nnz_bar`
+    // knob governs sample extraction too.
+    let mut sub = x_old.extract_with_bar(&is, &js, &ks, cfg.csf_extract_nnz);
     let all_new_k: Vec<usize> = (0..nk_new).collect();
-    let sub_new = x_new.extract(&is, &js, &all_new_k);
+    let sub_new = x_new.extract_with_bar(&is, &js, &all_new_k, cfg.csf_extract_nnz);
     sub.append_mode3(&sub_new);
     Sample { is, js, ks_old: ks, k_new: nk_new, tensor: sub }
 }
@@ -274,7 +285,7 @@ mod tests {
         let sample = draw_sample(
             &old.into(),
             &new.into(),
-            SamplerConfig { factor: 3, factor_mode3: Some(2) },
+            SamplerConfig { factor_mode3: Some(2), ..SamplerConfig::new(3) },
             &mut rng,
         );
         assert!(sample.tensor.is_sparse());

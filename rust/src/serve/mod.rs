@@ -1,33 +1,54 @@
 //! Multi-stream decomposition service: one process, many live tensors.
 //!
 //! GOCPT frames online CP as a *generalized service* covering many
-//! concurrent settings, and the ROADMAP north star is a production system
-//! serving heavy traffic — but a bare [`SamBaTen`] engine serves exactly
-//! one tensor and requires the caller to own its `&mut` write path. This
-//! module is the serving layer on top of the coordinator's snapshot split:
+//! concurrent factorization tasks evolving at different rates, and the
+//! ROADMAP north star is a production system serving heavy traffic — but a
+//! bare [`SamBaTen`] engine serves exactly one tensor and requires the
+//! caller to own its `&mut` write path. This module is the serving layer
+//! on top of the coordinator's snapshot split:
 //!
-//! * [`DecompositionService`] — a registry of named streams. Each stream
-//!   owns a dedicated ingest worker thread fed by a **bounded** channel
-//!   (the same backpressure contract as `streaming::StreamPump`: a full
-//!   queue blocks the producer, memory never grows unboundedly).
-//! * [`DecompositionService::ingest`] — hands a batch to a stream's worker
-//!   and returns a [`Ticket`] immediately; `Ticket::wait` joins the batch's
-//!   [`BatchStats`] (or its error) when the worker gets to it. A failed
-//!   batch marks the stream's stats but does not kill the stream.
+//! * [`DecompositionService`] — a registry of named streams. By default
+//!   every stream is a *key* on a shared work-stealing
+//!   [`WorkPool`](crate::pool::WorkPool) sized to the hardware: per-stream
+//!   FIFO ordering is preserved (a stream's batches never run concurrently
+//!   or out of order) while thousands of mostly-idle streams share a
+//!   handful of worker threads. The pre-pool one-OS-thread-per-stream mode
+//!   survives behind [`ServiceConfig::dedicated`] for A/B benchmarking
+//!   (`benches/bench_micro.rs` races the two at 1 000 streams).
+//! * Backpressure — each stream's queue is **bounded** (the same contract
+//!   as `streaming::StreamPump`): a full queue blocks the producer,
+//!   memory never grows unboundedly.
+//! * [`DecompositionService::ingest`] — hands a batch to a stream and
+//!   returns a [`Ticket`] immediately; `Ticket::wait` joins the batch's
+//!   [`BatchStats`] (or its error). A ticket can **never hang**: a batch
+//!   accepted before `remove`/`shutdown` is drained and resolves, a
+//!   submission racing them fails with an error, and a panicking ingest
+//!   fails its own ticket while the pool, the other streams — and in pool
+//!   mode even the worker thread — keep running (the panicked stream is
+//!   poisoned: later tickets fail fast instead of touching a model of
+//!   unknown integrity).
 //! * [`StreamHandle`] — the wait-free read surface, shared with the
 //!   single-engine API: queries run *during* ingest, on whichever epoch is
-//!   currently published.
-//! * [`DecompositionService::shutdown`] — graceful: closes every queue,
-//!   lets the workers drain what was already accepted, then joins them.
+//!   currently published. [`DecompositionService::snapshot_all`] gathers a
+//!   cross-stream view the same wait-free way.
+//! * [`DecompositionService::shutdown`] — graceful: every stream stops
+//!   accepting, drains what was already accepted (pending tickets
+//!   resolve), then the service reports final stats. The pool itself
+//!   survives for re-registration; it is torn down when the service drops.
 //!
-//! All registry methods take `&self`; wrap the service in an `Arc` to share
-//! it across producer threads.
+//! In pool mode the engines' per-repetition sample-ALS fan-out is routed
+//! through the same pool (see `SamBaTenConfig::executor`), so intra-ingest
+//! and inter-stream parallelism share one sized-to-the-hardware scheduler.
+//! All registry methods take `&self`; wrap the service in an `Arc` to
+//! share it across producer threads.
 
-use crate::coordinator::{BatchStats, SamBaTen, SamBaTenConfig, StreamHandle};
+use crate::coordinator::{BatchStats, ModelSnapshot, SamBaTen, SamBaTenConfig, StreamHandle};
+use crate::pool::{KeyHandle, PoolStats, WorkPool};
 use crate::tensor::TensorData;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -40,10 +61,10 @@ pub struct Ticket {
 }
 
 impl Ticket {
-    /// Block until the worker has processed the batch; returns its stats
-    /// or the ingest error. Errors also if the stream shut down before the
-    /// batch was processed (only possible through an abrupt worker death —
-    /// a graceful [`DecompositionService::shutdown`] drains first).
+    /// Block until the batch has been processed; returns its stats or the
+    /// ingest error. Also errors — never hangs — if the stream's worker
+    /// died before processing the batch (a panicking dedicated-mode worker;
+    /// pool-mode tickets always resolve through the job itself).
     pub fn wait(self) -> Result<BatchStats> {
         match self.rx.recv() {
             Ok(result) => result,
@@ -86,7 +107,7 @@ pub struct StreamStats {
     pub last_error: Option<String>,
 }
 
-/// Lock-free counters the worker updates and `stats()` reads.
+/// Lock-free counters the ingest path updates and `stats()` reads.
 #[derive(Default)]
 struct StatsInner {
     batches: AtomicU64,
@@ -97,22 +118,136 @@ struct StatsInner {
     last_error: Mutex<Option<String>>,
 }
 
+impl StatsInner {
+    /// Record a processed batch (shared by both backends). Runs *before*
+    /// the queued-counter decrement so `queued + batches + errors` never
+    /// under-counts.
+    fn record(&self, result: &Result<BatchStats>) {
+        match result {
+            Ok(batch_stats) => {
+                self.batches.fetch_add(1, Ordering::SeqCst);
+                self.slices.fetch_add(batch_stats.k_new as u64, Ordering::SeqCst);
+            }
+            Err(e) => {
+                self.errors.fetch_add(1, Ordering::SeqCst);
+                let mut last = self.last_error.lock().unwrap_or_else(|p| p.into_inner());
+                *last = Some(format!("{e:#}"));
+            }
+        }
+    }
+}
+
 struct Job {
     batch: TensorData,
     done: mpsc::Sender<Result<BatchStats>>,
 }
 
-struct StreamEntry {
-    tx: mpsc::SyncSender<Job>,
-    handle: StreamHandle,
-    stats: Arc<StatsInner>,
-    worker: JoinHandle<()>,
+/// How a stream executes: a scheduler key on the shared pool (default) or
+/// a dedicated OS thread (the pre-pool design, kept for A/B benching).
+enum StreamBackend {
+    Dedicated {
+        tx: mpsc::SyncSender<Job>,
+        worker: JoinHandle<()>,
+    },
+    Pooled {
+        key: KeyHandle,
+        /// Keeps the engine alive between batches; each queued job holds
+        /// its own clone. Only the key's (serial) runner ever locks it.
+        engine: Arc<Mutex<SamBaTen>>,
+        /// Set when an ingest panicked: the model's integrity is unknown,
+        /// so later tickets fail fast instead of compounding the damage.
+        poisoned: Arc<AtomicBool>,
+    },
 }
 
-/// A registry of named decomposition streams, each with a dedicated ingest
-/// worker behind a bounded queue. See the module docs for the contract.
+struct StreamEntry {
+    handle: StreamHandle,
+    stats: Arc<StatsInner>,
+    backend: StreamBackend,
+}
+
+/// What `remove`/`shutdown` still have to wait on after detaching a stream
+/// from the registry (split so `shutdown` can close every stream first and
+/// drain them all concurrently).
+enum StopWait {
+    Dedicated(JoinHandle<()>),
+    Pooled(KeyHandle),
+}
+
+/// Execution mode of a [`DecompositionService`].
+#[derive(Clone, Debug)]
+pub enum ServiceMode {
+    /// One dedicated worker thread per stream (the pre-pool design).
+    Dedicated,
+    /// A service-owned [`WorkPool`]; `workers == 0` sizes it to the
+    /// hardware. The default.
+    Pooled { workers: usize },
+    /// Run on an externally owned pool (several services, one scheduler).
+    Shared(Arc<WorkPool>),
+}
+
+/// Configuration of a [`DecompositionService`]: execution mode, per-stream
+/// queue depth, and whether engines' intra-ingest fan-out rides the pool.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    queue_cap: usize,
+    mode: ServiceMode,
+    fanout_on_pool: bool,
+}
+
+impl Default for ServiceConfig {
+    /// Pool mode sized to the hardware, queue depth 4 (the same bound the
+    /// CLI's `StreamPump` path uses), engine fan-out on the pool.
+    fn default() -> Self {
+        ServiceConfig {
+            queue_cap: 4,
+            mode: ServiceMode::Pooled { workers: 0 },
+            fanout_on_pool: true,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Pool mode with an explicit worker count (`0` = hardware).
+    pub fn pooled(workers: usize) -> Self {
+        ServiceConfig { mode: ServiceMode::Pooled { workers }, ..Default::default() }
+    }
+
+    /// One dedicated thread per stream — the A/B baseline.
+    pub fn dedicated() -> Self {
+        ServiceConfig { mode: ServiceMode::Dedicated, ..Default::default() }
+    }
+
+    /// Run on an externally owned [`WorkPool`].
+    pub fn shared_pool(pool: Arc<WorkPool>) -> Self {
+        ServiceConfig { mode: ServiceMode::Shared(pool), ..Default::default() }
+    }
+
+    /// Per-stream ingest queue depth (min 1): how many batches may wait
+    /// before `ingest` blocks the producer.
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap.max(1);
+        self
+    }
+
+    /// Whether registered engines' per-repetition sample-ALS fan-out is
+    /// routed through the service pool (default true; irrelevant in
+    /// dedicated mode, and never overrides an executor the caller already
+    /// attached to the engine's config).
+    pub fn fanout_on_pool(mut self, on: bool) -> Self {
+        self.fanout_on_pool = on;
+        self
+    }
+}
+
+/// A registry of named decomposition streams multiplexed onto a shared
+/// worker pool (or dedicated threads — see [`ServiceConfig`]). See the
+/// module docs for the contract.
 pub struct DecompositionService {
     queue_cap: usize,
+    /// `None` in dedicated mode.
+    pool: Option<Arc<WorkPool>>,
+    fanout_on_pool: bool,
     streams: Mutex<HashMap<String, StreamEntry>>,
 }
 
@@ -123,21 +258,50 @@ impl Default for DecompositionService {
 }
 
 impl DecompositionService {
-    /// Service with the default per-stream queue depth (4 batches — the
-    /// same bound the CLI's `StreamPump` path uses).
+    /// Service in pool mode, sized to the hardware, with the default
+    /// per-stream queue depth (4 batches).
     pub fn new() -> Self {
-        Self::with_queue_cap(4)
+        Self::with_config(ServiceConfig::default())
     }
 
-    /// Service whose per-stream ingest queues hold up to `queue_cap`
-    /// batches before `ingest` blocks the producer (min 1).
+    /// Pool-mode service whose per-stream ingest queues hold up to
+    /// `queue_cap` batches before `ingest` blocks the producer (min 1).
     pub fn with_queue_cap(queue_cap: usize) -> Self {
-        DecompositionService { queue_cap: queue_cap.max(1), streams: Mutex::new(HashMap::new()) }
+        Self::with_config(ServiceConfig::default().queue_cap(queue_cap))
+    }
+
+    /// Full configuration: mode, queue depth, fan-out routing.
+    pub fn with_config(cfg: ServiceConfig) -> Self {
+        let pool = match cfg.mode {
+            ServiceMode::Dedicated => None,
+            ServiceMode::Pooled { workers } => Some(Arc::new(WorkPool::new(workers))),
+            ServiceMode::Shared(pool) => Some(pool),
+        };
+        DecompositionService {
+            queue_cap: cfg.queue_cap.max(1),
+            pool,
+            fanout_on_pool: cfg.fanout_on_pool,
+            streams: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The service's scheduler pool (`None` in dedicated mode).
+    pub fn pool(&self) -> Option<&Arc<WorkPool>> {
+        self.pool.as_ref()
+    }
+
+    /// Scheduler statistics (`None` in dedicated mode).
+    pub fn pool_stats(&self) -> Option<PoolStats> {
+        self.pool.as_ref().map(|p| p.stats())
+    }
+
+    pub fn is_pooled(&self) -> bool {
+        self.pool.is_some()
     }
 
     /// Register a new stream: runs the initial full decomposition on the
-    /// caller's thread (so init errors surface here), then starts the
-    /// stream's ingest worker. Returns the stream's read handle.
+    /// caller's thread (so init errors surface here), then wires the
+    /// stream into the scheduler. Returns the stream's read handle.
     pub fn register(
         &self,
         name: &str,
@@ -151,37 +315,90 @@ impl DecompositionService {
 
     /// Register a stream around an already-constructed engine (e.g. resumed
     /// from a checkpointed model via `SamBaTen::from_model`).
-    pub fn register_engine(&self, name: &str, engine: SamBaTen) -> Result<StreamHandle> {
+    pub fn register_engine(&self, name: &str, mut engine: SamBaTen) -> Result<StreamHandle> {
         let mut streams = self.lock_streams();
         anyhow::ensure!(!streams.contains_key(name), "stream {name:?} is already registered");
-        let (tx, rx) = mpsc::sync_channel::<Job>(self.queue_cap);
         let handle = engine.handle();
         let stats = Arc::new(StatsInner::default());
-        let worker_stats = stats.clone();
-        let worker = std::thread::Builder::new()
-            .name(format!("sambaten-serve-{name}"))
-            .spawn(move || worker_loop(engine, rx, worker_stats))
-            .context("spawning stream worker")?;
-        streams.insert(name.to_string(), StreamEntry { tx, handle: handle.clone(), stats, worker });
+        let backend = match &self.pool {
+            Some(pool) => {
+                if self.fanout_on_pool && engine.config().executor().is_none() {
+                    engine.set_executor(Some(pool.clone()));
+                }
+                let key = pool
+                    .register_key(name, self.queue_cap)
+                    .with_context(|| format!("registering stream {name:?} on the pool"))?;
+                StreamBackend::Pooled {
+                    key,
+                    engine: Arc::new(Mutex::new(engine)),
+                    poisoned: Arc::new(AtomicBool::new(false)),
+                }
+            }
+            None => {
+                let (tx, rx) = mpsc::sync_channel::<Job>(self.queue_cap);
+                let worker_stats = stats.clone();
+                let worker = std::thread::Builder::new()
+                    .name(format!("sambaten-serve-{name}"))
+                    .spawn(move || dedicated_worker_loop(engine, rx, worker_stats))
+                    .context("spawning stream worker")?;
+                StreamBackend::Dedicated { tx, worker }
+            }
+        };
+        streams.insert(name.to_string(), StreamEntry { handle: handle.clone(), stats, backend });
         Ok(handle)
     }
 
-    /// Submit a batch to a stream's worker. Blocks only when the stream's
-    /// bounded queue is full (backpressure); never waits for the ingest
-    /// itself — that is what the returned [`Ticket`] is for.
+    /// Submit a batch to a stream. Blocks only when the stream's bounded
+    /// queue is full (backpressure); never waits for the ingest itself —
+    /// that is what the returned [`Ticket`] is for. Errors (instead of
+    /// producing a ticket that would hang) when the stream is unknown, was
+    /// removed, is shutting down, or was poisoned by a panicked ingest.
     pub fn ingest(&self, name: &str, batch: TensorData) -> Result<Ticket> {
-        let (tx, stats) = {
+        enum Submit {
+            Dedicated(mpsc::SyncSender<Job>),
+            Pooled(KeyHandle, Arc<Mutex<SamBaTen>>, Arc<AtomicBool>),
+        }
+        let (submit, stats) = {
             let streams = self.lock_streams();
             let entry = streams.get(name).ok_or_else(|| anyhow!("unknown stream {name:?}"))?;
-            (entry.tx.clone(), entry.stats.clone())
+            let submit = match &entry.backend {
+                StreamBackend::Dedicated { tx, .. } => Submit::Dedicated(tx.clone()),
+                StreamBackend::Pooled { key, engine, poisoned } => {
+                    Submit::Pooled(key.clone(), engine.clone(), poisoned.clone())
+                }
+            };
+            (submit, entry.stats.clone())
         };
-        // Send outside the registry lock: a blocked producer must not stall
-        // every other stream's registry access.
+        // Submission happens outside the registry lock: a producer blocked
+        // on backpressure must not stall every other stream's registry
+        // access.
         let (done_tx, done_rx) = mpsc::channel();
         stats.queued.fetch_add(1, Ordering::SeqCst);
-        if tx.send(Job { batch, done: done_tx }).is_err() {
-            stats.queued.fetch_sub(1, Ordering::SeqCst);
-            anyhow::bail!("stream {name:?} worker has shut down");
+        match submit {
+            Submit::Dedicated(tx) => {
+                if tx.send(Job { batch, done: done_tx }).is_err() {
+                    stats.queued.fetch_sub(1, Ordering::SeqCst);
+                    anyhow::bail!("stream {name:?} worker has shut down");
+                }
+            }
+            Submit::Pooled(key, engine, poisoned) => {
+                if poisoned.load(Ordering::SeqCst) {
+                    stats.queued.fetch_sub(1, Ordering::SeqCst);
+                    anyhow::bail!(
+                        "stream {name:?} was poisoned by a panicked ingest; remove and \
+                         re-register it"
+                    );
+                }
+                let job_stats = stats.clone();
+                let job_name = name.to_string();
+                let submitted = key.submit(move || {
+                    run_pooled_ingest(&job_name, &engine, &poisoned, &batch, &job_stats, done_tx)
+                });
+                if let Err(e) = submitted {
+                    stats.queued.fetch_sub(1, Ordering::SeqCst);
+                    return Err(e.context(format!("stream {name:?} is no longer accepting")));
+                }
+            }
         }
         Ok(Ticket { rx: done_rx })
     }
@@ -209,24 +426,65 @@ impl DecompositionService {
         names
     }
 
-    /// Deregister one stream: close its queue, let the worker drain every
-    /// batch already accepted, join it, and return the final stats.
+    /// A consistent cross-stream gather (the dashboard read): every
+    /// registered stream's current [`ModelSnapshot`], sorted by name,
+    /// **without blocking any writer** — each read is the stream cell's
+    /// pointer-copy, so this returns promptly even while every stream is
+    /// mid-ingest (pinned by a test with a writer parked *inside* an
+    /// ingest). Each snapshot is internally consistent; cross-stream,
+    /// the gather is as consistent as any point-in-time read of
+    /// independent writers can be.
+    pub fn snapshot_all(&self) -> Vec<(String, Arc<ModelSnapshot>)> {
+        let mut handles: Vec<(String, StreamHandle)> = self
+            .lock_streams()
+            .iter()
+            .map(|(name, entry)| (name.clone(), entry.handle.clone()))
+            .collect();
+        handles.sort_by(|a, b| a.0.cmp(&b.0));
+        // Loads happen outside the registry lock so a large gather does
+        // not stall register/remove either.
+        handles.into_iter().map(|(name, h)| (name, h.snapshot())).collect()
+    }
+
+    /// Deregister one stream: stop accepting new batches (racing `ingest`
+    /// calls fail with an error instead of hanging their tickets), let
+    /// everything already accepted drain, and return the final stats.
     pub fn remove(&self, name: &str) -> Result<StreamStats> {
         let entry = self
             .lock_streams()
             .remove(name)
             .ok_or_else(|| anyhow!("unknown stream {name:?}"))?;
-        Ok(stop_entry(name, entry))
+        let StreamEntry { handle, stats, backend } = entry;
+        let wait = begin_stop(backend);
+        finish_stop(wait, &stats);
+        Ok(snapshot_stats(name, &handle, &stats))
     }
 
-    /// Graceful shutdown of every stream: queues are closed, workers drain
-    /// what they already accepted (pending [`Ticket`]s resolve), then the
-    /// workers are joined. Returns the final stats, sorted by stream name.
-    /// The service stays usable afterwards — new streams can be registered.
+    /// Graceful shutdown of every stream: all queues are closed first
+    /// (racing `ingest`s error rather than hang), the streams drain
+    /// concurrently (pending [`Ticket`]s resolve), and the final stats are
+    /// returned sorted by stream name. The service stays usable afterwards
+    /// — new streams can be registered; a pooled service keeps its worker
+    /// pool until dropped.
     pub fn shutdown(&self) -> Vec<StreamStats> {
         let entries: Vec<(String, StreamEntry)> = self.lock_streams().drain().collect();
-        let mut finals: Vec<StreamStats> =
-            entries.into_iter().map(|(name, entry)| stop_entry(&name, entry)).collect();
+        // Phase 1: close every stream so they all drain in parallel.
+        let closing: Vec<(String, StreamHandle, Arc<StatsInner>, StopWait)> = entries
+            .into_iter()
+            .map(|(name, entry)| {
+                let StreamEntry { handle, stats, backend } = entry;
+                let wait = begin_stop(backend);
+                (name, handle, stats, wait)
+            })
+            .collect();
+        // Phase 2: join/drain each and collect final stats.
+        let mut finals: Vec<StreamStats> = closing
+            .into_iter()
+            .map(|(name, handle, stats, wait)| {
+                finish_stop(wait, &stats);
+                snapshot_stats(&name, &handle, &stats)
+            })
+            .collect();
         finals.sort_by(|a, b| a.name.cmp(&b.name));
         finals
     }
@@ -241,24 +499,46 @@ impl DecompositionService {
 
 impl Drop for DecompositionService {
     fn drop(&mut self) {
-        // Dropping the registry drops every sender; detached workers drain
-        // and exit on their own. An explicit `shutdown()` additionally
-        // joins them — prefer it when exit order matters.
+        // Dropping the registry closes every stream; accepted batches still
+        // drain (detached dedicated workers exit on their own; pooled jobs
+        // run before the pool — whose last Arc this may be — shuts down).
+        // An explicit `shutdown()` additionally waits for them.
         self.lock_streams().clear();
     }
 }
 
-fn stop_entry(name: &str, entry: StreamEntry) -> StreamStats {
-    let StreamEntry { tx, handle, stats, worker } = entry;
-    drop(tx); // close the queue; the worker drains buffered jobs then exits
-    if worker.join().is_err() {
-        // A panicking ingest is a bug, but shutdown must still report.
-        let mut last = stats.last_error.lock().unwrap_or_else(|e| e.into_inner());
-        *last = Some("stream worker panicked".to_string());
-        drop(last);
-        stats.errors.fetch_add(1, Ordering::SeqCst);
+/// Stop accepting work on a stream's backend; returns what to wait on.
+fn begin_stop(backend: StreamBackend) -> StopWait {
+    match backend {
+        StreamBackend::Dedicated { tx, worker } => {
+            drop(tx); // close the queue; the worker drains buffered jobs then exits
+            StopWait::Dedicated(worker)
+        }
+        StreamBackend::Pooled { key, .. } => {
+            // Racing submits now fail; accepted jobs keep their own engine
+            // Arcs, so dropping ours here is fine.
+            key.close();
+            StopWait::Pooled(key)
+        }
     }
-    snapshot_stats(name, &handle, &stats)
+}
+
+/// Wait for a stopped stream to drain.
+fn finish_stop(wait: StopWait, stats: &StatsInner) {
+    match wait {
+        StopWait::Dedicated(worker) => {
+            if worker.join().is_err() {
+                // A panicking ingest in dedicated mode kills the stream's
+                // thread; shutdown must still report it.
+                let mut last = stats.last_error.lock().unwrap_or_else(|e| e.into_inner());
+                *last = Some("stream worker panicked".to_string());
+                drop(last);
+                stats.errors.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        // Pool mode: panics were already isolated and recorded per job.
+        StopWait::Pooled(key) => key.wait_idle(),
+    }
 }
 
 fn snapshot_stats(name: &str, handle: &StreamHandle, stats: &StatsInner) -> StreamStats {
@@ -274,31 +554,55 @@ fn snapshot_stats(name: &str, handle: &StreamHandle, stats: &StatsInner) -> Stre
     }
 }
 
-fn worker_loop(mut engine: SamBaTen, rx: mpsc::Receiver<Job>, stats: Arc<StatsInner>) {
-    // `recv` keeps yielding queued jobs after every sender is dropped and
-    // only then disconnects — that property *is* the drain-on-shutdown
-    // guarantee.
+/// One pool-mode ingest job: lock the stream's engine (uncontended — only
+/// the key's serial runner ever takes it), ingest under `catch_unwind`
+/// (panic isolation: the ticket fails, the stream is poisoned, the pool
+/// survives), account stats, resolve the ticket.
+fn run_pooled_ingest(
+    name: &str,
+    engine: &Mutex<SamBaTen>,
+    poisoned: &AtomicBool,
+    batch: &TensorData,
+    stats: &StatsInner,
+    done: mpsc::Sender<Result<BatchStats>>,
+) {
+    let result = if poisoned.load(Ordering::SeqCst) {
+        Err(anyhow!("stream {name:?} was poisoned by an earlier panicked ingest"))
+    } else {
+        let t0 = std::time::Instant::now();
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut eng = engine.lock().unwrap_or_else(|e| e.into_inner());
+            eng.ingest(batch)
+        }));
+        stats.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::SeqCst);
+        match outcome {
+            Ok(result) => result,
+            Err(_) => {
+                poisoned.store(true, Ordering::SeqCst);
+                Err(anyhow!(
+                    "ingest panicked; stream {name:?} is poisoned (model integrity unknown)"
+                ))
+            }
+        }
+    };
+    stats.record(&result);
+    // Decrement only once the batch is fully accounted, so
+    // `queued + batches + errors` never under-counts (see StatsInner).
+    stats.queued.fetch_sub(1, Ordering::SeqCst);
+    // The submitter may have dropped its ticket — fire-and-forget.
+    let _ = done.send(result);
+}
+
+/// Dedicated-mode stream worker (the A/B baseline): `recv` keeps yielding
+/// queued jobs after every sender is dropped and only then disconnects —
+/// that property *is* the drain-on-shutdown guarantee.
+fn dedicated_worker_loop(mut engine: SamBaTen, rx: mpsc::Receiver<Job>, stats: Arc<StatsInner>) {
     while let Ok(job) = rx.recv() {
         let t0 = std::time::Instant::now();
         let result = engine.ingest(&job.batch);
         stats.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::SeqCst);
-        match &result {
-            Ok(batch_stats) => {
-                stats.batches.fetch_add(1, Ordering::SeqCst);
-                stats.slices.fetch_add(batch_stats.k_new as u64, Ordering::SeqCst);
-            }
-            Err(e) => {
-                stats.errors.fetch_add(1, Ordering::SeqCst);
-                let mut last = stats.last_error.lock().unwrap_or_else(|p| p.into_inner());
-                *last = Some(format!("{e:#}"));
-            }
-        }
-        // Decrement only once the batch is fully accounted (batches/errors
-        // updated), so `queued + batches + errors` never under-counts: a
-        // mid-ingest batch still shows as queued, and by the time a
-        // Ticket::wait returns the counters already reflect it.
+        stats.record(&result);
         stats.queued.fetch_sub(1, Ordering::SeqCst);
-        // The submitter may have dropped its ticket — fire-and-forget.
         let _ = job.done.send(result);
     }
 }
@@ -319,54 +623,69 @@ mod tests {
         SamBaTenConfig::builder(2, 2, 2, seed).build().unwrap()
     }
 
+    /// Both execution modes, so every contract test runs against the pool
+    /// AND the dedicated baseline.
+    fn both_modes() -> Vec<DecompositionService> {
+        vec![
+            DecompositionService::with_config(ServiceConfig::pooled(2)),
+            DecompositionService::with_config(ServiceConfig::dedicated()),
+        ]
+    }
+
     #[test]
     fn register_ingest_query_shutdown() {
-        let svc = DecompositionService::new();
-        let (existing, batches) = small_stream(1);
-        let handle = svc.register("s0", &existing, cfg(7)).unwrap();
-        assert_eq!(handle.epoch(), 0);
-        let mut tickets = Vec::new();
-        for b in &batches {
-            tickets.push(svc.ingest("s0", b.clone()).unwrap());
+        for svc in both_modes() {
+            let (existing, batches) = small_stream(1);
+            let handle = svc.register("s0", &existing, cfg(7)).unwrap();
+            assert_eq!(handle.epoch(), 0);
+            let mut tickets = Vec::new();
+            for b in &batches {
+                tickets.push(svc.ingest("s0", b.clone()).unwrap());
+            }
+            let mut slices = 0;
+            for t in tickets {
+                slices += t.wait().unwrap().k_new;
+            }
+            assert_eq!(slices, 6);
+            assert_eq!(handle.epoch(), batches.len() as u64);
+            let st = svc.stats("s0").unwrap();
+            assert_eq!(st.batches, batches.len() as u64);
+            assert_eq!(st.slices, 6);
+            assert_eq!(st.errors, 0);
+            assert_eq!(st.queued, 0);
+            assert!(st.ingest_seconds > 0.0);
+            let finals = svc.shutdown();
+            assert_eq!(finals.len(), 1);
+            assert_eq!(finals[0].epoch, batches.len() as u64);
         }
-        let mut slices = 0;
-        for t in tickets {
-            slices += t.wait().unwrap().k_new;
-        }
-        assert_eq!(slices, 6);
-        assert_eq!(handle.epoch(), batches.len() as u64);
-        let st = svc.stats("s0").unwrap();
-        assert_eq!(st.batches, batches.len() as u64);
-        assert_eq!(st.slices, 6);
-        assert_eq!(st.errors, 0);
-        assert_eq!(st.queued, 0);
-        assert!(st.ingest_seconds > 0.0);
-        let finals = svc.shutdown();
-        assert_eq!(finals.len(), 1);
-        assert_eq!(finals[0].epoch, batches.len() as u64);
     }
 
     #[test]
     fn shutdown_drains_pending_batches() {
-        let svc = DecompositionService::with_queue_cap(8);
-        let (existing, batches) = small_stream(2);
-        let handle = svc.register("drain", &existing, cfg(8)).unwrap();
-        // Submit everything and shut down immediately — nothing waits on
-        // tickets, yet every accepted batch must still be applied.
-        let tickets: Vec<Ticket> =
-            batches.iter().map(|b| svc.ingest("drain", b.clone()).unwrap()).collect();
-        let finals = svc.shutdown();
-        assert_eq!(finals[0].epoch, batches.len() as u64, "shutdown must drain the queue");
-        assert_eq!(finals[0].queued, 0);
-        for t in tickets {
-            t.wait().unwrap();
+        for svc in [
+            DecompositionService::with_config(ServiceConfig::pooled(2).queue_cap(8)),
+            DecompositionService::with_config(ServiceConfig::dedicated().queue_cap(8)),
+        ] {
+            let (existing, batches) = small_stream(2);
+            let handle = svc.register("drain", &existing, cfg(8)).unwrap();
+            // Submit everything and shut down immediately — nothing waits on
+            // tickets, yet every accepted batch must still be applied.
+            let tickets: Vec<Ticket> =
+                batches.iter().map(|b| svc.ingest("drain", b.clone()).unwrap()).collect();
+            let finals = svc.shutdown();
+            assert_eq!(finals[0].epoch, batches.len() as u64, "shutdown must drain the queue");
+            assert_eq!(finals[0].queued, 0);
+            for t in tickets {
+                t.wait().unwrap();
+            }
+            assert_eq!(handle.epoch(), batches.len() as u64);
         }
-        assert_eq!(handle.epoch(), batches.len() as u64);
     }
 
     #[test]
     fn multiple_streams_are_independent() {
         let svc = Arc::new(DecompositionService::new());
+        assert!(svc.is_pooled(), "pool mode is the default");
         let (ex_a, batches_a) = small_stream(3);
         let (ex_b, batches_b) = small_stream(4);
         svc.register("a", &ex_a, cfg(9)).unwrap();
@@ -387,52 +706,137 @@ mod tests {
         let counts: Vec<u64> = feeders.into_iter().map(|f| f.join().unwrap()).collect();
         assert_eq!(svc.handle("a").unwrap().epoch(), counts[0]);
         assert_eq!(svc.handle("b").unwrap().epoch(), counts[1]);
+        let pool = svc.pool_stats().unwrap();
+        assert!(pool.tasks_executed >= (counts[0] + counts[1]));
+        assert_eq!(pool.panics, 0);
         svc.shutdown();
     }
 
     #[test]
     fn failed_batch_marks_stats_but_stream_survives() {
-        let svc = DecompositionService::new();
-        let (existing, batches) = small_stream(5);
-        svc.register("flaky", &existing, cfg(11)).unwrap();
-        // Wrong mode-1/2 dims: the engine rejects it.
-        let (bad, _) = SyntheticSpec::dense(9, 10, 2, 2, 0.0, 6).generate();
-        let err = svc.ingest("flaky", bad).unwrap().wait();
-        assert!(err.is_err());
-        let st = svc.stats("flaky").unwrap();
-        assert_eq!(st.errors, 1);
-        assert!(st.last_error.as_deref().unwrap_or("").contains("must match"));
-        // The stream keeps serving.
-        let ok = svc.ingest("flaky", batches[0].clone()).unwrap().wait().unwrap();
-        assert_eq!(ok.k_new, batches[0].dims().2);
-        assert_eq!(svc.stats("flaky").unwrap().epoch, 1);
-        svc.shutdown();
+        for svc in both_modes() {
+            let (existing, batches) = small_stream(5);
+            svc.register("flaky", &existing, cfg(11)).unwrap();
+            // Wrong mode-1/2 dims: the engine rejects it.
+            let (bad, _) = SyntheticSpec::dense(9, 10, 2, 2, 0.0, 6).generate();
+            let err = svc.ingest("flaky", bad).unwrap().wait();
+            assert!(err.is_err());
+            let st = svc.stats("flaky").unwrap();
+            assert_eq!(st.errors, 1);
+            assert!(st.last_error.as_deref().unwrap_or("").contains("must match"));
+            // The stream keeps serving.
+            let ok = svc.ingest("flaky", batches[0].clone()).unwrap().wait().unwrap();
+            assert_eq!(ok.k_new, batches[0].dims().2);
+            assert_eq!(svc.stats("flaky").unwrap().epoch, 1);
+            svc.shutdown();
+        }
     }
 
     #[test]
     fn unknown_and_duplicate_streams_rejected() {
-        let svc = DecompositionService::new();
-        let (existing, batches) = small_stream(6);
-        assert!(svc.ingest("nope", batches[0].clone()).is_err());
-        assert!(svc.handle("nope").is_err());
-        assert!(svc.stats("nope").is_err());
-        svc.register("dup", &existing, cfg(12)).unwrap();
-        assert!(svc.register("dup", &existing, cfg(12)).is_err());
-        svc.shutdown();
-        // After shutdown the registry is empty and reusable.
-        assert!(svc.stream_names().is_empty());
-        svc.register("dup", &existing, cfg(13)).unwrap();
-        svc.shutdown();
+        for svc in both_modes() {
+            let (existing, batches) = small_stream(6);
+            assert!(svc.ingest("nope", batches[0].clone()).is_err());
+            assert!(svc.handle("nope").is_err());
+            assert!(svc.stats("nope").is_err());
+            svc.register("dup", &existing, cfg(12)).unwrap();
+            assert!(svc.register("dup", &existing, cfg(12)).is_err());
+            svc.shutdown();
+            // After shutdown the registry is empty and reusable.
+            assert!(svc.stream_names().is_empty());
+            svc.register("dup", &existing, cfg(13)).unwrap();
+            svc.shutdown();
+        }
     }
 
     #[test]
     fn remove_single_stream() {
+        for svc in both_modes() {
+            let (existing, batches) = small_stream(7);
+            svc.register("gone", &existing, cfg(14)).unwrap();
+            svc.ingest("gone", batches[0].clone()).unwrap().wait().unwrap();
+            let st = svc.remove("gone").unwrap();
+            assert_eq!(st.epoch, 1);
+            assert!(svc.ingest("gone", batches[0].clone()).is_err());
+        }
+    }
+
+    #[test]
+    fn snapshot_all_gathers_every_stream() {
         let svc = DecompositionService::new();
-        let (existing, batches) = small_stream(7);
-        svc.register("gone", &existing, cfg(14)).unwrap();
-        svc.ingest("gone", batches[0].clone()).unwrap().wait().unwrap();
-        let st = svc.remove("gone").unwrap();
-        assert_eq!(st.epoch, 1);
-        assert!(svc.ingest("gone", batches[0].clone()).is_err());
+        let (ex_a, batches_a) = small_stream(8);
+        let (ex_b, _) = small_stream(9);
+        svc.register("a", &ex_a, cfg(15)).unwrap();
+        svc.register("b", &ex_b, cfg(16)).unwrap();
+        let all = svc.snapshot_all();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].0, "a");
+        assert_eq!(all[1].0, "b");
+        assert!(all.iter().all(|(_, s)| s.epoch == 0));
+        svc.ingest("a", batches_a[0].clone()).unwrap().wait().unwrap();
+        let all = svc.snapshot_all();
+        assert_eq!(all[0].1.epoch, 1);
+        assert_eq!(all[1].1.epoch, 0);
+        // Each snapshot is internally consistent.
+        for (_, s) in &all {
+            assert_eq!(s.model.factors[2].rows(), s.dims.2);
+        }
+        svc.shutdown();
+        assert!(svc.snapshot_all().is_empty());
+    }
+
+    #[test]
+    fn pooled_panic_poisons_stream_but_not_service() {
+        // A panicking ingest in pool mode: the ticket resolves with an
+        // error (never hangs), the worker thread and the other streams
+        // survive, and the poisoned stream fails fast afterwards.
+        let svc = DecompositionService::with_config(ServiceConfig::pooled(2));
+        let (existing, batches) = small_stream(10);
+        svc.register("healthy", &existing, cfg(17)).unwrap();
+        // `SamBaTen::init` runs the initial decomposition natively, so
+        // registration succeeds; the panic fires inside the first ingest's
+        // sample decomposition. One repetition keeps the panic on the job's
+        // own thread (no fan-out), so the accounting below is exact.
+        let panic_cfg = SamBaTenConfig::builder(2, 2, 1, 18)
+            .build()
+            .unwrap()
+            .with_solver(Arc::new(PanicSolver));
+        svc.register("doomed", &existing, panic_cfg).unwrap();
+        let err = svc.ingest("doomed", batches[0].clone()).unwrap().wait();
+        assert!(err.is_err(), "panicked ingest must fail its ticket, not hang");
+        assert!(format!("{:#}", err.unwrap_err()).contains("poisoned"));
+        // Stream is poisoned: subsequent ingests fail fast, before queueing.
+        assert!(svc.ingest("doomed", batches[0].clone()).is_err());
+        let st = svc.stats("doomed").unwrap();
+        assert_eq!(st.errors, 1);
+        assert_eq!(st.epoch, 0, "a panicked ingest publishes nothing");
+        // The pool and the healthy stream are unaffected. The serving layer
+        // resolves the panic into a ticket error itself, so the pool's own
+        // catch (the backstop) never fires.
+        svc.ingest("healthy", batches[0].clone()).unwrap().wait().unwrap();
+        assert_eq!(svc.stats("healthy").unwrap().epoch, 1);
+        assert_eq!(svc.pool_stats().unwrap().panics, 0);
+        let finals = svc.shutdown();
+        assert_eq!(finals.len(), 2);
+    }
+
+    /// An inner solver that panics — drives the panic-isolation path.
+    struct PanicSolver;
+
+    impl crate::coordinator::InnerSolver for PanicSolver {
+        fn decompose(
+            &self,
+            _x: &TensorData,
+            _rank: usize,
+            _opts: &crate::cp::AlsOptions,
+            _seed: u64,
+            _ws: &mut crate::cp::AlsWorkspace,
+        ) -> Result<crate::cp::CpModel> {
+            panic!("solver panic (test)");
+        }
+
+        fn name(&self) -> &'static str {
+            "panic-solver"
+        }
     }
 }

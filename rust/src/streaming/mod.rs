@@ -103,13 +103,23 @@ pub struct Batcher {
     sparse: bool,
     /// `(I, J)` contract for the stream; pinned by the first slice.
     dims: Option<(usize, usize)>,
+    /// nnz bar for COO→CSF promotion of emitted batches (defaults to
+    /// [`crate::tensor::CSF_PROMOTION_NNZ`]; see
+    /// [`with_promotion_bar`](Self::with_promotion_bar)).
+    promotion_bar: usize,
     pending: VecDeque<Slice>,
 }
 
 impl Batcher {
     pub fn new(batch_size: usize, sparse: bool) -> Self {
         assert!(batch_size >= 1);
-        Batcher { batch_size, sparse, dims: None, pending: VecDeque::new() }
+        Batcher {
+            batch_size,
+            sparse,
+            dims: None,
+            promotion_bar: crate::tensor::CSF_PROMOTION_NNZ,
+            pending: VecDeque::new(),
+        }
     }
 
     /// A batcher with the `(I, J)` contract pinned up front (e.g. from
@@ -118,6 +128,14 @@ impl Batcher {
         let mut b = Self::new(batch_size, sparse);
         b.dims = Some(dims);
         b
+    }
+
+    /// Override the COO→CSF promotion bar for emitted batches — pair it
+    /// with `SamBaTenConfig`'s `csf_nnz_bar` so a stream and its engine
+    /// agree on the break-even.
+    pub fn with_promotion_bar(mut self, bar: usize) -> Self {
+        self.promotion_bar = bar.max(1);
+        self
     }
 
     /// Add a slice; returns a full batch when ready, or an error for a
@@ -208,7 +226,7 @@ impl Batcher {
         // its per-repetition MoI/extraction passes over them, and a CSF
         // batch merges tree-to-tree into a CSF accumulator (the incremental
         // append never round-trips either side through COO).
-        Some(out.promoted())
+        Some(out.promoted_at(self.promotion_bar))
     }
 }
 
@@ -225,15 +243,30 @@ pub struct StreamPump {
 
 impl StreamPump {
     pub fn spawn<S: SliceSource + 'static>(
-        mut source: S,
+        source: S,
         batch_size: usize,
         sparse: bool,
         queue_cap: usize,
     ) -> Result<Self> {
+        let bar = crate::tensor::CSF_PROMOTION_NNZ;
+        Self::spawn_with_promotion_bar(source, batch_size, sparse, queue_cap, bar)
+    }
+
+    /// [`StreamPump::spawn`] with an explicit COO→CSF promotion bar for
+    /// the emitted batches — pass `SamBaTenConfig::csf_nnz_bar()` so the
+    /// stream and the engine consuming it agree on the break-even.
+    pub fn spawn_with_promotion_bar<S: SliceSource + 'static>(
+        mut source: S,
+        batch_size: usize,
+        sparse: bool,
+        queue_cap: usize,
+        promotion_bar: usize,
+    ) -> Result<Self> {
         let (tx, rx) = mpsc::sync_channel::<Result<TensorData>>(queue_cap.max(1));
         let dims = source.slice_dims();
         std::thread::Builder::new().name("stream-pump".into()).spawn(move || {
-            let mut batcher = Batcher::with_dims(batch_size, sparse, dims);
+            let mut batcher =
+                Batcher::with_dims(batch_size, sparse, dims).with_promotion_bar(promotion_bar);
             while let Some(slice) = source.next_slice() {
                 match batcher.push(slice) {
                     Ok(Some(batch)) => {
@@ -315,6 +348,29 @@ mod tests {
     }
 
     #[test]
+    fn batcher_promotion_bar_is_configurable() {
+        let slices = || {
+            [
+                Slice::Sparse { i: 3, j: 3, entries: vec![(0, 0, 1.0), (1, 1, 2.0)] },
+                Slice::Sparse { i: 3, j: 3, entries: vec![(2, 2, 3.0)] },
+            ]
+        };
+        // Default bar (16 Ki): a 3-nnz batch stays COO.
+        let mut b = Batcher::new(2, true);
+        let [s0, s1] = slices();
+        b.push(s0).unwrap();
+        let batch = b.push(s1).unwrap().unwrap();
+        assert!(batch.is_sparse() && !batch.is_csf());
+        // A lowered bar promotes the identical batch to CSF.
+        let mut b = Batcher::new(2, true).with_promotion_bar(2);
+        let [s0, s1] = slices();
+        b.push(s0).unwrap();
+        let batch = b.push(s1).unwrap().unwrap();
+        assert!(batch.is_csf());
+        assert_eq!(batch.nnz(), 3);
+    }
+
+    #[test]
     fn mixed_slice_kinds_into_dense_batch() {
         let mut b = Batcher::new(2, false);
         let s0 = Slice::Dense { i: 2, j: 1, data: vec![1.0, 2.0] };
@@ -380,6 +436,21 @@ mod tests {
         }
         assert_eq!(total_k, 10);
         assert_eq!(count, 4); // 3+3+3+1
+    }
+
+    #[test]
+    fn pump_threads_promotion_bar_to_batches() {
+        let mut rng = Rng::new(9);
+        let t = CooTensor::rand(6, 6, 4, 0.5, &mut rng);
+        let replay = TensorReplay::new(t.into());
+        let pump = StreamPump::spawn_with_promotion_bar(replay, 2, true, 2, 1).unwrap();
+        let mut slices = 0;
+        while let Some(b) = pump.next_batch() {
+            let b = b.unwrap();
+            assert!(b.is_csf(), "bar 1 must promote every emitted batch");
+            slices += b.dims().2;
+        }
+        assert_eq!(slices, 4);
     }
 
     #[test]

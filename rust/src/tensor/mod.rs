@@ -124,18 +124,34 @@ impl TensorData {
         self
     }
 
-    /// In-place [`TensorData::promoted`].
+    /// [`TensorData::promoted`] against a caller-chosen bar (see
+    /// [`maybe_promote_at`](Self::maybe_promote_at)).
+    pub fn promoted_at(mut self, bar: usize) -> TensorData {
+        self.maybe_promote_at(bar);
+        self
+    }
+
+    /// In-place [`TensorData::promoted`] at the default bar.
     ///
     /// The policy is deliberately **one-way** (hysteresis): a COO tensor
-    /// promotes the moment its nnz reaches [`CSF_PROMOTION_NNZ`], and a CSF
-    /// tensor never demotes — even if later splits or sparse windows drop
-    /// its nnz back below the bar, it keeps its fiber trees (mode-3 appends
-    /// grow them incrementally). A stream oscillating around the threshold
-    /// therefore pays the tree build exactly once instead of thrashing
-    /// between rebuilds and demotions.
+    /// promotes the moment its nnz reaches the bar, and a CSF tensor never
+    /// demotes — even if later splits or sparse windows drop its nnz back
+    /// below the bar, it keeps its fiber trees (mode-3 appends grow them
+    /// incrementally). A stream oscillating around the threshold therefore
+    /// pays the tree build exactly once instead of thrashing between
+    /// rebuilds and demotions.
     pub fn maybe_promote(&mut self) {
+        self.maybe_promote_at(CSF_PROMOTION_NNZ);
+    }
+
+    /// [`TensorData::maybe_promote`] against a caller-chosen bar — the
+    /// per-shape break-even differs (shallow-mode tensors rebuild cheaper),
+    /// so the engine exposes it as a `SamBaTenConfig` knob
+    /// (`csf_nnz_bar`) instead of hard-wiring the global constant. A bar
+    /// of 0 is treated as 1 (an empty tensor never promotes).
+    pub fn maybe_promote_at(&mut self, bar: usize) {
         if let TensorData::Sparse(s) = self {
-            if s.nnz() >= CSF_PROMOTION_NNZ {
+            if s.nnz() >= bar.max(1) {
                 *self = TensorData::Csf(CsfTensor::from_coo(std::mem::take(s)));
             }
         }
@@ -154,6 +170,19 @@ impl TensorData {
     /// the COO entry scan — with no COO round trip and no re-sort, because
     /// sorted index sets preserve each orientation's entry order.
     pub fn extract(&self, is: &[usize], js: &[usize], ks: &[usize]) -> TensorData {
+        self.extract_with_bar(is, js, ks, CSF_EXTRACT_NNZ)
+    }
+
+    /// [`TensorData::extract`] with a caller-chosen CSF-output bar (the
+    /// engine threads its `csf_nnz_bar` knob through here via
+    /// `SamplerConfig`); a bar of 0 is treated as 1.
+    pub fn extract_with_bar(
+        &self,
+        is: &[usize],
+        js: &[usize],
+        ks: &[usize],
+        bar: usize,
+    ) -> TensorData {
         match self {
             TensorData::Dense(t) => TensorData::Dense(t.extract(is, js, ks)),
             TensorData::Sparse(t) => TensorData::Sparse(t.extract(is, js, ks)),
@@ -175,7 +204,7 @@ impl TensorData {
                     * frac(is.len(), ni)
                     * frac(js.len(), nj)
                     * frac(ks.len(), nk);
-                if est >= CSF_EXTRACT_NNZ as f64 {
+                if est >= bar.max(1) as f64 {
                     TensorData::Csf(t.extract_csf(is, js, ks))
                 } else {
                     TensorData::Sparse(t.extract(is, js, ks))
@@ -364,6 +393,31 @@ mod tests {
         t.maybe_promote();
         assert!(t.is_csf());
         assert_eq!(t.dims(), (6, 6, 8));
+    }
+
+    #[test]
+    fn promotion_and_extraction_bars_are_configurable() {
+        let mut rng = Rng::new(9);
+        let small = CooTensor::rand(6, 6, 6, 0.3, &mut rng);
+        let nnz = small.nnz();
+        assert!(nnz > 1 && nnz < CSF_PROMOTION_NNZ);
+        // A lowered bar promotes what the default bar keeps COO.
+        let t: TensorData = small.clone().into();
+        assert!(!t.clone().promoted().is_csf());
+        assert!(t.clone().promoted_at(nnz).is_csf());
+        assert!(!t.clone().promoted_at(nnz + 1).is_csf());
+        // Bar 0 is clamped to 1: an empty tensor still never promotes.
+        let empty: TensorData = CooTensor::new(4, 4, 4).into();
+        assert!(!empty.promoted_at(0).is_csf());
+        // Extraction output format follows the bar the same way, with
+        // identical content either side of it.
+        let csf = TensorData::Csf(CsfTensor::from_coo(small));
+        let is: Vec<usize> = (0..6).collect();
+        let sub_default = csf.extract(&is, &is, &is);
+        assert!(!sub_default.is_csf(), "below the default bar extraction emits COO");
+        let sub_low = csf.extract_with_bar(&is, &is, &is, 1);
+        assert!(sub_low.is_csf(), "a lowered bar emits CSF");
+        assert_eq!(sub_default.to_dense().data(), sub_low.to_dense().data());
     }
 
     #[test]

@@ -9,10 +9,39 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Hardware thread count (with a conservative fallback when the platform
+/// cannot report it). Shared by the scoped-thread helpers below and the
+/// default sizing of the [`crate::pool::WorkPool`] scheduler.
+pub fn hardware_parallelism() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+}
+
 /// Number of worker threads to use for `n` items.
 pub fn workers_for(n: usize) -> usize {
-    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    hw.min(n).max(1)
+    hardware_parallelism().min(n).max(1)
+}
+
+/// One `Mutex<Option<U>>` result slot per work item — the order-preserving
+/// collection pattern `parallel_map` and `WorkPool::parallel_map` share:
+/// each task writes slot `i`, nobody contends, and the caller collects in
+/// input order afterwards.
+pub(crate) fn result_slots<U>(n: usize) -> Vec<Mutex<Option<U>>> {
+    (0..n).map(|_| Mutex::new(None)).collect()
+}
+
+/// Collect filled [`result_slots`] in input order.
+///
+/// # Panics
+/// If any slot was left unfilled (its task panicked before writing).
+pub(crate) fn collect_results<U>(slots: Vec<Mutex<Option<U>>>) -> Vec<U> {
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap_or_else(|e| e.into_inner())
+                .expect("a parallel task panicked before filling its result slot")
+        })
+        .collect()
 }
 
 /// Parallel map preserving input order. `f` must be `Sync` (called from many
@@ -33,7 +62,7 @@ where
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
     let next = AtomicUsize::new(0);
-    let out: Vec<Mutex<Option<U>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let out = result_slots::<U>(n);
     std::thread::scope(|s| {
         for _ in 0..nw {
             s.spawn(|| loop {
@@ -46,9 +75,7 @@ where
             });
         }
     });
-    out.into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
-        .collect()
+    collect_results(out)
 }
 
 /// Parallel for-each over indices `0..n`.

@@ -1,0 +1,137 @@
+//! Keyed-ordering stress for the work-stealing scheduler (`pool::WorkPool`):
+//! N keys × M tasks on P ≪ N workers, asserting the two invariants the
+//! serving layer's correctness rests on —
+//!
+//! 1. **per-key sequential FIFO**: tasks of one key run in exactly their
+//!    submission order and never concurrently (checked with a per-key
+//!    running flag and a recorded execution log), and
+//! 2. **zero lost or duplicated tasks**: every accepted task runs exactly
+//!    once, across contention, stealing, backpressure and shutdown.
+//!
+//! CI runs this file under `--release` as well (next to `serve_concurrent`):
+//! optimised codegen widens the real interleaving space the test explores.
+
+use sambaten::pool::WorkPool;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+struct KeyRecord {
+    /// True while one of this key's tasks is executing — a second task
+    /// observing `true` is a concurrency violation.
+    running: AtomicBool,
+    violations: AtomicUsize,
+    /// Sequence numbers in execution order.
+    seen: Mutex<Vec<usize>>,
+}
+
+impl KeyRecord {
+    fn new() -> Self {
+        KeyRecord {
+            running: AtomicBool::new(false),
+            violations: AtomicUsize::new(0),
+            seen: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+/// The acceptance shape: 1 000 streams' worth of keys on 4 workers, with 8
+/// producer threads submitting under backpressure (mailbox cap 4).
+#[test]
+fn thousand_keys_on_four_workers_keep_fifo_order() {
+    const KEYS: usize = 1000;
+    const TASKS: usize = 20;
+    const SUBMITTERS: usize = 8;
+    let pool = Arc::new(WorkPool::new(4));
+    let records: Arc<Vec<KeyRecord>> = Arc::new((0..KEYS).map(|_| KeyRecord::new()).collect());
+    let keys: Arc<Vec<_>> = Arc::new(
+        (0..KEYS).map(|k| pool.register_key(&format!("key-{k}"), 4).unwrap()).collect(),
+    );
+    let submitters: Vec<_> = (0..SUBMITTERS)
+        .map(|s| {
+            let keys = keys.clone();
+            let records = records.clone();
+            std::thread::spawn(move || {
+                // Each submitter owns a disjoint block of keys and walks
+                // them round-robin: per key, one thread submits sequence
+                // numbers in order (the FIFO contract's precondition),
+                // while across keys many mailboxes stay live at once.
+                let mine: Vec<usize> = (0..KEYS).filter(|k| k % SUBMITTERS == s).collect();
+                for seq in 0..TASKS {
+                    for &k in &mine {
+                        let records = records.clone();
+                        keys[k]
+                            .submit(move || {
+                                let rec = &records[k];
+                                if rec.running.swap(true, Ordering::SeqCst) {
+                                    rec.violations.fetch_add(1, Ordering::SeqCst);
+                                }
+                                rec.seen.lock().unwrap().push(seq);
+                                rec.running.store(false, Ordering::SeqCst);
+                            })
+                            .unwrap();
+                    }
+                }
+            })
+        })
+        .collect();
+    for s in submitters {
+        s.join().unwrap();
+    }
+    // Shutdown drains everything still queued before workers exit.
+    pool.shutdown();
+    let mut total = 0usize;
+    for (k, rec) in records.iter().enumerate() {
+        assert_eq!(rec.violations.load(Ordering::SeqCst), 0, "key {k}: concurrent execution");
+        let seen = rec.seen.lock().unwrap();
+        assert_eq!(
+            *seen,
+            (0..TASKS).collect::<Vec<_>>(),
+            "key {k}: tasks ran out of order, were lost, or duplicated"
+        );
+        total += seen.len();
+    }
+    assert_eq!(total, KEYS * TASKS, "lost or duplicated tasks overall");
+    let stats = pool.stats();
+    assert_eq!(stats.workers, 4);
+    assert_eq!(stats.panics, 0);
+    assert_eq!(stats.tasks_executed as usize, KEYS * TASKS);
+    assert_eq!(stats.queued, 0);
+}
+
+/// Scoped fan-outs (the engine's per-repetition path) interleaved with
+/// keyed load on the same small pool: both must stay correct.
+#[test]
+fn fanout_coexists_with_keyed_load() {
+    const KEYS: usize = 50;
+    const TASKS: usize = 40;
+    let pool = Arc::new(WorkPool::new(4));
+    let counter = Arc::new(AtomicUsize::new(0));
+    let keys: Vec<_> =
+        (0..KEYS).map(|k| pool.register_key(&format!("bg-{k}"), 8).unwrap()).collect();
+    let background = {
+        let keys = keys.clone();
+        let counter = counter.clone();
+        std::thread::spawn(move || {
+            for seq in 0..TASKS {
+                for key in &keys {
+                    let counter = counter.clone();
+                    key.submit(move || {
+                        counter.fetch_add(seq + 1, Ordering::Relaxed);
+                    })
+                    .unwrap();
+                }
+            }
+        })
+    };
+    // Foreground: repeated parallel_maps racing the keyed load.
+    let xs: Vec<u64> = (0..64).collect();
+    for round in 0..20u64 {
+        let ys = pool.parallel_map(&xs, |_, &x| x * x + round);
+        assert_eq!(ys, xs.iter().map(|x| x * x + round).collect::<Vec<_>>(), "round {round}");
+    }
+    background.join().unwrap();
+    pool.shutdown();
+    let expect = KEYS * (1..=TASKS).sum::<usize>();
+    assert_eq!(counter.load(Ordering::SeqCst), expect, "keyed tasks lost under fan-out load");
+    assert_eq!(pool.stats().panics, 0);
+}

@@ -3,17 +3,22 @@
 //! the snapshot invariants the redesign promises — monotone epochs,
 //! unit-norm factor columns, `C` row count equal to the published slice
 //! count, and readers that are never blocked by (or able to observe a
-//! half-merged state of) the writer.
+//! half-merged state of) the writer. The service-level contracts ride on
+//! top: `snapshot_all` gathering without blocking a writer parked
+//! *mid-ingest* (gate solver), the remove-vs-ingest race resolving every
+//! ticket instead of hanging, and many pooled streams on few workers
+//! keeping per-stream order.
 //!
 //! CI runs this file under `--release` as well (see `.github/workflows`):
 //! optimised codegen widens the real interleaving space the test explores.
 
-use sambaten::coordinator::{ModelSnapshot, SamBaTen, SamBaTenConfig};
+use sambaten::coordinator::{InnerSolver, ModelSnapshot, NativeAlsSolver, SamBaTen, SamBaTenConfig};
+use sambaten::cp::{AlsOptions, AlsWorkspace, CpModel};
 use sambaten::datagen::SyntheticSpec;
-use sambaten::serve::DecompositionService;
-use sambaten::tensor::Tensor3;
+use sambaten::serve::{DecompositionService, ServiceConfig};
+use sambaten::tensor::{Tensor3, TensorData};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// The invariants every published snapshot must satisfy, at any epoch.
 fn assert_snapshot_invariants(snap: &ModelSnapshot) {
@@ -152,6 +157,201 @@ fn service_stream_consistent_under_concurrent_load() {
     // Handles outlive the service: the last snapshot stays queryable.
     assert_eq!(handle.epoch(), total);
     assert!(handle.snapshot().entry(0, 0, 0).is_finite());
+}
+
+/// A solver whose first caller parks inside `decompose` until the test
+/// opens the gate — the deterministic way to hold a stream provably
+/// *mid-ingest* while asserting reads never block on the writer.
+struct Gate {
+    entered: AtomicBool,
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate {
+            entered: AtomicBool::new(false),
+            open: Mutex::new(false),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Spin until a worker is parked inside the gated ingest.
+    fn wait_entered(&self) {
+        while !self.entered.load(Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    fn open(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+struct GateSolver {
+    gate: Arc<Gate>,
+}
+
+impl InnerSolver for GateSolver {
+    fn decompose(
+        &self,
+        x: &TensorData,
+        rank: usize,
+        opts: &AlsOptions,
+        seed: u64,
+        ws: &mut AlsWorkspace,
+    ) -> anyhow::Result<CpModel> {
+        self.gate.entered.store(true, Ordering::SeqCst);
+        let mut open = self.gate.open.lock().unwrap();
+        while !*open {
+            open = self.gate.cv.wait(open).unwrap();
+        }
+        drop(open);
+        NativeAlsSolver.decompose(x, rank, opts, seed, ws)
+    }
+
+    fn name(&self) -> &'static str {
+        "gate-solver"
+    }
+}
+
+/// `snapshot_all` must gather every stream without blocking on any writer:
+/// here one stream's writer is parked *inside* an ingest (gate solver) and
+/// the gather still returns, with the in-flight batch provably unresolved.
+/// Pinned in both execution modes (ROADMAP "service-level snapshot" item).
+#[test]
+fn snapshot_all_returns_while_writer_is_mid_ingest() {
+    for svc_cfg in [ServiceConfig::pooled(2), ServiceConfig::dedicated()] {
+        let svc = DecompositionService::with_config(svc_cfg);
+        let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, 21);
+        let (existing, batches, _) = spec.generate_stream(0.5, 2);
+        let gate = Gate::new();
+        // One repetition: exactly one (gated) decompose call per ingest.
+        let gated_cfg = SamBaTenConfig::builder(2, 2, 1, 13)
+            .build()
+            .unwrap()
+            .with_solver(Arc::new(GateSolver { gate: gate.clone() }));
+        svc.register("gated", &existing, gated_cfg).unwrap();
+        let plain_cfg = SamBaTenConfig::builder(2, 2, 1, 14).build().unwrap();
+        svc.register("plain", &existing, plain_cfg).unwrap();
+        let ticket = svc.ingest("gated", batches[0].clone()).unwrap();
+        gate.wait_entered();
+        // The writer is parked inside ingest right now. A blocking gather
+        // would deadlock here; the wait-free one returns epoch 0.
+        let all = svc.snapshot_all();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].0, "gated");
+        assert_eq!(all[0].1.epoch, 0);
+        assert_eq!(all[1].0, "plain");
+        for (_, snap) in &all {
+            assert_snapshot_invariants(snap);
+        }
+        assert!(ticket.try_wait().is_none(), "the gated batch must still be in flight");
+        gate.open();
+        ticket.wait().unwrap();
+        let all = svc.snapshot_all();
+        assert_eq!(all[0].1.epoch, 1, "the gather sees the new epoch once published");
+        svc.shutdown();
+    }
+}
+
+/// Regression for the remove-vs-ingest race: whatever the interleaving —
+/// batch in flight, batch queued, producer blocked on backpressure,
+/// submission racing the removal — every ticket resolves and every ingest
+/// call returns; nothing hangs. (A hang here fails CI by timeout: that is
+/// the regression detection.)
+#[test]
+fn removed_stream_never_hangs_tickets() {
+    for svc_cfg in [ServiceConfig::pooled(2), ServiceConfig::dedicated()] {
+        let svc = Arc::new(DecompositionService::with_config(svc_cfg.queue_cap(1)));
+        let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, 22);
+        let (existing, batches, _) = spec.generate_stream(0.5, 1);
+        let gate = Gate::new();
+        let cfg = SamBaTenConfig::builder(2, 2, 1, 15)
+            .build()
+            .unwrap()
+            .with_solver(Arc::new(GateSolver { gate: gate.clone() }));
+        svc.register("r", &existing, cfg).unwrap();
+        // t1 in flight (parked at the gate), t2 fills the cap-1 queue.
+        let t1 = svc.ingest("r", batches[0].clone()).unwrap();
+        gate.wait_entered();
+        let t2 = svc.ingest("r", batches[1].clone()).unwrap();
+        // A producer that blocks on backpressure mid-removal.
+        let producer = {
+            let svc = svc.clone();
+            let batch = batches[2].clone();
+            std::thread::spawn(move || match svc.ingest("r", batch) {
+                // Rejected cleanly by the closing stream — fine.
+                Err(_) => None,
+                // Accepted before the close won the race — the ticket must
+                // still resolve (Ok or Err, but never hang).
+                Ok(t) => Some(t.wait().is_ok()),
+            })
+        };
+        // Let the producer reach the full queue / blocked-send state.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let remover = {
+            let svc = svc.clone();
+            std::thread::spawn(move || svc.remove("r").unwrap())
+        };
+        // The registry entry disappears immediately even while the drain is
+        // still parked on the gate; new ingests fail instead of hanging.
+        while svc.handle("r").is_ok() {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(svc.ingest("r", batches[0].clone()).is_err());
+        gate.open();
+        // Accepted work resolves (drain-on-remove), racing work resolved
+        // above — nothing hangs.
+        t1.wait().unwrap();
+        t2.wait().unwrap();
+        producer.join().unwrap();
+        let finals = remover.join().unwrap();
+        assert!(finals.epoch >= 2, "accepted batches must be applied by the drain");
+        assert_eq!(finals.queued, 0);
+    }
+}
+
+/// Many streams on few workers through the full service: per-stream
+/// ordering (epochs advance once per batch) and zero cross-stream
+/// interference, with the engines' fan-out riding the same pool.
+#[test]
+fn pooled_service_many_streams_on_few_workers() {
+    const STREAMS: usize = 48;
+    const BATCHES: usize = 3;
+    let spec = SyntheticSpec::dense(10, 10, 15, 2, 0.0, 23);
+    let (existing, batches, _) = spec.generate_stream(0.4, 3);
+    assert!(batches.len() >= BATCHES);
+    let svc = Arc::new(DecompositionService::with_config(ServiceConfig::pooled(4)));
+    for s in 0..STREAMS {
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 100 + s as u64).build().unwrap();
+        svc.register(&format!("s{s:02}"), &existing, cfg).unwrap();
+    }
+    // Round-robin across streams so many keys are live at once.
+    let mut tickets = Vec::with_capacity(STREAMS * BATCHES);
+    for b in batches.iter().take(BATCHES) {
+        for s in 0..STREAMS {
+            tickets.push(svc.ingest(&format!("s{s:02}"), b.clone()).unwrap());
+        }
+    }
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let all = svc.snapshot_all();
+    assert_eq!(all.len(), STREAMS);
+    for (name, snap) in &all {
+        assert_eq!(snap.epoch, BATCHES as u64, "stream {name}");
+        assert_snapshot_invariants(snap);
+    }
+    let pool = svc.pool_stats().unwrap();
+    assert_eq!(pool.workers, 4);
+    assert_eq!(pool.panics, 0);
+    assert!(pool.tasks_executed >= (STREAMS * BATCHES) as u64);
+    let finals = svc.shutdown();
+    assert_eq!(finals.len(), STREAMS);
+    assert!(finals.iter().all(|st| st.errors == 0 && st.queued == 0));
 }
 
 /// Snapshot immutability: a reader that holds an old epoch keeps a fully
