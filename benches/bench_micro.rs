@@ -22,7 +22,7 @@ use sambaten::linalg::{hungarian_min, pinv, svd_jacobi, Matrix};
 use sambaten::matching::{match_components, MatchPolicy};
 use sambaten::sampling::weighted_sample_without_replacement;
 use sambaten::tensor::{CooTensor, CsfTensor, DenseTensor, Tensor3, TensorData};
-use sambaten::util::benchkit::{bench, report};
+use sambaten::util::benchkit::{bench, report, write_json};
 use sambaten::util::Rng;
 
 fn main() {
@@ -276,10 +276,16 @@ fn main() {
         assert!(handle.epoch() >= 3);
         per_op_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let best = per_op_ns.first().copied().unwrap_or(f64::NAN);
-        let median = per_op_ns.get(per_op_ns.len() / 2).copied().unwrap_or(f64::NAN);
+        let pct = |p: f64| -> f64 {
+            let idx = ((per_op_ns.len() - 1) as f64 * p).round() as usize;
+            per_op_ns.get(idx).copied().unwrap_or(f64::NAN)
+        };
+        let median = pct(0.5);
         println!("snapshot acquisitions under ingest: {acquired}");
         report("micro/snapshot_under_ingest/acquire_best", best, "ns/op");
         report("micro/snapshot_under_ingest/acquire_median", median, "ns/op");
+        report("micro/snapshot_under_ingest/acquire_p90", pct(0.9), "ns/op");
+        report("micro/snapshot_under_ingest/acquire_p99", pct(0.99), "ns/op");
         // Acceptance: sub-microsecond acquisition while the writer runs.
         // The best block is the contention-free floor; the median bound is
         // left loose for noisy shared CI runners.
@@ -423,4 +429,11 @@ fn main() {
     bench("micro/extract_dense_96_half", 1, 5, || {
         std::hint::black_box(bigd.extract(&is, &is, &is));
     });
+
+    // Machine-readable dump of every bench row and report scalar above
+    // (timings, throughput, latency percentiles, allocation counters) for
+    // cross-commit trend tracking. `BENCH_JSON` overrides the output path.
+    let json_path =
+        std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_micro.json".to_string());
+    write_json(std::path::Path::new(&json_path)).expect("writing bench JSON");
 }

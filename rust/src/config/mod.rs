@@ -6,7 +6,7 @@ pub mod toml_min;
 
 pub use toml_min::{TomlDoc, TomlValue};
 
-use crate::coordinator::SamBaTenConfig;
+use crate::coordinator::{DriftConfig, SamBaTenConfig};
 use crate::cp::AlsOptions;
 use crate::matching::MatchPolicy;
 use anyhow::{Context, Result};
@@ -36,6 +36,19 @@ pub struct RunConfig {
     /// nnz bar for COO→CSF promotion and CSF-native sample extraction
     /// (`SamBaTenConfig::csf_nnz_bar`; ≥ 1).
     pub csf_nnz_bar: usize,
+    /// Drift-aware adaptive rank (off by default: fixed-rank behaviour is
+    /// bit-identical to pre-drift builds).
+    pub adaptive_rank: bool,
+    /// Consecutive-batch window the drift detector judges over.
+    pub drift_window: usize,
+    /// Residual-energy fraction that must persist for a whole window
+    /// before the rank grows.
+    pub drift_grow_bar: f64,
+    /// Activity floor (relative to the most active component) below which
+    /// a component is retired.
+    pub drift_retire_floor: f64,
+    /// Rank ceiling for growth; `0` means "resolve to 2·rank at build".
+    pub drift_max_rank: usize,
 }
 
 impl Default for RunConfig {
@@ -54,6 +67,11 @@ impl Default for RunConfig {
             als_max_iters: 100,
             als_tol: 1e-5,
             csf_nnz_bar: crate::tensor::CSF_PROMOTION_NNZ,
+            adaptive_rank: false,
+            drift_window: 8,
+            drift_grow_bar: 0.2,
+            drift_retire_floor: 0.05,
+            drift_max_rank: 0,
         }
     }
 }
@@ -88,6 +106,17 @@ impl RunConfig {
                 "als_max_iters" => cfg.als_max_iters = value.as_usize().context("als_max_iters")?,
                 "als_tol" => cfg.als_tol = value.as_f64().context("als_tol")?,
                 "csf_nnz_bar" => cfg.csf_nnz_bar = value.as_usize().context("csf_nnz_bar")?,
+                "adaptive_rank" => cfg.adaptive_rank = value.as_bool().context("adaptive_rank")?,
+                "drift_window" => cfg.drift_window = value.as_usize().context("drift_window")?,
+                "drift_grow_bar" => {
+                    cfg.drift_grow_bar = value.as_f64().context("drift_grow_bar")?
+                }
+                "drift_retire_floor" => {
+                    cfg.drift_retire_floor = value.as_f64().context("drift_retire_floor")?
+                }
+                "drift_max_rank" => {
+                    cfg.drift_max_rank = value.as_usize().context("drift_max_rank")?
+                }
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
         }
@@ -113,6 +142,16 @@ impl RunConfig {
             "engine must be native|pjrt"
         );
         anyhow::ensure!(self.csf_nnz_bar >= 1, "csf_nnz_bar must be >= 1");
+        anyhow::ensure!(self.drift_window >= 1, "drift_window must be >= 1");
+        anyhow::ensure!(
+            self.drift_grow_bar.is_finite() && (0.0..=1.0).contains(&self.drift_grow_bar),
+            "drift_grow_bar must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            self.drift_retire_floor.is_finite()
+                && (0.0..=1.0).contains(&self.drift_retire_floor),
+            "drift_retire_floor must be in [0, 1]"
+        );
         Ok(())
     }
 
@@ -134,6 +173,14 @@ impl RunConfig {
             })
             .quality_control(self.quality_control)
             .csf_nnz_bar(self.csf_nnz_bar)
+            .drift(DriftConfig {
+                enabled: self.adaptive_rank,
+                window: self.drift_window,
+                grow_bar: self.drift_grow_bar,
+                retire_floor: self.drift_retire_floor,
+                max_rank: self.drift_max_rank,
+                ..Default::default()
+            })
             .build()
     }
 }
@@ -195,6 +242,28 @@ als_tol = 1e-6
         // Default stays the global promotion bar.
         let d = RunConfig::default();
         assert_eq!(d.csf_nnz_bar, crate::tensor::CSF_PROMOTION_NNZ);
+    }
+
+    #[test]
+    fn drift_knobs_parse_validate_and_thread_into_engine_config() {
+        let text = "rank = 3\nadaptive_rank = true\ndrift_window = 4\n\
+                    drift_grow_bar = 0.3\ndrift_retire_floor = 0.1\ndrift_max_rank = 5\n";
+        let cfg = RunConfig::from_toml_str(text).unwrap();
+        assert!(cfg.adaptive_rank);
+        let ec = cfg.to_engine_config().unwrap();
+        assert!(ec.adaptive_rank());
+        assert_eq!(ec.drift().window, 4);
+        assert_eq!(ec.drift().max_rank, 5);
+        // Defaults keep the detector off; max_rank 0 resolves to 2·rank.
+        let d = RunConfig::default();
+        assert!(!d.adaptive_rank);
+        let ec = d.to_engine_config().unwrap();
+        assert!(!ec.adaptive_rank());
+        assert_eq!(ec.drift().max_rank, 2 * d.rank);
+        // Out-of-range knobs are rejected up front.
+        assert!(RunConfig::from_toml_str("drift_window = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("drift_grow_bar = 1.5\n").is_err());
+        assert!(RunConfig::from_toml_str("drift_retire_floor = -0.2\n").is_err());
     }
 
     #[test]

@@ -1,0 +1,412 @@
+//! Drift-aware adaptive rank (ROADMAP direction #1, after Pasricha et al.,
+//! *Identifying and Alleviating Concept Drift in Streaming Tensor
+//! Decomposition*).
+//!
+//! The engine decomposes at a fixed rank, but real streams drift:
+//! components appear, die, and change. This module watches the signals the
+//! engine already publishes per batch — the batch-fit trajectory (residual
+//! energy no existing component explains), per-component activity
+//! (λ·column-norm over the appended `C` rows), `mean_congruence`, and
+//! `refine_fallback` — over a **bounded sliding window** of recent
+//! [`BatchStats`], and drives two incremental actions:
+//!
+//! * **Grow** — when the unexplained residual fraction stays above
+//!   [`DriftConfig::grow_bar`] for [`DriftConfig::window`] consecutive
+//!   batches (and rank < `max_rank`), append one all-zero component. The
+//!   vacant column is *seeded in the sample space*: the matcher routes the
+//!   novel sample component to it (a zero anchor has congruence 0, so the
+//!   Hungarian assignment leaves it for the worst-matching component), and
+//!   the projection step adopts it absolutely
+//!   (`update::project_sample_with`). No full refit ever happens.
+//! * **Retire** — when a component's activity stays below
+//!   `retire_floor × max_activity` for `window` consecutive batches
+//!   (outside a post-birth grace period), drop it. λ alone cannot drive
+//!   this: an unmatched component's weight survives every merge, so death
+//!   only shows up as vanishing energy in the *new* slices.
+//!
+//! The same window doubles as the engine's batch-stats history, fixing the
+//! unbounded `Vec<BatchStats>` growth that leaked memory on long-lived
+//! streams; `epoch` is a separate monotone counter and no longer aliases
+//! `history.len()`.
+
+use super::engine::BatchStats;
+use std::collections::VecDeque;
+use std::fmt;
+
+/// Knobs for the drift detector. Defaults keep the detector **disabled**
+/// so the engine's published snapshots stay bit-identical to the
+/// fixed-rank behaviour; the window still bounds the stats history.
+#[derive(Clone, Debug)]
+pub struct DriftConfig {
+    /// Act on drift (grow/retire). Off by default — the detector then only
+    /// records signals and the state stays [`DriftState::Stable`].
+    pub enabled: bool,
+    /// W: consecutive batches a signal must persist before acting. Also
+    /// the capacity of the engine's bounded [`BoundedHistory`].
+    pub window: usize,
+    /// Residual-energy fraction (`‖X_new − X̂_new‖² / ‖X_new‖²`) above
+    /// which a batch counts toward the grow streak.
+    pub grow_bar: f64,
+    /// Retire a component whose activity stays below
+    /// `retire_floor × max_activity` for `window` batches.
+    pub retire_floor: f64,
+    /// Hard rank ceiling for growth. `0` = resolved to `2 × rank` at
+    /// config build time.
+    pub max_rank: usize,
+    /// Never retire below this rank.
+    pub min_rank: usize,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            enabled: false,
+            window: 8,
+            grow_bar: 0.2,
+            retire_floor: 0.05,
+            max_rank: 0,
+            min_rank: 1,
+        }
+    }
+}
+
+/// Per-stream drift regime, epoch-stamped, published on every
+/// [`super::ModelSnapshot`] and surfaced through `serve::StreamStats`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum DriftState {
+    /// No drift signal active.
+    #[default]
+    Stable,
+    /// A streak (residual over bar, or a corroborating congruence
+    /// collapse / refine fallback) is building but has not yet triggered
+    /// an action.
+    DriftSuspected {
+        /// Epoch at which the current suspicion streak started.
+        since_epoch: u64,
+    },
+    /// Rank grew by one at `epoch`; `rank` is the rank after growth.
+    RankGrown { epoch: u64, rank: usize },
+    /// One or more components were retired at `epoch`; `rank` is the rank
+    /// after retirement.
+    ComponentRetired { epoch: u64, rank: usize },
+}
+
+impl fmt::Display for DriftState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DriftState::Stable => write!(f, "stable"),
+            DriftState::DriftSuspected { since_epoch } => {
+                write!(f, "suspected@e{since_epoch}")
+            }
+            DriftState::RankGrown { epoch, rank } => {
+                write!(f, "grown@e{epoch}→r{rank}")
+            }
+            DriftState::ComponentRetired { epoch, rank } => {
+                write!(f, "retired@e{epoch}→r{rank}")
+            }
+        }
+    }
+}
+
+/// What the engine should do to the model after a batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DriftAction {
+    None,
+    /// Append one all-zero component (`CpModel::append_zero_component`).
+    Grow,
+    /// Retire these component indices (`CpModel::retain_components` with
+    /// the complement).
+    Retire(Vec<usize>),
+}
+
+/// Bounded FIFO of the most recent [`BatchStats`] — the engine's history
+/// and the drift detector's evidence window share this one structure, so a
+/// long-lived stream holds O(window) stats instead of O(ingests).
+#[derive(Debug, Default)]
+pub struct BoundedHistory {
+    cap: usize,
+    items: VecDeque<BatchStats>,
+}
+
+impl BoundedHistory {
+    /// `cap` is clamped to at least 1.
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        BoundedHistory { cap, items: VecDeque::with_capacity(cap) }
+    }
+
+    /// Push, evicting the oldest entry once at capacity.
+    pub fn push(&mut self, s: BatchStats) {
+        if self.items.len() == self.cap {
+            self.items.pop_front();
+        }
+        self.items.push_back(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The retention bound this history was built with.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &BatchStats> {
+        self.items.iter()
+    }
+
+    /// The most recent entry, if any.
+    pub fn latest(&self) -> Option<&BatchStats> {
+        self.items.back()
+    }
+}
+
+/// Online drift detector: consumes one observation per ingested batch and
+/// decides grow/retire. Pure bookkeeping — no RNG, no model access — so it
+/// never perturbs the engine's deterministic replay.
+#[derive(Debug)]
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    /// Consecutive batches with residual fraction over `grow_bar`.
+    over_bar: usize,
+    /// Epoch at which the current over-bar streak started (valid when
+    /// `over_bar > 0`).
+    streak_start: u64,
+    /// Consecutive low-activity batches, per live component.
+    low_activity: Vec<usize>,
+    /// Birth epoch per live component (0 for the initial components) —
+    /// grants a grace period so a freshly grown vacant column is not
+    /// retired before sample-space adoption can fill it.
+    birth_epoch: Vec<u64>,
+    state: DriftState,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: DriftConfig, rank: usize) -> Self {
+        DriftDetector {
+            cfg,
+            over_bar: 0,
+            streak_start: 0,
+            low_activity: vec![0; rank],
+            birth_epoch: vec![0; rank],
+            state: DriftState::Stable,
+        }
+    }
+
+    /// The current regime (updated by [`DriftDetector::observe`]).
+    pub fn state(&self) -> &DriftState {
+        &self.state
+    }
+
+    /// Observe one batch and decide. `epoch` is the epoch being published
+    /// for this batch; `residual_fraction` is the share of the batch's
+    /// energy the updated model leaves unexplained; `activity[q]` is
+    /// λ_q·‖new C rows of q‖ (RMS); `corroborating` flags the engine's
+    /// secondary drift signals (congruence collapse, refine fallback) —
+    /// they raise suspicion but never act on their own.
+    ///
+    /// Internal bookkeeping (streaks, per-component birth records, the
+    /// published state) is fully updated here; the caller only has to
+    /// apply the returned action to the model.
+    pub fn observe(
+        &mut self,
+        epoch: u64,
+        residual_fraction: f64,
+        corroborating: bool,
+        activity: &[f64],
+    ) -> DriftAction {
+        if !self.cfg.enabled {
+            return DriftAction::None;
+        }
+        let rank = activity.len();
+        debug_assert_eq!(rank, self.low_activity.len(), "detector out of sync with model rank");
+
+        // Retirement streaks. When every component is inactive the batch
+        // carries no evidence about *relative* death — skip judgement.
+        let max_act = activity.iter().cloned().fold(0.0_f64, f64::max);
+        let grace = 2 * self.cfg.window as u64;
+        if max_act > 1e-12 {
+            for q in 0..rank {
+                let graced = epoch.saturating_sub(self.birth_epoch[q]) < grace;
+                if !graced && activity[q] < self.cfg.retire_floor * max_act {
+                    self.low_activity[q] += 1;
+                } else {
+                    self.low_activity[q] = 0;
+                }
+            }
+        }
+
+        // Grow streak.
+        if residual_fraction > self.cfg.grow_bar {
+            if self.over_bar == 0 {
+                self.streak_start = epoch;
+            }
+            self.over_bar += 1;
+        } else {
+            self.over_bar = 0;
+        }
+
+        // Retirement first: it frees capacity and a dead component's
+        // residual contribution is already zero.
+        let mut retire: Vec<usize> =
+            (0..rank).filter(|&q| self.low_activity[q] >= self.cfg.window).collect();
+        while rank - retire.len() < self.cfg.min_rank {
+            retire.pop();
+        }
+        if !retire.is_empty() {
+            let keep: Vec<usize> = (0..rank).filter(|q| !retire.contains(q)).collect();
+            self.low_activity = keep.iter().map(|&q| self.low_activity[q]).collect();
+            self.birth_epoch = keep.iter().map(|&q| self.birth_epoch[q]).collect();
+            self.over_bar = 0;
+            self.state = DriftState::ComponentRetired { epoch, rank: keep.len() };
+            return DriftAction::Retire(retire);
+        }
+
+        if self.over_bar >= self.cfg.window && rank < self.cfg.max_rank {
+            // Reset the streak: growth must re-accumulate evidence before
+            // growing again (built-in cooldown), and the birth grace keeps
+            // the vacant column alive while adoption fills it.
+            self.over_bar = 0;
+            self.low_activity.push(0);
+            self.birth_epoch.push(epoch);
+            self.state = DriftState::RankGrown { epoch, rank: rank + 1 };
+            return DriftAction::Grow;
+        }
+
+        // Passive state update: recent actions stay visible for a window
+        // of batches, then suspicion or stability takes over.
+        let sticky = match self.state {
+            DriftState::RankGrown { epoch: e, .. }
+            | DriftState::ComponentRetired { epoch: e, .. } => {
+                epoch.saturating_sub(e) < self.cfg.window as u64
+            }
+            _ => false,
+        };
+        if !sticky {
+            self.state = if self.over_bar > 0 {
+                DriftState::DriftSuspected { since_epoch: self.streak_start }
+            } else if corroborating {
+                DriftState::DriftSuspected { since_epoch: epoch }
+            } else {
+                DriftState::Stable
+            };
+        }
+        DriftAction::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats_stub() -> BatchStats {
+        BatchStats::default()
+    }
+
+    fn cfg(window: usize, max_rank: usize) -> DriftConfig {
+        DriftConfig {
+            enabled: true,
+            window,
+            grow_bar: 0.2,
+            retire_floor: 0.1,
+            max_rank,
+            min_rank: 1,
+        }
+    }
+
+    #[test]
+    fn bounded_history_evicts_oldest() {
+        let mut h = BoundedHistory::new(3);
+        for _ in 0..10 {
+            h.push(stats_stub());
+        }
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.cap(), 3);
+        assert!(h.latest().is_some());
+        assert_eq!(h.iter().count(), 3);
+    }
+
+    #[test]
+    fn disabled_detector_never_acts() {
+        let mut d = DriftDetector::new(DriftConfig::default(), 2);
+        for e in 1..=20 {
+            assert_eq!(d.observe(e, 0.9, true, &[1.0, 1.0]), DriftAction::None);
+            assert_eq!(*d.state(), DriftState::Stable);
+        }
+    }
+
+    #[test]
+    fn grows_after_window_consecutive_over_bar_batches() {
+        let mut d = DriftDetector::new(cfg(3, 4), 2);
+        let act = [1.0, 1.0];
+        assert_eq!(d.observe(1, 0.5, false, &act), DriftAction::None);
+        assert_eq!(*d.state(), DriftState::DriftSuspected { since_epoch: 1 });
+        // A quiet batch resets the streak.
+        assert_eq!(d.observe(2, 0.0, false, &act), DriftAction::None);
+        assert_eq!(*d.state(), DriftState::Stable);
+        assert_eq!(d.observe(3, 0.5, false, &act), DriftAction::None);
+        assert_eq!(d.observe(4, 0.5, false, &act), DriftAction::None);
+        assert_eq!(d.observe(5, 0.5, false, &act), DriftAction::Grow);
+        assert_eq!(*d.state(), DriftState::RankGrown { epoch: 5, rank: 3 });
+        // State stays sticky for a window, even on quiet batches.
+        let act3 = [1.0, 1.0, 0.5];
+        assert_eq!(d.observe(6, 0.0, false, &act3), DriftAction::None);
+        assert_eq!(*d.state(), DriftState::RankGrown { epoch: 5, rank: 3 });
+    }
+
+    #[test]
+    fn growth_respects_max_rank() {
+        let mut d = DriftDetector::new(cfg(2, 2), 2);
+        for e in 1..=10 {
+            assert_eq!(d.observe(e, 0.9, false, &[1.0, 1.0]), DriftAction::None);
+        }
+        assert!(matches!(d.state(), DriftState::DriftSuspected { .. }));
+    }
+
+    #[test]
+    fn retires_persistently_inactive_component_after_grace() {
+        let mut d = DriftDetector::new(cfg(2, 4), 2);
+        // Grace period: 2×window = 4 epochs from birth (epoch 0).
+        for e in 1..=3 {
+            assert_eq!(d.observe(e, 0.0, false, &[0.0, 1.0]), DriftAction::None);
+        }
+        // From epoch 4 the streak builds; fires at window = 2.
+        assert_eq!(d.observe(4, 0.0, false, &[0.0, 1.0]), DriftAction::None);
+        assert_eq!(d.observe(5, 0.0, false, &[0.0, 1.0]), DriftAction::Retire(vec![0]));
+        assert_eq!(*d.state(), DriftState::ComponentRetired { epoch: 5, rank: 1 });
+    }
+
+    #[test]
+    fn never_retires_below_min_rank() {
+        let mut d = DriftDetector::new(cfg(2, 4), 1);
+        for e in 1..=10 {
+            // Sole component active (max activity is its own), so no
+            // retirement evidence accumulates; and min_rank guards anyway.
+            assert_eq!(d.observe(e, 0.0, false, &[1e-9]), DriftAction::None);
+        }
+    }
+
+    #[test]
+    fn all_dead_batch_carries_no_retirement_evidence() {
+        let mut d = DriftDetector::new(cfg(2, 4), 2);
+        for e in 1..=10 {
+            assert_eq!(d.observe(e, 0.0, false, &[0.0, 0.0]), DriftAction::None);
+        }
+        assert_eq!(*d.state(), DriftState::Stable);
+    }
+
+    #[test]
+    fn corroborating_signal_raises_suspicion_without_acting() {
+        let mut d = DriftDetector::new(cfg(3, 4), 2);
+        assert_eq!(d.observe(1, 0.0, true, &[1.0, 1.0]), DriftAction::None);
+        assert_eq!(*d.state(), DriftState::DriftSuspected { since_epoch: 1 });
+        assert_eq!(d.observe(2, 0.0, false, &[1.0, 1.0]), DriftAction::None);
+        assert_eq!(*d.state(), DriftState::Stable);
+    }
+}

@@ -3,9 +3,10 @@
 //! repetitions executed in parallel (§III-A: repetitions need no
 //! synchronisation until the final merge).
 
+use super::drift::{BoundedHistory, DriftAction, DriftConfig, DriftDetector, DriftState};
 use super::snapshot::{ModelSnapshot, SnapshotCell, StreamHandle};
 use super::solver::{InnerSolver, NativeAlsSolver};
-use super::update::{normalize_sample_model, project_sample, ProjectedUpdate};
+use super::update::{normalize_sample_model, project_sample_with, ProjectedUpdate};
 use crate::corcondia::{getrank_with, GetRankOptions};
 use crate::cp::{cp_als, AlsOptions, AlsWorkspace, CpModel};
 use crate::matching::{match_components, MatchPolicy};
@@ -64,6 +65,11 @@ pub struct SamBaTenConfig {
     /// the default). The break-even is shape-dependent; deployments tune
     /// it here instead of patching a global constant.
     pub(crate) csf_nnz_bar: usize,
+    /// Drift-aware adaptive rank (see `coordinator::drift`). Disabled by
+    /// default so the engine's published snapshots stay bit-identical to
+    /// the fixed-rank behaviour; the window still bounds the batch-stats
+    /// history either way.
+    pub(crate) drift: DriftConfig,
     /// Optional shared executor: when set, the per-repetition sample-ALS
     /// fan-out runs on this [`WorkPool`] instead of spawning scoped
     /// threads, so intra-ingest and inter-stream parallelism share one
@@ -81,6 +87,7 @@ impl std::fmt::Debug for SamBaTenConfig {
             .field("sampling_factor", &self.sampling_factor)
             .field("repetitions", &self.repetitions)
             .field("quality_control", &self.quality_control)
+            .field("adaptive_rank", &self.drift.enabled)
             .field("csf_nnz_bar", &self.csf_nnz_bar)
             .field("executor", &self.executor.as_ref().map(|p| p.workers()))
             .field("solver", &self.solver.name())
@@ -116,6 +123,7 @@ impl SamBaTenConfig {
                 congruence_threshold: 0.25,
                 refine_c: true,
                 blend: 0.5,
+                drift: DriftConfig::default(),
                 csf_nnz_bar: crate::tensor::CSF_PROMOTION_NNZ,
                 executor: None,
                 solver: Arc::new(NativeAlsSolver),
@@ -199,6 +207,16 @@ impl SamBaTenConfig {
     /// nnz bar for COO→CSF promotion and CSF-native sample extraction.
     pub fn csf_nnz_bar(&self) -> usize {
         self.csf_nnz_bar
+    }
+
+    /// Drift-detection configuration (adaptive rank when `enabled`).
+    pub fn drift(&self) -> &DriftConfig {
+        &self.drift
+    }
+
+    /// Whether drift-aware adaptive rank is on.
+    pub fn adaptive_rank(&self) -> bool {
+        self.drift.enabled
     }
 
     /// The shared fan-out executor, if one is attached.
@@ -293,6 +311,21 @@ impl SamBaTenConfigBuilder {
         self
     }
 
+    /// Enable drift-aware adaptive rank with the default detection knobs
+    /// (see [`DriftConfig`]); `build` resolves `max_rank = 0` to `2·R`.
+    pub fn adaptive_rank(mut self, on: bool) -> Self {
+        self.cfg.drift.enabled = on;
+        self
+    }
+
+    /// Full drift-detection configuration. The window also caps the
+    /// engine's bounded `BatchStats` history, whether or not adaptive rank
+    /// is enabled.
+    pub fn drift(mut self, drift: DriftConfig) -> Self {
+        self.cfg.drift = drift;
+        self
+    }
+
     /// nnz bar (≥ 1) for COO→CSF promotion of the accumulated tensor and
     /// for CSF-native sample extraction. Defaults to
     /// [`crate::tensor::CSF_PROMOTION_NNZ`]; lower it for shapes whose
@@ -342,15 +375,30 @@ impl SamBaTenConfigBuilder {
             c.blend
         );
         anyhow::ensure!(c.csf_nnz_bar >= 1, "csf_nnz_bar must be >= 1 (got 0)");
+        anyhow::ensure!(c.drift.window >= 1, "drift.window must be >= 1 (got 0)");
+        anyhow::ensure!(
+            c.drift.grow_bar.is_finite() && (0.0..=1.0).contains(&c.drift.grow_bar),
+            "drift.grow_bar must be in [0, 1] (got {})",
+            c.drift.grow_bar
+        );
+        anyhow::ensure!(
+            c.drift.retire_floor.is_finite() && (0.0..=1.0).contains(&c.drift.retire_floor),
+            "drift.retire_floor must be in [0, 1] (got {})",
+            c.drift.retire_floor
+        );
+        anyhow::ensure!(c.drift.min_rank >= 1, "drift.min_rank must be >= 1 (got 0)");
         if self.cfg.quality_control {
             self.cfg.getrank.max_rank = self.cfg.rank;
+        }
+        if self.cfg.drift.max_rank == 0 {
+            self.cfg.drift.max_rank = self.cfg.rank.saturating_mul(2);
         }
         Ok(self.cfg)
     }
 }
 
 /// Per-batch diagnostics.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct BatchStats {
     /// Wall-clock seconds for the whole ingest.
     pub seconds: f64,
@@ -374,6 +422,20 @@ pub struct BatchStats {
     /// unavailable for this batch (degenerate normal matrix); the appended
     /// rows keep the sample-space estimate. See `ingest` step 6b.
     pub refine_fallback: bool,
+    /// Fit of the updated model against this batch only
+    /// (`1 − ‖X_new − X̂_new‖/‖X_new‖`, via the appended `C` rows).
+    pub batch_fit: f64,
+    /// Share of the batch's energy the updated model leaves unexplained
+    /// (`‖X_new − X̂_new‖²/‖X_new‖²`) — the drift detector's grow signal.
+    pub residual_fraction: f64,
+    /// Per-component activity in this batch: `λ_q · rms(new C rows of q)`
+    /// — the drift detector's retire signal.
+    pub component_activity: Vec<f64>,
+    /// Model rank after this batch (including any drift action).
+    pub rank: usize,
+    /// Drift regime after this batch (always `Stable` with adaptive rank
+    /// off). See `coordinator::drift`.
+    pub drift: DriftState,
 }
 
 /// The incremental decomposition engine (Algorithm 1).
@@ -383,8 +445,16 @@ pub struct SamBaTen {
     /// The tensor accumulated so far (sampling source).
     x: TensorData,
     rng: Rng,
-    /// History of per-batch stats.
-    history: Vec<BatchStats>,
+    /// Bounded history of per-batch stats — the most recent
+    /// `cfg.drift.window` batches. This is also the drift detector's
+    /// evidence window; an unbounded Vec here leaked memory on long-lived
+    /// streams.
+    history: BoundedHistory,
+    /// Monotone count of successful ingests (the published epoch). Kept
+    /// separate from `history.len()`, which is capped.
+    epoch: u64,
+    /// Online drift detector (inert unless `cfg.drift.enabled`).
+    detector: DriftDetector,
     /// One reusable ALS workspace per sampling repetition: repetition `i`
     /// always locks slot `i` (its own slot — zero contention), so its
     /// GETRANK trials and sample decomposition reuse the same buffers
@@ -422,13 +492,15 @@ impl SamBaTen {
         let ws_pool =
             (0..cfg.repetitions.max(1)).map(|_| Mutex::new(AlsWorkspace::new())).collect();
         let x = x_old.promoted_at(cfg.csf_nnz_bar);
-        let cell = Arc::new(SnapshotCell::new(Arc::new(ModelSnapshot {
-            epoch: 0,
-            dims: x.dims(),
-            model: model.clone(),
-            stats: None,
-        })));
-        SamBaTen { cfg, model, x, rng, history: Vec::new(), ws_pool, cell }
+        let cell = Arc::new(SnapshotCell::new(Arc::new(ModelSnapshot::new(
+            0,
+            x.dims(),
+            model.clone(),
+            None,
+        ))));
+        let history = BoundedHistory::new(cfg.drift.window);
+        let detector = DriftDetector::new(cfg.drift.clone(), model.rank());
+        SamBaTen { cfg, model, x, rng, history, epoch: 0, detector, ws_pool, cell }
     }
 
     /// Current model (unit-norm columns, weights in λ).
@@ -453,9 +525,11 @@ impl SamBaTen {
         self.cfg.executor = executor;
     }
 
-    /// Number of batches successfully ingested (the published epoch).
+    /// Number of batches successfully ingested (the published epoch). A
+    /// monotone counter — it does *not* alias `history().len()`, which is
+    /// capped at the drift window.
     pub fn epoch(&self) -> u64 {
-        self.history.len() as u64
+        self.epoch
     }
 
     /// The accumulated tensor.
@@ -463,8 +537,15 @@ impl SamBaTen {
         &self.x
     }
 
-    pub fn history(&self) -> &[BatchStats] {
+    /// The most recent per-batch stats, capped at `cfg.drift().window`
+    /// entries (bounded memory on long-lived streams).
+    pub fn history(&self) -> &BoundedHistory {
         &self.history
+    }
+
+    /// The current drift regime (always `Stable` with adaptive rank off).
+    pub fn drift_state(&self) -> &DriftState {
+        self.detector.state()
     }
 
     pub fn config(&self) -> &SamBaTenConfig {
@@ -481,14 +562,26 @@ impl SamBaTen {
             "batch modes 1-2 ({ni2}x{nj2}) must match existing tensor ({ni}x{nj})"
         );
         anyhow::ensure!(k_new > 0, "empty batch");
+        // A non-finite entry anywhere in the batch would poison both the
+        // accumulated tensor and (through the merge) the model; reject it
+        // here, before any state mutates — the stream stays serving.
+        let xn_new = x_new.norm();
+        anyhow::ensure!(
+            xn_new.is_finite(),
+            "batch contains non-finite values (‖X_new‖ = {xn_new})"
+        );
         let reps = self.cfg.repetitions.max(1);
+        // The model's *current* rank: equal to `cfg.rank` at a fixed rank,
+        // but drift-aware growth/retirement moves it (see
+        // `coordinator::drift`).
+        let rank_now = self.model.rank();
         // Imbalanced-mode guard (§III-A: "different rates can be used for
         // imbalanced modes"): if sampling mode 3 at factor s would leave the
         // sample's C' with fewer than max(R, 4) old rows, the anchors cannot
         // pin down a rank-R matching — keep the whole (shallow) time mode.
         let s3 = self.cfg.sampling_factor_mode3.unwrap_or_else(|| {
             let keep = k_old.div_ceil(self.cfg.sampling_factor);
-            if keep < self.cfg.rank.max(4) {
+            if keep < rank_now.max(4) {
                 1
             } else {
                 self.cfg.sampling_factor
@@ -539,11 +632,11 @@ impl SamBaTen {
             let t0 = std::time::Instant::now();
             let rank = if cfg.quality_control {
                 let mut gopts = cfg.getrank.clone();
-                gopts.max_rank = cfg.rank;
+                gopts.max_rank = rank_now;
                 gopts.seed = inp.seed;
                 getrank_with(&sample.tensor, &gopts, &mut ws)?
             } else {
-                cfg.rank
+                rank_now
             };
             let rank = rank
                 .min(sample.is.len())
@@ -554,6 +647,13 @@ impl SamBaTen {
             let mut model_s =
                 cfg.solver.decompose(&sample.tensor, rank, &cfg.als, inp.seed, &mut ws)?;
             normalize_sample_model(&mut model_s, sample.ks_old.len());
+            // A degenerate solve (NaN/∞ weights or factors) surfaces as an
+            // ingest error; merging it would poison the global model and a
+            // NaN λ used to panic the canonical sort downstream.
+            anyhow::ensure!(
+                model_s.is_finite(),
+                "sample decomposition produced non-finite factors (degenerate batch)"
+            );
             let t_decompose = t0.elapsed().as_secs_f64();
             // 4. Match against the anchors (Lemma 1).
             let t0 = std::time::Instant::now();
@@ -574,8 +674,18 @@ impl SamBaTen {
             } else {
                 mres.congruence.iter().sum::<f64>() / mres.congruence.len() as f64
             };
-            // 5. Project into the global frame.
-            let upd = project_sample(model, &sample, &model_s, &mres, cfg.congruence_threshold);
+            // 5. Project into the global frame. Under adaptive rank, a
+            // sample component routed to a vacant (drift-grown) column is
+            // adopted absolutely — that is how a new column gets seeded in
+            // the sample space.
+            let upd = project_sample_with(
+                model,
+                &sample,
+                &model_s,
+                &mres,
+                cfg.congruence_threshold,
+                cfg.drift.enabled,
+            );
             let t_match = t0.elapsed().as_secs_f64();
             Ok((sample, upd, rank, mean_cong, [t_sample, t_decompose, t_match]))
         };
@@ -635,6 +745,30 @@ impl SamBaTen {
         self.x.maybe_promote_at(self.cfg.csf_nnz_bar);
         let phase_merge_s = t0.elapsed().as_secs_f64();
         debug_assert_eq!(self.model.factors[2].rows(), k_old + k_new);
+        // 8. Drift observation and (optional) adaptive-rank action. The
+        // residual/activity signals are computed unconditionally — they are
+        // cheap (`O(nnz(X_new)·R + R²·(I+J))`), deterministic, and worth
+        // publishing as observability even at a fixed rank — but the model
+        // is only touched when `cfg.drift.enabled`.
+        let epoch = self.epoch + 1;
+        let (batch_fit, residual_fraction) = self.batch_residual(x_new, xn_new, k_old, k_new);
+        let activity = self.component_activity(k_old, k_new);
+        let mean_cong_batch = if congruences.is_empty() {
+            0.0
+        } else {
+            congruences.iter().sum::<f64>() / congruences.len() as f64
+        };
+        let corroborating =
+            refine_fallback || mean_cong_batch < self.cfg.congruence_threshold;
+        match self.detector.observe(epoch, residual_fraction, corroborating, &activity) {
+            DriftAction::None => {}
+            DriftAction::Grow => self.model.append_zero_component(),
+            DriftAction::Retire(retire) => {
+                let keep: Vec<usize> =
+                    (0..self.model.rank()).filter(|q| !retire.contains(q)).collect();
+                self.model.retain_components(&keep);
+            }
+        }
         let stats = BatchStats {
             seconds: sw.elapsed_secs(),
             sample_dims,
@@ -646,19 +780,74 @@ impl SamBaTen {
             phase_match_s: phases[2],
             phase_merge_s,
             refine_fallback,
+            batch_fit,
+            residual_fraction,
+            component_activity: activity,
+            rank: self.model.rank(),
+            drift: self.detector.state().clone(),
         };
+        self.epoch = epoch;
         self.history.push(stats.clone());
         // Publish the new epoch for wait-free readers. The snapshot is
         // immutable and internally consistent (model ↔ dims ↔ stats from
         // the same batch); readers that still hold the previous Arc keep
         // their consistent older view.
-        self.cell.store(Arc::new(ModelSnapshot {
-            epoch: self.history.len() as u64,
-            dims: self.x.dims(),
-            model: self.model.clone(),
-            stats: Some(stats.clone()),
-        }));
+        self.cell.store(Arc::new(ModelSnapshot::new(
+            epoch,
+            self.x.dims(),
+            self.model.clone(),
+            Some(stats.clone()),
+        )));
         Ok(stats)
+    }
+
+    /// Batch residual of the *updated* model against the incoming slices,
+    /// computed without materialising anything: restrict `C` to the rows
+    /// appended for this batch and use
+    /// `‖X_new − X̂‖² = ‖X_new‖² − 2⟨X_new, X̂⟩ + λᵀ(AᵀA ∘ BᵀB ∘ C_bᵀC_b)λ`.
+    /// Returns `(batch_fit, residual_fraction)`.
+    fn batch_residual(
+        &self,
+        x_new: &TensorData,
+        xn_new: f64,
+        k_old: usize,
+        k_new: usize,
+    ) -> (f64, f64) {
+        if !(xn_new > 0.0) {
+            // A zero batch is trivially explained; no drift evidence.
+            return (1.0, 0.0);
+        }
+        let rows: Vec<usize> = (k_old..k_old + k_new).collect();
+        let c_batch = self.model.factors[2].gather_rows(&rows);
+        let inner = x_new.inner_with_kruskal(
+            &self.model.lambda,
+            &self.model.factors[0],
+            &self.model.factors[1],
+            &c_batch,
+        );
+        let g = self.model.factors[0]
+            .gram()
+            .hadamard(&self.model.factors[1].gram())
+            .hadamard(&c_batch.gram());
+        let gl = g.matvec(&self.model.lambda);
+        let msq: f64 = self.model.lambda.iter().zip(&gl).map(|(a, b)| a * b).sum();
+        let res_sq = (xn_new * xn_new - 2.0 * inner + msq).max(0.0);
+        let rf = (res_sq / (xn_new * xn_new)).min(1.0);
+        (1.0 - rf.sqrt(), rf)
+    }
+
+    /// Per-component energy this batch contributed: `λ_q · rms(new C rows
+    /// of q)`. A component the stream stopped expressing appends ~zero `C`
+    /// rows batch after batch, whatever its historical λ — the drift
+    /// detector's retirement signal.
+    fn component_activity(&self, k_old: usize, k_new: usize) -> Vec<f64> {
+        let c = &self.model.factors[2];
+        (0..self.model.rank())
+            .map(|q| {
+                let ss: f64 = (k_old..k_old + k_new).map(|k| c[(k, q)] * c[(k, q)]).sum();
+                self.model.lambda[q] * (ss / k_new.max(1) as f64).sqrt()
+            })
+            .collect()
     }
 
     /// Closed-form LS for the new `C` rows with `A`, `B` fixed:
@@ -666,17 +855,40 @@ impl SamBaTen {
     /// into the appended rows, followed by re-canonicalisation.
     fn refine_new_c_rows(&mut self, x_new: &TensorData, k_old: usize, k_new: usize) -> Result<()> {
         let r = self.model.rank();
-        let mut a_scaled = self.model.factors[0].clone();
-        for t in 0..r {
-            a_scaled.scale_col(t, self.model.lambda[t]);
-        }
-        let b = &self.model.factors[1];
-        let m = x_new.mttkrp(2, &a_scaled, b, &self.model.factors[2]);
-        let g = a_scaled.gram().hadamard(&b.gram());
-        let y = crate::linalg::solve_gram_system(&g, &m)?;
-        for k in 0..k_new {
+        let active: Vec<usize> = (0..r).filter(|&t| self.model.lambda[t] > 0.0).collect();
+        anyhow::ensure!(!active.is_empty(), "no active components to refine");
+        if active.len() == r {
+            let mut a_scaled = self.model.factors[0].clone();
             for t in 0..r {
-                self.model.factors[2][(k_old + k, t)] = y[(k, t)];
+                a_scaled.scale_col(t, self.model.lambda[t]);
+            }
+            let b = &self.model.factors[1];
+            let m = x_new.mttkrp(2, &a_scaled, b, &self.model.factors[2]);
+            let g = a_scaled.gram().hadamard(&b.gram());
+            let y = crate::linalg::solve_gram_system(&g, &m)?;
+            for k in 0..k_new {
+                for t in 0..r {
+                    self.model.factors[2][(k_old + k, t)] = y[(k, t)];
+                }
+            }
+        } else {
+            // A vacant (λ = 0, drift-grown) column would make the normal
+            // matrix exactly singular — solve over the active subset and
+            // leave the vacant columns' appended rows at their merge
+            // estimate (zero until sample-space adoption fills them).
+            let mut a_scaled = self.model.factors[0].gather_cols(&active);
+            for (idx, &t) in active.iter().enumerate() {
+                a_scaled.scale_col(idx, self.model.lambda[t]);
+            }
+            let b_active = self.model.factors[1].gather_cols(&active);
+            let c_active = self.model.factors[2].gather_cols(&active);
+            let m = x_new.mttkrp(2, &a_scaled, &b_active, &c_active);
+            let g = a_scaled.gram().hadamard(&b_active.gram());
+            let y = crate::linalg::solve_gram_system(&g, &m)?;
+            for k in 0..k_new {
+                for (idx, &t) in active.iter().enumerate() {
+                    self.model.factors[2][(k_old + k, t)] = y[(k, idx)];
+                }
             }
         }
         // Restore unit-norm columns, weights in λ.
@@ -877,6 +1089,74 @@ mod tests {
             SamBaTenConfig::builder(2, 2, 2, 1).csf_nnz_bar(0).build().is_err(),
             "csf_nnz_bar = 0"
         );
+        assert!(
+            SamBaTenConfig::builder(2, 2, 2, 1)
+                .drift(DriftConfig { window: 0, ..Default::default() })
+                .build()
+                .is_err(),
+            "drift window = 0"
+        );
+        assert!(
+            SamBaTenConfig::builder(2, 2, 2, 1)
+                .drift(DriftConfig { grow_bar: 1.5, ..Default::default() })
+                .build()
+                .is_err(),
+            "grow_bar > 1"
+        );
+        assert!(
+            SamBaTenConfig::builder(2, 2, 2, 1)
+                .drift(DriftConfig { retire_floor: -0.1, ..Default::default() })
+                .build()
+                .is_err(),
+            "retire_floor < 0"
+        );
+        assert!(
+            SamBaTenConfig::builder(2, 2, 2, 1)
+                .drift(DriftConfig { min_rank: 0, ..Default::default() })
+                .build()
+                .is_err(),
+            "min_rank = 0"
+        );
+    }
+
+    #[test]
+    fn default_config_keeps_drift_off_and_stable() {
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 1).build().unwrap();
+        assert!(!cfg.adaptive_rank());
+        assert_eq!(cfg.drift().max_rank, 4, "max_rank 0 resolves to 2R at build");
+        let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, 21);
+        let (existing, batches, _) = spec.generate_stream(0.5, 3);
+        let mut e = SamBaTen::init(&existing, cfg).unwrap();
+        for b in &batches {
+            let st = e.ingest(b).unwrap();
+            assert_eq!(st.drift, DriftState::Stable);
+            assert_eq!(st.rank, 2);
+            assert!(st.batch_fit <= 1.0);
+            assert!((0.0..=1.0).contains(&st.residual_fraction));
+            assert_eq!(st.component_activity.len(), 2);
+        }
+        assert_eq!(*e.drift_state(), DriftState::Stable);
+    }
+
+    #[test]
+    fn history_is_bounded_and_epoch_monotone() {
+        let spec = SyntheticSpec::dense(8, 8, 30, 2, 0.0, 22);
+        let (existing, batches, _) = spec.generate_stream(0.2, 2);
+        assert!(batches.len() > 4);
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 13)
+            .drift(DriftConfig { window: 4, ..Default::default() })
+            .build()
+            .unwrap();
+        let mut e = SamBaTen::init(&existing, cfg).unwrap();
+        for b in &batches {
+            e.ingest(b).unwrap();
+        }
+        // Epoch counts every ingest; the stats history stays capped at the
+        // drift window — they no longer alias.
+        assert_eq!(e.epoch(), batches.len() as u64);
+        assert_eq!(e.history().len(), 4);
+        assert_eq!(e.history().cap(), 4);
+        assert_eq!(e.handle().epoch(), e.epoch());
     }
 
     #[test]

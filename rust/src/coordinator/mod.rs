@@ -22,11 +22,13 @@
 //! `top_k` — without ever contending with the writer. The multi-stream
 //! serving layer ([`crate::serve`]) builds on exactly this split.
 
+pub mod drift;
 pub mod engine;
 pub mod snapshot;
 pub mod solver;
 pub mod update;
 
+pub use drift::{BoundedHistory, DriftConfig, DriftState};
 pub use engine::{BatchStats, SamBaTen, SamBaTenConfig, SamBaTenConfigBuilder};
 pub use snapshot::{ModelSnapshot, SnapshotCell, StreamHandle};
 pub use solver::{InnerSolver, NativeAlsSolver};

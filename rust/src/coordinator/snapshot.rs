@@ -25,6 +25,7 @@
 //! same practical wait-freedom — `bench_micro` measures sub-microsecond
 //! acquisition while a 1K³ ingest runs — with none of that machinery.
 
+use super::drift::DriftState;
 use super::engine::BatchStats;
 use crate::cp::CpModel;
 use crate::tensor::Tensor3;
@@ -74,9 +75,43 @@ pub struct ModelSnapshot {
     pub model: CpModel,
     /// Stats of the batch that produced this epoch (`None` at epoch 0).
     pub stats: Option<BatchStats>,
+    /// Drift regime at publication time (`Stable` at epoch 0 and whenever
+    /// adaptive rank is off). See `coordinator::drift`.
+    pub drift: DriftState,
+    /// Per-factor column sums, precomputed at publication: `top_k`
+    /// marginalises one mode per query and used to rescan its whole factor
+    /// every call — O(dim·R) work that is identical for every query
+    /// against the same (immutable) snapshot.
+    col_sums: [Vec<f64>; 3],
 }
 
 impl ModelSnapshot {
+    /// Build a snapshot, deriving the drift state from the batch stats
+    /// (`Stable` when `stats` is `None`) and precomputing the per-factor
+    /// column sums the query path reads.
+    pub fn new(
+        epoch: u64,
+        dims: (usize, usize, usize),
+        model: CpModel,
+        stats: Option<BatchStats>,
+    ) -> Self {
+        let r = model.rank();
+        let col_sums = std::array::from_fn(|n| {
+            let f = &model.factors[n];
+            let mut sums = vec![0.0; r];
+            for (t, sum) in sums.iter_mut().enumerate() {
+                let mut s = 0.0;
+                for p in 0..f.rows() {
+                    s += f[(p, t)];
+                }
+                *sum = s;
+            }
+            sums
+        });
+        let drift = stats.as_ref().map(|s| s.drift.clone()).unwrap_or_default();
+        ModelSnapshot { epoch, dims, model, stats, drift, col_sums }
+    }
+
     /// Rank of the published model.
     pub fn rank(&self) -> usize {
         self.model.rank()
@@ -116,17 +151,16 @@ impl ModelSnapshot {
             return Vec::new();
         }
         let f_target = &self.model.factors[(mode + 1) % 3];
-        let f_other = &self.model.factors[(mode + 2) % 3];
         let r = self.model.rank();
         // Per-component weight: λ_t · F_m[row,t] · (column-sum of F_o).
+        // The marginalised mode's column sums are precomputed at
+        // publication — a snapshot is immutable, so the O(dim·R) scan this
+        // used to redo per query can never go stale.
+        let other_sums = &self.col_sums[(mode + 2) % 3];
         let qrow = f_query.row(row);
         let mut w = vec![0.0; r];
         for t in 0..r {
-            let mut s = 0.0;
-            for p in 0..f_other.rows() {
-                s += f_other[(p, t)];
-            }
-            w[t] = self.model.lambda[t] * qrow[t] * s;
+            w[t] = self.model.lambda[t] * qrow[t] * other_sums[t];
         }
         let mut scored: Vec<(usize, f64)> = (0..f_target.rows())
             .map(|j| {
@@ -228,7 +262,7 @@ mod tests {
             (0..r).map(|_| 0.5 + rng.uniform()).collect(),
         );
         model.normalize();
-        ModelSnapshot { epoch: 0, dims, model, stats: None }
+        ModelSnapshot::new(0, dims, model, None)
     }
 
     #[test]
@@ -272,6 +306,47 @@ mod tests {
         }
         // Scores descending.
         assert!(got.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    #[test]
+    fn top_k_cached_sums_pin_equivalence_with_scan() {
+        // The precomputed column sums must reproduce the former per-query
+        // scan bit for bit (same accumulation order), for every mode.
+        let s = snapshot_for((6, 5, 7), 4, 7);
+        for mode in 0..3 {
+            let f_other = &s.model.factors[(mode + 2) % 3];
+            let f_query = &s.model.factors[mode];
+            let f_target = &s.model.factors[(mode + 1) % 3];
+            let row = 1;
+            let r = s.model.rank();
+            let mut w = vec![0.0; r];
+            for t in 0..r {
+                let mut sum = 0.0;
+                for p in 0..f_other.rows() {
+                    sum += f_other[(p, t)];
+                }
+                w[t] = s.model.lambda[t] * f_query.row(row)[t] * sum;
+            }
+            let mut expect: Vec<(usize, f64)> = (0..f_target.rows())
+                .map(|j| {
+                    let fr = f_target.row(j);
+                    (j, (0..r).map(|t| w[t] * fr[t]).sum::<f64>())
+                })
+                .collect();
+            expect.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let got = s.top_k(mode, row, f_target.rows());
+            assert_eq!(got.len(), expect.len());
+            for (g, e) in got.iter().zip(&expect) {
+                assert_eq!(g.0, e.0, "mode {mode}");
+                assert_eq!(g.1, e.1, "mode {mode}: cached score must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_drift_defaults_to_stable() {
+        let s = snapshot_for((3, 3, 3), 2, 8);
+        assert_eq!(s.drift, crate::coordinator::DriftState::Stable);
     }
 
     #[test]

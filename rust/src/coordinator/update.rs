@@ -70,6 +70,27 @@ pub fn project_sample(
     mres: &MatchResult,
     congruence_threshold: f64,
 ) -> ProjectedUpdate {
+    project_sample_with(global, sample, model_s, mres, congruence_threshold, false)
+}
+
+/// [`project_sample`] with drift-aware vacant-column adoption.
+///
+/// When the engine runs adaptive rank (`coordinator::drift`), a freshly
+/// grown component is an all-zero column with λ = 0. Its anchors are zero,
+/// so its congruence against *any* sample component is 0 and the hard gate
+/// below would keep it vacant forever. With `adopt_unseen` set, a sample
+/// component the matcher assigned to such a column bypasses the gate and is
+/// expressed absolutely through the existing unseen-component fallback —
+/// this is how a new column is "seeded in the sample space". Columns that
+/// merely match weakly (non-zero anchors) are still gated.
+pub fn project_sample_with(
+    global: &CpModel,
+    sample: &Sample,
+    model_s: &CpModel,
+    mres: &MatchResult,
+    congruence_threshold: f64,
+    adopt_unseen: bool,
+) -> ProjectedUpdate {
     let r = global.rank();
     let r_new = model_s.rank();
     let n_is = sample.is.len();
@@ -91,19 +112,22 @@ pub fn project_sample(
     let c_anchor = global.factors[2].gather_rows(&sample.ks_old);
     for f in 0..r_new {
         let q = mres.perm[f];
-        // Congruence gate: a weak match means the sample component does not
-        // correspond to this global component reliably; writing it through
-        // would pollute the factors (same failure mode §III-B guards
-        // against). Skip its contribution.
-        if mres.congruence[f] < congruence_threshold {
-            continue;
-        }
-        out.matched[q] = true;
-        out.congruence[q] = mres.congruence[f];
         // Restriction norms of the global unit columns.
         let na = a_anchor.col_norm(q);
         let nb = b_anchor.col_norm(q);
         let nc = c_anchor.col_norm(q);
+        // A vacant (drift-grown) column: λ = 0 and zero anchors. Only such
+        // columns may bypass the gate, and only when adoption is on.
+        let vacant = adopt_unseen && global.lambda[q] == 0.0 && na * nb * nc <= 1e-12;
+        // Congruence gate: a weak match means the sample component does not
+        // correspond to this global component reliably; writing it through
+        // would pollute the factors (same failure mode §III-B guards
+        // against). Skip its contribution.
+        if !vacant && mres.congruence[f] < congruence_threshold {
+            continue;
+        }
+        out.matched[q] = true;
+        out.congruence[q] = mres.congruence[f];
         // Signs aligning the sample columns with the anchors.
         let sa = sign_of_dot(&model_s.factors[0], f, &a_anchor, q);
         let sb = sign_of_dot(&model_s.factors[1], f, &b_anchor, q);
@@ -540,6 +564,49 @@ mod tests {
         assert_eq!(c.rows(), 3);
         let ratio = c[(2, 0)] / c[(0, 0)];
         assert!((ratio - 3.0).abs() < 1e-9, "ratio {ratio}");
+    }
+
+    #[test]
+    fn vacant_column_adopted_only_with_adopt_unseen() {
+        let mut rng = Rng::new(4);
+        // Global rank 2 where component 1 is a drift-grown vacant column:
+        // all-zero factors, λ = 0.
+        let mut global = CpModel::new(
+            Matrix::rand_gaussian(4, 1, &mut rng).append_cols(1),
+            Matrix::rand_gaussian(4, 1, &mut rng).append_cols(1),
+            Matrix::rand_gaussian(3, 1, &mut rng).append_cols(1),
+            vec![1.0, 0.0],
+        );
+        global.normalize();
+        global.lambda[1] = 0.0;
+        let sample = Sample {
+            is: vec![0, 1],
+            js: vec![0, 1],
+            ks_old: vec![0],
+            k_new: 1,
+            tensor: DenseTensor::zeros(2, 2, 2).into(),
+        };
+        let mut model_s = CpModel::new(
+            Matrix::rand_gaussian(2, 2, &mut rng),
+            Matrix::rand_gaussian(2, 2, &mut rng),
+            Matrix::rand_gaussian(2, 2, &mut rng),
+            vec![1.0, 2.0],
+        );
+        normalize_sample_model(&mut model_s, 1);
+        // Sample component 1 assigned to the vacant column with congruence
+        // 0 (a zero anchor can never score higher).
+        let mres = MatchResult { perm: vec![0, 1], congruence: vec![0.9, 0.0] };
+        let gated = project_sample_with(&global, &sample, &model_s, &mres, 0.25, false);
+        assert!(!gated.matched[1], "without adoption the gate must hold");
+        assert_eq!(gated.lambda_est[1], 0.0);
+        let adopted = project_sample_with(&global, &sample, &model_s, &mres, 0.25, true);
+        assert!(adopted.matched[1], "vacant column must be adopted");
+        assert!(adopted.lambda_est[1] > 0.0);
+        // The new C rows carry the sample component absolutely.
+        assert!(adopted.c_new[(0, 1)].abs() > 0.0);
+        // The healthy component is projected identically either way.
+        assert_eq!(gated.c_new[(0, 0)], adopted.c_new[(0, 0)]);
+        assert_eq!(gated.lambda_est[0], adopted.lambda_est[0]);
     }
 
     #[test]

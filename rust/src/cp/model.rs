@@ -45,14 +45,55 @@ impl CpModel {
     }
 
     /// Reorder components so λ is descending (canonical presentation).
+    /// NaN weights sort last: a degenerate solve must not panic the
+    /// canonicalisation — the engine rejects the batch downstream instead
+    /// (see [`CpModel::is_finite`]).
     pub fn sort_components(&mut self) {
+        use std::cmp::Ordering;
         let r = self.rank();
         let mut order: Vec<usize> = (0..r).collect();
-        order.sort_by(|&a, &b| self.lambda[b].partial_cmp(&self.lambda[a]).unwrap());
+        order.sort_by(|&a, &b| {
+            let (la, lb) = (self.lambda[a], self.lambda[b]);
+            match (la.is_nan(), lb.is_nan()) {
+                (true, true) => Ordering::Equal,
+                (true, false) => Ordering::Greater,
+                (false, true) => Ordering::Less,
+                (false, false) => lb.partial_cmp(&la).unwrap(),
+            }
+        });
         if order.iter().enumerate().all(|(i, &o)| i == o) {
             return;
         }
         self.permute_components(&order);
+    }
+
+    /// Whether every weight and factor entry is finite — the gate the
+    /// engine uses to reject a degenerate sample solve before it can
+    /// poison the global model.
+    pub fn is_finite(&self) -> bool {
+        self.lambda.iter().all(|l| l.is_finite())
+            && self.factors.iter().all(|f| f.data().iter().all(|v| v.is_finite()))
+    }
+
+    /// Append one all-zero component (rank `R` → `R+1`) with λ = 0 — the
+    /// drift-driven rank-growth primitive. The vacant column contributes
+    /// nothing to reconstruction until sample-space updates adopt it
+    /// (see `coordinator::drift`).
+    pub fn append_zero_component(&mut self) {
+        for f in &mut self.factors {
+            *f = f.append_cols(1);
+        }
+        self.lambda.push(0.0);
+    }
+
+    /// Drop all components not in `keep`, in place — the drift-driven
+    /// retirement primitive (in-place counterpart of
+    /// [`CpModel::select_components`]).
+    pub fn retain_components(&mut self, keep: &[usize]) {
+        for f in &mut self.factors {
+            *f = f.gather_cols(keep);
+        }
+        self.lambda = keep.iter().map(|&t| self.lambda[t]).collect();
     }
 
     /// Apply a component permutation: new column `t` = old column `perm[t]`.
@@ -196,6 +237,46 @@ mod tests {
         m.lambda = vec![0.1, 3.0, 1.0, 2.0];
         m.sort_components();
         assert_eq!(m.lambda, vec![3.0, 2.0, 1.0, 0.1]);
+    }
+
+    #[test]
+    fn sort_components_survives_nan_lambda() {
+        let mut m = random_model((3, 3, 3), 4, 10);
+        m.lambda = vec![f64::NAN, 2.0, f64::NAN, 3.0];
+        m.sort_components(); // must not panic
+        assert_eq!(m.lambda[0], 3.0);
+        assert_eq!(m.lambda[1], 2.0);
+        assert!(m.lambda[2].is_nan() && m.lambda[3].is_nan());
+        assert!(!m.is_finite());
+    }
+
+    #[test]
+    fn is_finite_detects_bad_factors() {
+        let mut m = random_model((3, 3, 3), 2, 11);
+        assert!(m.is_finite());
+        m.factors[1][(1, 0)] = f64::INFINITY;
+        assert!(!m.is_finite());
+    }
+
+    #[test]
+    fn append_and_retain_components_roundtrip() {
+        let mut m = random_model((3, 4, 5), 2, 12);
+        let before = m.to_dense();
+        m.append_zero_component();
+        assert_eq!(m.rank(), 3);
+        assert_eq!(m.lambda[2], 0.0);
+        assert_eq!(m.factors[0].col(2), vec![0.0; 3]);
+        // A vacant component changes nothing in the reconstruction.
+        let grown = m.to_dense();
+        for (x, y) in before.data().iter().zip(grown.data()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+        m.retain_components(&[0, 1]);
+        assert_eq!(m.rank(), 2);
+        let back = m.to_dense();
+        for (x, y) in before.data().iter().zip(back.data()) {
+            assert!((x - y).abs() < 1e-12);
+        }
     }
 
     #[test]

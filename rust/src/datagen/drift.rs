@@ -1,0 +1,204 @@
+//! Concept-drift workloads: synthetic streams whose ground-truth rank
+//! *changes* along the temporal mode — a latent component switches on
+//! partway through the stream (injection) or decays away (death). These
+//! drive the adaptive-rank lifecycle tests: a fixed-rank engine is the
+//! degraded baseline on these streams, the drift-aware engine should
+//! track the true rank (see `coordinator::drift`).
+
+use crate::cp::CpModel;
+use crate::linalg::Matrix;
+use crate::tensor::{Tensor3, TensorData};
+use crate::util::Rng;
+
+/// One latent component with a temporal activity window `[active_from,
+/// active_until)` in slice indices (`usize::MAX` = until the end).
+#[derive(Clone, Debug)]
+pub struct DriftComponent {
+    /// λ weight of the component while active.
+    pub weight: f64,
+    /// First mode-3 slice (inclusive) on which the component is active.
+    pub active_from: usize,
+    /// First mode-3 slice on which it is no longer active (exclusive).
+    pub active_until: usize,
+}
+
+/// Specification of a drifting synthetic stream. Mode-1/2 factors are
+/// Gaussian (near-orthogonal in expectation, so residual energy is
+/// attributed to the right component); the temporal factor is positive
+/// uniform, gated to zero outside each component's activity window.
+#[derive(Clone, Debug)]
+pub struct DriftSpec {
+    pub i: usize,
+    pub j: usize,
+    pub k: usize,
+    pub components: Vec<DriftComponent>,
+    /// Additive Gaussian noise std relative to the clean-data RMS.
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl DriftSpec {
+    /// `base_rank` components active over the whole stream plus one novel
+    /// component that switches on at slice `inject_at`.
+    pub fn injection(
+        i: usize,
+        j: usize,
+        k: usize,
+        base_rank: usize,
+        inject_at: usize,
+        noise: f64,
+        seed: u64,
+    ) -> Self {
+        let mut components: Vec<DriftComponent> = (0..base_rank)
+            .map(|_| DriftComponent { weight: 1.0, active_from: 0, active_until: usize::MAX })
+            .collect();
+        components.push(DriftComponent {
+            weight: 1.0,
+            active_from: inject_at,
+            active_until: usize::MAX,
+        });
+        DriftSpec { i, j, k, components, noise, seed }
+    }
+
+    /// `base_rank` components active over the whole stream, the last of
+    /// which dies at slice `dies_at`.
+    pub fn death(
+        i: usize,
+        j: usize,
+        k: usize,
+        base_rank: usize,
+        dies_at: usize,
+        noise: f64,
+        seed: u64,
+    ) -> Self {
+        let mut components: Vec<DriftComponent> = (0..base_rank)
+            .map(|_| DriftComponent { weight: 1.0, active_from: 0, active_until: usize::MAX })
+            .collect();
+        if let Some(last) = components.last_mut() {
+            last.active_until = dies_at;
+        }
+        DriftSpec { i, j, k, components, noise, seed }
+    }
+
+    /// The same factors and weights with every activity gate opened — the
+    /// stationary control stream (e.g. for a fixed-rank oracle run).
+    pub fn without_drift(&self) -> DriftSpec {
+        let mut spec = self.clone();
+        for c in &mut spec.components {
+            c.active_from = 0;
+            c.active_until = usize::MAX;
+        }
+        spec
+    }
+
+    /// Ground-truth rank (number of components, active or not).
+    pub fn rank(&self) -> usize {
+        self.components.len()
+    }
+
+    /// Generate `(dense tensor, ground-truth model)`. The returned model's
+    /// temporal factor carries the activity gates (zero rows outside each
+    /// window), so its rank equals [`DriftSpec::rank`] but the *effective*
+    /// rank of any slice range is the number of components active there.
+    pub fn generate(&self) -> (TensorData, CpModel) {
+        let r = self.components.len();
+        let mut rng = Rng::new(self.seed);
+        let a = Matrix::rand_gaussian(self.i, r, &mut rng);
+        let b = Matrix::rand_gaussian(self.j, r, &mut rng);
+        let mut c = Matrix::rand_uniform(self.k, r, &mut rng);
+        for (q, comp) in self.components.iter().enumerate() {
+            for t in 0..self.k {
+                if t < comp.active_from || t >= comp.active_until {
+                    c[(t, q)] = 0.0;
+                } else {
+                    // Keep temporal loadings bounded away from zero so an
+                    // active component contributes on every active slice.
+                    c[(t, q)] = 0.5 + 0.5 * c[(t, q)];
+                }
+            }
+        }
+        let weights: Vec<f64> = self.components.iter().map(|comp| comp.weight).collect();
+        let truth = CpModel::new(a, b, c, weights);
+        let mut x = truth.to_dense();
+        if self.noise > 0.0 {
+            let rms = (x.norm_sq() / (self.i * self.j * self.k) as f64).sqrt();
+            let sigma = self.noise * rms;
+            for v in x.data_mut() {
+                *v += sigma * rng.gaussian();
+            }
+        }
+        (TensorData::Dense(x), truth)
+    }
+
+    /// Split into `(existing, batches, truth)`: the first `k0` slices are
+    /// the pre-existing tensor, the rest arrive in batches of `batch`.
+    pub fn stream(&self, k0: usize, batch: usize) -> (TensorData, Vec<TensorData>, CpModel) {
+        assert!(k0 >= 1 && k0 < self.k, "k0 must be in [1, k)");
+        assert!(batch >= 1, "batch must be >= 1");
+        let (full, truth) = self.generate();
+        let TensorData::Dense(d) = &full else { unreachable!("drift specs are dense") };
+        let (existing, mut remaining) = d.split_mode3(k0);
+        let mut batches = Vec::new();
+        while remaining.dims().2 > 0 {
+            let take = batch.min(remaining.dims().2);
+            let (head, tail) = remaining.split_mode3(take);
+            batches.push(TensorData::Dense(head));
+            remaining = tail;
+        }
+        (TensorData::Dense(existing), batches, truth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::relative_error;
+
+    #[test]
+    fn injection_gates_the_novel_component() {
+        let spec = DriftSpec::injection(6, 6, 20, 2, 12, 0.0, 9);
+        assert_eq!(spec.rank(), 3);
+        let (x, truth) = spec.generate();
+        assert_eq!(x.dims(), (6, 6, 20));
+        // Noiseless: the gated truth reproduces the tensor exactly.
+        assert!(relative_error(&x, &truth) < 1e-10);
+        // The novel component's temporal loadings are zero before the
+        // injection point and bounded away from zero after it.
+        for t in 0..12 {
+            assert_eq!(truth.factors[2][(t, 2)], 0.0);
+        }
+        for t in 12..20 {
+            assert!(truth.factors[2][(t, 2)] >= 0.5);
+        }
+    }
+
+    #[test]
+    fn death_and_control_streams() {
+        let spec = DriftSpec::death(5, 5, 16, 2, 8, 0.0, 3);
+        let (_, truth) = spec.generate();
+        for t in 8..16 {
+            assert_eq!(truth.factors[2][(t, 1)], 0.0);
+        }
+        // The control spec shares factors but has every gate open.
+        let (_, open) = spec.without_drift().generate();
+        assert_eq!(open.factors[0].data(), truth.factors[0].data());
+        for t in 8..16 {
+            assert!(open.factors[2][(t, 1)] >= 0.5);
+        }
+    }
+
+    #[test]
+    fn stream_splits_cover_all_slices() {
+        let spec = DriftSpec::injection(4, 4, 18, 1, 9, 0.01, 7);
+        let (existing, batches, _) = spec.stream(6, 4);
+        assert_eq!(existing.dims().2, 6);
+        let total: usize = batches.iter().map(|b| b.dims().2).sum();
+        assert_eq!(total, 12);
+        let (full, _) = spec.generate();
+        let mut acc = existing.clone();
+        for b in &batches {
+            acc.append_mode3(b);
+        }
+        assert!((acc.norm() - full.norm()).abs() < 1e-12);
+    }
+}

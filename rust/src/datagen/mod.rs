@@ -4,8 +4,10 @@
 //! argument — the original FROSTT files are tens of GB and gated on
 //! bandwidth; `io::tns` loads the real files when present).
 
+pub mod drift;
 pub mod real_sim;
 pub mod synthetic;
 
+pub use drift::{DriftComponent, DriftSpec};
 pub use real_sim::{RealDatasetSim, REAL_DATASETS};
 pub use synthetic::SyntheticSpec;

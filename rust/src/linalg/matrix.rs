@@ -192,6 +192,19 @@ impl Matrix {
         out
     }
 
+    /// A copy with `extra` all-zero columns appended on the right — the
+    /// rank-growth primitive (a vacant factor column contributes nothing
+    /// until sample-space updates fill it).
+    pub fn append_cols(&self, extra: usize) -> Matrix {
+        let cols = self.cols + extra;
+        let mut data = vec![0.0; self.rows * cols];
+        for i in 0..self.rows {
+            data[i * cols..i * cols + self.cols]
+                .copy_from_slice(&self.data[i * self.cols..(i + 1) * self.cols]);
+        }
+        Matrix { rows: self.rows, cols, data }
+    }
+
     /// Stack `self` on top of `other` (must have equal `cols`).
     pub fn vstack(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.cols);
@@ -446,6 +459,16 @@ mod tests {
 
     fn m(rows: usize, cols: usize, v: &[f64]) -> Matrix {
         Matrix::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn append_cols_zero_pads_on_the_right() {
+        let a = m(2, 2, &[1., 2., 3., 4.]);
+        let b = a.append_cols(2);
+        assert_eq!(b.rows(), 2);
+        assert_eq!(b.cols(), 4);
+        assert_eq!(b.data(), &[1., 2., 0., 0., 3., 4., 0., 0.]);
+        assert_eq!(a.append_cols(0).data(), a.data());
     }
 
     #[test]

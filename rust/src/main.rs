@@ -111,9 +111,12 @@ COMMANDS:
   decompose  --input X.tns --rank R [--max-iters 1000] [--tol 1e-5] [--save model.cp]
   run        --input X.tns | --dims I,J,K  [--config run.toml] [--rank R] [--batch B]
              [--sampling-factor S] [--repetitions r] [--engine native|pjrt]
-             [--quality-control] [--seed N] [--save model.cp]
+             [--quality-control] [--adaptive] [--seed N] [--save model.cp]
+             (--adaptive turns on drift-aware rank adaptation: grow on
+             sustained residual energy, retire inactive components)
   serve      [--streams 2] [--dims 48,48,40] [--rank 4] [--batch 4] [--density 1.0]
              [--queue-cap 4] [--seed 42] [--mode pool|dedicated] [--workers 0]
+             [--adaptive]
              multi-stream service demo (pool mode shares a work-stealing
              scheduler across all streams; --workers 0 sizes it to the
              hardware; dedicated mode is the one-thread-per-stream baseline)
@@ -238,6 +241,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.has("quality-control") {
         cfg.quality_control = true;
     }
+    if args.has("adaptive") {
+        cfg.adaptive_rank = true;
+    }
     cfg.validate()?;
     let full = load_input(args)?;
     let (ni, nj, nk) = full.dims();
@@ -291,7 +297,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         total += stats.seconds;
         n += 1;
         println!(
-            "batch {n:>3}: +{} slices in {:.3}s (sample {}, mean congruence {:.3})",
+            "batch {n:>3}: +{} slices in {:.3}s (sample {}, mean congruence {:.3}, \
+             rank {}, drift {})",
             stats.k_new,
             stats.seconds,
             stats
@@ -301,13 +308,17 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .unwrap_or_default(),
             stats.mean_congruence.iter().sum::<f64>()
                 / stats.mean_congruence.len().max(1) as f64,
+            stats.rank,
+            stats.drift,
         );
     }
     let model = engine.model();
     println!(
-        "done: {n} batches in {total:.2}s, final rel_err {:.4}, fit {:.4}",
+        "done: {n} batches in {total:.2}s, final rel_err {:.4}, fit {:.4}, rank {} ({})",
         relative_error(engine.tensor(), model),
-        model.fit(engine.tensor())
+        model.fit(engine.tensor()),
+        model.rank(),
+        engine.drift_state(),
     );
     if let Some(path) = args.get("save") {
         save_model(&PathBuf::from(path), model)?;
@@ -354,7 +365,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let name = format!("stream-{s}");
         let spec = SyntheticSpec { i, j, k, rank, density, noise: 0.05, seed: seed + s as u64 };
         let (existing, batches, _) = spec.generate_stream(0.25, batch);
-        let cfg = SamBaTenConfig::builder(rank, 2, 4, seed ^ ((s as u64) << 8)).build()?;
+        let cfg = SamBaTenConfig::builder(rank, 2, 4, seed ^ ((s as u64) << 8))
+            .adaptive_rank(args.has("adaptive"))
+            .build()?;
         svc.register(&name, &existing, cfg)?;
         println!(
             "registered {name}: existing {:?}, {} batches pending",
@@ -398,9 +411,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let snap = h.snapshot();
             let lmax = snap.model.lambda.iter().cloned().fold(0.0f64, f64::max);
             println!(
-                "  [{name}] epoch {:>3}  dims {:?}  λ_max {:.3}  top-1 of row 0: {:?}",
+                "  [{name}] epoch {:>3}  dims {:?}  rank {} ({})  λ_max {:.3}  \
+                 top-1 of row 0: {:?}",
                 snap.epoch,
                 snap.dims,
+                snap.rank(),
+                snap.drift,
                 lmax,
                 snap.top_k(0, 0, 1).first().map(|(idx, s)| (*idx, (s * 1e3).round() / 1e3)),
             );
@@ -415,8 +431,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("\n== service report ==");
     for st in svc.shutdown() {
         println!(
-            "  {:<12} epoch {:>3}  batches {:>3}  slices {:>4}  errors {}  ingest {:.2}s",
-            st.name, st.epoch, st.batches, st.slices, st.errors, st.ingest_seconds
+            "  {:<12} epoch {:>3}  rank {} ({})  batches {:>3}  slices {:>4}  errors {}  \
+             ingest {:.2}s",
+            st.name, st.epoch, st.rank, st.drift, st.batches, st.slices, st.errors,
+            st.ingest_seconds
         );
     }
     if let Some(ps) = svc.pool_stats() {

@@ -42,7 +42,9 @@
 //! All registry methods take `&self`; wrap the service in an `Arc` to
 //! share it across producer threads.
 
-use crate::coordinator::{BatchStats, ModelSnapshot, SamBaTen, SamBaTenConfig, StreamHandle};
+use crate::coordinator::{
+    BatchStats, DriftState, ModelSnapshot, SamBaTen, SamBaTenConfig, StreamHandle,
+};
 use crate::pool::{KeyHandle, PoolStats, WorkPool};
 use crate::tensor::TensorData;
 use anyhow::{anyhow, Context, Result};
@@ -91,6 +93,12 @@ pub struct StreamStats {
     pub name: String,
     /// Published epoch (successful ingests) at the time of the query.
     pub epoch: u64,
+    /// Decomposition rank of the published model (can change over time
+    /// when the stream runs with adaptive rank enabled).
+    pub rank: usize,
+    /// Drift-detector state stamped on the published snapshot
+    /// (`Stable` until the engine observes otherwise).
+    pub drift: DriftState,
     /// Batches processed successfully.
     pub batches: u64,
     /// Slices ingested successfully (sum of `k_new`).
@@ -542,9 +550,13 @@ fn finish_stop(wait: StopWait, stats: &StatsInner) {
 }
 
 fn snapshot_stats(name: &str, handle: &StreamHandle, stats: &StatsInner) -> StreamStats {
+    // One load so epoch, rank and drift come from the same snapshot.
+    let snap = handle.snapshot();
     StreamStats {
         name: name.to_string(),
-        epoch: handle.epoch(),
+        epoch: snap.epoch,
+        rank: snap.rank(),
+        drift: snap.drift.clone(),
         batches: stats.batches.load(Ordering::SeqCst),
         slices: stats.slices.load(Ordering::SeqCst),
         errors: stats.errors.load(Ordering::SeqCst),
@@ -630,6 +642,23 @@ mod tests {
             DecompositionService::with_config(ServiceConfig::pooled(2)),
             DecompositionService::with_config(ServiceConfig::dedicated()),
         ]
+    }
+
+    #[test]
+    fn stats_carry_rank_and_drift_state() {
+        for svc in both_modes() {
+            let (existing, batches) = small_stream(11);
+            svc.register("s0", &existing, cfg(5)).unwrap();
+            let st = svc.stats("s0").unwrap();
+            assert_eq!(st.rank, 2);
+            assert!(matches!(st.drift, DriftState::Stable));
+            svc.ingest("s0", batches[0].clone()).unwrap().wait().unwrap();
+            let st = svc.stats("s0").unwrap();
+            // Adaptive rank is off by default: rank stays fixed, state stable.
+            assert_eq!((st.epoch, st.rank), (1, 2));
+            assert!(matches!(st.drift, DriftState::Stable));
+            svc.shutdown();
+        }
     }
 
     #[test]

@@ -1,7 +1,13 @@
 //! Tiny benchmarking kit for the `harness = false` benches (the offline
 //! crate set has no criterion): warmup, N timed iterations, median + MAD,
 //! and a uniform report line that `bench_output.txt` collects.
+//!
+//! Every [`bench`] row and [`report`] scalar is also accumulated in a
+//! process-global record list; a bench binary calls [`write_json`] at the
+//! end to emit a machine-readable `BENCH_*.json` (hand-rolled — no serde
+//! in the offline crate set) for trend tracking across commits.
 
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Result of one benchmark case.
@@ -11,6 +17,19 @@ pub struct BenchResult {
     pub median_s: f64,
     pub mad_s: f64,
     pub iters: usize,
+}
+
+/// One collected record: a timed bench row or a named scalar.
+enum Record {
+    Bench(BenchResult),
+    Value { name: String, value: f64, unit: String },
+}
+
+/// Process-global record list behind [`write_json`].
+static RECORDS: Mutex<Vec<Record>> = Mutex::new(Vec::new());
+
+fn collect(record: Record) {
+    RECORDS.lock().unwrap_or_else(|p| p.into_inner()).push(record);
 }
 
 /// Run `f` with `warmup` unmeasured runs then `iters` measured runs;
@@ -35,12 +54,79 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         "bench {:<48} {:>12.6}s ± {:>9.6}s  (n={})",
         r.name, r.median_s, r.mad_s, r.iters
     );
+    collect(Record::Bench(r.clone()));
     r
 }
 
 /// Print a named scalar alongside bench rows (throughput, error, ...).
 pub fn report(name: &str, value: f64, unit: &str) {
     println!("value {name:<48} {value:>12.6} {unit}");
+    collect(Record::Value { name: name.to_string(), value, unit: unit.to_string() });
+}
+
+/// JSON string escape (quotes, backslashes, control characters).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON number: non-finite floats have no JSON encoding → `null`.
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Write every record collected so far (in emission order) as JSON:
+///
+/// ```json
+/// {"schema": "sambaten-bench-v1",
+///  "records": [
+///    {"kind": "bench", "name": "...", "median_s": 0.1, "mad_s": 0.0, "iters": 5},
+///    {"kind": "value", "name": "...", "value": 42.0, "unit": "batches/s"}]}
+/// ```
+pub fn write_json(path: &std::path::Path) -> std::io::Result<()> {
+    let records = RECORDS.lock().unwrap_or_else(|p| p.into_inner());
+    let mut out = String::from("{\n  \"schema\": \"sambaten-bench-v1\",\n  \"records\": [");
+    for (n, r) in records.iter().enumerate() {
+        if n > 0 {
+            out.push(',');
+        }
+        out.push_str("\n    ");
+        match r {
+            Record::Bench(b) => out.push_str(&format!(
+                "{{\"kind\": \"bench\", \"name\": \"{}\", \"median_s\": {}, \
+                 \"mad_s\": {}, \"iters\": {}}}",
+                escape(&b.name),
+                num(b.median_s),
+                num(b.mad_s),
+                b.iters
+            )),
+            Record::Value { name, value, unit } => out.push_str(&format!(
+                "{{\"kind\": \"value\", \"name\": \"{}\", \"value\": {}, \"unit\": \"{}\"}}",
+                escape(name),
+                num(*value),
+                escape(unit)
+            )),
+        }
+    }
+    out.push_str("\n  ]\n}\n");
+    std::fs::write(path, out)?;
+    println!("bench records written to {}", path.display());
+    Ok(())
 }
 
 #[cfg(test)]
@@ -57,5 +143,24 @@ mod tests {
         assert_eq!(count, 6); // 1 warmup + 5 measured
         assert_eq!(r.iters, 5);
         assert!(r.median_s >= 0.0);
+    }
+
+    #[test]
+    fn write_json_emits_collected_records() {
+        bench("json-bench-case", 0, 1, || {
+            std::hint::black_box(1);
+        });
+        report("json-value \"case\"", 12.5, "widgets/s");
+        report("json-nonfinite", f64::NAN, "x");
+        let path =
+            std::env::temp_dir().join(format!("benchkit_test_{}.json", std::process::id()));
+        write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(text.starts_with("{\n  \"schema\": \"sambaten-bench-v1\""));
+        assert!(text.contains("\"kind\": \"bench\", \"name\": \"json-bench-case\""));
+        // Quotes in names are escaped; non-finite values become null.
+        assert!(text.contains("json-value \\\"case\\\""));
+        assert!(text.contains("\"name\": \"json-nonfinite\", \"value\": null"));
     }
 }

@@ -39,6 +39,83 @@ impl InnerSolver for FlakySolver {
     }
 }
 
+/// A solver that poisons its first `poison_first` results with a NaN λ —
+/// a shape-valid but numerically degenerate decomposition, the kind a
+/// rank-deficient sample produces in the wild.
+struct NanLambdaSolver {
+    inner: sambaten::coordinator::NativeAlsSolver,
+    poison_first: usize,
+    calls: AtomicUsize,
+}
+
+impl InnerSolver for NanLambdaSolver {
+    fn decompose(
+        &self,
+        x: &TensorData,
+        rank: usize,
+        opts: &AlsOptions,
+        seed: u64,
+        ws: &mut AlsWorkspace,
+    ) -> anyhow::Result<CpModel> {
+        let mut m = self.inner.decompose(x, rank, opts, seed, ws)?;
+        if self.calls.fetch_add(1, Ordering::SeqCst) < self.poison_first {
+            m.lambda[0] = f64::NAN;
+        }
+        Ok(m)
+    }
+
+    fn name(&self) -> &'static str {
+        "nan-lambda"
+    }
+}
+
+#[test]
+fn nan_solver_output_is_an_error_not_corruption() {
+    // A NaN λ out of the inner solve used to panic `sort_components`
+    // (`partial_cmp().unwrap()`) and could poison the global model through
+    // the merge. It must surface as a per-batch Err with no state change.
+    let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, 13);
+    let (existing, batches, _) = spec.generate_stream(0.5, 3);
+    let base = SamBaTenConfig::builder(2, 2, 2, 14).build().unwrap();
+    let cfg = base.with_solver(Arc::new(NanLambdaSolver {
+        inner: sambaten::coordinator::NativeAlsSolver,
+        poison_first: 2, // both repetitions of the first ingest
+        calls: AtomicUsize::new(0),
+    }));
+    let mut engine = SamBaTen::init(&existing, cfg).unwrap();
+    let err = engine.ingest(&batches[0]).unwrap_err();
+    assert!(format!("{err:#}").contains("non-finite"), "unexpected error: {err:#}");
+    // No corruption: nothing published, model finite, tensor not grown.
+    assert_eq!(engine.epoch(), 0);
+    assert!(engine.model().is_finite());
+    assert_eq!(engine.model().factors[2].rows(), 6);
+    assert_eq!(engine.tensor().dims().2, 6);
+    // The stream keeps serving: retrying the same batch with the solver
+    // now healthy succeeds and publishes epoch 1.
+    engine.ingest(&batches[0]).unwrap();
+    assert_eq!(engine.epoch(), 1);
+    assert_eq!(engine.model().factors[2].rows(), 9);
+    assert!(engine.model().is_finite());
+}
+
+#[test]
+fn nan_batch_rejected_before_any_state_change() {
+    let spec = SyntheticSpec::dense(8, 8, 10, 2, 0.0, 15);
+    let (existing, batches, _) = spec.generate_stream(0.8, 2);
+    let cfg = SamBaTenConfig::builder(2, 2, 2, 16).build().unwrap();
+    let mut engine = SamBaTen::init(&existing, cfg).unwrap();
+    let mut bad = DenseTensor::zeros(8, 8, 2);
+    bad.data_mut()[3] = f64::NAN;
+    let err = engine.ingest(&TensorData::Dense(bad)).unwrap_err();
+    assert!(format!("{err:#}").contains("non-finite"), "unexpected error: {err:#}");
+    assert_eq!(engine.epoch(), 0);
+    assert_eq!(engine.tensor().dims().2, 8, "rejected batch must not grow the tensor");
+    // A healthy batch still goes through afterwards.
+    engine.ingest(&batches[0]).unwrap();
+    assert_eq!(engine.epoch(), 1);
+    assert_eq!(engine.tensor().dims().2, 10);
+}
+
 #[test]
 fn solver_failure_surfaces_as_error_not_panic() {
     let spec = SyntheticSpec::dense(10, 10, 10, 2, 0.0, 1);

@@ -1,0 +1,48 @@
+//! Long-running stream regression: before the bounded-history fix the
+//! engine kept every `BatchStats` ever produced (an unbounded `Vec` that
+//! grew ~linearly forever — the leak that killed multi-day streams). The
+//! epoch counter is now decoupled from the stats buffer: after 10 000
+//! ingests the epoch must read 10 000 while the retained history stays at
+//! the configured window.
+
+use sambaten::coordinator::{DriftConfig, SamBaTen, SamBaTenConfig};
+use sambaten::cp::AlsOptions;
+use sambaten::tensor::{DenseTensor, Tensor3, TensorData};
+use sambaten::util::Rng;
+
+#[test]
+fn ten_thousand_ingests_keep_history_bounded_and_epoch_monotone() {
+    const INGESTS: u64 = 10_000;
+    const WINDOW: usize = 6;
+    let mut rng = Rng::new(97);
+    let existing: TensorData = DenseTensor::rand(2, 2, 2, &mut rng).into();
+    let batch: TensorData = DenseTensor::rand(2, 2, 1, &mut rng).into();
+    // The smallest possible per-ingest workload: rank 1, one repetition,
+    // one ALS sweep, no refine pass — the test measures bookkeeping, not
+    // decomposition quality.
+    let cfg = SamBaTenConfig::builder(1, 2, 1, 5)
+        .als(AlsOptions { max_iters: 1, tol: 0.0, seed: 1, ..Default::default() })
+        .refine_c(false)
+        .drift(DriftConfig { window: WINDOW, ..Default::default() })
+        .build()
+        .unwrap();
+    let mut engine = SamBaTen::init(&existing, cfg).unwrap();
+    let handle = engine.handle();
+    let mut last_epoch = 0u64;
+    for n in 0..INGESTS {
+        let stats = engine.ingest(&batch).unwrap();
+        // Epoch is monotone and survives past any window boundary.
+        assert_eq!(engine.epoch(), n + 1);
+        assert!(engine.epoch() > last_epoch);
+        last_epoch = engine.epoch();
+        assert_eq!(stats.rank, 1);
+        // The history never outgrows its window.
+        assert!(engine.history().len() <= WINDOW, "history leaked at ingest {n}");
+    }
+    assert_eq!(engine.epoch(), INGESTS);
+    assert_eq!(engine.history().len(), WINDOW);
+    assert_eq!(engine.history().cap(), WINDOW);
+    // The published snapshot agrees with the writer-side counter.
+    assert_eq!(handle.epoch(), INGESTS);
+    assert_eq!(engine.tensor().dims().2, 2 + INGESTS as usize);
+}
