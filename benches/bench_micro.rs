@@ -95,6 +95,71 @@ fn main() {
         );
     }
 
+    // COO↔CSF promotion break-even: where does the CSF fiber walk start
+    // beating the flat COO scan as nnz grows? Sweeps an nnz ladder at three
+    // shapes with different fiber statistics (cube, flat, tall), timing one
+    // full MTTKRP set (all three modes — what one ALS sweep pays) per
+    // backend, plus the one-time CSF build the promotion amortises. The
+    // first-win crossover nnz per shape is reported for DESIGN.md's
+    // promotion-bar discussion; `CSF_PROMOTION_NNZ` (also reported) should
+    // sit at or above the largest crossover so promotion never pessimises.
+    {
+        use sambaten::tensor::CSF_PROMOTION_NNZ;
+        let shapes: [(&str, usize, usize, usize); 3] =
+            [("cube256", 256, 256, 256), ("flat512", 512, 512, 64), ("tall128", 128, 128, 1024)];
+        report("micro/breakeven/promotion_bar_default", CSF_PROMOTION_NNZ as f64, "nnz");
+        for (tag, i, j, k) in shapes {
+            let total = (i * j * k) as f64;
+            let mut crossover: Option<usize> = None;
+            for target_nnz in [2_000usize, 8_000, 32_000, 128_000] {
+                let density = (target_nnz as f64 / total).min(0.5);
+                let xc = CooTensor::rand(i, j, k, density, &mut rng);
+                let nnz = xc.nnz();
+                let fa = Matrix::rand_gaussian(i, 8, &mut rng);
+                let fb = Matrix::rand_gaussian(j, 8, &mut rng);
+                let fc = Matrix::rand_gaussian(k, 8, &mut rng);
+                // The clone is charged against the build, keeping the
+                // reported break-even conservative (build looks costlier).
+                let build =
+                    bench(&format!("micro/breakeven_{tag}/build_csf_nnz{target_nnz}"), 1, 5, || {
+                        std::hint::black_box(CsfTensor::from_coo(xc.clone()));
+                    });
+                let xf = CsfTensor::from_coo(xc.clone());
+                let coo =
+                    bench(&format!("micro/breakeven_{tag}/mttkrp3_coo_nnz{target_nnz}"), 1, 5, || {
+                        for mode in 0..3 {
+                            std::hint::black_box(xc.mttkrp(mode, &fa, &fb, &fc));
+                        }
+                    });
+                let csf =
+                    bench(&format!("micro/breakeven_{tag}/mttkrp3_csf_nnz{target_nnz}"), 1, 5, || {
+                        for mode in 0..3 {
+                            std::hint::black_box(xf.mttkrp(mode, &fa, &fb, &fc));
+                        }
+                    });
+                report(
+                    &format!("micro/breakeven_{tag}/speedup_nnz{target_nnz}"),
+                    coo.median_s / csf.median_s.max(1e-12),
+                    "x (coo/csf)",
+                );
+                report(
+                    &format!("micro/breakeven_{tag}/build_payback_sweeps_nnz{target_nnz}"),
+                    build.median_s / (coo.median_s - csf.median_s).max(1e-12),
+                    "sweeps to amortise build",
+                );
+                if crossover.is_none() && csf.median_s < coo.median_s {
+                    crossover = Some(nnz);
+                }
+            }
+            // -1 = CSF never won on this ladder (crossover above 128K nnz).
+            report(
+                &format!("micro/breakeven_{tag}/crossover_nnz"),
+                crossover.map(|n| n as f64).unwrap_or(-1.0),
+                "nnz (first CSF win)",
+            );
+        }
+    }
+
     // ALS sweep throughput at the acceptance shape (1K×1K×1K, 1e-4, rank
     // 16): time per sweep, COO vs CSF backend, fresh-alloc (a new workspace
     // per decomposition — what a cold caller pays) vs a reused workspace

@@ -6,7 +6,7 @@ pub mod toml_min;
 
 pub use toml_min::{TomlDoc, TomlValue};
 
-use crate::coordinator::{DriftConfig, SamBaTenConfig};
+use crate::coordinator::{DriftConfig, EngineConfig, OcTenConfig, SamBaTenConfig};
 use crate::cp::AlsOptions;
 use crate::matching::MatchPolicy;
 use anyhow::{Context, Result};
@@ -29,8 +29,18 @@ pub struct RunConfig {
     pub refine_c: bool,
     /// `hungarian` | `greedy`.
     pub match_policy: String,
-    /// `native` | `pjrt`.
+    /// Inner solver: `native` | `pjrt` (how sample decompositions run).
     pub engine: String,
+    /// Ingest algorithm: `sambaten` (sampling-based, the paper's) |
+    /// `octen` (compressed-replica — see `coordinator::octen`). Orthogonal
+    /// to `engine`: the solver choice only applies to sambaten's sample
+    /// decompositions, so `algorithm = "octen"` requires `engine = "native"`.
+    pub algorithm: String,
+    /// OCTen only: number of parallel compressed replicas `p`.
+    pub octen_replicas: usize,
+    /// OCTen only: compression factor (each compressed mode keeps
+    /// `≈ dim/compression` rows).
+    pub octen_compression: usize,
     pub als_max_iters: usize,
     pub als_tol: f64,
     /// nnz bar for COO→CSF promotion and CSF-native sample extraction
@@ -64,6 +74,9 @@ impl Default for RunConfig {
             refine_c: true,
             match_policy: "hungarian".into(),
             engine: "native".into(),
+            algorithm: "sambaten".into(),
+            octen_replicas: 4,
+            octen_compression: 2,
             als_max_iters: 100,
             als_tol: 1e-5,
             csf_nnz_bar: crate::tensor::CSF_PROMOTION_NNZ,
@@ -103,6 +116,13 @@ impl RunConfig {
                 "refine_c" => cfg.refine_c = value.as_bool().context("refine_c")?,
                 "match_policy" => cfg.match_policy = value.as_str().context("match_policy")?.into(),
                 "engine" => cfg.engine = value.as_str().context("engine")?.into(),
+                "algorithm" => cfg.algorithm = value.as_str().context("algorithm")?.into(),
+                "octen_replicas" => {
+                    cfg.octen_replicas = value.as_usize().context("octen_replicas")?
+                }
+                "octen_compression" => {
+                    cfg.octen_compression = value.as_usize().context("octen_compression")?
+                }
                 "als_max_iters" => cfg.als_max_iters = value.as_usize().context("als_max_iters")?,
                 "als_tol" => cfg.als_tol = value.as_f64().context("als_tol")?,
                 "csf_nnz_bar" => cfg.csf_nnz_bar = value.as_usize().context("csf_nnz_bar")?,
@@ -141,6 +161,17 @@ impl RunConfig {
             matches!(self.engine.as_str(), "native" | "pjrt"),
             "engine must be native|pjrt"
         );
+        anyhow::ensure!(
+            matches!(self.algorithm.as_str(), "sambaten" | "octen"),
+            "algorithm must be sambaten|octen"
+        );
+        anyhow::ensure!(
+            !(self.algorithm == "octen" && self.engine == "pjrt"),
+            "algorithm = \"octen\" requires engine = \"native\" (the PJRT solver only \
+             accelerates sambaten's sample decompositions)"
+        );
+        anyhow::ensure!(self.octen_replicas >= 1, "octen_replicas must be >= 1");
+        anyhow::ensure!(self.octen_compression >= 1, "octen_compression must be >= 1");
         anyhow::ensure!(self.csf_nnz_bar >= 1, "csf_nnz_bar must be >= 1");
         anyhow::ensure!(self.drift_window >= 1, "drift_window must be >= 1");
         anyhow::ensure!(
@@ -182,6 +213,44 @@ impl RunConfig {
                 ..Default::default()
             })
             .build()
+    }
+
+    /// Build the algorithm-resolved engine specification: the
+    /// [`EngineConfig`] variant named by `algorithm`, carrying all shared
+    /// knobs (rank, ALS options, match policy, drift). The caller attaches
+    /// a solver afterwards where applicable (sambaten + pjrt).
+    pub fn to_engine_spec(&self) -> Result<EngineConfig> {
+        match self.algorithm.as_str() {
+            "octen" => {
+                let cfg = OcTenConfig::builder(
+                    self.rank,
+                    self.octen_replicas,
+                    self.octen_compression,
+                    self.seed,
+                )
+                .als(AlsOptions {
+                    max_iters: self.als_max_iters,
+                    tol: self.als_tol,
+                    ..Default::default()
+                })
+                .match_policy(if self.match_policy == "greedy" {
+                    MatchPolicy::Greedy
+                } else {
+                    MatchPolicy::Hungarian
+                })
+                .drift(DriftConfig {
+                    enabled: self.adaptive_rank,
+                    window: self.drift_window,
+                    grow_bar: self.drift_grow_bar,
+                    retire_floor: self.drift_retire_floor,
+                    max_rank: self.drift_max_rank,
+                    ..Default::default()
+                })
+                .build()?;
+                Ok(EngineConfig::OcTen(cfg))
+            }
+            _ => Ok(EngineConfig::SamBaTen(self.to_engine_config()?)),
+        }
     }
 }
 
@@ -264,6 +333,39 @@ als_tol = 1e-6
         assert!(RunConfig::from_toml_str("drift_window = 0\n").is_err());
         assert!(RunConfig::from_toml_str("drift_grow_bar = 1.5\n").is_err());
         assert!(RunConfig::from_toml_str("drift_retire_floor = -0.2\n").is_err());
+    }
+
+    #[test]
+    fn algorithm_selects_engine_spec() {
+        // Default resolves to sambaten.
+        let d = RunConfig::default();
+        assert_eq!(d.algorithm, "sambaten");
+        assert!(matches!(d.to_engine_spec().unwrap(), EngineConfig::SamBaTen(_)));
+
+        let text = "rank = 3\nalgorithm = \"octen\"\n\
+                    octen_replicas = 3\nocten_compression = 4\nmatch_policy = \"greedy\"\n";
+        let cfg = RunConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.algorithm, "octen");
+        match cfg.to_engine_spec().unwrap() {
+            EngineConfig::OcTen(oc) => {
+                assert_eq!(oc.rank(), 3);
+                assert_eq!(oc.replicas(), 3);
+                assert_eq!(oc.compression(), 4);
+                assert_eq!(oc.match_policy(), MatchPolicy::Greedy);
+            }
+            other => panic!("expected octen spec, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn octen_keys_validated() {
+        assert!(RunConfig::from_toml_str("algorithm = \"tucker\"\n").is_err());
+        assert!(RunConfig::from_toml_str("octen_replicas = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("octen_compression = 0\n").is_err());
+        // OCTen has no pluggable solver, so the pjrt combination is a
+        // config error, not a silent fallback.
+        let clash = "algorithm = \"octen\"\nengine = \"pjrt\"\n";
+        assert!(RunConfig::from_toml_str(clash).is_err());
     }
 
     #[test]

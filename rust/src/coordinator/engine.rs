@@ -4,7 +4,10 @@
 //! synchronisation until the final merge).
 
 use super::drift::{BoundedHistory, DriftAction, DriftConfig, DriftDetector, DriftState};
-use super::snapshot::{ModelSnapshot, SnapshotCell, StreamHandle};
+use super::engine_api::{
+    batch_residual, component_activity, DecompositionEngine, SnapshotPublisher,
+};
+use super::snapshot::StreamHandle;
 use super::solver::{InnerSolver, NativeAlsSolver};
 use super::update::{normalize_sample_model, project_sample_with, ProjectedUpdate};
 use crate::corcondia::{getrank_with, GetRankOptions};
@@ -464,7 +467,10 @@ pub struct SamBaTen {
     /// Publication slot for the wait-free read path: every successful
     /// ingest stores a fresh epoch-stamped snapshot here; [`StreamHandle`]s
     /// from [`SamBaTen::handle`] read it without ever borrowing the engine.
-    cell: Arc<SnapshotCell<ModelSnapshot>>,
+    /// The publication discipline itself (epoch-0 snapshot without stats,
+    /// publish-only-on-success) is shared with every other engine — see
+    /// `coordinator::engine_api::SnapshotPublisher`.
+    publisher: SnapshotPublisher,
 }
 
 impl SamBaTen {
@@ -492,15 +498,10 @@ impl SamBaTen {
         let ws_pool =
             (0..cfg.repetitions.max(1)).map(|_| Mutex::new(AlsWorkspace::new())).collect();
         let x = x_old.promoted_at(cfg.csf_nnz_bar);
-        let cell = Arc::new(SnapshotCell::new(Arc::new(ModelSnapshot::new(
-            0,
-            x.dims(),
-            model.clone(),
-            None,
-        ))));
+        let publisher = SnapshotPublisher::new(x.dims(), &model);
         let history = BoundedHistory::new(cfg.drift.window);
         let detector = DriftDetector::new(cfg.drift.clone(), model.rank());
-        SamBaTen { cfg, model, x, rng, history, epoch: 0, detector, ws_pool, cell }
+        SamBaTen { cfg, model, x, rng, history, epoch: 0, detector, ws_pool, publisher }
     }
 
     /// Current model (unit-norm columns, weights in λ).
@@ -515,7 +516,7 @@ impl SamBaTen {
     /// A cheap `Clone + Send + Sync` reader over this engine's published
     /// snapshots (the wait-free read path — see `coordinator::snapshot`).
     pub fn handle(&self) -> StreamHandle {
-        StreamHandle::new(self.cell.clone())
+        self.publisher.handle()
     }
 
     /// Attach (or detach) the shared fan-out executor after construction —
@@ -717,8 +718,14 @@ impl SamBaTen {
             }
         }
         // 6. Merge into the global model (single synchronisation point).
+        // The blend weight is drift-aware: under a suspected drift (state
+        // carried over from the *previous* batch's observation) the merge
+        // leans harder on the fresh sample estimates so changed — not just
+        // new/dead — components re-estimate faster. Inert unless adaptive
+        // rank is on: a disabled detector never leaves `Stable`, so the
+        // default path stays bit-identical to the fixed blend.
         let t0 = std::time::Instant::now();
-        let blend = self.cfg.blend;
+        let blend = effective_blend(self.cfg.blend, self.detector.state());
         super::update::merge_updates_with(&mut self.model, &samples, &updates, k_new, blend);
         // 6b. Optional stabilisation: overwrite the appended C rows with the
         // closed-form LS solution against the batch (A, B fixed).
@@ -751,8 +758,9 @@ impl SamBaTen {
         // publishing as observability even at a fixed rank — but the model
         // is only touched when `cfg.drift.enabled`.
         let epoch = self.epoch + 1;
-        let (batch_fit, residual_fraction) = self.batch_residual(x_new, xn_new, k_old, k_new);
-        let activity = self.component_activity(k_old, k_new);
+        let (batch_fit, residual_fraction) =
+            batch_residual(&self.model, x_new, xn_new, k_old, k_new);
+        let activity = component_activity(&self.model, k_old, k_new);
         let mean_cong_batch = if congruences.is_empty() {
             0.0
         } else {
@@ -792,62 +800,8 @@ impl SamBaTen {
         // immutable and internally consistent (model ↔ dims ↔ stats from
         // the same batch); readers that still hold the previous Arc keep
         // their consistent older view.
-        self.cell.store(Arc::new(ModelSnapshot::new(
-            epoch,
-            self.x.dims(),
-            self.model.clone(),
-            Some(stats.clone()),
-        )));
+        self.publisher.publish(epoch, self.x.dims(), &self.model, &stats);
         Ok(stats)
-    }
-
-    /// Batch residual of the *updated* model against the incoming slices,
-    /// computed without materialising anything: restrict `C` to the rows
-    /// appended for this batch and use
-    /// `‖X_new − X̂‖² = ‖X_new‖² − 2⟨X_new, X̂⟩ + λᵀ(AᵀA ∘ BᵀB ∘ C_bᵀC_b)λ`.
-    /// Returns `(batch_fit, residual_fraction)`.
-    fn batch_residual(
-        &self,
-        x_new: &TensorData,
-        xn_new: f64,
-        k_old: usize,
-        k_new: usize,
-    ) -> (f64, f64) {
-        if !(xn_new > 0.0) {
-            // A zero batch is trivially explained; no drift evidence.
-            return (1.0, 0.0);
-        }
-        let rows: Vec<usize> = (k_old..k_old + k_new).collect();
-        let c_batch = self.model.factors[2].gather_rows(&rows);
-        let inner = x_new.inner_with_kruskal(
-            &self.model.lambda,
-            &self.model.factors[0],
-            &self.model.factors[1],
-            &c_batch,
-        );
-        let g = self.model.factors[0]
-            .gram()
-            .hadamard(&self.model.factors[1].gram())
-            .hadamard(&c_batch.gram());
-        let gl = g.matvec(&self.model.lambda);
-        let msq: f64 = self.model.lambda.iter().zip(&gl).map(|(a, b)| a * b).sum();
-        let res_sq = (xn_new * xn_new - 2.0 * inner + msq).max(0.0);
-        let rf = (res_sq / (xn_new * xn_new)).min(1.0);
-        (1.0 - rf.sqrt(), rf)
-    }
-
-    /// Per-component energy this batch contributed: `λ_q · rms(new C rows
-    /// of q)`. A component the stream stopped expressing appends ~zero `C`
-    /// rows batch after batch, whatever its historical λ — the drift
-    /// detector's retirement signal.
-    fn component_activity(&self, k_old: usize, k_new: usize) -> Vec<f64> {
-        let c = &self.model.factors[2];
-        (0..self.model.rank())
-            .map(|q| {
-                let ss: f64 = (k_old..k_old + k_new).map(|k| c[(k, q)] * c[(k, q)]).sum();
-                self.model.lambda[q] * (ss / k_new.max(1) as f64).sqrt()
-            })
-            .collect()
     }
 
     /// Closed-form LS for the new `C` rows with `A`, `B` fixed:
@@ -899,6 +853,58 @@ impl SamBaTen {
             }
         }
         Ok(())
+    }
+}
+
+/// Under a suspected drift, this much of the remaining headroom between
+/// the configured blend and 1.0 is handed to the fresh sample estimates:
+/// `blend' = blend + DRIFT_BLEND_BOOST · (1 − blend)`. Headroom-relative
+/// (rather than additive) so the boosted weight can never leave `[0, 1]`
+/// and a deployment that already runs `blend = 1` is unaffected.
+pub(crate) const DRIFT_BLEND_BOOST: f64 = 0.5;
+
+/// The merge blend weight for this batch given the drift regime carried
+/// over from the previous batch's observation. Only `DriftSuspected`
+/// boosts: `RankGrown`/`ComponentRetired` already re-estimate through the
+/// structural action itself, and a disabled detector never leaves
+/// `Stable` — which is what keeps the default path bit-identical.
+pub(crate) fn effective_blend(blend: f64, state: &DriftState) -> f64 {
+    match state {
+        DriftState::DriftSuspected { .. } => blend + DRIFT_BLEND_BOOST * (1.0 - blend),
+        _ => blend,
+    }
+}
+
+impl DecompositionEngine for SamBaTen {
+    fn name(&self) -> &'static str {
+        "sambaten"
+    }
+    fn ingest(&mut self, x_new: &TensorData) -> Result<BatchStats> {
+        SamBaTen::ingest(self, x_new)
+    }
+    fn handle(&self) -> StreamHandle {
+        SamBaTen::handle(self)
+    }
+    fn epoch(&self) -> u64 {
+        SamBaTen::epoch(self)
+    }
+    fn set_executor(&mut self, executor: Option<Arc<WorkPool>>) {
+        SamBaTen::set_executor(self, executor)
+    }
+    fn has_executor(&self) -> bool {
+        self.cfg.executor.is_some()
+    }
+    fn model(&self) -> &CpModel {
+        SamBaTen::model(self)
+    }
+    fn drift_state(&self) -> &DriftState {
+        SamBaTen::drift_state(self)
+    }
+    /// The sampling path reads the accumulated tensor through the sparse
+    /// backends (COO/CSF) — sparsity is a first-class speedup here, unlike
+    /// OCTen's densifying compression.
+    fn exploits_sparsity(&self) -> bool {
+        true
     }
 }
 
@@ -959,6 +965,53 @@ mod tests {
         let a = run();
         let b = run();
         assert!(a.factors[2].max_abs_diff(&b.factors[2]) < 1e-12);
+        assert_eq!(a.lambda, b.lambda);
+    }
+
+    #[test]
+    fn effective_blend_boosts_only_under_suspicion() {
+        // Stable / structural states keep the configured weight exactly.
+        assert_eq!(effective_blend(0.5, &DriftState::Stable), 0.5);
+        assert_eq!(effective_blend(0.5, &DriftState::RankGrown { epoch: 3, rank: 4 }), 0.5);
+        assert_eq!(
+            effective_blend(0.5, &DriftState::ComponentRetired { epoch: 3, rank: 2 }),
+            0.5
+        );
+        // Suspicion hands DRIFT_BLEND_BOOST of the headroom to the samples.
+        let suspected = DriftState::DriftSuspected { since_epoch: 2 };
+        assert_eq!(effective_blend(0.5, &suspected), 0.75);
+        assert_eq!(effective_blend(0.0, &suspected), DRIFT_BLEND_BOOST);
+        // Boundary blends stay in [0, 1].
+        assert_eq!(effective_blend(1.0, &suspected), 1.0);
+    }
+
+    #[test]
+    fn drift_blend_is_bit_identical_when_adaptive_rank_off() {
+        // The satellite contract: the drift-aware blend must not perturb a
+        // stream with adaptive rank off (the default) by even one ULP. A
+        // disabled detector never leaves `Stable`, so `effective_blend`
+        // passes the configured weight through unchanged — asserted on the
+        // full published model, not just the blend value.
+        let spec = SyntheticSpec::dense(12, 12, 14, 2, 0.05, 21);
+        let (existing, batches, _) = spec.generate_stream(0.4, 3);
+        let run = |cfg: SamBaTenConfig| {
+            let mut e = SamBaTen::init(&existing, cfg).unwrap();
+            for b in &batches {
+                e.ingest(b).unwrap();
+            }
+            (e.model().clone(), e.drift_state().clone())
+        };
+        let default_cfg = SamBaTenConfig::builder(2, 2, 3, 17).build().unwrap();
+        let explicit_off = SamBaTenConfig::builder(2, 2, 3, 17)
+            .drift(DriftConfig { enabled: false, ..Default::default() })
+            .build()
+            .unwrap();
+        let (a, state) = run(default_cfg);
+        let (b, _) = run(explicit_off);
+        assert_eq!(state, DriftState::Stable, "disabled detector never leaves Stable");
+        for f in 0..3 {
+            assert!(a.factors[f].max_abs_diff(&b.factors[f]) == 0.0, "factor {f}");
+        }
         assert_eq!(a.lambda, b.lambda);
     }
 

@@ -1,0 +1,204 @@
+//! Engine-agnostic interface over incremental decomposition engines.
+//!
+//! `serve`, the CLI, and the eval harness used to be hard-wired to the
+//! concrete [`SamBaTen`] struct. This module extracts the contract they
+//! actually rely on — ingest a batch, publish an epoch-stamped snapshot,
+//! expose the epoch and a wait-free [`StreamHandle`] — as the
+//! [`DecompositionEngine`] trait, so a second algorithm (the OCTen
+//! compressed-replica engine, `coordinator::octen`) plugs in per stream
+//! behind the same serving surface.
+//!
+//! The snapshot-publication discipline every engine must follow lives here
+//! too, as [`SnapshotPublisher`]: one atomic slot per stream, a fresh
+//! immutable [`ModelSnapshot`] stored only after a *successful* ingest
+//! (failed ingests publish nothing), epoch strictly monotone. The shared
+//! per-batch observability signals (batch fit / residual fraction /
+//! per-component activity — the drift detector's food) are free functions
+//! so engines compute them identically.
+
+use super::drift::DriftState;
+use super::engine::{BatchStats, SamBaTen, SamBaTenConfig};
+use super::octen::{OcTen, OcTenConfig};
+use super::snapshot::{ModelSnapshot, SnapshotCell, StreamHandle};
+use crate::cp::CpModel;
+use crate::pool::WorkPool;
+use crate::tensor::{Tensor3, TensorData};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// The contract between an incremental decomposition engine and its
+/// consumers (`serve::DecompositionService`, the CLI stream pump, the eval
+/// harness). An engine owns a stream's evolving model, ingests mode-3
+/// batches, and publishes an immutable epoch-stamped snapshot after every
+/// *successful* ingest — a failed ingest must leave the published state
+/// untouched (same epoch, same snapshot).
+pub trait DecompositionEngine: Send {
+    /// Short engine identifier (`"sambaten"`, `"octen"`) as used by the
+    /// `--engine` CLI flag and the serve stats.
+    fn name(&self) -> &'static str;
+
+    /// Ingest one batch of new mode-3 slices. On success the epoch
+    /// advances by exactly 1 and a fresh snapshot is published; on error
+    /// nothing observable changes.
+    fn ingest(&mut self, x_new: &TensorData) -> Result<BatchStats>;
+
+    /// A cheap `Clone + Send + Sync` reader over this engine's published
+    /// snapshots (the wait-free read path — see `coordinator::snapshot`).
+    fn handle(&self) -> StreamHandle;
+
+    /// Number of batches successfully ingested (the published epoch).
+    fn epoch(&self) -> u64;
+
+    /// Attach (or detach) a shared fan-out executor after construction —
+    /// the serving layer routes every registered stream's intra-ingest
+    /// parallelism through its own [`WorkPool`] at registration time.
+    fn set_executor(&mut self, executor: Option<Arc<WorkPool>>);
+
+    /// Whether a shared executor is currently attached.
+    fn has_executor(&self) -> bool;
+
+    /// Current model (unit-norm factor columns, weights in λ). Borrows the
+    /// engine; concurrent readers should hold a [`StreamHandle`] instead.
+    fn model(&self) -> &CpModel;
+
+    /// The current drift regime (always `Stable` with adaptive rank off).
+    fn drift_state(&self) -> &DriftState;
+
+    /// Whether the engine exploits sparsity in the accumulated tensor
+    /// (only SamBaTen's sampling path does; OCTen densifies into the
+    /// compressed space).
+    fn exploits_sparsity(&self) -> bool {
+        false
+    }
+}
+
+/// Per-stream engine selection: a validated configuration for any engine
+/// the coordinator knows how to build. `From` impls let engine-agnostic
+/// call sites (`serve::DecompositionService::register`) keep accepting a
+/// bare [`SamBaTenConfig`] while octen streams pass an [`OcTenConfig`].
+#[derive(Clone, Debug)]
+pub enum EngineConfig {
+    SamBaTen(SamBaTenConfig),
+    OcTen(OcTenConfig),
+}
+
+impl EngineConfig {
+    /// The engine this config builds (`"sambaten"` / `"octen"`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            EngineConfig::SamBaTen(_) => "sambaten",
+            EngineConfig::OcTen(_) => "octen",
+        }
+    }
+
+    /// Initialise an engine of the configured kind from a pre-existing
+    /// tensor (both engines bootstrap with one full CP-ALS on it).
+    pub fn init(&self, x_old: &TensorData) -> Result<Box<dyn DecompositionEngine>> {
+        Ok(match self {
+            EngineConfig::SamBaTen(cfg) => Box::new(SamBaTen::init(x_old, cfg.clone())?),
+            EngineConfig::OcTen(cfg) => Box::new(OcTen::init(x_old, cfg.clone())?),
+        })
+    }
+
+    /// Attach (or detach) a shared fan-out executor (validity-preserving).
+    pub fn with_executor(self, executor: Option<Arc<WorkPool>>) -> Self {
+        match self {
+            EngineConfig::SamBaTen(cfg) => EngineConfig::SamBaTen(cfg.with_executor(executor)),
+            EngineConfig::OcTen(cfg) => EngineConfig::OcTen(cfg.with_executor(executor)),
+        }
+    }
+}
+
+impl From<SamBaTenConfig> for EngineConfig {
+    fn from(cfg: SamBaTenConfig) -> Self {
+        EngineConfig::SamBaTen(cfg)
+    }
+}
+
+impl From<OcTenConfig> for EngineConfig {
+    fn from(cfg: OcTenConfig) -> Self {
+        EngineConfig::OcTen(cfg)
+    }
+}
+
+/// The shared snapshot-publication helper: owns a stream's atomic
+/// publication slot and enforces the invariants every engine must uphold
+/// — the initial (epoch-0) snapshot carries no batch stats, and each
+/// published snapshot is immutable and internally consistent
+/// (model ↔ dims ↔ stats from the same batch).
+pub(crate) struct SnapshotPublisher {
+    cell: Arc<SnapshotCell<ModelSnapshot>>,
+}
+
+impl SnapshotPublisher {
+    /// Create the slot and publish the epoch-0 snapshot of the initial
+    /// model (no batch stats yet).
+    pub(crate) fn new(dims: (usize, usize, usize), model: &CpModel) -> Self {
+        let cell =
+            Arc::new(SnapshotCell::new(Arc::new(ModelSnapshot::new(0, dims, model.clone(), None))));
+        SnapshotPublisher { cell }
+    }
+
+    /// A wait-free reader over this slot.
+    pub(crate) fn handle(&self) -> StreamHandle {
+        StreamHandle::new(self.cell.clone())
+    }
+
+    /// Publish a fresh epoch-stamped snapshot. Readers that still hold the
+    /// previous `Arc` keep their consistent older view.
+    pub(crate) fn publish(
+        &self,
+        epoch: u64,
+        dims: (usize, usize, usize),
+        model: &CpModel,
+        stats: &BatchStats,
+    ) {
+        self.cell
+            .store(Arc::new(ModelSnapshot::new(epoch, dims, model.clone(), Some(stats.clone()))));
+    }
+}
+
+/// Batch residual of an *updated* model against the incoming slices,
+/// computed without materialising anything: restrict `C` to the rows
+/// appended for this batch and use
+/// `‖X_new − X̂‖² = ‖X_new‖² − 2⟨X_new, X̂⟩ + λᵀ(AᵀA ∘ BᵀB ∘ C_bᵀC_b)λ`.
+/// Returns `(batch_fit, residual_fraction)` — identical math for every
+/// engine, so the drift detector sees comparable signals regardless of the
+/// ingest algorithm.
+pub(crate) fn batch_residual(
+    model: &CpModel,
+    x_new: &TensorData,
+    xn_new: f64,
+    k_old: usize,
+    k_new: usize,
+) -> (f64, f64) {
+    if !(xn_new > 0.0) {
+        // A zero batch is trivially explained; no drift evidence.
+        return (1.0, 0.0);
+    }
+    let rows: Vec<usize> = (k_old..k_old + k_new).collect();
+    let c_batch = model.factors[2].gather_rows(&rows);
+    let inner =
+        x_new.inner_with_kruskal(&model.lambda, &model.factors[0], &model.factors[1], &c_batch);
+    let g = model.factors[0]
+        .gram()
+        .hadamard(&model.factors[1].gram())
+        .hadamard(&c_batch.gram());
+    let gl = g.matvec(&model.lambda);
+    let msq: f64 = model.lambda.iter().zip(&gl).map(|(a, b)| a * b).sum();
+    let res_sq = (xn_new * xn_new - 2.0 * inner + msq).max(0.0);
+    let rf = (res_sq / (xn_new * xn_new)).min(1.0);
+    (1.0 - rf.sqrt(), rf)
+}
+
+/// Per-component energy this batch contributed: `λ_q · rms(new C rows of
+/// q)` — the drift detector's retirement signal, shared across engines.
+pub(crate) fn component_activity(model: &CpModel, k_old: usize, k_new: usize) -> Vec<f64> {
+    let c = &model.factors[2];
+    (0..model.rank())
+        .map(|q| {
+            let ss: f64 = (k_old..k_old + k_new).map(|k| c[(k, q)] * c[(k, q)]).sum();
+            model.lambda[q] * (ss / k_new.max(1) as f64).sqrt()
+        })
+        .collect()
+}

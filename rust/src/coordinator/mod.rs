@@ -24,11 +24,15 @@
 
 pub mod drift;
 pub mod engine;
+pub mod engine_api;
+pub mod octen;
 pub mod snapshot;
 pub mod solver;
 pub mod update;
 
 pub use drift::{BoundedHistory, DriftConfig, DriftState};
 pub use engine::{BatchStats, SamBaTen, SamBaTenConfig, SamBaTenConfigBuilder};
+pub use engine_api::{DecompositionEngine, EngineConfig};
+pub use octen::{OcTen, OcTenConfig, OcTenConfigBuilder};
 pub use snapshot::{ModelSnapshot, SnapshotCell, StreamHandle};
 pub use solver::{InnerSolver, NativeAlsSolver};

@@ -1,0 +1,944 @@
+//! OCTen: compressed-replica incremental CP decomposition (after Gujral,
+//! Pasricha & Papalexakis, *OCTen: Online Compression-based Tensor
+//! Decomposition*, arXiv:1807.01350) — the second engine behind the
+//! [`DecompositionEngine`] trait.
+//!
+//! Where SamBaTen maintains the model by sampling-and-merging in a reduced
+//! summary space, OCTen maintains `p` *independent compressed replicas*.
+//! Replica `r` owns two fixed random compression matrices `U_r (q_I × I)`
+//! and `V_r (q_J × J)`, drawn once from the stream seed, and tracks a CP
+//! model of the compressed tensor `Y_r = X ×₁ U_r ×₂ V_r` with
+//! OnlineCP-style `P/Q` accumulators — so a batch update per replica is a
+//! handful of small dense matmuls and two `R × R` solves, embarrassingly
+//! parallel across replicas (fanned out on the shared [`WorkPool`] when an
+//! executor is attached). No replica ever revisits old data and the engine
+//! never stores the accumulated tensor at all: per-stream state is
+//! `O(p·(q_I + q_J + K)·R)`, the tiny independently-updatable unit ROADMAP
+//! direction 3 (sharded scale-out) needs.
+//!
+//! The **join** maps replica frames to the global model each batch using
+//! the existing Hungarian factor-matching machinery, entirely in the
+//! compressed space: replica factors are matched against the compressed
+//! anchors `[U_r·A, V_r·B, C]` (mode 3 is uncompressed, so the full `C`
+//! acts as a shared anchor across replicas), sign-fixed, rescaled to the
+//! anchor norms, and the full-size `A`, `B` are recovered in one matmul
+//! against the precomputed pseudoinverse of the stacked compression
+//! matrices: `A = pinv([U_1; …; U_p]) · [Ã_1; …; Ã_p]`. The recovered
+//! model is published through the same [`SnapshotPublisher`] path as
+//! SamBaTen, so `top_k`, drift detection, and the serve stats work
+//! unchanged. See DESIGN.md §9.
+
+use super::drift::{BoundedHistory, DriftAction, DriftConfig, DriftDetector, DriftState};
+use super::engine::BatchStats;
+use super::engine_api::{
+    batch_residual, component_activity, DecompositionEngine, SnapshotPublisher,
+};
+use super::snapshot::StreamHandle;
+use crate::cp::{cp_als, AlsOptions, CpModel};
+use crate::linalg::{solve_gram_system, svd, Matrix};
+use crate::matching::{match_components, normalize_over_rows, MatchPolicy};
+use crate::pool::WorkPool;
+use crate::tensor::{Tensor3, TensorData};
+use crate::util::{parallel_map, Rng, Stopwatch};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// λ updates from the replica join are clamped into
+/// `[λ/OCTEN_LAMBDA_TRUST, λ·OCTEN_LAMBDA_TRUST]` per batch — the same
+/// trust-region idea the SamBaTen merge applies, guarding the global
+/// weights against one badly-conditioned compressed estimate.
+const OCTEN_LAMBDA_TRUST: f64 = 4.0;
+
+/// Configuration of the OCTen engine. Construct through
+/// [`OcTenConfig::builder`]; [`build`](OcTenConfigBuilder::build) validates
+/// every knob.
+#[derive(Clone)]
+pub struct OcTenConfig {
+    /// Universal rank `R`.
+    pub(crate) rank: usize,
+    /// Number of parallel compressed replicas `p`.
+    pub(crate) replicas: usize,
+    /// Compression factor: each compressed mode keeps `≈ dim/compression`
+    /// rows (floored so the replica space stays identifiable and the
+    /// stacked compression matrices stay left-invertible — see
+    /// [`compressed_dim`]).
+    pub(crate) compression: usize,
+    /// Master seed — the compression matrices and every replica's init
+    /// are derived from it.
+    pub(crate) seed: u64,
+    /// ALS options for the one-time init decompositions (global and
+    /// per-replica). Batches never run ALS — updates are closed-form.
+    pub(crate) als: AlsOptions,
+    /// Component matching policy for the per-batch join.
+    pub(crate) match_policy: MatchPolicy,
+    /// Replica components whose join congruence falls below this gate do
+    /// not contribute to the global update (same guard as SamBaTen's).
+    pub(crate) congruence_threshold: f64,
+    /// Drift detection. Growth is structurally unsupported (a grown
+    /// column cannot be seeded in the replica accumulators without a pass
+    /// over old data, which OCTen never keeps), so `build` pins
+    /// `max_rank = rank`; retirement and `DriftSuspected` alarms work.
+    pub(crate) drift: DriftConfig,
+    /// Optional shared executor for the per-replica fan-out.
+    pub(crate) executor: Option<Arc<WorkPool>>,
+}
+
+impl std::fmt::Debug for OcTenConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OcTenConfig")
+            .field("rank", &self.rank)
+            .field("replicas", &self.replicas)
+            .field("compression", &self.compression)
+            .field("seed", &self.seed)
+            .field("adaptive_rank", &self.drift.enabled)
+            .field("executor", &self.executor.as_ref().map(|p| p.workers()))
+            .finish()
+    }
+}
+
+impl OcTenConfig {
+    /// Start a validating builder from the core parameters: `rank R`,
+    /// `replicas p`, `compression` factor, master `seed`.
+    pub fn builder(rank: usize, replicas: usize, compression: usize, seed: u64) -> OcTenConfigBuilder {
+        OcTenConfigBuilder {
+            cfg: OcTenConfig {
+                rank,
+                replicas,
+                compression,
+                seed,
+                als: AlsOptions { max_iters: 100, tol: 1e-5, ..Default::default() },
+                match_policy: MatchPolicy::Hungarian,
+                congruence_threshold: 0.25,
+                drift: DriftConfig::default(),
+                executor: None,
+            },
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    pub fn compression(&self) -> usize {
+        self.compression
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn als(&self) -> &AlsOptions {
+        &self.als
+    }
+
+    pub fn match_policy(&self) -> MatchPolicy {
+        self.match_policy
+    }
+
+    pub fn congruence_threshold(&self) -> f64 {
+        self.congruence_threshold
+    }
+
+    pub fn drift(&self) -> &DriftConfig {
+        &self.drift
+    }
+
+    pub fn adaptive_rank(&self) -> bool {
+        self.drift.enabled
+    }
+
+    pub fn executor(&self) -> Option<&Arc<WorkPool>> {
+        self.executor.as_ref()
+    }
+
+    /// Attach (or detach) a shared fan-out executor on a built config
+    /// (validity-preserving).
+    pub fn with_executor(mut self, executor: Option<Arc<WorkPool>>) -> Self {
+        self.executor = executor;
+        self
+    }
+}
+
+/// Validating builder for [`OcTenConfig`].
+#[derive(Clone)]
+pub struct OcTenConfigBuilder {
+    cfg: OcTenConfig,
+}
+
+impl OcTenConfigBuilder {
+    /// ALS options for the one-time init decompositions.
+    pub fn als(mut self, als: AlsOptions) -> Self {
+        self.cfg.als = als;
+        self
+    }
+
+    /// Component matching policy for the join.
+    pub fn match_policy(mut self, policy: MatchPolicy) -> Self {
+        self.cfg.match_policy = policy;
+        self
+    }
+
+    /// Hard congruence gate in `[0, 1]` for replica contributions.
+    pub fn congruence_threshold(mut self, threshold: f64) -> Self {
+        self.cfg.congruence_threshold = threshold;
+        self
+    }
+
+    /// Enable drift detection (retirement + alarms; growth is pinned off
+    /// — see [`OcTenConfig::drift`]).
+    pub fn adaptive_rank(mut self, on: bool) -> Self {
+        self.cfg.drift.enabled = on;
+        self
+    }
+
+    /// Full drift-detection configuration; `build` pins `max_rank = rank`.
+    pub fn drift(mut self, drift: DriftConfig) -> Self {
+        self.cfg.drift = drift;
+        self
+    }
+
+    /// Shared executor for the per-replica fan-out.
+    pub fn executor(mut self, executor: Arc<WorkPool>) -> Self {
+        self.cfg.executor = Some(executor);
+        self
+    }
+
+    /// Validate and produce the configuration.
+    pub fn build(mut self) -> Result<OcTenConfig> {
+        let c = &self.cfg;
+        anyhow::ensure!(c.rank >= 1, "rank must be >= 1 (got {})", c.rank);
+        anyhow::ensure!(c.replicas >= 1, "replicas must be >= 1 (got {})", c.replicas);
+        anyhow::ensure!(c.compression >= 1, "compression must be >= 1 (got {})", c.compression);
+        anyhow::ensure!(c.als.max_iters >= 1, "als.max_iters must be >= 1");
+        anyhow::ensure!(
+            c.congruence_threshold.is_finite() && (0.0..=1.0).contains(&c.congruence_threshold),
+            "congruence_threshold must be in [0, 1] (got {})",
+            c.congruence_threshold
+        );
+        anyhow::ensure!(c.drift.window >= 1, "drift.window must be >= 1 (got 0)");
+        anyhow::ensure!(
+            c.drift.grow_bar.is_finite() && (0.0..=1.0).contains(&c.drift.grow_bar),
+            "drift.grow_bar must be in [0, 1] (got {})",
+            c.drift.grow_bar
+        );
+        anyhow::ensure!(
+            c.drift.retire_floor.is_finite() && (0.0..=1.0).contains(&c.drift.retire_floor),
+            "drift.retire_floor must be in [0, 1] (got {})",
+            c.drift.retire_floor
+        );
+        anyhow::ensure!(c.drift.min_rank >= 1, "drift.min_rank must be >= 1 (got 0)");
+        // Rank growth would require re-seeding the replica accumulators
+        // from data OCTen does not keep; pin the ceiling at R so the
+        // detector can suspect and retire but never grow.
+        self.cfg.drift.max_rank = self.cfg.rank;
+        self.cfg.drift.min_rank = self.cfg.drift.min_rank.min(self.cfg.rank);
+        Ok(self.cfg)
+    }
+}
+
+/// Compressed size of a mode of dimension `dim`: `⌈dim/compression⌉`,
+/// floored at `rank + 2` (so a rank-`R` CP of the replica tensor stays
+/// identifiable) and at `⌈dim/replicas⌉` (so the stacked `p·q × dim`
+/// compression matrix has full column rank and full-size recovery through
+/// its pseudoinverse is exact on anchors), capped at `dim` (compressing
+/// past the original size buys nothing).
+fn compressed_dim(dim: usize, compression: usize, rank: usize, replicas: usize) -> usize {
+    dim.div_ceil(compression)
+        .max(rank + 2)
+        .max(dim.div_ceil(replicas))
+        .min(dim)
+}
+
+/// One compressed replica: fixed compression matrices plus an OnlineCP
+/// tracker of the compressed tensor. The factor frame (column order,
+/// signs, scales) is the replica's own — it is mapped onto the global
+/// frame only at join time, never mutated to match it, so the `P/Q`
+/// accumulators stay internally consistent forever.
+#[derive(Clone)]
+struct Replica {
+    /// `q_I × I` / `q_J × J` Gaussian compression matrices (fixed).
+    u: Matrix,
+    v: Matrix,
+    /// Compressed factors: `a (q_I × R)`, `b (q_J × R)`, `c (K × R)`
+    /// (unnormalised; scales ride in `c`, OnlineCP-style).
+    a: Matrix,
+    b: Matrix,
+    c: Matrix,
+    /// OnlineCP `P/Q` accumulators for the two compressed modes.
+    p1: Matrix,
+    q1: Matrix,
+    p2: Matrix,
+    q2: Matrix,
+}
+
+fn finite(m: &Matrix) -> bool {
+    m.data().iter().all(|v| v.is_finite())
+}
+
+fn col_dot(a: &Matrix, ca: usize, b: &Matrix, cb: usize) -> f64 {
+    debug_assert_eq!(a.rows(), b.rows());
+    (0..a.rows()).map(|i| a[(i, ca)] * b[(i, cb)]).sum()
+}
+
+/// Per-replica result of one batch: the replica's *next* internal state
+/// (committed only after every replica succeeds — failed ingests publish
+/// nothing and mutate nothing) plus its aligned contributions to the join.
+struct RepOut {
+    next: Replica,
+    /// Scaled, sign-fixed compressed mode-1/2 estimates in global column
+    /// order — the rows this replica contributes to the stacked recovery
+    /// systems. Gated columns carry the compressed anchor itself, which
+    /// the pseudoinverse maps back to the (unchanged) global column.
+    rhs_a: Matrix,
+    rhs_b: Matrix,
+    /// Full-length `C` estimate in global column order, unit-norm over the
+    /// pre-batch rows, sign-fixed. Zero column where gated.
+    c_aligned: Matrix,
+    /// Per global component: λ estimate (`None` where gated).
+    lambda_est: Vec<Option<f64>>,
+    /// `perm[t] = q`: replica column `t` ↔ global component `q` (used to
+    /// mirror a retirement into the replica frame).
+    perm: Vec<usize>,
+    mean_congruence: f64,
+    /// Compressed batch dims (reported as the "sample" dims).
+    y_dims: (usize, usize, usize),
+    /// CPU seconds: compress / accumulator-update / match+align.
+    phases: [f64; 3],
+}
+
+/// The OCTen engine: `p` compressed replicas + the recovered global model,
+/// publishing the same epoch-stamped snapshots as SamBaTen.
+pub struct OcTen {
+    cfg: OcTenConfig,
+    model: CpModel,
+    /// Dims of the stream so far — OCTen never stores the tensor itself.
+    dims: (usize, usize, usize),
+    replicas: Vec<Replica>,
+    /// `I × p·q_I` / `J × p·q_J` pseudoinverses of the stacked compression
+    /// matrices (computed once at init) — full-size recovery per batch is
+    /// one matmul per mode.
+    a_recover: Matrix,
+    b_recover: Matrix,
+    history: BoundedHistory,
+    epoch: u64,
+    detector: DriftDetector,
+    publisher: SnapshotPublisher,
+}
+
+impl OcTen {
+    /// Initialise from a pre-existing tensor: one full CP-ALS bootstraps
+    /// the global model (exactly like [`super::SamBaTen::init`]); each
+    /// replica then compresses the tensor, decomposes it in its own small
+    /// space, aligns its frame to the global components once, and seeds
+    /// its `P/Q` accumulators. The source tensor is *not* retained.
+    pub fn init(x_old: &TensorData, cfg: OcTenConfig) -> Result<Self> {
+        let dims = x_old.dims();
+        let (ni, nj, k0) = dims;
+        anyhow::ensure!(
+            ni >= cfg.rank && nj >= cfg.rank,
+            "tensor modes 1-2 ({ni}x{nj}) must be at least the rank ({})",
+            cfg.rank
+        );
+        anyhow::ensure!(k0 >= 1, "pre-existing tensor must have at least one slice");
+        let als = AlsOptions { seed: cfg.seed, ..cfg.als.clone() };
+        let (mut model, _) = cp_als(x_old, cfg.rank, &als).context("initial decomposition")?;
+        model.normalize();
+
+        let r = cfg.rank;
+        let qi = compressed_dim(ni, cfg.compression, r, cfg.replicas);
+        let qj = compressed_dim(nj, cfg.compression, r, cfg.replicas);
+        let dense = x_old.to_dense();
+        let mut rng = Rng::new(cfg.seed ^ 0x0C7E_2019);
+        let mut replicas = Vec::with_capacity(cfg.replicas);
+        for rep in 0..cfg.replicas {
+            let mut rep_rng = rng.fork(rep as u64);
+            // Entry scale 1/√dim keeps ‖U x‖ on the order of ‖x‖ — purely
+            // cosmetic (matching normalises, the pinv compensates), but it
+            // keeps the compressed magnitudes debuggable.
+            let mut u = Matrix::rand_gaussian(qi, ni, &mut rep_rng);
+            u.scale(1.0 / (ni as f64).sqrt());
+            let mut v = Matrix::rand_gaussian(qj, nj, &mut rep_rng);
+            v.scale(1.0 / (nj as f64).sqrt());
+            // Compress and decompose the history in the replica space.
+            let y = TensorData::Dense(dense.ttm(0, &u).ttm(1, &v));
+            let rep_als =
+                AlsOptions { seed: cfg.seed ^ (0x9E37 + rep as u64), ..cfg.als.clone() };
+            let (mut m, _) =
+                cp_als(&y, r, &rep_als).with_context(|| format!("replica {rep} init"))?;
+            anyhow::ensure!(m.is_finite(), "replica {rep} init produced non-finite factors");
+            // Absorb λ into C (the growing mode) — OnlineCP convention.
+            for t in 0..r {
+                m.factors[2].scale_col(t, m.lambda[t]);
+                m.lambda[t] = 1.0;
+            }
+            // One-time frame alignment to the global components, in the
+            // compressed space (anchors: U·A, V·B, C). Accumulators are
+            // computed *after* the permutation so the replica frame stays
+            // self-consistent.
+            let anchors =
+                [u.matmul(&model.factors[0]), v.matmul(&model.factors[1]), model.factors[2].clone()];
+            let sample = [m.factors[0].clone(), m.factors[1].clone(), m.factors[2].clone()];
+            let mres = match_components(&anchors, &sample, cfg.match_policy);
+            // Invert `perm[t] = q` into a column order (perm is a bijection
+            // here: replica rank == global rank).
+            let mut order = vec![0usize; r];
+            for (t, &q) in mres.perm.iter().enumerate() {
+                order[q] = t;
+            }
+            let a = m.factors[0].gather_cols(&order);
+            let b = m.factors[1].gather_cols(&order);
+            let c = m.factors[2].gather_cols(&order);
+            let p1 = y.mttkrp(0, &a, &b, &c);
+            let p2 = y.mttkrp(1, &a, &b, &c);
+            let q1 = b.gram().hadamard(&c.gram());
+            let q2 = a.gram().hadamard(&c.gram());
+            replicas.push(Replica { u, v, a, b, c, p1, q1, p2, q2 });
+        }
+        // Stack the compression matrices and precompute the recovery
+        // pseudoinverses. `p·q ≥ dim` by construction, and Gaussian stacks
+        // are full column rank almost surely, so `pinv(stack)·stack = I`:
+        // recovery is exact on anchors and least-squares on estimates.
+        let mut u_stack = replicas[0].u.clone();
+        let mut v_stack = replicas[0].v.clone();
+        for rep in &replicas[1..] {
+            u_stack = u_stack.vstack(&rep.u);
+            v_stack = v_stack.vstack(&rep.v);
+        }
+        let a_recover = svd::pinv(&u_stack, None);
+        let b_recover = svd::pinv(&v_stack, None);
+
+        let history = BoundedHistory::new(cfg.drift.window);
+        let detector = DriftDetector::new(cfg.drift.clone(), model.rank());
+        let publisher = SnapshotPublisher::new(dims, &model);
+        Ok(OcTen {
+            cfg,
+            model,
+            dims,
+            replicas,
+            a_recover,
+            b_recover,
+            history,
+            epoch: 0,
+            detector,
+            publisher,
+        })
+    }
+
+    /// Current model (unit-norm columns, weights in λ).
+    pub fn model(&self) -> &CpModel {
+        &self.model
+    }
+
+    /// A wait-free reader over this engine's published snapshots.
+    pub fn handle(&self) -> StreamHandle {
+        self.publisher.handle()
+    }
+
+    /// Attach (or detach) the shared fan-out executor after construction.
+    pub fn set_executor(&mut self, executor: Option<Arc<WorkPool>>) {
+        self.cfg.executor = executor;
+    }
+
+    /// Number of batches successfully ingested (the published epoch).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The most recent per-batch stats (bounded at the drift window).
+    pub fn history(&self) -> &BoundedHistory {
+        &self.history
+    }
+
+    /// The current drift regime.
+    pub fn drift_state(&self) -> &DriftState {
+        self.detector.state()
+    }
+
+    pub fn config(&self) -> &OcTenConfig {
+        &self.cfg
+    }
+
+    /// Ingest one batch: per-replica compressed updates (parallel, pure —
+    /// each works on a clone of its state so a failure anywhere aborts
+    /// with nothing mutated and nothing published), then the join.
+    pub fn ingest(&mut self, x_new: &TensorData) -> Result<BatchStats> {
+        let sw = Stopwatch::started();
+        let (ni, nj, k_old) = self.dims;
+        let (ni2, nj2, k_new) = x_new.dims();
+        anyhow::ensure!(
+            (ni, nj) == (ni2, nj2),
+            "batch modes 1-2 ({ni2}x{nj2}) must match existing tensor ({ni}x{nj})"
+        );
+        anyhow::ensure!(k_new > 0, "empty batch");
+        let xn_new = x_new.norm();
+        anyhow::ensure!(
+            xn_new.is_finite(),
+            "batch contains non-finite values (‖X_new‖ = {xn_new})"
+        );
+        let r = self.model.rank();
+        let gate = self.cfg.congruence_threshold;
+        let policy = self.cfg.match_policy;
+        let model = &self.model;
+        let batch_dense = x_new.to_dense();
+        let run_rep = |_idx: usize, rep: &Replica| -> Result<RepOut> {
+            // 1. Compress the batch into this replica's space.
+            let t0 = std::time::Instant::now();
+            let y = TensorData::Dense(batch_dense.ttm(0, &rep.u).ttm(1, &rep.v));
+            let t_compress = t0.elapsed().as_secs_f64();
+            // 2. OnlineCP update on a clone of the replica state — small
+            // dense matmuls and two R×R solves, never touching old data.
+            let t0 = std::time::Instant::now();
+            let mut next = rep.clone();
+            let m3 = y.mttkrp(2, &next.a, &next.b, &next.c);
+            let g3 = next.a.gram().hadamard(&next.b.gram());
+            let c_new = solve_gram_system(&g3, &m3).context("replica C_new solve")?;
+            let m1 = y.mttkrp(0, &next.a, &next.b, &c_new);
+            next.p1 = next.p1.add(&m1);
+            next.q1 = next.q1.add(&c_new.gram().hadamard(&next.b.gram()));
+            next.a = solve_gram_system(&next.q1, &next.p1).context("replica A solve")?;
+            let m2 = y.mttkrp(1, &next.a, &next.b, &c_new);
+            next.p2 = next.p2.add(&m2);
+            next.q2 = next.q2.add(&c_new.gram().hadamard(&next.a.gram()));
+            next.b = solve_gram_system(&next.q2, &next.p2).context("replica B solve")?;
+            next.c = next.c.vstack(&c_new);
+            anyhow::ensure!(
+                finite(&next.a) && finite(&next.b) && finite(&next.c),
+                "replica update produced non-finite factors (degenerate batch)"
+            );
+            let t_update = t0.elapsed().as_secs_f64();
+            // 3. Join prep: match the replica frame to the global
+            // components in the compressed space and emit aligned,
+            // anchor-scaled contributions.
+            let t0 = std::time::Instant::now();
+            let ua = rep.u.matmul(&model.factors[0]);
+            let vb = rep.v.matmul(&model.factors[1]);
+            let old_rows: Vec<usize> = (0..k_old).collect();
+            let (a_hat, _) = normalize_over_rows(&next.a, &(0..next.a.rows()).collect::<Vec<_>>());
+            let na: Vec<f64> = (0..r).map(|t| next.a.col_norm(t)).collect();
+            let (b_hat, _) = normalize_over_rows(&next.b, &(0..next.b.rows()).collect::<Vec<_>>());
+            let nb: Vec<f64> = (0..r).map(|t| next.b.col_norm(t)).collect();
+            let (c_hat, nc) = normalize_over_rows(&next.c, &old_rows);
+            let c_hat_old = c_hat.gather_rows(&old_rows);
+            let anchors = [ua.clone(), vb.clone(), model.factors[2].clone()];
+            let mres = match_components(
+                &anchors,
+                &[a_hat.clone(), b_hat.clone(), c_hat_old],
+                policy,
+            );
+            let mut order = vec![0usize; r];
+            for (t, &q) in mres.perm.iter().enumerate() {
+                order[q] = t;
+            }
+            let mut rhs_a = Matrix::zeros(rep.u.rows(), r);
+            let mut rhs_b = Matrix::zeros(rep.v.rows(), r);
+            let mut c_aligned = Matrix::zeros(k_old + k_new, r);
+            let mut lambda_est = vec![None; r];
+            let mut cong_sum = 0.0;
+            for q in 0..r {
+                let t = order[q];
+                let cong = mres.congruence[t];
+                cong_sum += cong;
+                let ua_n = ua.col_norm(q);
+                let vb_n = vb.col_norm(q);
+                if cong < gate || !(ua_n > 0.0) || !(vb_n > 0.0) || !(nc[t] > 0.0) {
+                    // Gated: contribute the compressed anchor itself so
+                    // the recovery reproduces the untouched global column.
+                    for i in 0..rhs_a.rows() {
+                        rhs_a[(i, q)] = ua[(i, q)];
+                    }
+                    for i in 0..rhs_b.rows() {
+                        rhs_b[(i, q)] = vb[(i, q)];
+                    }
+                    continue;
+                }
+                // CP sign ambiguity: fix modes 1/2 against the anchors and
+                // push the compensating product onto C.
+                let s_a = if col_dot(&a_hat, t, &ua, q) < 0.0 { -1.0 } else { 1.0 };
+                let s_b = if col_dot(&b_hat, t, &vb, q) < 0.0 { -1.0 } else { 1.0 };
+                for i in 0..rhs_a.rows() {
+                    rhs_a[(i, q)] = s_a * a_hat[(i, t)] * ua_n;
+                }
+                for i in 0..rhs_b.rows() {
+                    rhs_b[(i, q)] = s_b * b_hat[(i, t)] * vb_n;
+                }
+                let s_c = s_a * s_b;
+                for k in 0..k_old + k_new {
+                    c_aligned[(k, q)] = s_c * c_hat[(k, t)];
+                }
+                // Replica component ≈ λ̃ · â∘b̂∘ĉ with λ̃ = ‖a‖‖b‖‖c_old‖;
+                // the anchor satisfies U a_q ∘ V b_q ∘ c_q with norms
+                // (ua_n, vb_n, 1) — so the full-size weight estimate is
+                // λ̃ / (ua_n · vb_n), taken per replica and averaged.
+                lambda_est[q] = Some(na[t] * nb[t] * nc[t] / (ua_n * vb_n));
+            }
+            let t_match = t0.elapsed().as_secs_f64();
+            let (yi, yj, yk) = y.dims();
+            Ok(RepOut {
+                next,
+                rhs_a,
+                rhs_b,
+                c_aligned,
+                lambda_est,
+                perm: mres.perm,
+                mean_congruence: cong_sum / r.max(1) as f64,
+                y_dims: (yi, yj, yk),
+                phases: [t_compress, t_update, t_match],
+            })
+        };
+        // Fan the replicas out exactly like SamBaTen fans its repetitions:
+        // on the shared work-stealing pool when attached, else on scoped
+        // threads. Order-preserving either way, so the join (and therefore
+        // the published model) is deterministic.
+        let results: Vec<Result<RepOut>> = match self.cfg.executor.as_ref() {
+            Some(pool) => pool.parallel_map(&self.replicas, &run_rep),
+            None => parallel_map(&self.replicas, &run_rep),
+        };
+        let mut outs = Vec::with_capacity(results.len());
+        for res in results {
+            outs.push(res?);
+        }
+        // 4. Join: stack the aligned compressed estimates and recover the
+        // full-size factors in one matmul per mode.
+        let t0 = std::time::Instant::now();
+        let mut a_stack = outs[0].rhs_a.clone();
+        let mut b_stack = outs[0].rhs_b.clone();
+        for out in &outs[1..] {
+            a_stack = a_stack.vstack(&out.rhs_a);
+            b_stack = b_stack.vstack(&out.rhs_b);
+        }
+        let mut a_full = self.a_recover.matmul(&a_stack);
+        let mut b_full = self.b_recover.matmul(&b_stack);
+        // C and λ: average the contributing replicas per component; a
+        // component every replica gated keeps its old column (zero-filled
+        // over the new rows, like an unmatched SamBaTen component) and λ.
+        let mut c_full = Matrix::zeros(k_old + k_new, r);
+        let mut lambda = vec![0.0; r];
+        for q in 0..r {
+            let mut n_contrib = 0usize;
+            let mut lam_sum = 0.0;
+            for out in &outs {
+                if let Some(l) = out.lambda_est[q] {
+                    n_contrib += 1;
+                    lam_sum += l;
+                    for k in 0..k_old + k_new {
+                        c_full[(k, q)] += out.c_aligned[(k, q)];
+                    }
+                }
+            }
+            if n_contrib == 0 {
+                for k in 0..k_old {
+                    c_full[(k, q)] = self.model.factors[2][(k, q)];
+                }
+                lambda[q] = self.model.lambda[q];
+            } else {
+                c_full.scale_col(q, 1.0 / n_contrib as f64);
+                let est = lam_sum / n_contrib as f64;
+                let old = self.model.lambda[q];
+                lambda[q] = if old > 0.0 {
+                    // Blend toward the estimate inside the trust region.
+                    0.5 * (old + est.clamp(old / OCTEN_LAMBDA_TRUST, old * OCTEN_LAMBDA_TRUST))
+                } else {
+                    est
+                };
+            }
+        }
+        // Canonical form: unit columns in A/B (recovery-scale artifacts
+        // discarded — λ was estimated separately), C re-normalised over
+        // its full grown length with the norm folded into λ.
+        a_full.normalize_cols();
+        b_full.normalize_cols();
+        let cn = c_full.normalize_cols();
+        for q in 0..r {
+            if cn[q] > 0.0 {
+                lambda[q] *= cn[q];
+            }
+        }
+        let next_model = CpModel::new(a_full, b_full, c_full, lambda);
+        anyhow::ensure!(
+            next_model.is_finite(),
+            "join produced non-finite factors (degenerate recovery)"
+        );
+        let phase_merge_s = t0.elapsed().as_secs_f64();
+        // 5. Commit — every fallible step is behind us; from here the
+        // batch is ingested.
+        self.model = next_model;
+        for (rep, out) in self.replicas.iter_mut().zip(&outs) {
+            rep.a = out.next.a.clone();
+            rep.b = out.next.b.clone();
+            rep.c = out.next.c.clone();
+            rep.p1 = out.next.p1.clone();
+            rep.q1 = out.next.q1.clone();
+            rep.p2 = out.next.p2.clone();
+            rep.q2 = out.next.q2.clone();
+        }
+        self.dims = (ni, nj, k_old + k_new);
+        // 6. Drift observation on the shared signals. Growth never fires
+        // (max_rank is pinned at R); retirement is mirrored into each
+        // replica through its batch permutation so replica rank always
+        // equals global rank.
+        let epoch = self.epoch + 1;
+        let (batch_fit, residual_fraction) = batch_residual(&self.model, x_new, xn_new, k_old, k_new);
+        let activity = component_activity(&self.model, k_old, k_new);
+        let congruences: Vec<f64> = outs.iter().map(|o| o.mean_congruence).collect();
+        let mean_cong_batch = congruences.iter().sum::<f64>() / congruences.len().max(1) as f64;
+        let corroborating = mean_cong_batch < self.cfg.congruence_threshold;
+        match self.detector.observe(epoch, residual_fraction, corroborating, &activity) {
+            DriftAction::None | DriftAction::Grow => {}
+            DriftAction::Retire(retire) => {
+                let keep: Vec<usize> =
+                    (0..self.model.rank()).filter(|q| !retire.contains(q)).collect();
+                self.model.retain_components(&keep);
+                for (rep, out) in self.replicas.iter_mut().zip(&outs) {
+                    // Global component q lives in replica column t with
+                    // perm[t] = q; keep those columns, in global order.
+                    let mut order = vec![0usize; r];
+                    for (t, &q) in out.perm.iter().enumerate() {
+                        order[q] = t;
+                    }
+                    let keep_t: Vec<usize> = keep.iter().map(|&q| order[q]).collect();
+                    rep.a = rep.a.gather_cols(&keep_t);
+                    rep.b = rep.b.gather_cols(&keep_t);
+                    rep.c = rep.c.gather_cols(&keep_t);
+                    rep.p1 = rep.p1.gather_cols(&keep_t);
+                    rep.p2 = rep.p2.gather_cols(&keep_t);
+                    rep.q1 = rep.q1.gather_rows(&keep_t).gather_cols(&keep_t);
+                    rep.q2 = rep.q2.gather_rows(&keep_t).gather_cols(&keep_t);
+                }
+            }
+        }
+        let mut phases = [0.0f64; 3];
+        for out in &outs {
+            for (acc, p) in phases.iter_mut().zip(out.phases) {
+                *acc += p;
+            }
+        }
+        let stats = BatchStats {
+            seconds: sw.elapsed_secs(),
+            sample_dims: outs.iter().map(|o| o.y_dims).collect(),
+            ranks_used: vec![r; outs.len()],
+            mean_congruence: congruences,
+            k_new,
+            phase_sample_s: phases[0],
+            phase_decompose_s: phases[1],
+            phase_match_s: phases[2],
+            phase_merge_s,
+            refine_fallback: false,
+            batch_fit,
+            residual_fraction,
+            component_activity: activity,
+            rank: self.model.rank(),
+            drift: self.detector.state().clone(),
+        };
+        self.epoch = epoch;
+        self.history.push(stats.clone());
+        self.publisher.publish(epoch, self.dims, &self.model, &stats);
+        Ok(stats)
+    }
+}
+
+impl DecompositionEngine for OcTen {
+    fn name(&self) -> &'static str {
+        "octen"
+    }
+    fn ingest(&mut self, x_new: &TensorData) -> Result<BatchStats> {
+        OcTen::ingest(self, x_new)
+    }
+    fn handle(&self) -> StreamHandle {
+        OcTen::handle(self)
+    }
+    fn epoch(&self) -> u64 {
+        OcTen::epoch(self)
+    }
+    fn set_executor(&mut self, executor: Option<Arc<WorkPool>>) {
+        OcTen::set_executor(self, executor)
+    }
+    fn has_executor(&self) -> bool {
+        self.cfg.executor.is_some()
+    }
+    fn model(&self) -> &CpModel {
+        OcTen::model(self)
+    }
+    fn drift_state(&self) -> &DriftState {
+        OcTen::drift_state(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::SyntheticSpec;
+    use crate::metrics::relative_error;
+
+    fn cfg(rank: usize, seed: u64) -> OcTenConfig {
+        OcTenConfig::builder(rank, 4, 2, seed).build().unwrap()
+    }
+
+    #[test]
+    fn builder_validates_and_pins_growth_off() {
+        assert!(OcTenConfig::builder(0, 4, 2, 1).build().is_err(), "rank 0");
+        assert!(OcTenConfig::builder(2, 0, 2, 1).build().is_err(), "replicas 0");
+        assert!(OcTenConfig::builder(2, 4, 0, 1).build().is_err(), "compression 0");
+        assert!(
+            OcTenConfig::builder(2, 4, 2, 1).congruence_threshold(1.5).build().is_err(),
+            "congruence > 1"
+        );
+        let c = OcTenConfig::builder(3, 4, 2, 1)
+            .drift(DriftConfig { enabled: true, max_rank: 99, ..Default::default() })
+            .build()
+            .unwrap();
+        assert_eq!(c.drift().max_rank, 3, "growth ceiling pinned at R");
+        assert!(c.adaptive_rank());
+    }
+
+    #[test]
+    fn compressed_dim_respects_floors() {
+        // Plain compression.
+        assert_eq!(compressed_dim(100, 4, 3, 4), 25);
+        // Identifiability floor: rank + 2.
+        assert_eq!(compressed_dim(100, 50, 8, 4), 25, "dim/replicas floor");
+        assert_eq!(compressed_dim(20, 10, 8, 20), 10, "rank+2 floor");
+        // Never past the original dimension.
+        assert_eq!(compressed_dim(5, 1, 8, 1), 5);
+        // Stacked rank condition: p·q >= dim.
+        for (dim, s, r, p) in [(64, 4, 3, 4), (17, 8, 2, 3), (9, 2, 4, 2)] {
+            assert!(p * compressed_dim(dim, s, r, p) >= dim, "{dim}/{s}/{r}/{p}");
+        }
+    }
+
+    #[test]
+    fn tracks_clean_dense_stream() {
+        let spec = SyntheticSpec::dense(14, 14, 20, 2, 0.01, 42);
+        let (existing, batches, _) = spec.generate_stream(0.4, 4);
+        let (full, _) = spec.generate();
+        let mut e = OcTen::init(&existing, cfg(2, 7)).unwrap();
+        for b in &batches {
+            e.ingest(b).unwrap();
+        }
+        let re = relative_error(&full, e.model());
+        assert!(re < 0.6, "relative error {re}");
+        assert_eq!(e.model().factors[2].rows(), 20);
+        assert_eq!(e.epoch(), batches.len() as u64);
+    }
+
+    #[test]
+    fn ingest_is_deterministic_given_seed() {
+        let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, 1);
+        let (existing, batches, _) = spec.generate_stream(0.5, 3);
+        let run = || {
+            let mut e = OcTen::init(&existing, cfg(2, 99)).unwrap();
+            for b in &batches {
+                e.ingest(b).unwrap();
+            }
+            e.model().clone()
+        };
+        let a = run();
+        let b = run();
+        for f in 0..3 {
+            assert!(a.factors[f].max_abs_diff(&b.factors[f]) < 1e-12, "factor {f}");
+        }
+        assert_eq!(a.lambda, b.lambda);
+    }
+
+    #[test]
+    fn executor_fanout_matches_scoped_threads() {
+        let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, 31);
+        let (existing, batches, _) = spec.generate_stream(0.5, 3);
+        let run = |executor: Option<Arc<WorkPool>>| {
+            let mut c = cfg(2, 77);
+            c = c.with_executor(executor);
+            let mut e = OcTen::init(&existing, c).unwrap();
+            for b in &batches {
+                e.ingest(b).unwrap();
+            }
+            e.model().clone()
+        };
+        let scoped = run(None);
+        let pool = Arc::new(WorkPool::new(2));
+        let pooled = run(Some(pool.clone()));
+        for f in 0..3 {
+            assert!(scoped.factors[f].max_abs_diff(&pooled.factors[f]) < 1e-12, "factor {f}");
+        }
+        assert_eq!(scoped.lambda, pooled.lambda);
+        assert!(pool.stats().tasks_executed > 0, "the replica fan-out really ran on the pool");
+    }
+
+    #[test]
+    fn publishes_epoch_stamped_snapshots_and_rejects_bad_batches() {
+        let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, 8);
+        let (existing, batches, _) = spec.generate_stream(0.5, 3);
+        let mut e = OcTen::init(&existing, cfg(2, 4)).unwrap();
+        let handle = e.handle();
+        let snap0 = handle.snapshot();
+        assert_eq!(snap0.epoch, 0);
+        assert!(snap0.stats.is_none());
+        let mut k = existing.dims().2;
+        for (n, b) in batches.iter().enumerate() {
+            e.ingest(b).unwrap();
+            k += b.dims().2;
+            let snap = handle.snapshot();
+            assert_eq!(snap.epoch, (n + 1) as u64);
+            assert_eq!(snap.dims.2, k);
+            assert_eq!(snap.model.factors[2].rows(), k, "model ↔ dims consistency");
+        }
+        // Wrong mode-1/2 dims and empty batches are rejected pre-mutation.
+        let (bad, _) = SyntheticSpec::dense(9, 10, 2, 2, 0.0, 10).generate();
+        let before = e.epoch();
+        assert!(e.ingest(&bad).is_err());
+        assert_eq!(handle.epoch(), before, "a rejected batch must not advance the epoch");
+        // Old snapshots a slow reader still holds are intact.
+        assert_eq!(snap0.epoch, 0);
+        assert_eq!(snap0.model.factors[2].rows(), existing.dims().2);
+    }
+
+    #[test]
+    fn model_stays_canonical_after_ingests() {
+        let spec = SyntheticSpec::dense(12, 12, 16, 3, 0.02, 7);
+        let (existing, batches, _) = spec.generate_stream(0.4, 4);
+        let mut e = OcTen::init(&existing, cfg(3, 3)).unwrap();
+        for b in &batches {
+            e.ingest(b).unwrap();
+        }
+        let m = e.model();
+        for f in 0..3 {
+            for t in 0..m.rank() {
+                let n = m.factors[f].col_norm(t);
+                assert!((n - 1.0).abs() < 1e-8, "factor {f} col {t} norm {n}");
+            }
+        }
+        assert!(m.lambda.iter().all(|&l| l >= 0.0));
+    }
+
+    #[test]
+    fn sparse_batches_accepted() {
+        let spec = SyntheticSpec::sparse(12, 12, 14, 2, 0.6, 0.01, 43);
+        let (existing, batches, _) = spec.generate_stream(0.5, 3);
+        let mut e = OcTen::init(&existing, cfg(2, 8)).unwrap();
+        for b in &batches {
+            assert!(b.is_sparse());
+            e.ingest(b).unwrap();
+        }
+        assert_eq!(e.model().factors[2].rows(), 14);
+    }
+
+    #[test]
+    fn stats_carry_compressed_sample_dims() {
+        let spec = SyntheticSpec::dense(16, 16, 12, 2, 0.0, 5);
+        let (existing, batches, _) = spec.generate_stream(0.5, 3);
+        let mut e = OcTen::init(&existing, cfg(2, 5)).unwrap();
+        let st = e.ingest(&batches[0]).unwrap();
+        assert_eq!(st.sample_dims.len(), 4, "one entry per replica");
+        for &(qi, qj, kk) in &st.sample_dims {
+            assert_eq!(kk, batches[0].dims().2);
+            assert!(qi < 16 && qj < 16, "compressed dims are smaller ({qi}x{qj})");
+        }
+        assert_eq!(st.ranks_used, vec![2; 4]);
+        assert_eq!(st.rank, 2);
+        assert!((0.0..=1.0).contains(&st.residual_fraction));
+        assert_eq!(st.component_activity.len(), 2);
+        assert_eq!(st.drift, DriftState::Stable);
+    }
+}

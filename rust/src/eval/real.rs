@@ -160,6 +160,6 @@ mod tests {
     fn heavyweights_limit_method_set() {
         let ctx = EvalContext::default();
         assert_eq!(methods_for("Patents", &ctx).len(), 2);
-        assert_eq!(methods_for("NIPS", &ctx).len(), 5);
+        assert_eq!(methods_for("NIPS", &ctx).len(), MethodKind::ALL.len());
     }
 }

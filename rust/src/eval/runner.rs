@@ -2,8 +2,8 @@
 //! stream-runner that feeds every method the same batches under a time
 //! budget (budget overruns become the paper's "N/A" cells).
 
-use crate::baselines::{CpAlsFull, IncrementalDecomposer, OnlineCp, Rlst, SamBaTenMethod, Sdt};
-use crate::coordinator::{SamBaTen, SamBaTenConfig};
+use crate::baselines::{CpAlsFull, EngineMethod, IncrementalDecomposer, OnlineCp, Rlst, Sdt};
+use crate::coordinator::{OcTen, OcTenConfig, SamBaTen, SamBaTenConfig};
 use crate::cp::CpModel;
 use crate::metrics::{fms, relative_error, relative_fitness};
 use crate::tensor::TensorData;
@@ -59,15 +59,17 @@ pub enum MethodKind {
     Sdt,
     Rlst,
     SamBaTen,
+    OcTen,
 }
 
 impl MethodKind {
-    pub const ALL: [MethodKind; 5] = [
+    pub const ALL: [MethodKind; 6] = [
         MethodKind::CpAls,
         MethodKind::OnlineCp,
         MethodKind::Sdt,
         MethodKind::Rlst,
         MethodKind::SamBaTen,
+        MethodKind::OcTen,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -77,6 +79,7 @@ impl MethodKind {
             MethodKind::Sdt => "SDT",
             MethodKind::Rlst => "RLST",
             MethodKind::SamBaTen => "SamBaTen",
+            MethodKind::OcTen => "OCTen",
         }
     }
 }
@@ -119,7 +122,8 @@ pub struct Workload {
 
 /// Run `methods` over the workload. Every method gets the same stream; each
 /// is timed per-ingest and aborted (N/A) past `budget_s`. SamBaTen's engine
-/// configuration comes from `samba_cfg`.
+/// configuration comes from `samba_cfg`; OCTen runs at harness defaults
+/// (4 replicas, 2× compression) at the workload rank, like the baselines.
 pub fn run_stream(
     w: &Workload,
     methods: &[MethodKind],
@@ -139,10 +143,17 @@ pub fn run_stream(
                 MethodKind::OnlineCp => Box::new(OnlineCp::init(&w.existing, w.rank, 12)?),
                 MethodKind::Sdt => Box::new(Sdt::init(&w.existing, w.rank, 13)?),
                 MethodKind::Rlst => Box::new(Rlst::init(&w.existing, w.rank, 14)?),
-                MethodKind::SamBaTen => Box::new(SamBaTenMethod(SamBaTen::init(
-                    &w.existing,
-                    samba_cfg.clone(),
-                )?)),
+                MethodKind::SamBaTen => Box::new(EngineMethod::new(
+                    "SamBaTen",
+                    Box::new(SamBaTen::init(&w.existing, samba_cfg.clone())?),
+                )),
+                MethodKind::OcTen => Box::new(EngineMethod::new(
+                    "OCTen",
+                    Box::new(OcTen::init(
+                        &w.existing,
+                        OcTenConfig::builder(w.rank, 4, 2, 16).build()?,
+                    )?),
+                )),
             })
         })();
         let mut method = match built {
@@ -224,16 +235,18 @@ mod tests {
         let w = workload();
         let cfg = SamBaTenConfig::builder(2, 2, 2, 7).build().unwrap();
         let out = run_stream(&w, &MethodKind::ALL, &cfg, 60.0).unwrap();
-        assert_eq!(out.len(), 5);
+        assert_eq!(out.len(), 6);
         for o in &out {
             assert!(o.completed, "{} N/A", o.method);
             assert!(o.rel_err.is_finite());
         }
-        // Order preserved: CP_ALS first per ALL ordering.
+        // Order preserved: CP_ALS first per ALL ordering, engines last.
         assert_eq!(out[0].method, "CP_ALS");
         assert_eq!(out[4].method, "SamBaTen");
+        assert_eq!(out[5].method, "OCTen");
         // Fitness vs CP_ALS present for non-CP_ALS methods.
         assert!(out[4].fitness_vs_cpals.is_some());
+        assert!(out[5].fitness_vs_cpals.is_some());
         assert!(out[0].fitness_vs_cpals.is_none());
         assert!(out[4].fms_vs_truth.is_some());
     }

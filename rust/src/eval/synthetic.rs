@@ -129,7 +129,7 @@ fn error_table(
     )?;
     let mut all = Vec::new();
     println!("{label}: relative error (mean ± std over {} runs)", ctx.iters);
-    let widths = [8, 15, 15, 15, 15, 15];
+    let widths = [8, 15, 15, 15, 15, 15, 15];
     let mut header = vec!["I=J=K".to_string()];
     header.extend(MethodKind::ALL.iter().map(|m| m.name().to_string()));
     print_row(&header, &widths);
@@ -260,8 +260,13 @@ pub fn fig6(ctx: &EvalContext) -> Result<()> {
         let data = error_table(ctx, dense, &title, "fig6_tmp.csv")?;
         println!("\nFigure 6 ({variant}): relative fitness vs CP_ALS");
         for (row, iters) in &data {
-            let methods =
-                [MethodKind::OnlineCp, MethodKind::Sdt, MethodKind::Rlst, MethodKind::SamBaTen];
+            let methods = [
+                MethodKind::OnlineCp,
+                MethodKind::Sdt,
+                MethodKind::Rlst,
+                MethodKind::SamBaTen,
+                MethodKind::OcTen,
+            ];
             for m in methods {
                 let fit: Vec<f64> = iters
                     .iter()

@@ -3,16 +3,19 @@
 //! Subcommands:
 //!   generate    synthesize a tensor (.tns) with known factors
 //!   decompose   full CP-ALS of a .tns file
-//!   run         incremental SamBaTen over a streamed tensor
+//!   run         incremental decomposition over a streamed tensor
+//!               (--engine sambaten|octen selects the ingest algorithm)
 //!   serve       multi-stream decomposition service demo (queries during
-//!               ingest through wait-free StreamHandles)
+//!               ingest through wait-free StreamHandles; engines mixable
+//!               per stream)
 //!   getrank     estimate CP rank via CORCONDIA
 //!   eval        regenerate a paper table/figure (see DESIGN.md §3)
+//!   bench-diff  compare two BENCH_micro.json files, fail on regressions
 //!   info        artifact bank / environment report
 
 use anyhow::{bail, Context, Result};
 use sambaten::config::RunConfig;
-use sambaten::coordinator::{SamBaTen, SamBaTenConfig, StreamHandle};
+use sambaten::coordinator::{EngineConfig, OcTenConfig, SamBaTenConfig, StreamHandle};
 use sambaten::corcondia::{getrank, GetRankOptions};
 use sambaten::cp::{cp_als, AlsOptions};
 use sambaten::datagen::SyntheticSpec;
@@ -91,6 +94,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(&args),
         "getrank" => cmd_getrank(&args),
         "eval" => cmd_eval(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -110,18 +114,25 @@ COMMANDS:
   generate   --dims I,J,K --rank R [--density 1.0] [--noise 0.05] [--seed 42] --out X.tns
   decompose  --input X.tns --rank R [--max-iters 1000] [--tol 1e-5] [--save model.cp]
   run        --input X.tns | --dims I,J,K  [--config run.toml] [--rank R] [--batch B]
-             [--sampling-factor S] [--repetitions r] [--engine native|pjrt]
+             [--sampling-factor S] [--repetitions r]
+             [--engine sambaten|octen|native|pjrt]
              [--quality-control] [--adaptive] [--seed N] [--save model.cp]
-             (--adaptive turns on drift-aware rank adaptation: grow on
+             (--engine sambaten|octen picks the ingest algorithm;
+             native|pjrt picks sambaten's inner ALS solver.
+             --adaptive turns on drift-aware rank adaptation: grow on
              sustained residual energy, retire inactive components)
   serve      [--streams 2] [--dims 48,48,40] [--rank 4] [--batch 4] [--density 1.0]
              [--queue-cap 4] [--seed 42] [--mode pool|dedicated] [--workers 0]
-             [--adaptive]
+             [--engine sambaten|octen|mixed] [--adaptive]
              multi-stream service demo (pool mode shares a work-stealing
              scheduler across all streams; --workers 0 sizes it to the
-             hardware; dedicated mode is the one-thread-per-stream baseline)
+             hardware; dedicated mode is the one-thread-per-stream baseline;
+             --engine mixed alternates sambaten/octen across streams)
   getrank    --input X.tns [--max-rank 10] [--iters 2]
   eval       <{}|all> [--iters N] [--budget SECONDS] [--scale F] [--out-dir results] [--pjrt]
+  bench-diff OLD.json NEW.json [--threshold 0.10]
+             compare two benchkit reports; exits non-zero on any benchmark
+             that slowed down (or throughput that dropped) past the threshold
   info       artifact bank / environment report",
         EXPERIMENTS.join("|")
     );
@@ -235,8 +246,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.has("seed") {
         cfg.seed = args.get_or("seed", cfg.seed)?;
     }
-    if args.has("engine") {
-        cfg.engine = args.get("engine").unwrap().to_string();
+    if let Some(e) = args.get("engine") {
+        // `--engine` selects either the ingest algorithm or, for backwards
+        // compatibility, sambaten's inner solver (native|pjrt).
+        match e {
+            "sambaten" | "octen" => cfg.algorithm = e.to_string(),
+            _ => cfg.engine = e.to_string(),
+        }
     }
     if args.has("quality-control") {
         cfg.quality_control = true;
@@ -269,16 +285,23 @@ fn cmd_run(args: &Args) -> Result<()> {
             (TensorData::Sparse(a), TensorData::Sparse(b))
         }
     };
-    let mut engine_cfg = cfg.to_engine_config()?;
+    let mut spec = cfg.to_engine_spec()?;
     if cfg.engine == "pjrt" {
         anyhow::ensure!(
             artifacts_available(),
             "engine=pjrt but no artifact bank (run `make artifacts`)"
         );
         let svc = PjrtService::start(artifacts_dir())?;
-        engine_cfg = engine_cfg.with_solver(std::sync::Arc::new(PjrtAlsSolver::new(svc)));
+        spec = match spec {
+            EngineConfig::SamBaTen(sc) => {
+                EngineConfig::SamBaTen(sc.with_solver(Arc::new(PjrtAlsSolver::new(svc))))
+            }
+            // RunConfig::validate rejects octen+pjrt up front.
+            other => other,
+        };
     }
-    let mut engine = SamBaTen::init(&existing, engine_cfg)?;
+    let mut engine = spec.init(&existing)?;
+    println!("engine: {}", engine.name());
     println!("init fit on existing: {:.4}", engine.model().fit(&existing));
     let sparse = rest.is_sparse();
     // The pump's batches cross the COO→CSF boundary at the same bar the
@@ -312,11 +335,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             stats.drift,
         );
     }
+    // Score against the full tensor the CLI already holds — identical to
+    // the engine's accumulated view once the stream drains, and the only
+    // option for engines (octen) that never materialise the full tensor.
     let model = engine.model();
     println!(
         "done: {n} batches in {total:.2}s, final rel_err {:.4}, fit {:.4}, rank {} ({})",
-        relative_error(engine.tensor(), model),
-        model.fit(engine.tensor()),
+        relative_error(&full, model),
+        model.fit(&full),
         model.rank(),
         engine.drift_state(),
     );
@@ -345,7 +371,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let queue_cap = args.get_or("queue-cap", 4usize)?;
     let workers = args.get_or("workers", 0usize)?;
     let mode = args.get("mode").unwrap_or("pool");
+    let engine_choice = args.get("engine").unwrap_or("sambaten");
     anyhow::ensure!(n_streams >= 1, "--streams must be >= 1");
+    anyhow::ensure!(
+        matches!(engine_choice, "sambaten" | "octen" | "mixed"),
+        "--engine must be sambaten|octen|mixed (got {engine_choice:?})"
+    );
 
     let svc_cfg = match mode {
         "pool" => ServiceConfig::pooled(workers),
@@ -365,12 +396,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let name = format!("stream-{s}");
         let spec = SyntheticSpec { i, j, k, rank, density, noise: 0.05, seed: seed + s as u64 };
         let (existing, batches, _) = spec.generate_stream(0.25, batch);
-        let cfg = SamBaTenConfig::builder(rank, 2, 4, seed ^ ((s as u64) << 8))
-            .adaptive_rank(args.has("adaptive"))
-            .build()?;
+        let stream_seed = seed ^ ((s as u64) << 8);
+        // `mixed` alternates engines across streams — the side-by-side A/B.
+        let cfg: EngineConfig = match (engine_choice, s % 2) {
+            ("octen", _) | ("mixed", 1) => OcTenConfig::builder(rank, 4, 2, stream_seed)
+                .adaptive_rank(args.has("adaptive"))
+                .build()?
+                .into(),
+            _ => SamBaTenConfig::builder(rank, 2, 4, stream_seed)
+                .adaptive_rank(args.has("adaptive"))
+                .build()?
+                .into(),
+        };
+        let kind = cfg.kind();
         svc.register(&name, &existing, cfg)?;
         println!(
-            "registered {name}: existing {:?}, {} batches pending",
+            "registered {name} ({kind}): existing {:?}, {} batches pending",
             existing.dims(),
             batches.len()
         );
@@ -431,9 +472,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("\n== service report ==");
     for st in svc.shutdown() {
         println!(
-            "  {:<12} epoch {:>3}  rank {} ({})  batches {:>3}  slices {:>4}  errors {}  \
-             ingest {:.2}s",
-            st.name, st.epoch, st.rank, st.drift, st.batches, st.slices, st.errors,
+            "  {:<12} {:<9} epoch {:>3}  rank {} ({})  batches {:>3}  slices {:>4}  \
+             errors {}  ingest {:.2}s",
+            st.name, st.engine, st.epoch, st.rank, st.drift, st.batches, st.slices, st.errors,
             st.ingest_seconds
         );
     }
@@ -468,6 +509,30 @@ fn cmd_eval(args: &Args) -> Result<()> {
         use_pjrt: args.has("pjrt"),
     };
     run_experiment(id, &ctx)
+}
+
+/// Compare two `BENCH_micro.json` reports (benchkit `sambaten-bench-v1`
+/// schema) and fail if anything regressed past the threshold — the CI
+/// regression gate (`sambaten bench-diff old.json new.json`).
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    anyhow::ensure!(
+        args.positional.len() == 2,
+        "usage: sambaten bench-diff OLD.json NEW.json [--threshold 0.10]"
+    );
+    let threshold = args.get_or("threshold", 0.10f64)?;
+    let old_text = std::fs::read_to_string(&args.positional[0])
+        .with_context(|| format!("reading {}", args.positional[0]))?;
+    let new_text = std::fs::read_to_string(&args.positional[1])
+        .with_context(|| format!("reading {}", args.positional[1]))?;
+    let report = sambaten::util::benchdiff::diff_reports(&old_text, &new_text, threshold)?;
+    print!("{report}");
+    anyhow::ensure!(
+        report.regressions() == 0,
+        "{} benchmark regression(s) beyond the {:.0}% threshold",
+        report.regressions(),
+        threshold * 100.0
+    );
+    Ok(())
 }
 
 fn cmd_info() -> Result<()> {

@@ -3,9 +3,12 @@
 //! GOCPT frames online CP as a *generalized service* covering many
 //! concurrent factorization tasks evolving at different rates, and the
 //! ROADMAP north star is a production system serving heavy traffic — but a
-//! bare [`SamBaTen`] engine serves exactly one tensor and requires the
-//! caller to own its `&mut` write path. This module is the serving layer
-//! on top of the coordinator's snapshot split:
+//! bare engine serves exactly one tensor and requires the caller to own
+//! its `&mut` write path. This module is the serving layer on top of the
+//! coordinator's snapshot split, engine-agnostic: streams are registered
+//! against the [`DecompositionEngine`] trait, so sampling-based
+//! (`SamBaTen`) and compressed-replica (`OcTen`) streams run side by side
+//! in one process, selected per stream at registration:
 //!
 //! * [`DecompositionService`] — a registry of named streams. By default
 //!   every stream is a *key* on a shared work-stealing
@@ -43,7 +46,7 @@
 //! share it across producer threads.
 
 use crate::coordinator::{
-    BatchStats, DriftState, ModelSnapshot, SamBaTen, SamBaTenConfig, StreamHandle,
+    BatchStats, DecompositionEngine, DriftState, EngineConfig, ModelSnapshot, StreamHandle,
 };
 use crate::pool::{KeyHandle, PoolStats, WorkPool};
 use crate::tensor::TensorData;
@@ -91,6 +94,10 @@ impl Ticket {
 #[derive(Clone, Debug)]
 pub struct StreamStats {
     pub name: String,
+    /// Which engine drives this stream (`"sambaten"` / `"octen"`) — the
+    /// service runs them side by side, selected per stream at
+    /// registration.
+    pub engine: &'static str,
     /// Published epoch (successful ingests) at the time of the query.
     pub epoch: u64,
     /// Decomposition rank of the published model (can change over time
@@ -161,7 +168,8 @@ enum StreamBackend {
         key: KeyHandle,
         /// Keeps the engine alive between batches; each queued job holds
         /// its own clone. Only the key's (serial) runner ever locks it.
-        engine: Arc<Mutex<SamBaTen>>,
+        /// Type-erased: sambaten and octen streams coexist in one registry.
+        engine: Arc<Mutex<Box<dyn DecompositionEngine>>>,
         /// Set when an ingest panicked: the model's integrity is unknown,
         /// so later tickets fail fast instead of compounding the damage.
         poisoned: Arc<AtomicBool>,
@@ -170,6 +178,8 @@ enum StreamBackend {
 
 struct StreamEntry {
     handle: StreamHandle,
+    /// Engine identifier, surfaced through [`StreamStats::engine`].
+    engine_name: &'static str,
     stats: Arc<StatsInner>,
     backend: StreamBackend,
 }
@@ -310,27 +320,56 @@ impl DecompositionService {
     /// Register a new stream: runs the initial full decomposition on the
     /// caller's thread (so init errors surface here), then wires the
     /// stream into the scheduler. Returns the stream's read handle.
+    ///
+    /// Engine selection is per stream: pass a `SamBaTenConfig`, an
+    /// `OcTenConfig`, or an [`EngineConfig`] — sambaten and octen streams
+    /// run side by side in one service.
     pub fn register(
         &self,
         name: &str,
         existing: &TensorData,
-        cfg: SamBaTenConfig,
+        cfg: impl Into<EngineConfig>,
+    ) -> Result<StreamHandle> {
+        self.register_with_engine(name, existing, cfg.into())
+    }
+
+    /// [`register`](Self::register) with an explicit [`EngineConfig`] —
+    /// the entry point for callers that resolve the engine kind at runtime
+    /// (the CLI's `--engine` flag, `RunConfig::algorithm`).
+    pub fn register_with_engine(
+        &self,
+        name: &str,
+        existing: &TensorData,
+        cfg: EngineConfig,
     ) -> Result<StreamHandle> {
         let engine =
-            SamBaTen::init(existing, cfg).with_context(|| format!("initialising stream {name:?}"))?;
-        self.register_engine(name, engine)
+            cfg.init(existing).with_context(|| format!("initialising stream {name:?}"))?;
+        self.register_boxed(name, engine)
     }
 
     /// Register a stream around an already-constructed engine (e.g. resumed
     /// from a checkpointed model via `SamBaTen::from_model`).
-    pub fn register_engine(&self, name: &str, mut engine: SamBaTen) -> Result<StreamHandle> {
+    pub fn register_engine(
+        &self,
+        name: &str,
+        engine: impl DecompositionEngine + 'static,
+    ) -> Result<StreamHandle> {
+        self.register_boxed(name, Box::new(engine))
+    }
+
+    fn register_boxed(
+        &self,
+        name: &str,
+        mut engine: Box<dyn DecompositionEngine>,
+    ) -> Result<StreamHandle> {
         let mut streams = self.lock_streams();
         anyhow::ensure!(!streams.contains_key(name), "stream {name:?} is already registered");
         let handle = engine.handle();
+        let engine_name = engine.name();
         let stats = Arc::new(StatsInner::default());
         let backend = match &self.pool {
             Some(pool) => {
-                if self.fanout_on_pool && engine.config().executor().is_none() {
+                if self.fanout_on_pool && !engine.has_executor() {
                     engine.set_executor(Some(pool.clone()));
                 }
                 let key = pool
@@ -346,13 +385,16 @@ impl DecompositionService {
                 let (tx, rx) = mpsc::sync_channel::<Job>(self.queue_cap);
                 let worker_stats = stats.clone();
                 let worker = std::thread::Builder::new()
-                    .name(format!("sambaten-serve-{name}"))
+                    .name(format!("{engine_name}-serve-{name}"))
                     .spawn(move || dedicated_worker_loop(engine, rx, worker_stats))
                     .context("spawning stream worker")?;
                 StreamBackend::Dedicated { tx, worker }
             }
         };
-        streams.insert(name.to_string(), StreamEntry { handle: handle.clone(), stats, backend });
+        streams.insert(
+            name.to_string(),
+            StreamEntry { handle: handle.clone(), engine_name, stats, backend },
+        );
         Ok(handle)
     }
 
@@ -364,7 +406,7 @@ impl DecompositionService {
     pub fn ingest(&self, name: &str, batch: TensorData) -> Result<Ticket> {
         enum Submit {
             Dedicated(mpsc::SyncSender<Job>),
-            Pooled(KeyHandle, Arc<Mutex<SamBaTen>>, Arc<AtomicBool>),
+            Pooled(KeyHandle, Arc<Mutex<Box<dyn DecompositionEngine>>>, Arc<AtomicBool>),
         }
         let (submit, stats) = {
             let streams = self.lock_streams();
@@ -424,7 +466,7 @@ impl DecompositionService {
     pub fn stats(&self, name: &str) -> Result<StreamStats> {
         let streams = self.lock_streams();
         let entry = streams.get(name).ok_or_else(|| anyhow!("unknown stream {name:?}"))?;
-        Ok(snapshot_stats(name, &entry.handle, &entry.stats))
+        Ok(snapshot_stats(name, entry.engine_name, &entry.handle, &entry.stats))
     }
 
     /// Registered stream names, sorted.
@@ -462,10 +504,10 @@ impl DecompositionService {
             .lock_streams()
             .remove(name)
             .ok_or_else(|| anyhow!("unknown stream {name:?}"))?;
-        let StreamEntry { handle, stats, backend } = entry;
+        let StreamEntry { handle, engine_name, stats, backend } = entry;
         let wait = begin_stop(backend);
         finish_stop(wait, &stats);
-        Ok(snapshot_stats(name, &handle, &stats))
+        Ok(snapshot_stats(name, engine_name, &handle, &stats))
     }
 
     /// Graceful shutdown of every stream: all queues are closed first
@@ -477,20 +519,21 @@ impl DecompositionService {
     pub fn shutdown(&self) -> Vec<StreamStats> {
         let entries: Vec<(String, StreamEntry)> = self.lock_streams().drain().collect();
         // Phase 1: close every stream so they all drain in parallel.
-        let closing: Vec<(String, StreamHandle, Arc<StatsInner>, StopWait)> = entries
+        type Closing = (String, &'static str, StreamHandle, Arc<StatsInner>, StopWait);
+        let closing: Vec<Closing> = entries
             .into_iter()
             .map(|(name, entry)| {
-                let StreamEntry { handle, stats, backend } = entry;
+                let StreamEntry { handle, engine_name, stats, backend } = entry;
                 let wait = begin_stop(backend);
-                (name, handle, stats, wait)
+                (name, engine_name, handle, stats, wait)
             })
             .collect();
         // Phase 2: join/drain each and collect final stats.
         let mut finals: Vec<StreamStats> = closing
             .into_iter()
-            .map(|(name, handle, stats, wait)| {
+            .map(|(name, engine_name, handle, stats, wait)| {
                 finish_stop(wait, &stats);
-                snapshot_stats(&name, &handle, &stats)
+                snapshot_stats(&name, engine_name, &handle, &stats)
             })
             .collect();
         finals.sort_by(|a, b| a.name.cmp(&b.name));
@@ -549,11 +592,17 @@ fn finish_stop(wait: StopWait, stats: &StatsInner) {
     }
 }
 
-fn snapshot_stats(name: &str, handle: &StreamHandle, stats: &StatsInner) -> StreamStats {
+fn snapshot_stats(
+    name: &str,
+    engine: &'static str,
+    handle: &StreamHandle,
+    stats: &StatsInner,
+) -> StreamStats {
     // One load so epoch, rank and drift come from the same snapshot.
     let snap = handle.snapshot();
     StreamStats {
         name: name.to_string(),
+        engine,
         epoch: snap.epoch,
         rank: snap.rank(),
         drift: snap.drift.clone(),
@@ -572,7 +621,7 @@ fn snapshot_stats(name: &str, handle: &StreamHandle, stats: &StatsInner) -> Stre
 /// survives), account stats, resolve the ticket.
 fn run_pooled_ingest(
     name: &str,
-    engine: &Mutex<SamBaTen>,
+    engine: &Mutex<Box<dyn DecompositionEngine>>,
     poisoned: &AtomicBool,
     batch: &TensorData,
     stats: &StatsInner,
@@ -608,7 +657,11 @@ fn run_pooled_ingest(
 /// Dedicated-mode stream worker (the A/B baseline): `recv` keeps yielding
 /// queued jobs after every sender is dropped and only then disconnects —
 /// that property *is* the drain-on-shutdown guarantee.
-fn dedicated_worker_loop(mut engine: SamBaTen, rx: mpsc::Receiver<Job>, stats: Arc<StatsInner>) {
+fn dedicated_worker_loop(
+    mut engine: Box<dyn DecompositionEngine>,
+    rx: mpsc::Receiver<Job>,
+    stats: Arc<StatsInner>,
+) {
     while let Ok(job) = rx.recv() {
         let t0 = std::time::Instant::now();
         let result = engine.ingest(&job.batch);
@@ -622,6 +675,7 @@ fn dedicated_worker_loop(mut engine: SamBaTen, rx: mpsc::Receiver<Job>, stats: A
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{OcTenConfig, SamBaTenConfig};
     use crate::datagen::SyntheticSpec;
     use crate::tensor::Tensor3;
 
@@ -812,6 +866,60 @@ mod tests {
         }
         svc.shutdown();
         assert!(svc.snapshot_all().is_empty());
+    }
+
+    #[test]
+    fn mixed_engines_run_side_by_side() {
+        // The tentpole acceptance: one service, one shared pool, a
+        // sampling-based stream and a compressed-replica stream serving
+        // concurrently — same tickets, same stats, same snapshot surface.
+        for svc in both_modes() {
+            let (ex_a, batches_a) = small_stream(21);
+            let (ex_b, batches_b) = small_stream(22);
+            svc.register("samba", &ex_a, cfg(23)).unwrap();
+            let octen_cfg = OcTenConfig::builder(2, 3, 2, 24).build().unwrap();
+            svc.register("octen", &ex_b, octen_cfg).unwrap();
+            for (b_a, b_b) in batches_a.iter().zip(&batches_b) {
+                let t_a = svc.ingest("samba", b_a.clone()).unwrap();
+                let t_b = svc.ingest("octen", b_b.clone()).unwrap();
+                t_a.wait().unwrap();
+                t_b.wait().unwrap();
+            }
+            let st_a = svc.stats("samba").unwrap();
+            let st_b = svc.stats("octen").unwrap();
+            assert_eq!(st_a.engine, "sambaten");
+            assert_eq!(st_b.engine, "octen");
+            assert_eq!(st_a.epoch, batches_a.len() as u64);
+            assert_eq!(st_b.epoch, batches_b.len() as u64);
+            assert_eq!((st_a.errors, st_b.errors), (0, 0));
+            // Both streams publish through the same snapshot surface.
+            let all = svc.snapshot_all();
+            assert_eq!(all.len(), 2);
+            for (_, s) in &all {
+                assert_eq!(s.model.factors[2].rows(), s.dims.2);
+                assert_eq!(s.epoch, batches_a.len() as u64);
+            }
+            svc.shutdown();
+        }
+    }
+
+    #[test]
+    fn register_with_engine_resolves_kind_at_runtime() {
+        let svc = DecompositionService::with_config(ServiceConfig::pooled(2));
+        let (existing, batches) = small_stream(25);
+        for (name, kind) in [("s", "sambaten"), ("o", "octen")] {
+            let ec: EngineConfig = if kind == "octen" {
+                OcTenConfig::builder(2, 3, 2, 26).build().unwrap().into()
+            } else {
+                cfg(26).into()
+            };
+            assert_eq!(ec.kind(), kind);
+            svc.register_with_engine(name, &existing, ec).unwrap();
+            svc.ingest(name, batches[0].clone()).unwrap().wait().unwrap();
+            let st = svc.stats(name).unwrap();
+            assert_eq!((st.engine, st.epoch), (kind, 1));
+        }
+        svc.shutdown();
     }
 
     #[test]

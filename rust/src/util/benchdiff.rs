@@ -1,0 +1,558 @@
+//! Benchmark regression differ for the benchkit JSON reports
+//! (`sambaten bench-diff old.json new.json`).
+//!
+//! Compares two `sambaten-bench-v1` files record by record: a `bench` row
+//! regresses when its new median slows down past the threshold; a `value`
+//! row with a throughput unit (ending in `/s`) regresses when it drops
+//! past the threshold. Other value rows (errors, counts) are reported but
+//! never gate — their preferred direction is metric-specific and the fit
+//! bands in the test suite already police quality. The JSON parser is
+//! hand-rolled (no serde in the offline crate set), shaped like
+//! `config::toml_min`.
+
+use anyhow::{bail, Context, Result};
+use std::fmt;
+
+/// Sub-microsecond medians are dominated by timer noise: a "regression"
+/// from 80ns to 120ns is not actionable, so rows only gate when the
+/// absolute slowdown also clears this floor.
+const ABS_FLOOR_S: f64 = 1e-6;
+
+// ---------------------------------------------------------------------------
+// Minimal JSON value + recursive-descent parser.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Obj(Vec<(String, Json)>),
+    Arr(Vec<Json>),
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        anyhow::ensure!(p.pos == p.bytes.len(), "trailing data after JSON value");
+        Ok(v)
+    }
+
+    fn get<'a>(&'a self, key: &str) -> Option<&'a Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON at byte {}", self.pos))
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.peek()?;
+        anyhow::ensure!(got == b, "expected {:?} at byte {}, got {:?}", b as char, self.pos, got as char);
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        self.skip_ws();
+        anyhow::ensure!(
+            self.bytes[self.pos..].starts_with(word.as_bytes()),
+            "bad JSON literal at byte {}",
+            self.pos
+        );
+        self.pos += word.len();
+        Ok(v)
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            pairs.push((key, self.value()?));
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                c => bail!("expected ',' or '}}' at byte {}, got {:?}", self.pos, c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => bail!("expected ',' or ']' at byte {}, got {:?}", self.pos, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(&b) = self.bytes.get(self.pos) else {
+                bail!("unterminated JSON string");
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(&esc) = self.bytes.get(self.pos) else {
+                        bail!("unterminated escape in JSON string");
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            anyhow::ensure!(
+                                self.pos + 4 <= self.bytes.len(),
+                                "truncated \\u escape"
+                            );
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])?;
+                            let code = u32::from_str_radix(hex, 16).context("bad \\u escape")?;
+                            // Surrogates don't occur in benchkit output; map
+                            // them to the replacement character rather than
+                            // failing the whole diff.
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.pos += 4;
+                        }
+                        c => bail!("unknown escape \\{}", c as char),
+                    }
+                }
+                _ => {
+                    // Re-assemble multi-byte UTF-8 sequences.
+                    let start = self.pos - 1;
+                    let len = match b {
+                        0x00..=0x7f => 1,
+                        0xc0..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        _ => 4,
+                    };
+                    anyhow::ensure!(start + len <= self.bytes.len(), "truncated UTF-8");
+                    out.push_str(std::str::from_utf8(&self.bytes[start..start + len])?);
+                    self.pos = start + len;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        let n: f64 = text
+            .parse()
+            .with_context(|| format!("bad JSON number {text:?} at byte {start}"))?;
+        Ok(Json::Num(n))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Record extraction + diff.
+// ---------------------------------------------------------------------------
+
+/// One record pulled out of a report: `(is_bench, value, unit)`. Bench
+/// rows carry their median seconds; value rows their scalar + unit.
+#[derive(Clone, Debug)]
+struct Entry {
+    name: String,
+    is_bench: bool,
+    value: f64,
+    unit: String,
+}
+
+fn extract(text: &str, which: &str) -> Result<Vec<Entry>> {
+    let root = Json::parse(text).with_context(|| format!("parsing {which} report"))?;
+    let schema = root.get("schema").and_then(Json::as_str).unwrap_or("");
+    anyhow::ensure!(
+        schema == "sambaten-bench-v1",
+        "{which} report has schema {schema:?}, expected \"sambaten-bench-v1\""
+    );
+    let Some(Json::Arr(records)) = root.get("records") else {
+        bail!("{which} report has no \"records\" array");
+    };
+    let mut out = Vec::new();
+    for r in records {
+        let name = r.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+        if name.is_empty() {
+            continue;
+        }
+        match r.get("kind").and_then(Json::as_str) {
+            Some("bench") => {
+                // median_s is null when the sample was non-finite — skip.
+                if let Some(v) = r.get("median_s").and_then(Json::as_f64) {
+                    out.push(Entry { name, is_bench: true, value: v, unit: "s".into() });
+                }
+            }
+            Some("value") => {
+                if let Some(v) = r.get("value").and_then(Json::as_f64) {
+                    let unit =
+                        r.get("unit").and_then(Json::as_str).unwrap_or("").to_string();
+                    out.push(Entry { name, is_bench: false, value: v, unit });
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(out)
+}
+
+/// Outcome of one compared row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// Within the threshold either way (or a direction-less value row).
+    Ok,
+    /// Beyond the threshold in the good direction.
+    Improved,
+    /// Beyond the threshold in the bad direction — gates the diff.
+    Regressed,
+    /// Present in the old report only.
+    Missing,
+    /// Present in the new report only.
+    Added,
+}
+
+/// One line of the diff report.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub name: String,
+    pub unit: String,
+    pub old: f64,
+    pub new: f64,
+    /// Relative change `new/old - 1` (0 when old is 0).
+    pub delta: f64,
+    pub status: Status,
+}
+
+/// The full comparison; render with `Display`, gate on [`regressions`].
+#[derive(Clone, Debug)]
+pub struct BenchDiff {
+    pub threshold: f64,
+    pub rows: Vec<DiffRow>,
+}
+
+impl BenchDiff {
+    /// Number of rows that regressed past the threshold.
+    pub fn regressions(&self) -> usize {
+        self.rows.iter().filter(|r| r.status == Status::Regressed).count()
+    }
+}
+
+/// Throughput-style units (higher is better): `batches/s`, `slices/s`, ...
+fn higher_is_better(unit: &str) -> bool {
+    unit.ends_with("/s")
+}
+
+/// Compare two benchkit JSON reports. Rows are matched by name; bench rows
+/// regress when the new median exceeds `old · (1 + threshold)` (and the
+/// slowdown clears an absolute 1µs noise floor), throughput values when
+/// they drop below `old · (1 − threshold)`. Names present on only one side
+/// are reported as missing/added but never gate.
+pub fn diff_reports(old_text: &str, new_text: &str, threshold: f64) -> Result<BenchDiff> {
+    anyhow::ensure!(
+        threshold.is_finite() && threshold > 0.0,
+        "threshold must be a positive fraction (e.g. 0.10 for 10%)"
+    );
+    let old = extract(old_text, "old")?;
+    let new = extract(new_text, "new")?;
+    let mut rows = Vec::new();
+    for o in &old {
+        let Some(n) = new.iter().find(|n| n.name == o.name && n.is_bench == o.is_bench)
+        else {
+            rows.push(DiffRow {
+                name: o.name.clone(),
+                unit: o.unit.clone(),
+                old: o.value,
+                new: f64::NAN,
+                delta: 0.0,
+                status: Status::Missing,
+            });
+            continue;
+        };
+        let delta = if o.value != 0.0 { n.value / o.value - 1.0 } else { 0.0 };
+        let status = if o.is_bench {
+            if delta > threshold && n.value - o.value > ABS_FLOOR_S {
+                Status::Regressed
+            } else if delta < -threshold {
+                Status::Improved
+            } else {
+                Status::Ok
+            }
+        } else if higher_is_better(&o.unit) {
+            if delta < -threshold {
+                Status::Regressed
+            } else if delta > threshold {
+                Status::Improved
+            } else {
+                Status::Ok
+            }
+        } else {
+            // No reliable preferred direction — informational only.
+            Status::Ok
+        };
+        rows.push(DiffRow {
+            name: o.name.clone(),
+            unit: o.unit.clone(),
+            old: o.value,
+            new: n.value,
+            delta,
+            status,
+        });
+    }
+    for n in &new {
+        if !old.iter().any(|o| o.name == n.name && o.is_bench == n.is_bench) {
+            rows.push(DiffRow {
+                name: n.name.clone(),
+                unit: n.unit.clone(),
+                old: f64::NAN,
+                new: n.value,
+                delta: 0.0,
+                status: Status::Added,
+            });
+        }
+    }
+    Ok(BenchDiff { threshold, rows })
+}
+
+impl fmt::Display for BenchDiff {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "bench-diff ({} rows, threshold {:.0}%)",
+            self.rows.len(),
+            self.threshold * 100.0
+        )?;
+        for r in &self.rows {
+            let tag = match r.status {
+                Status::Ok => "  ok   ",
+                Status::Improved => "  FAST ",
+                Status::Regressed => "  SLOW ",
+                Status::Missing => "  gone ",
+                Status::Added => "  new  ",
+            };
+            match r.status {
+                Status::Missing => {
+                    writeln!(f, "{tag} {:<48} old {:>12.6} {} (no new sample)", r.name, r.old, r.unit)?
+                }
+                Status::Added => {
+                    writeln!(f, "{tag} {:<48} new {:>12.6} {}", r.name, r.new, r.unit)?
+                }
+                _ => writeln!(
+                    f,
+                    "{tag} {:<48} {:>12.6} -> {:>12.6} {} ({:+.1}%)",
+                    r.name,
+                    r.old,
+                    r.new,
+                    r.unit,
+                    r.delta * 100.0
+                )?,
+            }
+        }
+        let regs = self.regressions();
+        if regs > 0 {
+            writeln!(f, "RESULT: {regs} regression(s) beyond {:.0}%", self.threshold * 100.0)?;
+        } else {
+            writeln!(f, "RESULT: no regressions beyond {:.0}%", self.threshold * 100.0)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(rows: &[(&str, &str, f64, &str)]) -> String {
+        // (kind, name, value, unit)
+        let mut out = String::from("{\"schema\": \"sambaten-bench-v1\", \"records\": [");
+        for (n, (kind, name, value, unit)) in rows.iter().enumerate() {
+            if n > 0 {
+                out.push(',');
+            }
+            if *kind == "bench" {
+                out.push_str(&format!(
+                    "{{\"kind\": \"bench\", \"name\": \"{name}\", \"median_s\": {value}, \
+                     \"mad_s\": 0.0, \"iters\": 5}}"
+                ));
+            } else {
+                out.push_str(&format!(
+                    "{{\"kind\": \"value\", \"name\": \"{name}\", \"value\": {value}, \
+                     \"unit\": \"{unit}\"}}"
+                ));
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+
+    #[test]
+    fn parses_benchkit_output_roundtrip() {
+        // Feed an actual benchkit-formatted document through the parser.
+        let text = "{\n  \"schema\": \"sambaten-bench-v1\",\n  \"records\": [\n    \
+                    {\"kind\": \"bench\", \"name\": \"a \\\"quoted\\\" name\", \
+                    \"median_s\": 0.25, \"mad_s\": 0.01, \"iters\": 5},\n    \
+                    {\"kind\": \"value\", \"name\": \"thru\", \"value\": 100, \
+                    \"unit\": \"batches/s\"},\n    \
+                    {\"kind\": \"bench\", \"name\": \"nan-case\", \"median_s\": null, \
+                    \"mad_s\": null, \"iters\": 1}\n  ]\n}\n";
+        let entries = extract(text, "old").unwrap();
+        // The null-median row is skipped; the quoted name is unescaped.
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].name, "a \"quoted\" name");
+        assert!(entries[0].is_bench);
+        assert_eq!(entries[1].unit, "batches/s");
+    }
+
+    #[test]
+    fn rejects_wrong_schema() {
+        let bad = "{\"schema\": \"other\", \"records\": []}";
+        assert!(diff_reports(bad, bad, 0.1).is_err());
+    }
+
+    #[test]
+    fn flags_bench_slowdowns_past_threshold_only() {
+        let old = report(&[
+            ("bench", "stable", 0.100, "s"),
+            ("bench", "slower", 0.100, "s"),
+            ("bench", "faster", 0.100, "s"),
+        ]);
+        let new = report(&[
+            ("bench", "stable", 0.105, "s"),
+            ("bench", "slower", 0.150, "s"),
+            ("bench", "faster", 0.050, "s"),
+        ]);
+        let d = diff_reports(&old, &new, 0.10).unwrap();
+        assert_eq!(d.regressions(), 1);
+        let by_name = |n: &str| d.rows.iter().find(|r| r.name == n).unwrap().status;
+        assert_eq!(by_name("stable"), Status::Ok);
+        assert_eq!(by_name("slower"), Status::Regressed);
+        assert_eq!(by_name("faster"), Status::Improved);
+    }
+
+    #[test]
+    fn throughput_values_regress_downward_and_plain_values_never_gate() {
+        let old = report(&[
+            ("value", "ingest", 100.0, "batches/s"),
+            ("value", "rel_err", 0.10, ""),
+        ]);
+        let new = report(&[
+            ("value", "ingest", 50.0, "batches/s"),
+            ("value", "rel_err", 0.90, ""),
+        ]);
+        let d = diff_reports(&old, &new, 0.10).unwrap();
+        assert_eq!(d.regressions(), 1);
+        assert_eq!(d.rows.iter().find(|r| r.name == "ingest").unwrap().status, Status::Regressed);
+        assert_eq!(d.rows.iter().find(|r| r.name == "rel_err").unwrap().status, Status::Ok);
+    }
+
+    #[test]
+    fn sub_microsecond_jitter_does_not_gate() {
+        let old = report(&[("bench", "tiny", 1e-7, "s")]);
+        let new = report(&[("bench", "tiny", 5e-7, "s")]);
+        let d = diff_reports(&old, &new, 0.10).unwrap();
+        assert_eq!(d.regressions(), 0);
+    }
+
+    #[test]
+    fn missing_and_added_rows_report_without_gating() {
+        let old = report(&[("bench", "removed", 0.1, "s"), ("bench", "kept", 0.1, "s")]);
+        let new = report(&[("bench", "kept", 0.1, "s"), ("bench", "brand-new", 0.1, "s")]);
+        let d = diff_reports(&old, &new, 0.10).unwrap();
+        assert_eq!(d.regressions(), 0);
+        let by_name = |n: &str| d.rows.iter().find(|r| r.name == n).unwrap().status;
+        assert_eq!(by_name("removed"), Status::Missing);
+        assert_eq!(by_name("brand-new"), Status::Added);
+        assert_eq!(by_name("kept"), Status::Ok);
+        // Display renders every row plus header and verdict without panicking.
+        let text = format!("{d}");
+        assert!(text.contains("no regressions"));
+    }
+
+    #[test]
+    fn invalid_threshold_rejected() {
+        let r = report(&[("bench", "a", 0.1, "s")]);
+        assert!(diff_reports(&r, &r, 0.0).is_err());
+        assert!(diff_reports(&r, &r, f64::NAN).is_err());
+    }
+}

@@ -5,6 +5,7 @@
 //! provides the minimal, well-tested equivalents the rest of the system
 //! needs (see DESIGN.md §4 Substitutions).
 
+pub mod benchdiff;
 pub mod benchkit;
 pub mod par;
 pub mod rng;

@@ -1,0 +1,123 @@
+//! Engine-conformance suite: every [`DecompositionEngine`] behind
+//! [`EngineConfig`] must honour the same observable contract — strictly
+//! monotone epochs, immutable published snapshots, nothing published on a
+//! failed ingest, and non-finite batches rejected before any state change.
+//! Runs against *both* engines (sambaten, octen) through the trait, so a
+//! new engine wired into `EngineConfig` is automatically held to the
+//! contract the serving layer depends on.
+
+use sambaten::coordinator::{DecompositionEngine, EngineConfig, OcTenConfig, SamBaTenConfig};
+use sambaten::datagen::SyntheticSpec;
+use sambaten::tensor::{DenseTensor, Tensor3, TensorData};
+
+/// One validated config per engine, small enough for quick streams.
+fn engine_configs(rank: usize, seed: u64) -> Vec<EngineConfig> {
+    vec![
+        SamBaTenConfig::builder(rank, 2, 3, seed).build().unwrap().into(),
+        OcTenConfig::builder(rank, 3, 2, seed).build().unwrap().into(),
+    ]
+}
+
+fn stream(seed: u64) -> (TensorData, Vec<TensorData>) {
+    let spec = SyntheticSpec::dense(12, 12, 16, 2, 0.01, seed);
+    let (existing, batches, _) = spec.generate_stream(0.4, 3);
+    (existing, batches)
+}
+
+#[test]
+fn epochs_advance_by_one_per_successful_ingest() {
+    let (existing, batches) = stream(31);
+    for cfg in engine_configs(2, 5) {
+        let mut e = cfg.init(&existing).unwrap();
+        assert_eq!(cfg.kind(), e.name(), "config kind must match the engine it builds");
+        let handle = e.handle();
+        assert_eq!(e.epoch(), 0);
+        assert_eq!(handle.epoch(), 0);
+        let mut k = existing.dims().2;
+        for (n, b) in batches.iter().enumerate() {
+            let stats = e.ingest(b).unwrap();
+            k += b.dims().2;
+            assert_eq!(stats.k_new, b.dims().2, "{}", e.name());
+            assert_eq!(e.epoch(), (n + 1) as u64, "{}", e.name());
+            assert_eq!(handle.epoch(), (n + 1) as u64, "{}", e.name());
+            let snap = handle.snapshot();
+            assert_eq!(snap.epoch, (n + 1) as u64, "{}", e.name());
+            assert_eq!(snap.dims.2, k, "{}", e.name());
+            assert_eq!(
+                snap.model.factors[2].rows(),
+                k,
+                "{}: published model must match published dims",
+                e.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn published_snapshots_are_immutable() {
+    let (existing, batches) = stream(32);
+    for cfg in engine_configs(2, 6) {
+        let mut e = cfg.init(&existing).unwrap();
+        let handle = e.handle();
+        // A slow reader holds early snapshots across later ingests.
+        let snap0 = handle.snapshot();
+        e.ingest(&batches[0]).unwrap();
+        let snap1 = handle.snapshot();
+        let lambda1 = snap1.model.lambda.clone();
+        let c1_rows = snap1.model.factors[2].rows();
+        for b in &batches[1..] {
+            e.ingest(b).unwrap();
+        }
+        assert_eq!(snap0.epoch, 0, "{}", e.name());
+        assert_eq!(snap0.model.factors[2].rows(), existing.dims().2, "{}", e.name());
+        assert!(snap0.stats.is_none(), "{}: the epoch-0 snapshot carries no stats", e.name());
+        assert_eq!(snap1.epoch, 1, "{}", e.name());
+        assert_eq!(snap1.model.lambda, lambda1, "{}", e.name());
+        assert_eq!(snap1.model.factors[2].rows(), c1_rows, "{}", e.name());
+        assert!(handle.snapshot().epoch > snap1.epoch, "{}", e.name());
+    }
+}
+
+#[test]
+fn failed_ingest_publishes_nothing() {
+    let (existing, batches) = stream(33);
+    // Mode-1 dim mismatch: rejected before any mutation.
+    let (bad, _) = SyntheticSpec::dense(9, 12, 2, 2, 0.0, 40).generate();
+    for cfg in engine_configs(2, 7) {
+        let mut e = cfg.init(&existing).unwrap();
+        let handle = e.handle();
+        e.ingest(&batches[0]).unwrap();
+        let before = handle.snapshot();
+        assert!(e.ingest(&bad).is_err(), "{}", e.name());
+        assert_eq!(e.epoch(), 1, "{}", e.name());
+        let after = handle.snapshot();
+        assert!(
+            std::sync::Arc::ptr_eq(&before, &after),
+            "{}: a failed ingest must publish nothing — not even an identical snapshot",
+            e.name()
+        );
+        // The engine stays usable: a healthy batch still goes through.
+        e.ingest(&batches[1]).unwrap();
+        assert_eq!(e.epoch(), 2, "{}", e.name());
+        assert_eq!(handle.snapshot().epoch, 2, "{}", e.name());
+    }
+}
+
+#[test]
+fn non_finite_batches_are_rejected_before_any_state_change() {
+    let (existing, batches) = stream(34);
+    let mut bad = DenseTensor::zeros(12, 12, 2);
+    bad.data_mut()[5] = f64::NAN;
+    let bad = TensorData::Dense(bad);
+    for cfg in engine_configs(2, 8) {
+        let mut e = cfg.init(&existing).unwrap();
+        let handle = e.handle();
+        assert!(e.ingest(&bad).is_err(), "{}", e.name());
+        assert_eq!(e.epoch(), 0, "{}", e.name());
+        assert_eq!(handle.snapshot().epoch, 0, "{}", e.name());
+        assert!(e.model().is_finite(), "{}", e.name());
+        e.ingest(&batches[0]).unwrap();
+        assert_eq!(e.epoch(), 1, "{}", e.name());
+        assert!(e.model().is_finite(), "{}", e.name());
+    }
+}

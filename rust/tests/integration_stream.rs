@@ -2,7 +2,7 @@
 //! checkpoint → resume, across dense/sparse and engine configurations.
 
 use sambaten::baselines::{CpAlsFull, IncrementalDecomposer, OnlineCp};
-use sambaten::coordinator::{SamBaTen, SamBaTenConfig};
+use sambaten::coordinator::{OcTen, OcTenConfig, SamBaTen, SamBaTenConfig};
 use sambaten::datagen::{RealDatasetSim, SyntheticSpec};
 use sambaten::io::{load_model, read_tns, save_model, write_tns};
 use sambaten::metrics::{relative_error, relative_fitness};
@@ -154,6 +154,36 @@ fn engine_fitness_band_vs_cpals_for_coo_and_csf() {
         let re = relative_error(&full, samba.model());
         assert!(re < 0.8, "promote={promote}: relative error {re}");
     }
+}
+
+/// OCTen-vs-SamBaTen fitness band: the compressed-replica engine fed the
+/// exact same stream as the sampling engine must land inside a fitness
+/// band of it — compressed updates trade accuracy for cheap replica math,
+/// but a compressed-space join bug (frame drift, λ blow-up, bad recovery)
+/// blows the ratio up far past this band.
+#[test]
+fn octen_tracks_within_fitness_band_of_sambaten() {
+    let spec = SyntheticSpec::dense(14, 14, 20, 2, 0.02, 44);
+    let (existing, batches, _) = spec.generate_stream(0.3, 4);
+    let (full, _) = spec.generate();
+    let cfg_s = SamBaTenConfig::builder(2, 2, 3, 17).build().unwrap();
+    let mut samba = SamBaTen::init(&existing, cfg_s).unwrap();
+    let cfg_o = OcTenConfig::builder(2, 4, 2, 17).build().unwrap();
+    let mut octen = OcTen::init(&existing, cfg_o).unwrap();
+    for b in &batches {
+        samba.ingest(b).unwrap();
+        octen.ingest(b).unwrap();
+    }
+    assert_eq!(octen.model().factors[2].rows(), 20);
+    let re_s = relative_error(&full, samba.model());
+    let re_o = relative_error(&full, octen.model());
+    assert!(re_s < 0.3, "sambaten reference drifted: {re_s}");
+    assert!(re_o < 0.6, "octen relative error {re_o}");
+    let rf = relative_fitness(&full, octen.model(), samba.model());
+    assert!(
+        rf.is_finite() && rf > 0.0 && rf < 4.0,
+        "octen fitness {rf} outside the band vs sambaten (re {re_o} vs {re_s})"
+    );
 }
 
 /// Real-sim stream: every dataset generator feeds the engine without error.
