@@ -8,6 +8,10 @@
 //!   * incremental CSF mode-3 append vs the rebuild-from-COO path
 //!   * 1 000-stream serving: shared 8-worker work-stealing pool vs the
 //!     dedicated-thread baseline (asserts pool throughput >= dedicated)
+//!   * copy-on-write publication at 1M×1K×1K: full clone vs delta with
+//!     ~1K touched rows (asserts >= 5x), and p99 top-k latency under a
+//!     live delta-publishing writer: norm-pruned vs exhaustive scan
+//!     (asserts pruned beats scan at p99, results bit-identical)
 //!   * weighted sampling without replacement
 //!   * component matching (congruence + Hungarian)
 //!   * Jacobi SVD / Cholesky solve
@@ -440,6 +444,152 @@ fn main() {
              throughput ({ded_ingest_s:.3}s) on the 1k-stream workload"
         );
         drop(pooled);
+    }
+
+    // Copy-on-write publication + norm-pruned top-k at serving scale
+    // (ISSUE 8 acceptance), both on one 1M×1K×1K rank-8 model.
+    //
+    // (a) Publication cost: publishing a batch that touched ~1K of the 1M
+    //     mode-1 rows must cost O(rows_touched·R), not O((I+J+K)·R).
+    //     Full-clone constructor (every block rebuilt, plus the model
+    //     clone it retains) vs the delta constructor (dirty blocks only,
+    //     the rest Arc-shared from the previous snapshot). Acceptance:
+    //     delta >= 5x faster.
+    // (b) p99 read latency under live publication: a writer thread keeps
+    //     storing delta snapshots into a SnapshotCell while this thread
+    //     times single top-k queries against whatever snapshot is
+    //     current. The norm-pruned walk must beat the exhaustive scan at
+    //     p99 *and* stay bit-identical — pruning is a latency
+    //     optimisation, never an accuracy trade.
+    {
+        use sambaten::coordinator::{ModelSnapshot, SnapshotCell};
+        use sambaten::cp::CpModel;
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        const I: usize = 1_000_000;
+        const J: usize = 1_000;
+        const K: usize = 1_000;
+        const R: usize = 8;
+        let dims = (I, J, K);
+        let mut prng = Rng::new(33);
+        // Mode-1 rows carry a popularity skew (norms decay with the row
+        // index), the regime the pruned walk is built for: the top-k
+        // concentrates in the high-norm blocks and the bound-descending
+        // scan exits after a small prefix of the 1M rows.
+        let mut a = Matrix::rand_gaussian(I, R, &mut prng);
+        for i in 0..I {
+            let amp = 1.0 / (1.0 + i as f64 / 1_000.0);
+            for t in 0..R {
+                a[(i, t)] *= amp;
+            }
+        }
+        let b = Matrix::rand_gaussian(J, R, &mut prng);
+        let c = Matrix::rand_gaussian(K, R, &mut prng);
+        let model = CpModel::new(a, b, c, vec![1.0; R]);
+        let prev = Arc::new(ModelSnapshot::new(0, dims, model.clone(), None));
+        // ~1K touched rows spread uniformly over the 1M mode-1 rows
+        // (~1 000 of the ~7 800 blocks dirty), small touched sets on the
+        // other modes — the shape a SamBaTen sampled merge writes.
+        let touched = [
+            (0..1_000).map(|n| n * (I / 1_000)).collect::<Vec<usize>>(),
+            (0..40).map(|n| n * (J / 40)).collect::<Vec<usize>>(),
+            (K - 2..K).collect::<Vec<usize>>(),
+        ];
+        let rescale: [Vec<f64>; 3] = std::array::from_fn(|_| vec![1.0; R]);
+        let full = bench("micro/publish_1m/full_clone", 1, 5, || {
+            std::hint::black_box(ModelSnapshot::new(1, dims, model.clone(), None));
+        });
+        let delta = bench("micro/publish_1m/delta_1k_touched", 1, 5, || {
+            std::hint::black_box(ModelSnapshot::delta(
+                1,
+                dims,
+                &model,
+                None,
+                &prev,
+                touched.clone(),
+                &rescale,
+            ));
+        });
+        let speedup = full.median_s / delta.median_s.max(1e-12);
+        report("micro/publish_1m/full_vs_delta", speedup, "x (>= 5 wanted)");
+        assert!(
+            speedup >= 5.0,
+            "delta publication must be >= 5x cheaper than a full clone at 1M rows: {speedup:.2}x"
+        );
+        // Identity rescale + the same model ⇒ the delta snapshot must
+        // serve the same answers as the full one.
+        let dsnap =
+            ModelSnapshot::delta(1, dims, &model, None, &prev, touched.clone(), &rescale);
+        assert_eq!(dsnap.top_k(2, 0, 10), prev.top_k(2, 0, 10), "delta changed the model");
+
+        // (b) — live writer republishing deltas every ~200µs.
+        let cell = Arc::new(SnapshotCell::new(prev));
+        let stop = Arc::new(AtomicBool::new(false));
+        let writer = {
+            let cell = Arc::clone(&cell);
+            let stop = Arc::clone(&stop);
+            let model = model.clone();
+            let touched = touched.clone();
+            let rescale = rescale.clone();
+            std::thread::spawn(move || {
+                let mut epoch = 1u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let prev = cell.load();
+                    let next = ModelSnapshot::delta(
+                        epoch,
+                        dims,
+                        &model,
+                        None,
+                        &prev,
+                        touched.clone(),
+                        &rescale,
+                    );
+                    cell.store(Arc::new(next));
+                    epoch += 1;
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+            })
+        };
+        const QUERIES: usize = 200;
+        const TOP: usize = 10;
+        let mut pruned_ns = Vec::with_capacity(QUERIES);
+        let mut scan_ns = Vec::with_capacity(QUERIES);
+        for q in 0..QUERIES {
+            // One snapshot per query: both paths answer against the same
+            // immutable epoch even while the writer churns the cell.
+            let snap = cell.load();
+            let row = q % K;
+            let t0 = std::time::Instant::now();
+            let fast = std::hint::black_box(snap.top_k(2, row, TOP));
+            pruned_ns.push(t0.elapsed().as_secs_f64() * 1e9);
+            let t0 = std::time::Instant::now();
+            let slow = std::hint::black_box(snap.top_k_scan(2, row, TOP));
+            scan_ns.push(t0.elapsed().as_secs_f64() * 1e9);
+            assert_eq!(fast, slow, "query {q}: pruned top-k diverged from the scan");
+        }
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
+        assert!(cell.load().epoch > 0, "the writer never published during the measurement");
+        let pct = |v: &mut Vec<f64>, p: f64| -> f64 {
+            v.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            v[((v.len() - 1) as f64 * p).round() as usize]
+        };
+        let (pruned_p50, pruned_p99) = (pct(&mut pruned_ns, 0.5), pct(&mut pruned_ns, 0.99));
+        let (scan_p50, scan_p99) = (pct(&mut scan_ns, 0.5), pct(&mut scan_ns, 0.99));
+        report("micro/topk_1m_live/pruned_p50", pruned_p50, "ns/query");
+        report("micro/topk_1m_live/pruned_p99", pruned_p99, "ns/query");
+        report("micro/topk_1m_live/scan_p50", scan_p50, "ns/query");
+        report("micro/topk_1m_live/scan_p99", scan_p99, "ns/query");
+        report(
+            "micro/topk_1m_live/scan_vs_pruned_p99",
+            scan_p99 / pruned_p99.max(1e-9),
+            "x (> 1 wanted)",
+        );
+        assert!(
+            pruned_p99 < scan_p99,
+            "norm-pruned top-k must beat the exhaustive scan at p99 over 1M rows: \
+             pruned {pruned_p99:.0} ns vs scan {scan_p99:.0} ns"
+        );
     }
 
     // Weighted sampling.

@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
     // Read through the published snapshot — the same view any concurrent
     // reader would see, stamped with the number of ingests applied.
     let snap = handle.snapshot();
-    let model = &snap.model;
+    let model = snap.model();
     println!("\n== results (snapshot epoch {}) ==", snap.epoch);
     println!("SamBaTen total ingest time : {incr_secs:.2}s");
     println!("full CP-ALS recompute time : {full_secs:.2}s (one final decomposition)");

@@ -80,7 +80,7 @@ fn run(quality_control: bool) -> anyhow::Result<(f64, f64, f64)> {
                 let snap = handle.snapshot();
                 assert!(snap.epoch >= last);
                 last = snap.epoch;
-                assert_eq!(snap.model.factors[2].rows(), snap.dims.2);
+                assert_eq!(snap.model().factors[2].rows(), snap.dims.2);
                 reads += 1;
             }
             reads
@@ -109,7 +109,7 @@ fn run(quality_control: bool) -> anyhow::Result<(f64, f64, f64)> {
     let recs = snap.top_k(0, 0, 3);
     let ids: Vec<usize> = recs.iter().map(|(j, _)| *j).collect();
     println!("  top hot-spots for location 0: {ids:?}");
-    let result = (fms(&snap.model, &truth), relative_error(&full, &snap.model), secs);
+    let result = (fms(snap.model(), &truth), relative_error(&full, snap.model()), secs);
     svc.shutdown();
     Ok(result)
 }

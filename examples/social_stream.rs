@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
                 last_epoch = snap.epoch;
                 // A consistent read: C's row count always matches the
                 // published slice count, even mid-ingest.
-                assert_eq!(snap.model.factors[2].rows(), snap.dims.2);
+                assert_eq!(snap.model().factors[2].rows(), snap.dims.2);
                 let _recs = snap.top_k(0, 0, 3); // "who posts on wall 0?"
                 let _e = snap.entry(0, 0, 0);
                 queries += 3;
@@ -115,7 +115,7 @@ fn main() -> anyhow::Result<()> {
         "final model      : epoch {}, rank {}, rel_err {:.4}",
         snap.epoch,
         snap.rank(),
-        relative_error(&full, &snap.model)
+        relative_error(&full, snap.model())
     );
     for st in svc.shutdown() {
         println!(

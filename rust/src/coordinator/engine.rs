@@ -439,6 +439,11 @@ pub struct BatchStats {
     /// Drift regime after this batch (always `Stable` with adaptive rank
     /// off). See `coordinator::drift`.
     pub drift: DriftState,
+    /// Per-mode count of rows this batch's publication had to rewrite
+    /// (touched rows plus the appended `C` slices; the full dims on a full
+    /// republication such as a rank change). The delta-publication cost is
+    /// `O(Σ touched_rows · R)` — see DESIGN.md §10.
+    pub touched_rows: [usize; 3],
 }
 
 /// The incremental decomposition engine (Algorithm 1).
@@ -726,7 +731,8 @@ impl SamBaTen {
         // default path stays bit-identical to the fixed blend.
         let t0 = std::time::Instant::now();
         let blend = effective_blend(self.cfg.blend, self.detector.state());
-        super::update::merge_updates_with(&mut self.model, &samples, &updates, k_new, blend);
+        let mut rescale =
+            super::update::merge_updates_with(&mut self.model, &samples, &updates, k_new, blend);
         // 6b. Optional stabilisation: overwrite the appended C rows with the
         // closed-form LS solution against the batch (A, B fixed).
         // Best-effort past this point: the merge has already mutated the
@@ -739,10 +745,35 @@ impl SamBaTen {
         // sample-space estimate the merge produced is still a valid model;
         // the skipped refinement is surfaced in `BatchStats`.
         let refine_fallback = if self.cfg.refine_c {
-            self.refine_new_c_rows(x_new, k_old, k_new).is_err()
+            match self.refine_new_c_rows(x_new, k_old, k_new) {
+                Ok(refine_rescale) => {
+                    // The refine re-canonicalisation rescales every C row
+                    // too; fold it into the mode-2 delta multipliers.
+                    for (m, s) in rescale[2].iter_mut().zip(&refine_rescale) {
+                        *m *= s;
+                    }
+                    false
+                }
+                Err(_) => true,
+            }
         } else {
             false
         };
+        // The delta-publication contract (DESIGN.md §10): every mode-m row
+        // NOT in `touched[m]` changed only by `rescale[m]` this batch. The
+        // merge writes exactly the sampled indices, and the batch appends
+        // `k_new` fresh C rows.
+        let mut touched: [Vec<usize>; 3] = Default::default();
+        for s in &samples {
+            touched[0].extend_from_slice(&s.is);
+            touched[1].extend_from_slice(&s.js);
+            touched[2].extend_from_slice(&s.ks_old);
+        }
+        touched[2].extend(k_old..k_old + k_new);
+        for t in &mut touched {
+            t.sort_unstable();
+            t.dedup();
+        }
         // 7. Grow the accumulated tensor. COO accumulators promote to CSF
         // once past the nnz bar (one-way — see `TensorData::maybe_promote`);
         // CSF accumulators merge the batch into their fiber trees
@@ -768,15 +799,20 @@ impl SamBaTen {
         };
         let corroborating =
             refine_fallback || mean_cong_batch < self.cfg.congruence_threshold;
-        match self.detector.observe(epoch, residual_fraction, corroborating, &activity) {
-            DriftAction::None => {}
-            DriftAction::Grow => self.model.append_zero_component(),
-            DriftAction::Retire(retire) => {
-                let keep: Vec<usize> =
-                    (0..self.model.rank()).filter(|q| !retire.contains(q)).collect();
-                self.model.retain_components(&keep);
-            }
-        }
+        let rank_changed =
+            match self.detector.observe(epoch, residual_fraction, corroborating, &activity) {
+                DriftAction::None => false,
+                DriftAction::Grow => {
+                    self.model.append_zero_component();
+                    true
+                }
+                DriftAction::Retire(retire) => {
+                    let keep: Vec<usize> =
+                        (0..self.model.rank()).filter(|q| !retire.contains(q)).collect();
+                    self.model.retain_components(&keep);
+                    true
+                }
+            };
         let stats = BatchStats {
             seconds: sw.elapsed_secs(),
             sample_dims,
@@ -793,21 +829,43 @@ impl SamBaTen {
             component_activity: activity,
             rank: self.model.rank(),
             drift: self.detector.state().clone(),
+            touched_rows: if rank_changed {
+                let d = self.x.dims();
+                [d.0, d.1, d.2]
+            } else {
+                [touched[0].len(), touched[1].len(), touched[2].len()]
+            },
         };
         self.epoch = epoch;
         self.history.push(stats.clone());
         // Publish the new epoch for wait-free readers. The snapshot is
         // immutable and internally consistent (model ↔ dims ↔ stats from
         // the same batch); readers that still hold the previous Arc keep
-        // their consistent older view.
-        self.publisher.publish(epoch, self.x.dims(), &self.model, &stats);
+        // their consistent older view. Steady-state batches publish a
+        // *delta* — only blocks with touched rows are rebuilt; a drift
+        // grow/retire reshapes every factor, so those publish a full
+        // rebuild instead.
+        let delta = if rank_changed {
+            None
+        } else {
+            Some(super::engine_api::PublishDelta { touched, rescale })
+        };
+        self.publisher.publish(epoch, self.x.dims(), &self.model, &stats, delta);
         Ok(stats)
     }
 
     /// Closed-form LS for the new `C` rows with `A`, `B` fixed:
     /// `Y = X_new(3)(B ⊙ Ã)[(ÃᵀÃ)∘(BᵀB)]⁻¹` with `Ã = A·diag(λ)`, written
-    /// into the appended rows, followed by re-canonicalisation.
-    fn refine_new_c_rows(&mut self, x_new: &TensorData, k_old: usize, k_new: usize) -> Result<()> {
+    /// into the appended rows, followed by re-canonicalisation. Returns
+    /// the per-column multiplier the re-canonicalisation applied to every
+    /// `C` row (for the delta-publication rescale); an `Err` means nothing
+    /// was mutated.
+    fn refine_new_c_rows(
+        &mut self,
+        x_new: &TensorData,
+        k_old: usize,
+        k_new: usize,
+    ) -> Result<Vec<f64>> {
         let r = self.model.rank();
         let active: Vec<usize> = (0..r).filter(|&t| self.model.lambda[t] > 0.0).collect();
         anyhow::ensure!(!active.is_empty(), "no active components to refine");
@@ -847,12 +905,14 @@ impl SamBaTen {
         }
         // Restore unit-norm columns, weights in λ.
         let norms = self.model.factors[2].normalize_cols();
+        let mut rescale = vec![1.0; r];
         for t in 0..r {
             if norms[t] > 0.0 {
                 self.model.lambda[t] *= norms[t];
+                rescale[t] = 1.0 / norms[t];
             }
         }
-        Ok(())
+        Ok(rescale)
     }
 }
 
@@ -1266,12 +1326,12 @@ mod tests {
             assert_eq!(snap.epoch, (n + 1) as u64);
             assert_eq!(handle.epoch(), e.epoch());
             assert_eq!(snap.dims.2, k);
-            assert_eq!(snap.model.factors[2].rows(), k, "model ↔ dims consistency");
+            assert_eq!(snap.model().factors[2].rows(), k, "model ↔ dims consistency");
             assert_eq!(snap.stats.as_ref().unwrap().k_new, b.dims().2);
         }
         // The pre-ingest snapshot a slow reader might still hold is intact.
         assert_eq!(snap0.epoch, 0);
-        assert_eq!(snap0.model.factors[2].rows(), existing.dims().2);
+        assert_eq!(snap0.model().factors[2].rows(), existing.dims().2);
     }
 
     #[test]

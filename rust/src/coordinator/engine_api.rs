@@ -121,6 +121,21 @@ impl From<OcTenConfig> for EngineConfig {
     }
 }
 
+/// What a batch changed, reported by the engine so the publisher can
+/// republish only the blocks that need it (see `coordinator::blocks`).
+///
+/// `touched[m]` is the sorted, deduplicated set of mode-`m` rows the
+/// ingest wrote in place (sampled rows for SamBaTen's merge) plus, for
+/// mode 2, the appended slice rows. `rescale[m][t]` is the multiplier the
+/// engine applied to every *untouched* row of factor `m`, column `t`,
+/// since the previous publication — the merge/refine steps re-normalise
+/// whole columns each batch, and folding those multipliers into the
+/// blocks' read scale is what lets untouched blocks stay `Arc`-shared.
+pub(crate) struct PublishDelta {
+    pub touched: [Vec<usize>; 3],
+    pub rescale: [Vec<f64>; 3],
+}
+
 /// The shared snapshot-publication helper: owns a stream's atomic
 /// publication slot and enforces the invariants every engine must uphold
 /// — the initial (epoch-0) snapshot carries no batch stats, and each
@@ -146,15 +161,51 @@ impl SnapshotPublisher {
 
     /// Publish a fresh epoch-stamped snapshot. Readers that still hold the
     /// previous `Arc` keep their consistent older view.
+    ///
+    /// With a [`PublishDelta`] the publication is incremental: only blocks
+    /// containing touched rows (plus the grown `C` tail) are rebuilt from
+    /// `model`; everything else is `Arc`-shared from the previous snapshot
+    /// — `O(rows_touched·R)` instead of `O((I+J+K)·R)`. Falls back to a
+    /// full build whenever the delta cannot apply (rank changed, dims
+    /// shrank, degenerate rescale) so the published state is always
+    /// exactly consistent with `model`.
     pub(crate) fn publish(
         &self,
         epoch: u64,
         dims: (usize, usize, usize),
         model: &CpModel,
         stats: &BatchStats,
+        delta: Option<PublishDelta>,
     ) {
-        self.cell
-            .store(Arc::new(ModelSnapshot::new(epoch, dims, model.clone(), Some(stats.clone()))));
+        let snap = match delta {
+            Some(d) if self.delta_applies(dims, model, &d) => {
+                let prev = self.cell.load();
+                ModelSnapshot::delta(
+                    epoch,
+                    dims,
+                    model,
+                    Some(stats.clone()),
+                    &prev,
+                    d.touched,
+                    &d.rescale,
+                )
+            }
+            _ => ModelSnapshot::new(epoch, dims, model.clone(), Some(stats.clone())),
+        };
+        self.cell.store(Arc::new(snap));
+    }
+
+    /// A delta publication is sound only against a previous snapshot of
+    /// the same rank and non-shrinking dims, with finite per-column
+    /// rescale multipliers of the right length.
+    fn delta_applies(&self, dims: (usize, usize, usize), model: &CpModel, d: &PublishDelta) -> bool {
+        let prev = self.cell.load();
+        let r = model.rank();
+        prev.rank() == r
+            && prev.dims.0 == dims.0
+            && prev.dims.1 == dims.1
+            && prev.dims.2 <= dims.2
+            && d.rescale.iter().all(|v| v.len() == r && v.iter().all(|m| m.is_finite()))
     }
 }
 
@@ -201,4 +252,114 @@ pub(crate) fn component_activity(model: &CpModel, k_old: usize, k_new: usize) ->
             model.lambda[q] * (ss / k_new.max(1) as f64).sqrt()
         })
         .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::blocks::BLOCK_ROWS;
+    use crate::linalg::Matrix;
+    use crate::util::Rng;
+
+    fn model(i: usize, j: usize, k: usize, r: usize, seed: u64) -> CpModel {
+        let mut rng = Rng::new(seed);
+        CpModel::new(
+            Matrix::rand_gaussian(i, r, &mut rng),
+            Matrix::rand_gaussian(j, r, &mut rng),
+            Matrix::rand_gaussian(k, r, &mut rng),
+            vec![1.0; r],
+        )
+    }
+
+    fn shares_block(a: &ModelSnapshot, b: &ModelSnapshot, mode: usize, block: usize) -> bool {
+        Arc::ptr_eq(a.factor_blocks(mode).block(block), b.factor_blocks(mode).block(block))
+    }
+
+    #[test]
+    fn delta_publication_shares_untouched_blocks_exactly() {
+        let r = 2;
+        let (i, j, k) = (3 * BLOCK_ROWS, BLOCK_ROWS + 9, BLOCK_ROWS);
+        let m0 = model(i, j, k, r, 42);
+        let publisher = SnapshotPublisher::new((i, j, k), &m0);
+        let handle = publisher.handle();
+        let snap0 = handle.snapshot();
+
+        // The next "batch" rewrites two A rows inside block 1 and appends
+        // two C rows; everything else is untouched (identity rescale).
+        let mut m1 = m0.clone();
+        m1.factors[0][(BLOCK_ROWS + 3, 0)] = 7.25;
+        m1.factors[0][(2 * BLOCK_ROWS - 1, 1)] = -3.5;
+        let mut rng = Rng::new(43);
+        let mut c1 = Matrix::rand_gaussian(k + 2, r, &mut rng);
+        for p in 0..k {
+            for t in 0..r {
+                c1[(p, t)] = m0.factors[2][(p, t)];
+            }
+        }
+        m1.factors[2] = c1;
+        let delta = PublishDelta {
+            touched: [vec![BLOCK_ROWS + 3, 2 * BLOCK_ROWS - 1], vec![], vec![k, k + 1]],
+            rescale: std::array::from_fn(|_| vec![1.0; r]),
+        };
+        let stats = BatchStats::default();
+        publisher.publish(1, (i, j, k + 2), &m1, &stats, Some(delta));
+        let snap1 = handle.snapshot();
+
+        // A: blocks 0 and 2 re-shared, block 1 (the touched one) rebuilt.
+        assert!(shares_block(&snap0, &snap1, 0, 0));
+        assert!(!shares_block(&snap0, &snap1, 0, 1));
+        assert!(shares_block(&snap0, &snap1, 0, 2));
+        // B untouched: every block re-shared.
+        for b in 0..snap0.factor_blocks(1).num_blocks() {
+            assert!(shares_block(&snap0, &snap1, 1, b));
+        }
+        // C: the complete old block is re-shared; the grown tail is new.
+        assert!(shares_block(&snap0, &snap1, 2, 0));
+        assert_eq!(snap1.factor_blocks(2).num_blocks(), 2);
+        // The delta-published view is exactly the engine's model…
+        for f in 0..3 {
+            assert_eq!(snap1.model().factors[f], m1.factors[f], "factor {f}");
+        }
+        let touched0 = snap1.touched_rows[0].as_deref();
+        assert_eq!(touched0, Some(&[BLOCK_ROWS + 3, 2 * BLOCK_ROWS - 1][..]));
+        // …and the held epoch-0 snapshot is untouched despite sharing.
+        for f in 0..3 {
+            assert_eq!(snap0.model().factors[f], m0.factors[f], "held factor {f} mutated");
+        }
+        assert_eq!(snap0.epoch, 0);
+        assert!(snap0.touched_rows.iter().all(|t| t.is_none()));
+    }
+
+    #[test]
+    fn unsound_deltas_fall_back_to_a_full_rebuild() {
+        let r = 2;
+        let (i, j, k) = (2 * BLOCK_ROWS, BLOCK_ROWS, 16);
+        let m0 = model(i, j, k, r, 5);
+        let publisher = SnapshotPublisher::new((i, j, k), &m0);
+        let handle = publisher.handle();
+        let snap0 = handle.snapshot();
+        let stats = BatchStats::default();
+
+        // Rank changed since the previous publication: delta must not apply.
+        let m_grown = model(i, j, k, r + 1, 6);
+        let delta = PublishDelta {
+            touched: [vec![], vec![], vec![]],
+            rescale: std::array::from_fn(|_| vec![1.0; r + 1]),
+        };
+        publisher.publish(1, (i, j, k), &m_grown, &stats, Some(delta));
+        let snap1 = handle.snapshot();
+        assert!(!shares_block(&snap0, &snap1, 0, 0), "rank change must force a full rebuild");
+        assert_eq!(snap1.model().factors[0], m_grown.factors[0]);
+
+        // Degenerate rescale (NaN) likewise.
+        let m2 = model(i, j, k, r + 1, 7);
+        let delta = PublishDelta {
+            touched: [vec![], vec![], vec![]],
+            rescale: [vec![1.0, f64::NAN, 1.0], vec![1.0; r + 1], vec![1.0; r + 1]],
+        };
+        publisher.publish(2, (i, j, k), &m2, &stats, Some(delta));
+        let snap2 = handle.snapshot();
+        assert!(!shares_block(&snap1, &snap2, 1, 0));
+        assert_eq!(snap2.model().factors[1], m2.factors[1]);
+    }
 }

@@ -22,6 +22,7 @@
 //! `top_k` — without ever contending with the writer. The multi-stream
 //! serving layer ([`crate::serve`]) builds on exactly this split.
 
+pub mod blocks;
 pub mod drift;
 pub mod engine;
 pub mod engine_api;
@@ -30,6 +31,7 @@ pub mod snapshot;
 pub mod solver;
 pub mod update;
 
+pub use blocks::{BlockFactor, FactorBlock, BLOCK_ROWS};
 pub use drift::{BoundedHistory, DriftConfig, DriftState};
 pub use engine::{BatchStats, SamBaTen, SamBaTenConfig, SamBaTenConfigBuilder};
 pub use engine_api::{DecompositionEngine, EngineConfig};

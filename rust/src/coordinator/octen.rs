@@ -732,10 +732,13 @@ impl OcTen {
             component_activity: activity,
             rank: self.model.rank(),
             drift: self.detector.state().clone(),
+            // The join rewrites every factor row, so publication is always
+            // a full rebuild — no delta to hand the publisher.
+            touched_rows: [self.dims.0, self.dims.1, self.dims.2],
         };
         self.epoch = epoch;
         self.history.push(stats.clone());
-        self.publisher.publish(epoch, self.dims, &self.model, &stats);
+        self.publisher.publish(epoch, self.dims, &self.model, &stats, None);
         Ok(stats)
     }
 }
@@ -882,7 +885,7 @@ mod tests {
             let snap = handle.snapshot();
             assert_eq!(snap.epoch, (n + 1) as u64);
             assert_eq!(snap.dims.2, k);
-            assert_eq!(snap.model.factors[2].rows(), k, "model ↔ dims consistency");
+            assert_eq!(snap.model().factors[2].rows(), k, "model ↔ dims consistency");
         }
         // Wrong mode-1/2 dims and empty batches are rejected pre-mutation.
         let (bad, _) = SyntheticSpec::dense(9, 10, 2, 2, 0.0, 10).generate();
@@ -891,7 +894,7 @@ mod tests {
         assert_eq!(handle.epoch(), before, "a rejected batch must not advance the epoch");
         // Old snapshots a slow reader still holds are intact.
         assert_eq!(snap0.epoch, 0);
-        assert_eq!(snap0.model.factors[2].rows(), existing.dims().2);
+        assert_eq!(snap0.model().factors[2].rows(), existing.dims().2);
     }
 
     #[test]

@@ -16,6 +16,15 @@
 //!   readers keep querying mid-ingest and simply observe the previous
 //!   epoch until the next one lands.
 //!
+//! Since the copy-on-write redesign (DESIGN.md §10) a snapshot no longer
+//! owns a private clone of the full model: each factor is a
+//! [`BlockFactor`] of immutable `Arc`-shared row blocks, so publishing a
+//! batch that touched few rows re-shares almost everything from the
+//! previous snapshot (`O(rows_touched·R)` instead of `O((I+J+K)·R)`), and
+//! `top_k` prunes whole blocks by their cached norm bound. A full
+//! [`CpModel`] view is still available through [`ModelSnapshot::model`],
+//! materialised lazily and at most once per snapshot.
+//!
 //! [`SnapshotCell`] is a hand-rolled `ArcSwap` (the offline crate set has
 //! no `arc-swap`): an `RwLock<Arc<T>>` whose critical sections are a single
 //! pointer clone/store — no allocation, no user code, no panic path. A raw
@@ -25,11 +34,14 @@
 //! same practical wait-freedom — `bench_micro` measures sub-microsecond
 //! acquisition while a 1K³ ingest runs — with none of that machinery.
 
+use super::blocks::{BlockFactor, BLOCK_ROWS};
 use super::drift::DriftState;
 use super::engine::BatchStats;
 use crate::cp::CpModel;
 use crate::tensor::Tensor3;
-use std::sync::{Arc, RwLock};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::{Arc, OnceLock, RwLock};
 
 /// A single-slot atomic publication cell: writers [`store`](Self::store) a
 /// new `Arc`, readers [`load`](Self::load) the current one. Both critical
@@ -62,74 +74,180 @@ impl<T> SnapshotCell<T> {
 /// Epoch semantics: epoch `0` is the initial model (before any ingest);
 /// each successful `ingest` publishes epoch `n` = number of batches applied
 /// so far. Within one snapshot every field is mutually consistent — in
-/// particular `model.factors[2].rows() == dims.2` always holds, which is
-/// exactly the invariant a reader cannot get from two separate racing
-/// reads of a mutable engine.
+/// particular `factor(2).rows() == dims.2` always holds, which is exactly
+/// the invariant a reader cannot get from two separate racing reads of a
+/// mutable engine.
+///
+/// Factors are stored as copy-on-write [`BlockFactor`]s (see
+/// `coordinator::blocks`); [`model`](Self::model) materialises a plain
+/// [`CpModel`] view lazily, once, for consumers that want whole matrices.
 #[derive(Clone, Debug)]
 pub struct ModelSnapshot {
     /// Number of ingests applied when this snapshot was published.
     pub epoch: u64,
     /// Dims of the accumulated tensor at publication time.
     pub dims: (usize, usize, usize),
-    /// The model (unit-norm factor columns, weights in λ).
-    pub model: CpModel,
+    /// Component weights λ (factor columns are unit-norm).
+    lambda: Vec<f64>,
+    /// Per-mode copy-on-write factor blocks.
+    factors: [BlockFactor; 3],
     /// Stats of the batch that produced this epoch (`None` at epoch 0).
     pub stats: Option<BatchStats>,
     /// Drift regime at publication time (`Stable` at epoch 0 and whenever
     /// adaptive rank is off). See `coordinator::drift`.
     pub drift: DriftState,
-    /// Per-factor column sums, precomputed at publication: `top_k`
-    /// marginalises one mode per query and used to rescan its whole factor
-    /// every call — O(dim·R) work that is identical for every query
-    /// against the same (immutable) snapshot.
-    col_sums: [Vec<f64>; 3],
+    /// Per-mode sorted touched-row sets of the batch that produced this
+    /// epoch — the rows whose blocks were republished. `None` means a full
+    /// publication (epoch 0, a rank change, or an engine that rewrites
+    /// every row, like OCTen's full-size recovery).
+    pub touched_rows: [Option<Vec<usize>>; 3],
+    /// Lazily materialised whole-matrix view (at most once per snapshot).
+    materialized: OnceLock<CpModel>,
 }
 
+/// A top-k candidate with the deterministic total order both query paths
+/// share: higher score first, ties broken toward the smaller row index.
+/// `total_cmp` keeps the order total (and bit-stable) even for degenerate
+/// scores, so pruned and exhaustive scans can be compared bit for bit.
+#[derive(Clone, Copy, Debug)]
+struct Candidate {
+    score: f64,
+    idx: usize,
+}
+
+impl Ord for Candidate {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.score.total_cmp(&other.score).then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+
+impl PartialOrd for Candidate {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for Candidate {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Candidate {}
+
 impl ModelSnapshot {
-    /// Build a snapshot, deriving the drift state from the batch stats
-    /// (`Stable` when `stats` is `None`) and precomputing the per-factor
-    /// column sums the query path reads.
+    /// Build a *full* snapshot: every block fresh from `model` (read scale
+    /// 1, values bit-identical), drift derived from the batch stats
+    /// (`Stable` when `stats` is `None`).
     pub fn new(
         epoch: u64,
         dims: (usize, usize, usize),
         model: CpModel,
         stats: Option<BatchStats>,
     ) -> Self {
-        let r = model.rank();
-        let col_sums = std::array::from_fn(|n| {
-            let f = &model.factors[n];
-            let mut sums = vec![0.0; r];
-            for (t, sum) in sums.iter_mut().enumerate() {
-                let mut s = 0.0;
-                for p in 0..f.rows() {
-                    s += f[(p, t)];
-                }
-                *sum = s;
-            }
-            sums
+        let factors = std::array::from_fn(|m| BlockFactor::full(&model.factors[m]));
+        let lambda = model.lambda.clone();
+        let drift = stats.as_ref().map(|s| s.drift.clone()).unwrap_or_default();
+        let materialized = OnceLock::new();
+        // A full build already paid for the whole model — keep it so
+        // `model()` is free on the snapshots where it was cheapest anyway.
+        let _ = materialized.set(model);
+        ModelSnapshot {
+            epoch,
+            dims,
+            lambda,
+            factors,
+            stats,
+            drift,
+            touched_rows: [None, None, None],
+            materialized,
+        }
+    }
+
+    /// Build a *delta* snapshot: per mode, only blocks containing
+    /// `touched` rows (plus any grown `C` tail) are rebuilt from `model`;
+    /// every other block is `Arc`-shared from `prev` with its read scale
+    /// multiplied by that mode's `rescale` (the per-column multiplier the
+    /// engine applied to untouched rows this batch — the merge step's
+    /// column re-normalisation). Caller guarantees `touched` sets are
+    /// sorted and the rank matches `prev`.
+    ///
+    /// Engines publish deltas through the crate's publisher, which also
+    /// validates the soundness preconditions; this constructor is public
+    /// so out-of-crate harnesses (`bench_micro`'s publication-cost row)
+    /// can exercise the delta path directly.
+    pub fn delta(
+        epoch: u64,
+        dims: (usize, usize, usize),
+        model: &CpModel,
+        stats: Option<BatchStats>,
+        prev: &ModelSnapshot,
+        touched: [Vec<usize>; 3],
+        rescale: &[Vec<f64>; 3],
+    ) -> Self {
+        let factors = std::array::from_fn(|m| {
+            BlockFactor::delta(&prev.factors[m], &model.factors[m], &touched[m], &rescale[m])
         });
         let drift = stats.as_ref().map(|s| s.drift.clone()).unwrap_or_default();
-        ModelSnapshot { epoch, dims, model, stats, drift, col_sums }
+        ModelSnapshot {
+            epoch,
+            dims,
+            lambda: model.lambda.clone(),
+            factors,
+            stats,
+            drift,
+            touched_rows: touched.map(Some),
+            materialized: OnceLock::new(),
+        }
     }
 
     /// Rank of the published model.
     pub fn rank(&self) -> usize {
-        self.model.rank()
+        self.lambda.len()
     }
 
-    /// Reconstructed entry `X̂(i, j, k)`.
+    /// Component weights λ.
+    pub fn lambda(&self) -> &[f64] {
+        &self.lambda
+    }
+
+    /// The copy-on-write blocks of factor `mode` (0 = A, 1 = B, 2 = C).
+    pub fn factor_blocks(&self, mode: usize) -> &BlockFactor {
+        &self.factors[mode]
+    }
+
+    /// Whole-matrix view, materialised lazily and at most once. Snapshots
+    /// published as full builds carry the model already; delta snapshots
+    /// pay one `O((I+J+K)·R)` assembly on first use.
+    pub fn model(&self) -> &CpModel {
+        self.materialized.get_or_init(|| {
+            CpModel::new(
+                self.factors[0].to_matrix(),
+                self.factors[1].to_matrix(),
+                self.factors[2].to_matrix(),
+                self.lambda.clone(),
+            )
+        })
+    }
+
+    /// Reconstructed entry `X̂(i, j, k)` — straight off the blocks, no
+    /// materialisation.
     pub fn entry(&self, i: usize, j: usize, k: usize) -> f64 {
         let (ni, nj, nk) = self.dims;
         assert!(
             i < ni && j < nj && k < nk,
             "entry ({i}, {j}, {k}) out of range for a {ni}x{nj}x{nk} snapshot"
         );
-        self.model.entry(i, j, k)
+        let r = self.rank();
+        let ai = self.factors[0].effective_row(i);
+        let bj = self.factors[1].effective_row(j);
+        let ck = self.factors[2].effective_row(k);
+        (0..r).map(|t| self.lambda[t] * ai[t] * bj[t] * ck[t]).sum()
     }
 
     /// Fit `1 - ||X - X̂|| / ||X||` of this snapshot against any tensor.
     pub fn fit<T: Tensor3 + ?Sized>(&self, x: &T) -> f64 {
-        self.model.fit(x)
+        self.model().fit(x)
     }
 
     /// Recommender scoring: rank the rows of mode `(mode + 1) % 3` by
@@ -141,43 +259,95 @@ impl ModelSnapshot {
     /// poster × day tensor, `top_k(0, u, k)` is "the k posters most active
     /// on user u's wall, totalled over all days".
     ///
-    /// Returns `(row_index, score)` pairs, highest score first; `O(dim·R)`
-    /// plus a partial select — no tensor materialisation. Empty when `row`
-    /// is out of range or `k == 0`. Panics on `mode > 2`.
+    /// The scan is *norm-pruned*: blocks are visited in descending order
+    /// of their Cauchy–Schwarz bound `‖w ∘ scale‖₂ · max_row_norm`, and
+    /// the walk stops at the first block whose bound cannot beat the
+    /// current k-th candidate — every remaining block is bounded lower
+    /// still. Results are exact (the bound dominates every score in the
+    /// block, and boundary ties are scanned, not skipped) and bit-identical
+    /// to [`top_k_scan`](Self::top_k_scan).
+    ///
+    /// Returns `(row_index, score)` pairs, highest score first (ties by
+    /// ascending index); `O(rows_scanned·R)` — no tensor materialisation.
+    /// Empty when `row` is out of range or `k == 0`. Panics on `mode > 2`.
     pub fn top_k(&self, mode: usize, row: usize, k: usize) -> Vec<(usize, f64)> {
+        self.top_k_impl(mode, row, k, true)
+    }
+
+    /// The exhaustive `O(dim·R)` scan — identical per-row arithmetic and
+    /// ordering, no pruning. The equivalence baseline `top_k` is pinned
+    /// against in tests and `bench_micro`.
+    pub fn top_k_scan(&self, mode: usize, row: usize, k: usize) -> Vec<(usize, f64)> {
+        self.top_k_impl(mode, row, k, false)
+    }
+
+    fn top_k_impl(&self, mode: usize, row: usize, k: usize, prune: bool) -> Vec<(usize, f64)> {
         assert!(mode < 3, "mode {mode} out of range");
-        let f_query = &self.model.factors[mode];
+        let f_query = &self.factors[mode];
         if row >= f_query.rows() || k == 0 {
             return Vec::new();
         }
-        let f_target = &self.model.factors[(mode + 1) % 3];
-        let r = self.model.rank();
+        let f_target = &self.factors[(mode + 1) % 3];
+        let k = k.min(f_target.rows());
+        if k == 0 {
+            return Vec::new();
+        }
+        let r = self.rank();
         // Per-component weight: λ_t · F_m[row,t] · (column-sum of F_o).
-        // The marginalised mode's column sums are precomputed at
-        // publication — a snapshot is immutable, so the O(dim·R) scan this
-        // used to redo per query can never go stale.
-        let other_sums = &self.col_sums[(mode + 2) % 3];
-        let qrow = f_query.row(row);
+        // The marginalised mode's column sums are cached per block at
+        // publication — a snapshot is immutable, so they can never go
+        // stale.
+        let other_sums = self.factors[(mode + 2) % 3].col_sums();
+        let qrow = f_query.effective_row(row);
         let mut w = vec![0.0; r];
         for t in 0..r {
-            w[t] = self.model.lambda[t] * qrow[t] * other_sums[t];
+            w[t] = self.lambda[t] * qrow[t] * other_sums[t];
         }
-        let mut scored: Vec<(usize, f64)> = (0..f_target.rows())
-            .map(|j| {
-                let fr = f_target.row(j);
-                (j, (0..r).map(|t| w[t] * fr[t]).sum())
+        // Fold each block's read scale into the weights once, and bound
+        // every score in the block by ‖w ∘ scale‖₂ · max_base_row_norm.
+        let mut blocks: Vec<(usize, f64, Vec<f64>)> = f_target
+            .blocks()
+            .map(|(start, payload, scale)| {
+                let wb: Vec<f64> = w.iter().zip(scale).map(|(wt, s)| wt * s).collect();
+                let wnorm = wb.iter().map(|v| v * v).sum::<f64>().sqrt();
+                (start, wnorm * payload.max_base_row_norm(), wb)
             })
             .collect();
-        let k = k.min(scored.len());
-        let desc = |a: &(usize, f64), b: &(usize, f64)| {
-            b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal)
-        };
-        if k < scored.len() {
-            scored.select_nth_unstable_by(k - 1, desc);
-            scored.truncate(k);
+        // Highest bound first; start-index ties keep the visit order (and
+        // therefore the bit pattern of every comparison) deterministic.
+        blocks.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        let mut heap: BinaryHeap<Reverse<Candidate>> = BinaryHeap::with_capacity(k + 1);
+        for (start, bound, wb) in &blocks {
+            if prune && heap.len() == k {
+                let kth = heap.peek().expect("k > 0").0;
+                // Strict comparison: a block whose bound *equals* the k-th
+                // score may still hold an index-tie winner, so only a
+                // strictly lower bound is skipped — and bounds are sorted
+                // descending, so the first skip ends the walk.
+                if *bound < kth.score {
+                    break;
+                }
+            }
+            let base = f_target.block(start / BLOCK_ROWS).base();
+            for j in 0..base.rows() {
+                let brow = base.row(j);
+                let mut score = 0.0;
+                for t in 0..r {
+                    score += wb[t] * brow[t];
+                }
+                let cand = Candidate { score, idx: start + j };
+                if heap.len() < k {
+                    heap.push(Reverse(cand));
+                } else if cand > heap.peek().expect("k > 0").0 {
+                    heap.pop();
+                    heap.push(Reverse(cand));
+                }
+            }
         }
-        scored.sort_by(desc);
-        scored
+        let mut out: Vec<(usize, f64)> =
+            heap.into_iter().map(|Reverse(c)| (c.idx, c.score)).collect();
+        out.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        out
     }
 }
 
@@ -230,7 +400,8 @@ impl StreamHandle {
         self.snapshot().fit(x)
     }
 
-    /// Top-k scoring at the current epoch (see [`ModelSnapshot::top_k`]).
+    /// Norm-pruned top-k scoring at the current epoch (see
+    /// [`ModelSnapshot::top_k`]).
     pub fn top_k(&self, mode: usize, row: usize, k: usize) -> Vec<(usize, f64)> {
         self.snapshot().top_k(mode, row, k)
     }
@@ -279,7 +450,7 @@ mod tests {
     #[test]
     fn entry_matches_model() {
         let s = snapshot_for((4, 5, 6), 3, 1);
-        assert!((s.entry(1, 2, 3) - s.model.entry(1, 2, 3)).abs() < 1e-12);
+        assert!((s.entry(1, 2, 3) - s.model().entry(1, 2, 3)).abs() < 1e-12);
     }
 
     #[test]
@@ -289,9 +460,20 @@ mod tests {
     }
 
     #[test]
+    fn full_build_materialises_bit_identically() {
+        let s = snapshot_for((5, 4, 6), 3, 12);
+        let m = s.model();
+        for mode in 0..3 {
+            assert_eq!(s.factor_blocks(mode).to_matrix(), m.factors[mode]);
+        }
+        assert_eq!(s.lambda(), &m.lambda[..]);
+        assert_eq!(s.touched_rows, [None, None, None]);
+    }
+
+    #[test]
     fn top_k_matches_brute_force_reconstruction() {
         let s = snapshot_for((5, 7, 4), 3, 3);
-        let dense = s.model.to_dense();
+        let dense = s.model().to_dense();
         // Brute force: total predicted interaction of row 2 of mode 0 with
         // each mode-1 row, summed over mode 2.
         let mut expect: Vec<(usize, f64)> = (0..7)
@@ -310,22 +492,22 @@ mod tests {
 
     #[test]
     fn top_k_cached_sums_pin_equivalence_with_scan() {
-        // The precomputed column sums must reproduce the former per-query
+        // The cached column sums must reproduce the former per-query
         // scan bit for bit (same accumulation order), for every mode.
         let s = snapshot_for((6, 5, 7), 4, 7);
         for mode in 0..3 {
-            let f_other = &s.model.factors[(mode + 2) % 3];
-            let f_query = &s.model.factors[mode];
-            let f_target = &s.model.factors[(mode + 1) % 3];
+            let f_other = &s.model().factors[(mode + 2) % 3];
+            let f_query = &s.model().factors[mode];
+            let f_target = &s.model().factors[(mode + 1) % 3];
             let row = 1;
-            let r = s.model.rank();
+            let r = s.rank();
             let mut w = vec![0.0; r];
             for t in 0..r {
                 let mut sum = 0.0;
                 for p in 0..f_other.rows() {
                     sum += f_other[(p, t)];
                 }
-                w[t] = s.model.lambda[t] * f_query.row(row)[t] * sum;
+                w[t] = s.lambda()[t] * f_query.row(row)[t] * sum;
             }
             let mut expect: Vec<(usize, f64)> = (0..f_target.rows())
                 .map(|j| {
@@ -339,6 +521,45 @@ mod tests {
             for (g, e) in got.iter().zip(&expect) {
                 assert_eq!(g.0, e.0, "mode {mode}");
                 assert_eq!(g.1, e.1, "mode {mode}: cached score must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_top_k_is_bit_identical_to_scan_on_multiblock_factors() {
+        // Multi-block factors with skewed row norms (so pruning actually
+        // skips blocks): the pruned walk must return exactly the scan's
+        // answer, bit for bit, for every mode and several k.
+        let dims = (3 * BLOCK_ROWS + 41, 2 * BLOCK_ROWS + 7, 77);
+        let mut rng = Rng::new(21);
+        let r = 4;
+        let mut factors = [
+            Matrix::rand_gaussian(dims.0, r, &mut rng),
+            Matrix::rand_gaussian(dims.1, r, &mut rng),
+            Matrix::rand_gaussian(dims.2, r, &mut rng),
+        ];
+        // Decaying row magnitudes concentrate the winners early.
+        for f in &mut factors {
+            for j in 0..f.rows() {
+                let s = 1.0 / (1.0 + j as f64 * 0.05);
+                for t in 0..r {
+                    f[(j, t)] *= s;
+                }
+            }
+        }
+        let [a, b, c] = factors;
+        let mut model = CpModel::new(a, b, c, (0..r).map(|_| 0.5 + rng.uniform()).collect());
+        model.normalize();
+        let s = ModelSnapshot::new(0, dims, model, None);
+        for mode in 0..3 {
+            for k in [1, 5, 64, 1000] {
+                let pruned = s.top_k(mode, 3, k);
+                let scanned = s.top_k_scan(mode, 3, k);
+                assert_eq!(pruned.len(), scanned.len(), "mode {mode} k {k}");
+                for (p, e) in pruned.iter().zip(&scanned) {
+                    assert_eq!(p.0, e.0, "mode {mode} k {k}");
+                    assert_eq!(p.1, e.1, "mode {mode} k {k}: must be bit-identical");
+                }
             }
         }
     }
@@ -367,7 +588,7 @@ mod tests {
                 std::thread::spawn(move || {
                     for _ in 0..100 {
                         let snap = h.snapshot();
-                        assert_eq!(snap.model.factors[2].rows(), snap.dims.2);
+                        assert_eq!(snap.model().factors[2].rows(), snap.dims.2);
                     }
                 })
             })

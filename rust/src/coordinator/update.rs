@@ -244,7 +244,7 @@ pub fn merge_updates(
     updates: &[ProjectedUpdate],
     k_new: usize,
 ) {
-    merge_updates_with(global, samples, updates, k_new, 0.0)
+    merge_updates_with(global, samples, updates, k_new, 0.0);
 }
 
 /// [`merge_updates`] with a non-zero-entry *blend*: Algorithm 1 line 8 only
@@ -254,13 +254,18 @@ pub fn merge_updates(
 /// (a weak match contributes ~nothing). `blend = 0` reproduces the paper's
 /// literal rule; the default engine config uses 0.5 (ablated in
 /// `benches/bench_ablation.rs`).
+///
+/// Returns the per-factor, per-column multiplier the closing
+/// re-canonicalisation applied to *every* row (`1/norm`, or `1.0` for
+/// zero-norm columns) — the delta-publication path folds these into the
+/// read scale of untouched snapshot blocks (`coordinator::blocks`).
 pub fn merge_updates_with(
     global: &mut CpModel,
     samples: &[Sample],
     updates: &[ProjectedUpdate],
     k_new: usize,
     blend: f64,
-) {
+) -> [Vec<f64>; 3] {
     let r = global.rank();
     // Mean congruence per component over contributing repetitions (for the
     // blend weight).
@@ -371,15 +376,19 @@ pub fn merge_updates_with(
         };
     }
     // Re-canonicalise: zero-fills and C's appended rows perturb column
-    // norms; restore unit-norm columns with weights in λ.
-    for f in 0..3 {
+    // norms; restore unit-norm columns with weights in λ. The applied
+    // multipliers are reported back for delta publication.
+    std::array::from_fn(|f| {
         let norms = global.factors[f].normalize_cols();
+        let mut rescale = vec![1.0; r];
         for q in 0..r {
             if norms[q] > 0.0 {
                 global.lambda[q] *= norms[q];
+                rescale[q] = 1.0 / norms[q];
             }
         }
-    }
+        rescale
+    })
 }
 
 #[cfg(test)]

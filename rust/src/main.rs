@@ -450,7 +450,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     while feeders.iter().any(|f| !f.is_finished()) {
         for (name, h) in &handles {
             let snap = h.snapshot();
-            let lmax = snap.model.lambda.iter().cloned().fold(0.0f64, f64::max);
+            let lmax = snap.lambda().iter().cloned().fold(0.0f64, f64::max);
+            // Live pin of the norm-pruned index: mid-ingest, on whatever
+            // epoch is current, pruned top-k must equal the exact scan.
+            assert_eq!(
+                snap.top_k(0, 0, 3),
+                snap.top_k_scan(0, 0, 3),
+                "[{name}] pruned top-k diverged from the scan at epoch {}",
+                snap.epoch
+            );
             println!(
                 "  [{name}] epoch {:>3}  dims {:?}  rank {} ({})  λ_max {:.3}  \
                  top-1 of row 0: {:?}",

@@ -106,6 +106,10 @@ pub struct StreamStats {
     /// Drift-detector state stamped on the published snapshot
     /// (`Stable` until the engine observes otherwise).
     pub drift: DriftState,
+    /// Per-mode count of factor rows the last published batch actually
+    /// rewrote — the cost driver of delta publication (`None` before the
+    /// first ingest). OCTen reports full dims: its join rewrites every row.
+    pub touched_rows: Option<[usize; 3]>,
     /// Batches processed successfully.
     pub batches: u64,
     /// Slices ingested successfully (sum of `k_new`).
@@ -606,6 +610,7 @@ fn snapshot_stats(
         epoch: snap.epoch,
         rank: snap.rank(),
         drift: snap.drift.clone(),
+        touched_rows: snap.stats.as_ref().map(|s| s.touched_rows),
         batches: stats.batches.load(Ordering::SeqCst),
         slices: stats.slices.load(Ordering::SeqCst),
         errors: stats.errors.load(Ordering::SeqCst),
@@ -862,7 +867,7 @@ mod tests {
         assert_eq!(all[1].1.epoch, 0);
         // Each snapshot is internally consistent.
         for (_, s) in &all {
-            assert_eq!(s.model.factors[2].rows(), s.dims.2);
+            assert_eq!(s.model().factors[2].rows(), s.dims.2);
         }
         svc.shutdown();
         assert!(svc.snapshot_all().is_empty());
@@ -892,11 +897,16 @@ mod tests {
             assert_eq!(st_a.epoch, batches_a.len() as u64);
             assert_eq!(st_b.epoch, batches_b.len() as u64);
             assert_eq!((st_a.errors, st_b.errors), (0, 0));
+            // Both engines report what the last batch rewrote; OCTen's
+            // join always rewrites every row of every factor.
+            assert!(st_a.touched_rows.is_some());
+            let db = svc.handle("octen").unwrap().snapshot().dims;
+            assert_eq!(st_b.touched_rows, Some([db.0, db.1, db.2]));
             // Both streams publish through the same snapshot surface.
             let all = svc.snapshot_all();
             assert_eq!(all.len(), 2);
             for (_, s) in &all {
-                assert_eq!(s.model.factors[2].rows(), s.dims.2);
+                assert_eq!(s.model().factors[2].rows(), s.dims.2);
                 assert_eq!(s.epoch, batches_a.len() as u64);
             }
             svc.shutdown();

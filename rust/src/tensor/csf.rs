@@ -72,153 +72,258 @@ impl Orientation {
     }
 }
 
-/// Extend `out` with `leaves` rebased by `shift` — bulk slice copy when the
-/// shift is zero (the accumulator side of every merge). Threading the shift
-/// into the copy itself is what lets the mode-3 append merge a batch tree
-/// without first materialising a leaf-shifted clone of it.
-fn extend_shifted_leaves(out: &mut Vec<u32>, leaves: &[u32], shift: u32) {
-    if shift == 0 {
-        out.extend_from_slice(leaves);
-    } else {
-        out.extend(leaves.iter().map(|&l| l + shift));
-    }
-}
-
-/// Bulk-copy fibers `g0..g1` of `src` (mids, entry pointers, leaves,
-/// values) onto the tail of `out`, rebasing `entry_ptr` and adding
-/// `leaf_shift` to every copied leaf. Entries of a contiguous fiber span
-/// are themselves contiguous, so this is four slice copies plus pointer
-/// rebases — the unit the merge gallops over.
-fn copy_fiber_span(
-    out: &mut Orientation,
-    src: &Orientation,
-    g0: usize,
-    g1: usize,
-    leaf_shift: u32,
-) {
-    if g0 == g1 {
-        return;
-    }
-    let e0 = src.entry_ptr[g0] as usize;
-    let e1 = src.entry_ptr[g1] as usize;
-    out.mids.extend_from_slice(&src.mids[g0..g1]);
-    let leaf_base = out.leaves.len() as u32;
-    out.entry_ptr.extend(src.entry_ptr[g0..g1].iter().map(|&e| e - e0 as u32 + leaf_base));
-    extend_shifted_leaves(&mut out.leaves, &src.leaves[e0..e1], leaf_shift);
-    out.vals.extend_from_slice(&src.vals[e0..e1]);
-}
-
-/// Bulk-copy roots `f0..f1` of `src` with their whole subtrees onto the
-/// tail of `out`, leaf-rebasing by `leaf_shift`.
-fn copy_root_span(
-    out: &mut Orientation,
-    src: &Orientation,
-    f0: usize,
-    f1: usize,
-    leaf_shift: u32,
-) {
-    if f0 == f1 {
-        return;
-    }
-    let g0 = src.fiber_ptr[f0] as usize;
-    let g1 = src.fiber_ptr[f1] as usize;
-    out.roots.extend_from_slice(&src.roots[f0..f1]);
-    let fiber_base = out.mids.len() as u32;
-    out.fiber_ptr.extend(src.fiber_ptr[f0..f1].iter().map(|&g| g - g0 as u32 + fiber_base));
-    copy_fiber_span(out, src, g0, g1, leaf_shift);
-}
-
-/// Merge one root present in both trees: fibers interleave in mid order;
-/// a fiber present in both emits the old entries then the batch's (leaves
-/// rebased by `new_leaf_shift` as they are copied) — correct because a
-/// mode-3 append guarantees every batch leaf in a shared fiber sorts
-/// strictly after every old one (`k` indices are rebased past the existing
-/// extent).
-fn merge_shared_root(
-    out: &mut Orientation,
-    old: &Orientation,
-    fa: usize,
-    new: &Orientation,
-    fb: usize,
-    new_leaf_shift: u32,
-) {
-    out.roots.push(old.roots[fa]);
-    out.fiber_ptr.push(out.mids.len() as u32);
-    let (mut ga, a1) = (old.fiber_ptr[fa] as usize, old.fiber_ptr[fa + 1] as usize);
-    let (mut gb, b1) = (new.fiber_ptr[fb] as usize, new.fiber_ptr[fb + 1] as usize);
-    while ga < a1 && gb < b1 {
-        match old.mids[ga].cmp(&new.mids[gb]) {
-            std::cmp::Ordering::Less => {
-                let run = ga + old.mids[ga..a1].partition_point(|&m| m < new.mids[gb]);
-                copy_fiber_span(out, old, ga, run, 0);
-                ga = run;
-            }
-            std::cmp::Ordering::Greater => {
-                let run = gb + new.mids[gb..b1].partition_point(|&m| m < old.mids[ga]);
-                copy_fiber_span(out, new, gb, run, new_leaf_shift);
-                gb = run;
-            }
-            std::cmp::Ordering::Equal => {
-                out.mids.push(old.mids[ga]);
-                out.entry_ptr.push(out.leaves.len() as u32);
-                let ea = old.entry_ptr[ga] as usize..old.entry_ptr[ga + 1] as usize;
-                let eb = new.entry_ptr[gb] as usize..new.entry_ptr[gb + 1] as usize;
-                out.leaves.extend_from_slice(&old.leaves[ea.clone()]);
-                out.vals.extend_from_slice(&old.vals[ea]);
-                extend_shifted_leaves(&mut out.leaves, &new.leaves[eb.clone()], new_leaf_shift);
-                out.vals.extend_from_slice(&new.vals[eb]);
-                ga += 1;
-                gb += 1;
-            }
-        }
-    }
-    copy_fiber_span(out, old, ga, a1, 0);
-    copy_fiber_span(out, new, gb, b1, new_leaf_shift);
-}
-
-/// Merge a batch tree into an existing one under the mode-3-append
-/// precondition (shared fibers: batch leaves strictly after old leaves).
-/// A gallop/merge pass over the sorted root lists: untouched spans —
-/// the overwhelming majority when `nnz_batch ≪ nnz` — bulk-copy whole
-/// subtree ranges, so the cost is linear memmove plus work proportional
-/// to the batch, never a re-sort of the accumulated entries. The batch's
-/// leaves (`k` indices in a mode-3 append) are rebased by `new_leaf_shift`
-/// *during* the copies, so no pre-shifted clone of the batch tree is ever
-/// built (rebasing is monotone, so the batch's sort order is unchanged).
-fn merge_orientation(old: &Orientation, new: &Orientation, new_leaf_shift: u32) -> Orientation {
-    let mut out = Orientation {
-        roots: Vec::with_capacity(old.roots.len() + new.roots.len()),
-        fiber_ptr: Vec::with_capacity(old.roots.len() + new.roots.len() + 1),
-        mids: Vec::with_capacity(old.mids.len() + new.mids.len()),
-        entry_ptr: Vec::with_capacity(old.mids.len() + new.mids.len() + 1),
-        leaves: Vec::with_capacity(old.leaves.len() + new.leaves.len()),
-        vals: Vec::with_capacity(old.vals.len() + new.vals.len()),
-    };
-    let (mut a, mut b) = (0, 0);
+/// How many (root) and (root, mid) coordinates appear in *both* trees —
+/// the tree levels a merge shares rather than adds (entries never merge:
+/// a mode-3 append rebases every batch `k` past the existing extent, so
+/// leaf coordinates are always disjoint). One gallop pass, `O(batch·log)`.
+fn count_shared(old: &Orientation, new: &Orientation) -> (usize, usize) {
+    let (mut a, mut b) = (0usize, 0usize);
+    let (mut roots, mut fibers) = (0usize, 0usize);
     while a < old.roots.len() && b < new.roots.len() {
         match old.roots[a].cmp(&new.roots[b]) {
             std::cmp::Ordering::Less => {
-                let run = a + old.roots[a..].partition_point(|&r| r < new.roots[b]);
-                copy_root_span(&mut out, old, a, run, 0);
-                a = run;
+                a += old.roots[a..].partition_point(|&r| r < new.roots[b]);
             }
             std::cmp::Ordering::Greater => {
-                let run = b + new.roots[b..].partition_point(|&r| r < old.roots[a]);
-                copy_root_span(&mut out, new, b, run, new_leaf_shift);
-                b = run;
+                b += new.roots[b..].partition_point(|&r| r < old.roots[a]);
             }
             std::cmp::Ordering::Equal => {
-                merge_shared_root(&mut out, old, a, new, b, new_leaf_shift);
+                roots += 1;
+                let (mut ga, a1) = (old.fiber_ptr[a] as usize, old.fiber_ptr[a + 1] as usize);
+                let (mut gb, b1) = (new.fiber_ptr[b] as usize, new.fiber_ptr[b + 1] as usize);
+                while ga < a1 && gb < b1 {
+                    match old.mids[ga].cmp(&new.mids[gb]) {
+                        std::cmp::Ordering::Less => {
+                            ga += old.mids[ga..a1].partition_point(|&m| m < new.mids[gb]);
+                        }
+                        std::cmp::Ordering::Greater => {
+                            gb += new.mids[gb..b1].partition_point(|&m| m < old.mids[ga]);
+                        }
+                        std::cmp::Ordering::Equal => {
+                            fibers += 1;
+                            ga += 1;
+                            gb += 1;
+                        }
+                    }
+                }
                 a += 1;
                 b += 1;
             }
         }
     }
-    copy_root_span(&mut out, old, a, old.roots.len(), 0);
-    copy_root_span(&mut out, new, b, new.roots.len(), new_leaf_shift);
-    out.fiber_ptr.push(out.mids.len() as u32);
-    out.entry_ptr.push(out.leaves.len() as u32);
-    out
+    (roots, fibers)
+}
+
+/// Cursor state of one in-place splice: read frontiers over the old tree
+/// (exclusive ends of the not-yet-placed prefix, per level — the suffix
+/// past each frontier has already been moved to its final position) and
+/// write frontiers over the output layout. The safety invariant is
+/// `write frontier ≥ read frontier` at every level (the merged tree is
+/// never smaller than the old one at any suffix), so back-to-front
+/// placement always reads a slot before anything overwrites it.
+struct Splice<'a> {
+    new: &'a Orientation,
+    leaf_shift: u32,
+    /// Old-side read frontiers: fibers `0..ga_end` / entries `0..ea_end`
+    /// are still unplaced (their pointer slots are still original).
+    ga_end: usize,
+    ea_end: usize,
+    /// Output write frontiers (exclusive), per level.
+    wa: usize,
+    wg: usize,
+    we: usize,
+}
+
+impl Splice<'_> {
+    /// Move old fibers `g0..ga_end` (with their entries) to the write
+    /// frontier: two overlapping `copy_within` moves plus descending
+    /// pointer rebases (write slots are always ≥ read slots, so iterating
+    /// high-to-low never clobbers an unread value).
+    fn place_old_fibers(&mut self, old: &mut Orientation, g0: usize) {
+        let e0 = old.entry_ptr[g0] as usize;
+        let (ng, ne) = (self.ga_end - g0, self.ea_end - e0);
+        old.leaves.copy_within(e0..self.ea_end, self.we - ne);
+        old.vals.copy_within(e0..self.ea_end, self.we - ne);
+        let de = (self.we - ne - e0) as u32;
+        for t in (0..ng).rev() {
+            old.entry_ptr[self.wg - ng + t] = old.entry_ptr[g0 + t] + de;
+        }
+        old.mids.copy_within(g0..self.ga_end, self.wg - ng);
+        self.ga_end = g0;
+        self.ea_end = e0;
+        self.wg -= ng;
+        self.we -= ne;
+    }
+
+    /// Copy batch fibers `g0..g1` (with their entries) to the write
+    /// frontier, rebasing every leaf by `leaf_shift` as it lands.
+    fn place_batch_fibers(&mut self, old: &mut Orientation, g0: usize, g1: usize) {
+        let e0 = self.new.entry_ptr[g0] as usize;
+        let e1 = self.new.entry_ptr[g1] as usize;
+        let (ng, ne) = (g1 - g0, e1 - e0);
+        for t in 0..ne {
+            old.leaves[self.we - ne + t] = self.new.leaves[e0 + t] + self.leaf_shift;
+        }
+        old.vals[self.we - ne..self.we].copy_from_slice(&self.new.vals[e0..e1]);
+        let base = (self.we - ne) as u32 - e0 as u32;
+        for t in 0..ng {
+            old.entry_ptr[self.wg - ng + t] = self.new.entry_ptr[g0 + t] + base;
+        }
+        old.mids[self.wg - ng..self.wg].copy_from_slice(&self.new.mids[g0..g1]);
+        self.wg -= ng;
+        self.we -= ne;
+    }
+
+    /// Move old roots `f0..f1` with their whole subtrees (`f1` must be the
+    /// root read frontier).
+    fn place_old_roots(&mut self, old: &mut Orientation, f0: usize, f1: usize) {
+        let g0 = old.fiber_ptr[f0] as usize;
+        let nr = f1 - f0;
+        self.place_old_fibers(old, g0);
+        let dg = (self.wg - g0) as u32;
+        for t in (0..nr).rev() {
+            old.fiber_ptr[self.wa - nr + t] = old.fiber_ptr[f0 + t] + dg;
+        }
+        old.roots.copy_within(f0..f1, self.wa - nr);
+        self.wa -= nr;
+    }
+
+    /// Copy batch roots `b0..b1` with their whole subtrees.
+    fn place_batch_roots(&mut self, old: &mut Orientation, b0: usize, b1: usize) {
+        let g0 = self.new.fiber_ptr[b0] as usize;
+        let g1 = self.new.fiber_ptr[b1] as usize;
+        let nr = b1 - b0;
+        self.place_batch_fibers(old, g0, g1);
+        let base = self.wg as u32 - g0 as u32;
+        for t in 0..nr {
+            old.fiber_ptr[self.wa - nr + t] = self.new.fiber_ptr[b0 + t] + base;
+        }
+        old.roots[self.wa - nr..self.wa].copy_from_slice(&self.new.roots[b0..b1]);
+        self.wa -= nr;
+    }
+
+    /// Merge one root present in both trees (old root `fa`, batch root
+    /// `fb`): fibers interleave in descending mid order; a fiber present
+    /// in both emits the batch entries *above* the old ones — the forward
+    /// order "old entries then batch entries", placed back-to-front —
+    /// which is exact because a mode-3 append rebases every batch leaf
+    /// strictly past the old extent.
+    fn merge_shared_root(&mut self, old: &mut Orientation, fa: usize, fb: usize) {
+        let ga0 = old.fiber_ptr[fa] as usize;
+        let gb0 = self.new.fiber_ptr[fb] as usize;
+        let mut gb = self.new.fiber_ptr[fb + 1] as usize;
+        while self.ga_end > ga0 && gb > gb0 {
+            let (ma, mb) = (old.mids[self.ga_end - 1], self.new.mids[gb - 1]);
+            match ma.cmp(&mb) {
+                std::cmp::Ordering::Greater => {
+                    let run = ga0 + old.mids[ga0..self.ga_end].partition_point(|&m| m <= mb);
+                    self.place_old_fibers(old, run);
+                }
+                std::cmp::Ordering::Less => {
+                    let run = gb0 + self.new.mids[gb0..gb].partition_point(|&m| m <= ma);
+                    self.place_batch_fibers(old, run, gb);
+                    gb = run;
+                }
+                std::cmp::Ordering::Equal => {
+                    let eb0 = self.new.entry_ptr[gb - 1] as usize;
+                    let eb1 = self.new.entry_ptr[gb] as usize;
+                    let nb = eb1 - eb0;
+                    for t in 0..nb {
+                        old.leaves[self.we - nb + t] = self.new.leaves[eb0 + t] + self.leaf_shift;
+                    }
+                    old.vals[self.we - nb..self.we].copy_from_slice(&self.new.vals[eb0..eb1]);
+                    self.we -= nb;
+                    let ea0 = old.entry_ptr[self.ga_end - 1] as usize;
+                    let na = self.ea_end - ea0;
+                    old.leaves.copy_within(ea0..self.ea_end, self.we - na);
+                    old.vals.copy_within(ea0..self.ea_end, self.we - na);
+                    self.we -= na;
+                    old.entry_ptr[self.wg - 1] = self.we as u32;
+                    old.mids[self.wg - 1] = ma;
+                    self.wg -= 1;
+                    self.ga_end -= 1;
+                    self.ea_end = ea0;
+                    gb -= 1;
+                }
+            }
+        }
+        if self.ga_end > ga0 {
+            self.place_old_fibers(old, ga0);
+        }
+        if gb > gb0 {
+            self.place_batch_fibers(old, gb0, gb);
+        }
+        old.fiber_ptr[self.wa - 1] = self.wg as u32;
+        old.roots[self.wa - 1] = self.new.roots[fb];
+        self.wa -= 1;
+    }
+}
+
+/// Merge a batch tree into `old` **in place** under the mode-3-append
+/// precondition (shared fibers: batch leaves strictly after old leaves,
+/// rebased by `new_leaf_shift` as they land — no shifted clone is built).
+///
+/// One counting gallop sizes the merged levels exactly (entries never
+/// merge, so only root/fiber slots can be shared), the arrays grow to
+/// final size with `Vec::resize`, and a tail-first back-to-front pass
+/// splices the batch in: untouched old subtree spans move as bulk
+/// `copy_within` memmoves, and the walk **stops at the smallest batch
+/// root** — the old prefix below it is already in its final position and
+/// is never touched. Cost is `O(rows ≥ min batch root)` memmove plus work
+/// proportional to the batch, with no fresh allocation of the history
+/// (capacity grows amortised like any `Vec`), versus the previous
+/// rebuild-into-fresh-arrays merge that re-wrote all `O(nnz)` entries
+/// every batch.
+fn merge_orientation_in_place(old: &mut Orientation, new: &Orientation, new_leaf_shift: u32) {
+    if new.roots.is_empty() {
+        return;
+    }
+    let (shared_roots, shared_fibers) = count_shared(old, new);
+    let (old_roots, old_fibers, old_entries) = (old.roots.len(), old.mids.len(), old.vals.len());
+    let out_roots = old_roots + new.roots.len() - shared_roots;
+    let out_fibers = old_fibers + new.mids.len() - shared_fibers;
+    let out_entries = old_entries + new.vals.len();
+    old.roots.resize(out_roots, 0);
+    old.fiber_ptr.resize(out_roots + 1, 0);
+    old.mids.resize(out_fibers, 0);
+    old.entry_ptr.resize(out_fibers + 1, 0);
+    old.leaves.resize(out_entries, 0);
+    old.vals.resize(out_entries, 0.0);
+    old.fiber_ptr[out_roots] = out_fibers as u32;
+    old.entry_ptr[out_fibers] = out_entries as u32;
+    let mut s = Splice {
+        new,
+        leaf_shift: new_leaf_shift,
+        ga_end: old_fibers,
+        ea_end: old_entries,
+        wa: out_roots,
+        wg: out_fibers,
+        we: out_entries,
+    };
+    let mut ra = old_roots; // old roots 0..ra unplaced
+    let mut rb = new.roots.len(); // batch roots 0..rb unplaced
+    while rb > 0 {
+        if ra > 0 && old.roots[ra - 1] > new.roots[rb - 1] {
+            let run = old.roots[..ra].partition_point(|&r| r <= new.roots[rb - 1]);
+            s.place_old_roots(old, run, ra);
+            ra = run;
+        } else if ra == 0 || new.roots[rb - 1] > old.roots[ra - 1] {
+            let run = if ra == 0 {
+                0
+            } else {
+                new.roots[..rb].partition_point(|&r| r <= old.roots[ra - 1])
+            };
+            s.place_batch_roots(old, run, rb);
+            rb = run;
+        } else {
+            s.merge_shared_root(old, ra - 1, rb - 1);
+            ra -= 1;
+            rb -= 1;
+        }
+    }
+    // Batch exhausted: the remaining old prefix is already in place (its
+    // write frontier met its read frontier at every level).
+    debug_assert_eq!((s.wa, s.wg, s.we), (ra, s.ga_end, s.ea_end));
 }
 
 /// Append a tree whose roots (after adding `root_shift`) all sort strictly
@@ -515,16 +620,16 @@ impl CsfTensor {
     /// * the mode-3-rooted tree gains its new roots by concatenation
     ///   (`O(nnz_batch)`, in place);
     /// * the mode-1/mode-2 trees merge the batch's sorted runs into the
-    ///   existing fiber runs with a gallop/merge pass — new fibers splice
-    ///   in, shared fibers extend at their tail, untouched subtree spans
-    ///   bulk-copy.
+    ///   existing fiber runs **in place**, back-to-front — new fibers
+    ///   splice in, shared fibers extend at their tail, untouched subtree
+    ///   spans move as bulk `copy_within` memmoves, and the splice stops
+    ///   at the smallest batch root (the prefix below it never moves).
     ///
     /// Only the batch is ever *sorted* (`O(nnz_batch log nnz_batch)`);
-    /// trees 0/1 still pay an `O(nnz)` linear copy into fresh arrays
-    /// (sequential memmove — bandwidth-bound, far cheaper than the old
-    /// rebuild's `O(nnz log nnz)` re-sort of the whole history through
-    /// COO; see ROADMAP "In-place mode-1/2 merge" for eliminating the
-    /// copy too).
+    /// trees 0/1 pay at most a linear memmove of the entries above the
+    /// batch's smallest root — no fresh arrays, no re-sort of the history
+    /// (the old rebuild re-sorted all `O(nnz log nnz)` through COO; see
+    /// [`merge_orientation_in_place`]).
     pub fn append_mode3(&mut self, other: &CooTensor) {
         let (oi, oj, k_new) = other.dims();
         assert_eq!(
@@ -602,8 +707,8 @@ impl CsfTensor {
             "mode-3 append would grow nnz to {total}, past the u32 pointer \
              space of the CSF fiber trees"
         );
-        self.orient[0] = merge_orientation(&self.orient[0], b0, k_shift);
-        self.orient[1] = merge_orientation(&self.orient[1], b1, k_shift);
+        merge_orientation_in_place(&mut self.orient[0], b0, k_shift);
+        merge_orientation_in_place(&mut self.orient[1], b1, k_shift);
         append_orientation_tail(&mut self.orient[2], b2, k_shift);
         self.nnz += nnz;
         self.dims.2 += k_new;
@@ -1103,6 +1208,40 @@ mod tests {
             csf.append_mode3(&batch);
             reference.append_mode3(&batch);
             assert_matches_rebuild(&csf, &reference, &format!("round {round}"));
+        }
+    }
+
+    /// The in-place splice's structural edge cases, each against the
+    /// bit-exact rebuild oracle: a batch whose roots all sort above the
+    /// history (early-exit — the prefix never moves), all below (full
+    /// memmove), exactly on the old support (every root and fiber shared:
+    /// no new slots, only entries), and a single-entry batch.
+    #[test]
+    fn in_place_splice_handles_extreme_batch_placements() {
+        let (ni, nj) = (10usize, 10usize);
+        let mut base = CooTensor::new(ni, nj, 2);
+        // History occupies mid-range i/j only, so batches can land fully
+        // above, fully below, or exactly on its root support in every
+        // orientation.
+        for (i, j, k, v) in [(4, 4, 0, 1.0), (4, 6, 1, 2.0), (6, 4, 0, 3.0), (6, 6, 1, 4.0)] {
+            base.push(i, j, k, v);
+        }
+        let batches: [(&str, Vec<(usize, usize, f64)>); 4] = [
+            ("above", vec![(8, 9, 5.0), (9, 8, 6.0)]),
+            ("below", vec![(0, 1, 7.0), (1, 0, 8.0)]),
+            ("shared", vec![(4, 4, 9.0), (4, 6, 10.0), (6, 4, 11.0), (6, 6, 12.0)]),
+            ("single", vec![(5, 5, 13.0)]),
+        ];
+        let mut csf = CsfTensor::from_coo(base.clone());
+        let mut reference = base;
+        for (what, entries) in &batches {
+            let mut batch = CooTensor::new(ni, nj, 1);
+            for &(i, j, v) in entries {
+                batch.push(i, j, 0, v);
+            }
+            csf.append_mode3(&batch);
+            reference.append_mode3(&batch);
+            assert_matches_rebuild(&csf, &reference, what);
         }
     }
 

@@ -44,7 +44,7 @@ fn epochs_advance_by_one_per_successful_ingest() {
             assert_eq!(snap.epoch, (n + 1) as u64, "{}", e.name());
             assert_eq!(snap.dims.2, k, "{}", e.name());
             assert_eq!(
-                snap.model.factors[2].rows(),
+                snap.model().factors[2].rows(),
                 k,
                 "{}: published model must match published dims",
                 e.name()
@@ -63,17 +63,17 @@ fn published_snapshots_are_immutable() {
         let snap0 = handle.snapshot();
         e.ingest(&batches[0]).unwrap();
         let snap1 = handle.snapshot();
-        let lambda1 = snap1.model.lambda.clone();
-        let c1_rows = snap1.model.factors[2].rows();
+        let lambda1 = snap1.model().lambda.clone();
+        let c1_rows = snap1.model().factors[2].rows();
         for b in &batches[1..] {
             e.ingest(b).unwrap();
         }
         assert_eq!(snap0.epoch, 0, "{}", e.name());
-        assert_eq!(snap0.model.factors[2].rows(), existing.dims().2, "{}", e.name());
+        assert_eq!(snap0.model().factors[2].rows(), existing.dims().2, "{}", e.name());
         assert!(snap0.stats.is_none(), "{}: the epoch-0 snapshot carries no stats", e.name());
         assert_eq!(snap1.epoch, 1, "{}", e.name());
-        assert_eq!(snap1.model.lambda, lambda1, "{}", e.name());
-        assert_eq!(snap1.model.factors[2].rows(), c1_rows, "{}", e.name());
+        assert_eq!(snap1.model().lambda, lambda1, "{}", e.name());
+        assert_eq!(snap1.model().factors[2].rows(), c1_rows, "{}", e.name());
         assert!(handle.snapshot().epoch > snap1.epoch, "{}", e.name());
     }
 }

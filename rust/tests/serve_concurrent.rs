@@ -24,17 +24,17 @@ use std::sync::{Arc, Condvar, Mutex};
 fn assert_snapshot_invariants(snap: &ModelSnapshot) {
     // Internal consistency: the model's C always matches the published k.
     assert_eq!(
-        snap.model.factors[2].rows(),
+        snap.model().factors[2].rows(),
         snap.dims.2,
         "epoch {}: C rows != published slice count",
         snap.epoch
     );
-    assert_eq!(snap.model.factors[0].rows(), snap.dims.0);
-    assert_eq!(snap.model.factors[1].rows(), snap.dims.1);
+    assert_eq!(snap.model().factors[0].rows(), snap.dims.0);
+    assert_eq!(snap.model().factors[1].rows(), snap.dims.1);
     // Canonical form: unit-norm columns (zero-norm columns carry λ = 0).
     for f in 0..3 {
-        for t in 0..snap.model.rank() {
-            let n = snap.model.factors[f].col_norm(t);
+        for t in 0..snap.model().rank() {
+            let n = snap.model().factors[f].col_norm(t);
             assert!(
                 (n - 1.0).abs() < 1e-6 || n.abs() < 1e-9,
                 "epoch {}: factor {f} col {t} norm {n} is neither unit nor zero",
@@ -42,7 +42,7 @@ fn assert_snapshot_invariants(snap: &ModelSnapshot) {
             );
         }
     }
-    assert!(snap.model.lambda.iter().all(|l| l.is_finite()));
+    assert!(snap.model().lambda.iter().all(|l| l.is_finite()));
     // Query surface stays well-defined mid-stream.
     assert!(snap.entry(0, 0, 0).is_finite());
     let top = snap.top_k(0, 0, 2);
@@ -364,12 +364,12 @@ fn held_snapshots_stay_consistent_across_future_ingests() {
     let mut engine = SamBaTen::init(&existing, cfg).unwrap();
     let handle = engine.handle();
     let held = handle.snapshot();
-    let held_rows = held.model.factors[2].rows();
+    let held_rows = held.model().factors[2].rows();
     for b in &batches {
         engine.ingest(b).unwrap();
     }
     assert_eq!(held.epoch, 0);
-    assert_eq!(held.model.factors[2].rows(), held_rows, "held snapshot mutated");
+    assert_eq!(held.model().factors[2].rows(), held_rows, "held snapshot mutated");
     assert_snapshot_invariants(&held);
     assert!(handle.epoch() == batches.len() as u64);
 }
