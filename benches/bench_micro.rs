@@ -12,6 +12,9 @@
 //!     ~1K touched rows (asserts >= 5x), and p99 top-k latency under a
 //!     live delta-publishing writer: norm-pruned vs exhaustive scan
 //!     (asserts pruned beats scan at p99, results bit-identical)
+//!   * cluster wire codec (encode/decode MB/s on a dense Ingest frame)
+//!     and replication: delta-frame apply vs full-state apply at 100K
+//!     rows (asserts the delta frame is a fraction of full-state bytes)
 //!   * weighted sampling without replacement
 //!   * component matching (congruence + Hungarian)
 //!   * Jacobi SVD / Cholesky solve
@@ -644,6 +647,80 @@ fn main() {
     bench("micro/extract_dense_96_half", 1, 5, || {
         std::hint::black_box(bigd.extract(&is, &is, &is));
     });
+
+    // Cluster wire codec + snapshot replication (§cluster). First the raw
+    // codec rate on a dense Ingest frame at batch shape (64×64×8 slices,
+    // 256 KB of payload), then the replication economics at accumulated
+    // scale: applying a delta frame that touched ~1K of 100K rows versus
+    // rebuilding the replica from the full-state frame at the same epoch.
+    {
+        use sambaten::cluster::{
+            apply_frame, decode_frame, encode_frame, snapshot_to_frame, Frame, WireTensor,
+        };
+        use sambaten::coordinator::ModelSnapshot;
+        use sambaten::cp::CpModel;
+
+        let batch = TensorData::Dense(DenseTensor::rand(64, 64, 8, &mut rng));
+        let frame = Frame::Ingest {
+            stream: "bench".into(),
+            batch: WireTensor::from_tensor(&batch).unwrap(),
+        };
+        let bytes = encode_frame(&frame);
+        let mb = bytes.len() as f64 / (1024.0 * 1024.0);
+        let enc = bench("micro/cluster_codec/encode_ingest_64x64x8", 2, 10, || {
+            std::hint::black_box(encode_frame(&frame));
+        });
+        let dec = bench("micro/cluster_codec/decode_ingest_64x64x8", 2, 10, || {
+            std::hint::black_box(decode_frame(&bytes).unwrap());
+        });
+        report("micro/cluster_codec/ingest_frame_bytes", bytes.len() as f64, "B");
+        report("micro/cluster_codec/encode_rate", mb / enc.median_s.max(1e-12), "MB/s");
+        report("micro/cluster_codec/decode_rate", mb / dec.median_s.max(1e-12), "MB/s");
+
+        // 100K×4K×128 accumulated state at rank 8; the batch touches rows
+        // 0..1024 of A (8 blocks of 782), 0..64 of B, and grows C by two
+        // slices — the steady-state shape delta replication is built for.
+        let rank = 8;
+        let mut m = CpModel::new(
+            Matrix::rand_gaussian(100_000, rank, &mut rng),
+            Matrix::rand_gaussian(4_000, rank, &mut rng),
+            Matrix::rand_gaussian(128, rank, &mut rng),
+            vec![1.0; rank],
+        );
+        let snap0 = ModelSnapshot::new(0, (100_000, 4_000, 128), m.clone(), None);
+        let touched: [Vec<usize>; 3] = [(0..1024).collect(), (0..64).collect(), vec![128, 129]];
+        for &row in &touched[0] {
+            m.factors[0].row_mut(row)[0] += 1.0;
+        }
+        for &row in &touched[1] {
+            m.factors[1].row_mut(row)[1] -= 1.0;
+        }
+        m.factors[2] = m.factors[2].vstack(&Matrix::rand_gaussian(2, rank, &mut rng));
+        let unit = vec![1.0; rank];
+        let rescale = [unit.clone(), unit.clone(), unit];
+        let snap1 =
+            ModelSnapshot::delta(1, (100_000, 4_000, 130), &m, None, &snap0, touched, &rescale);
+
+        let delta = snapshot_to_frame(Some(&snap0), &snap1);
+        assert!(delta.is_delta(), "bench delta frame fell back to full state");
+        let full = snapshot_to_frame(None, &snap1);
+        let wrap = |snap| encode_frame(&Frame::Snapshot { stream: "bench".into(), snap });
+        let delta_bytes = wrap(delta.clone()).len();
+        let full_bytes = wrap(full.clone()).len();
+        report("micro/cluster_snapshot/full_frame_bytes", full_bytes as f64, "B");
+        report("micro/cluster_snapshot/delta_frame_bytes", delta_bytes as f64, "B");
+        assert!(
+            delta_bytes * 4 < full_bytes,
+            "delta frame ({delta_bytes} B) must be a fraction of full state ({full_bytes} B)"
+        );
+        bench("micro/cluster_snapshot/apply_full_100k", 1, 5, || {
+            std::hint::black_box(apply_frame(None, &full).unwrap());
+        });
+        let base = apply_frame(None, &snapshot_to_frame(None, &snap0)).unwrap();
+        bench("micro/cluster_snapshot/apply_delta_1k_touched", 1, 5, || {
+            std::hint::black_box(apply_frame(Some(&base), &delta).unwrap());
+        });
+    }
 
     // Machine-readable dump of every bench row and report scalar above
     // (timings, throughput, latency percentiles, allocation counters) for

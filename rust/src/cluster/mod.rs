@@ -1,0 +1,46 @@
+//! Sharded cluster layer: consistent-hash stream placement, a versioned
+//! binary wire format, and delta-replicated read snapshots.
+//!
+//! The single-process [`serve::DecompositionService`] multiplexes many
+//! streams onto one machine's cores; this layer is the next level up —
+//! many streams onto many *shard services* — built from four pieces:
+//!
+//! * [`ring`] — a consistent-hash ring ([`ShardRing`]) maps stream keys
+//!   to shards, so placement is deterministic in every process and
+//!   growing the shard count moves only `~1/(N+1)` of streams.
+//! * [`wire`] — one versioned binary frame format for slice batches,
+//!   snapshot full/delta frames, and control messages. Strict decoding:
+//!   malformed frames are explicit errors, never panics.
+//! * [`replica`] — a primary publishes each ingest's snapshot as a wire
+//!   frame; [`Replica`]s apply frames into their own snapshot cell and
+//!   serve the standard [`StreamHandle`](crate::serve::StreamHandle)
+//!   read surface with reads *bit-identical* to the primary at the same
+//!   epoch. Delta frames cost `O(rows_touched · R)`.
+//! * [`transport`] — a frame [`Transport`] trait with two impls: an
+//!   in-memory loopback pair (protocol tests) and length-prefixed TCP
+//!   (`sambaten cluster --listen` / `--join`).
+//!
+//! [`ClusterService`] assembles them into the in-process milestone: N
+//! shards × M replicas behind the familiar `register`/`ingest`/`Ticket`
+//! surface, with every replicated frame round-tripped through the codec
+//! so the wire format is proven on every batch. [`ShardServer`] /
+//! [`RemoteShard`] put the same frames on a real transport.
+//!
+//! [`serve::DecompositionService`]: crate::serve::DecompositionService
+
+pub mod replica;
+pub mod ring;
+pub mod server;
+pub mod service;
+pub mod transport;
+pub mod wire;
+
+pub use replica::{apply_frame, snapshot_to_frame, Replica};
+pub use ring::ShardRing;
+pub use server::{RemoteShard, ShardServer};
+pub use service::{ClusterConfig, ClusterService, ClusterStreamStats};
+pub use transport::{loopback, LoopbackTransport, TcpTransport, Transport, MAX_FRAME_BYTES};
+pub use wire::{
+    decode_frame, encode_frame, Frame, SnapshotFrame, WireBatchAck, WireEngineSpec,
+    WireStreamStats, WireTensor,
+};

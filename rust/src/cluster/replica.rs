@@ -1,0 +1,475 @@
+//! Snapshot replication: encode a published [`ModelSnapshot`] as a wire
+//! frame, apply frames on a replica, and serve replica reads through the
+//! same `StreamHandle` surface as the primary.
+//!
+//! ## Bit-identity contract
+//!
+//! Replica `top_k` / `entry` / `fit` at epoch `e` must return the *same
+//! bits* the primary returns at epoch `e`. That rules out shipping
+//! flattened effective matrices: the primary's cached per-block column
+//! sums are accumulated as `(Σ base) · scale`, and a replica that
+//! re-blocked a flattened matrix would compute `Σ (base · scale)` — equal
+//! in ℝ, off by ulps in f64, and `top_k`'s pruning bound keys on those
+//! sums. So frames always carry the `(base payload, scale)` pairs
+//! themselves:
+//!
+//! * **Full frames** ship every block's base matrix and read scale. The
+//!   replica rebuilds each [`FactorBlock`] with `from_matrix`, which runs
+//!   the *identical* accumulation loop as the primary's block builder —
+//!   identical caches, identical pruning decisions, identical bits.
+//! * **Delta frames** ship the per-mode per-column `rescale` the primary
+//!   recorded at publication plus the rebuilt blocks' payloads (touched
+//!   rows, out-of-band rescaled blocks, the grown `C` tail). For every
+//!   reused block the replica computes `prev_scale * rescale` — the same
+//!   single f64 product the primary's `BlockFactor::delta` performed.
+//!   Cost is `O(rows_touched · R)`, independent of accumulated dims.
+//!
+//! ## Soundness fallback
+//!
+//! The encoder emits a delta only under the conditions the in-process
+//! `SnapshotPublisher` requires for delta publication — consecutive
+//! epochs, unchanged rank, non-shrinking dims, a recorded finite rescale
+//! — and falls back to a full frame otherwise (registration, rank
+//! changes, epoch skips under concurrent producers, engines that rewrite
+//! everything). A replica can therefore *always* apply what it receives
+//! or reject it loudly; it never guesses.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::cluster::wire::{SnapshotFrame, WireBlock, WireFactorDelta, WireFactorState};
+use crate::coordinator::{BlockFactor, FactorBlock, ModelSnapshot, SnapshotCell, StreamHandle};
+use crate::linalg::Matrix;
+
+/// Encode `cur` for replication: a delta frame against `prev` when the
+/// delta-soundness conditions hold, a self-contained full frame otherwise.
+pub fn snapshot_to_frame(prev: Option<&ModelSnapshot>, cur: &ModelSnapshot) -> SnapshotFrame {
+    if let (Some(p), Some(rescale)) = (prev, cur.publication_rescale()) {
+        let sound = cur.epoch == p.epoch + 1
+            && cur.rank() == p.rank()
+            && p.dims.0 == cur.dims.0
+            && p.dims.1 == cur.dims.1
+            && p.dims.2 <= cur.dims.2;
+        if sound {
+            return delta_frame(p, cur, rescale);
+        }
+    }
+    full_frame(cur)
+}
+
+fn full_frame(cur: &ModelSnapshot) -> SnapshotFrame {
+    let factors = std::array::from_fn(|m| {
+        let f = cur.factor_blocks(m);
+        let blocks = f
+            .blocks()
+            .map(|(_, payload, scale)| WireBlock {
+                scale: scale.to_vec(),
+                data: payload.base().data().to_vec(),
+            })
+            .collect();
+        WireFactorState { rows: f.rows() as u64, blocks }
+    });
+    SnapshotFrame::Full {
+        epoch: cur.epoch,
+        dims: dims_u64(cur.dims),
+        lambda: cur.lambda().to_vec(),
+        drift: cur.drift.clone(),
+        factors,
+    }
+}
+
+fn delta_frame(
+    prev: &ModelSnapshot,
+    cur: &ModelSnapshot,
+    rescale: &[Vec<f64>; 3],
+) -> SnapshotFrame {
+    let modes = std::array::from_fn(|m| {
+        let cf = cur.factor_blocks(m);
+        let pf = prev.factor_blocks(m);
+        let mut rebuilt = Vec::new();
+        for b in 0..cf.num_blocks() {
+            // A block is reused iff publication `Arc`-shared it from the
+            // previous snapshot; everything else was rebuilt fresh with
+            // read scale 1 (a delta build's invariant), so its base *is*
+            // its effective payload.
+            let reused = b < pf.num_blocks() && Arc::ptr_eq(cf.block(b), pf.block(b));
+            if !reused {
+                debug_assert!(
+                    cf.block_scale(b).iter().all(|&s| s == 1.0),
+                    "rebuilt block {b} of mode {m} must carry unit scale"
+                );
+                rebuilt.push((b as u32, cf.block(b).base().data().to_vec()));
+            }
+        }
+        WireFactorDelta { rows: cf.rows() as u64, rescale: rescale[m].clone(), rebuilt }
+    });
+    let touched = std::array::from_fn(|m| {
+        cur.touched_rows[m].as_ref().map(|rows| rows.iter().map(|&r| r as u64).collect())
+    });
+    SnapshotFrame::Delta {
+        epoch: cur.epoch,
+        dims: dims_u64(cur.dims),
+        lambda: cur.lambda().to_vec(),
+        drift: cur.drift.clone(),
+        touched,
+        modes,
+    }
+}
+
+fn dims_u64(d: (usize, usize, usize)) -> (u64, u64, u64) {
+    (d.0 as u64, d.1 as u64, d.2 as u64)
+}
+
+fn dims_usize(d: (u64, u64, u64)) -> Result<(usize, usize, usize)> {
+    let cast = |v: u64| usize::try_from(v).context("snapshot dim out of range");
+    Ok((cast(d.0)?, cast(d.1)?, cast(d.2)?))
+}
+
+/// Rows of block `b` under the `BLOCK_ROWS` partition of `rows`.
+fn block_rows(rows: usize, b: usize) -> usize {
+    let br = crate::coordinator::BLOCK_ROWS;
+    br.min(rows - b * br)
+}
+
+/// Apply one frame: reconstruct the snapshot it describes. Full frames
+/// need no context; delta frames need the replica's previous snapshot
+/// (`prev`) and validate every assumption — epoch continuity, rank,
+/// dims, rescale shape, block partition — before touching state.
+pub fn apply_frame(prev: Option<&ModelSnapshot>, frame: &SnapshotFrame) -> Result<ModelSnapshot> {
+    match frame {
+        SnapshotFrame::Full { epoch, dims, lambda, drift, factors } => {
+            let dims = dims_usize(*dims)?;
+            let rank = lambda.len();
+            ensure!(rank >= 1, "full frame with empty lambda");
+            let expected = [dims.0, dims.1, dims.2];
+            let mut built = Vec::with_capacity(3);
+            for (m, state) in factors.iter().enumerate() {
+                let bf = build_full_mode(state, rank)
+                    .with_context(|| format!("full frame, mode {m}"))?;
+                ensure!(
+                    bf.rows() == expected[m],
+                    "mode {m} carries {} rows, dims say {}",
+                    bf.rows(),
+                    expected[m]
+                );
+                built.push(bf);
+            }
+            let factors = to_array(built);
+            Ok(ModelSnapshot::from_parts(
+                *epoch,
+                dims,
+                lambda.clone(),
+                factors,
+                drift.clone(),
+                [None, None, None],
+            ))
+        }
+        SnapshotFrame::Delta { epoch, dims, lambda, drift, touched, modes } => {
+            let p = prev.context("delta frame but the replica holds no previous snapshot")?;
+            let dims = dims_usize(*dims)?;
+            ensure!(
+                *epoch == p.epoch + 1,
+                "delta frame for epoch {epoch} cannot apply on top of epoch {}",
+                p.epoch
+            );
+            let rank = lambda.len();
+            ensure!(rank == p.rank(), "delta changes rank {} → {rank}", p.rank());
+            ensure!(
+                p.dims.0 == dims.0 && p.dims.1 == dims.1 && p.dims.2 <= dims.2,
+                "delta frame dims {dims:?} shrink or reshape previous {:?}",
+                p.dims
+            );
+            let expected = [dims.0, dims.1, dims.2];
+            let mut built = Vec::with_capacity(3);
+            for (m, d) in modes.iter().enumerate() {
+                let bf = build_delta_mode(d, p.factor_blocks(m), rank, expected[m])
+                    .with_context(|| format!("delta frame, mode {m}"))?;
+                built.push(bf);
+            }
+            let factors = to_array(built);
+            let touched_rows = decode_touched(touched)?;
+            Ok(ModelSnapshot::from_parts(
+                *epoch,
+                dims,
+                lambda.clone(),
+                factors,
+                drift.clone(),
+                touched_rows,
+            ))
+        }
+    }
+}
+
+fn to_array(mut v: Vec<BlockFactor>) -> [BlockFactor; 3] {
+    let c = v.pop().expect("three modes");
+    let b = v.pop().expect("three modes");
+    let a = v.pop().expect("three modes");
+    [a, b, c]
+}
+
+fn decode_touched(t: &[Option<Vec<u64>>; 3]) -> Result<[Option<Vec<usize>>; 3]> {
+    let mut out: [Option<Vec<usize>>; 3] = [None, None, None];
+    for (m, rows) in t.iter().enumerate() {
+        if let Some(rows) = rows {
+            let mut local = Vec::with_capacity(rows.len());
+            for &r in rows {
+                local.push(usize::try_from(r).context("touched row out of range")?);
+            }
+            out[m] = Some(local);
+        }
+    }
+    Ok(out)
+}
+
+fn build_full_mode(state: &WireFactorState, rank: usize) -> Result<BlockFactor> {
+    let mut parts = Vec::with_capacity(state.blocks.len());
+    for (b, wb) in state.blocks.iter().enumerate() {
+        ensure!(wb.scale.len() == rank, "block {b}: scale len {} ≠ rank {rank}", wb.scale.len());
+        ensure!(
+            !wb.data.is_empty() && wb.data.len() % rank == 0,
+            "block {b}: payload of {} values is not a whole number of rank-{rank} rows",
+            wb.data.len()
+        );
+        let rows = wb.data.len() / rank;
+        let payload =
+            Arc::new(FactorBlock::from_matrix(Matrix::from_vec(rows, rank, wb.data.clone())));
+        parts.push((payload, wb.scale.clone()));
+    }
+    let bf = BlockFactor::from_parts(rank, parts)?;
+    ensure!(
+        bf.rows() as u64 == state.rows,
+        "factor holds {} rows, frame declared {}",
+        bf.rows(),
+        state.rows
+    );
+    Ok(bf)
+}
+
+fn build_delta_mode(
+    d: &WireFactorDelta,
+    pf: &BlockFactor,
+    rank: usize,
+    expected_rows: usize,
+) -> Result<BlockFactor> {
+    ensure!(d.rescale.len() == rank, "rescale len {} ≠ rank {rank}", d.rescale.len());
+    ensure!(d.rescale.iter().all(|r| r.is_finite()), "non-finite rescale multiplier");
+    let rows = usize::try_from(d.rows).context("row count out of range")?;
+    ensure!(rows == expected_rows, "mode rows {rows} disagree with dims {expected_rows}");
+    ensure!(rows >= 1, "delta frame with an empty mode");
+    let nb = rows.div_ceil(crate::coordinator::BLOCK_ROWS);
+    let mut rebuilt: Vec<Option<&Vec<f64>>> = vec![None; nb];
+    for (idx, data) in &d.rebuilt {
+        let idx = *idx as usize;
+        ensure!(idx < nb, "rebuilt block {idx} outside the {nb}-block partition");
+        ensure!(rebuilt[idx].is_none(), "rebuilt block {idx} sent twice");
+        rebuilt[idx] = Some(data);
+    }
+    let mut parts = Vec::with_capacity(nb);
+    for (b, slot) in rebuilt.iter().enumerate() {
+        let len = block_rows(rows, b);
+        match slot {
+            Some(data) => {
+                ensure!(
+                    data.len() == len * rank,
+                    "rebuilt block {b}: {} values, partition wants {len}×{rank}",
+                    data.len()
+                );
+                let m = Matrix::from_vec(len, rank, (*data).clone());
+                parts.push((Arc::new(FactorBlock::from_matrix(m)), vec![1.0; rank]));
+            }
+            None => {
+                ensure!(
+                    b < pf.num_blocks(),
+                    "delta reuses block {b}, replica only holds {}",
+                    pf.num_blocks()
+                );
+                let payload = Arc::clone(pf.block(b));
+                ensure!(
+                    payload.rows() == len,
+                    "reused block {b} holds {} rows, partition wants {len}",
+                    payload.rows()
+                );
+                // The same single product the primary's delta publication
+                // applied — bit-identical scales by construction.
+                let scale: Vec<f64> =
+                    pf.block_scale(b).iter().zip(&d.rescale).map(|(s, r)| s * r).collect();
+                parts.push((payload, scale));
+            }
+        }
+    }
+    BlockFactor::from_parts(rank, parts)
+}
+
+/// One replica of one stream: owns a [`SnapshotCell`] and applies frames
+/// into it. Readers attach via [`Replica::handle`] and get the standard
+/// wait-free [`StreamHandle`] — the same reader type the primary serves,
+/// so any read path works unchanged against a replica.
+#[derive(Default)]
+pub struct Replica {
+    /// `None` until the first full frame lands. The cell itself is only
+    /// ever swapped whole, so readers never observe a half-applied frame.
+    cell: Mutex<Option<Arc<SnapshotCell<ModelSnapshot>>>>,
+}
+
+impl Replica {
+    pub fn new() -> Replica {
+        Replica::default()
+    }
+
+    /// Apply one snapshot frame; returns the epoch now visible to
+    /// readers. Deltas validate against (and chain from) the currently
+    /// applied snapshot; a full frame (re)seeds state at any epoch.
+    pub fn apply(&self, frame: &SnapshotFrame) -> Result<u64> {
+        let mut guard = self.cell.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = guard.as_ref().map(|c| c.load());
+        let next = apply_frame(prev.as_deref(), frame)?;
+        let epoch = next.epoch;
+        match guard.as_ref() {
+            Some(cell) => cell.store(Arc::new(next)),
+            None => *guard = Some(Arc::new(SnapshotCell::new(Arc::new(next)))),
+        }
+        Ok(epoch)
+    }
+
+    /// Epoch currently visible to readers (`None` before the first frame).
+    pub fn epoch(&self) -> Option<u64> {
+        let guard = self.cell.lock().unwrap_or_else(|e| e.into_inner());
+        guard.as_ref().map(|c| c.load().epoch)
+    }
+
+    /// A wait-free reader over this replica's applied snapshots.
+    pub fn handle(&self) -> Result<StreamHandle> {
+        let guard = self.cell.lock().unwrap_or_else(|e| e.into_inner());
+        match guard.as_ref() {
+            Some(cell) => Ok(StreamHandle::new(Arc::clone(cell))),
+            None => bail!("replica has not applied its first snapshot yet"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::wire::{encode_frame, Frame};
+    use crate::cp::CpModel;
+    use crate::util::Rng;
+
+    fn model(rows: [usize; 3], rank: usize, seed: u64) -> CpModel {
+        let mut rng = Rng::new(seed);
+        CpModel::new(
+            Matrix::rand_gaussian(rows[0], rank, &mut rng),
+            Matrix::rand_gaussian(rows[1], rank, &mut rng),
+            Matrix::rand_gaussian(rows[2], rank, &mut rng),
+            vec![1.0; rank],
+        )
+    }
+
+    fn reads_match(a: &ModelSnapshot, b: &ModelSnapshot) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.dims, b.dims);
+        assert_eq!(a.lambda(), b.lambda());
+        let (i, j, _) = a.dims;
+        for mode in 0..2 {
+            let rows = if mode == 0 { i } else { j };
+            for row in [0, rows / 2, rows - 1] {
+                let ka = a.top_k(mode, row, 5);
+                let kb = b.top_k(mode, row, 5);
+                assert_eq!(ka, kb, "top_k diverged at mode {mode} row {row}");
+                for (x, y) in ka.iter().zip(&kb) {
+                    assert_eq!(x.1.to_bits(), y.1.to_bits(), "score bits diverged");
+                }
+            }
+        }
+        assert_eq!(a.entry(0, 0, 0).to_bits(), b.entry(0, 0, 0).to_bits());
+    }
+
+    #[test]
+    fn full_frame_reconstructs_bit_identical_reads() {
+        let rows = [300, 200, 150];
+        let snap = ModelSnapshot::new(0, (300, 200, 150), model(rows, 4, 7), None);
+        let frame = snapshot_to_frame(None, &snap);
+        assert!(!frame.is_delta());
+        let back = apply_frame(None, &frame).unwrap();
+        reads_match(&snap, &back);
+    }
+
+    #[test]
+    fn delta_frame_chains_and_matches_primary() {
+        let dims = (300, 200, 128);
+        let m0 = model([300, 200, 128], 3, 11);
+        let snap0 = ModelSnapshot::new(0, dims, m0.clone(), None);
+
+        // Epoch 1: touch a handful of rows in modes 0/1, grow mode 2.
+        let mut m1 = m0.clone();
+        let touched = [vec![1usize, 130], vec![5usize], vec![128usize, 129]];
+        for &r in &touched[0] {
+            m1.factors[0].row_mut(r)[0] += 0.5;
+        }
+        for &r in &touched[1] {
+            m1.factors[1].row_mut(r)[1] -= 0.25;
+        }
+        let mut rng = Rng::new(23);
+        let tail = Matrix::rand_gaussian(2, 3, &mut rng);
+        m1.factors[2] = m1.factors[2].vstack(&tail);
+        let rescale = [vec![1.0; 3], vec![1.0; 3], vec![0.5, 1.0, 2.0]];
+        let dims1 = (300, 200, 130);
+        let snap1 = ModelSnapshot::delta(1, dims1, &m1, None, &snap0, touched, &rescale);
+
+        let frame = snapshot_to_frame(Some(&snap0), &snap1);
+        assert!(frame.is_delta(), "consecutive epochs with recorded rescale must delta");
+
+        // Replica path: full(0), then delta(1).
+        let replica = Replica::new();
+        replica.apply(&snapshot_to_frame(None, &snap0)).unwrap();
+        assert_eq!(replica.epoch(), Some(0));
+        replica.apply(&frame).unwrap();
+        assert_eq!(replica.epoch(), Some(1));
+        let applied = replica.handle().unwrap().snapshot();
+        reads_match(&snap1, &applied);
+
+        // The delta frame must be materially smaller than the full frame.
+        let full = Frame::Snapshot { stream: "s".into(), snap: snapshot_to_frame(None, &snap1) };
+        let delta = Frame::Snapshot { stream: "s".into(), snap: frame };
+        let full_bytes = encode_frame(&full).len();
+        let delta_bytes = encode_frame(&delta).len();
+        assert!(
+            delta_bytes * 2 < full_bytes,
+            "delta ({delta_bytes} B) should be far below full ({full_bytes} B)"
+        );
+    }
+
+    #[test]
+    fn delta_without_context_is_rejected() {
+        let dims = (130, 64, 64);
+        let m0 = model([130, 64, 64], 2, 3);
+        let snap0 = ModelSnapshot::new(0, dims, m0.clone(), None);
+        let snap1 = ModelSnapshot::delta(
+            1,
+            dims,
+            &m0,
+            None,
+            &snap0,
+            [vec![0], vec![0], vec![0]],
+            &[vec![1.0; 2], vec![1.0; 2], vec![1.0; 2]],
+        );
+        let frame = snapshot_to_frame(Some(&snap0), &snap1);
+        assert!(frame.is_delta());
+        let replica = Replica::new();
+        let err = replica.apply(&frame).unwrap_err();
+        assert!(err.to_string().contains("no previous snapshot"), "got: {err}");
+        // And an epoch gap after seeding is rejected too.
+        replica.apply(&snapshot_to_frame(None, &snap0)).unwrap();
+        let snap2 = ModelSnapshot::delta(
+            2,
+            dims,
+            &m0,
+            None,
+            &snap1,
+            [vec![0], vec![0], vec![0]],
+            &[vec![1.0; 2], vec![1.0; 2], vec![1.0; 2]],
+        );
+        let gap = snapshot_to_frame(Some(&snap1), &snap2);
+        assert!(replica.apply(&gap).is_err(), "epoch 2 on top of epoch 0 must fail");
+    }
+}

@@ -1,0 +1,134 @@
+//! Consistent-hash placement of stream keys onto shards.
+//!
+//! The pool solved "many streams, few workers" inside one process with
+//! keyed mailboxes hashed onto workers; this is the same design one level
+//! up — "many streams, few shard *services*". A plain `hash % shards`
+//! would remap almost every stream when the shard count changes; the
+//! classic fix is a ring of virtual nodes: each shard owns `vnodes`
+//! pseudo-random points on a `u64` circle, and a key belongs to the shard
+//! owning the first point at or after the key's hash. Growing from `N` to
+//! `N+1` shards then moves only `~1/(N+1)` of the keys (pinned loosely in
+//! tests), which is what makes shard rebalancing a per-stream handoff
+//! (`ClusterService::remove` returns the final counters) instead of a
+//! full reshuffle.
+//!
+//! The hash is FNV-1a (the offline crate set has no hashing crates, and
+//! placement must be stable across processes — `std`'s `DefaultHasher` is
+//! explicitly not): deterministic, seed-free, and good enough spread for
+//! placement. Not cryptographic; stream names are trusted input here.
+
+/// A ring of `shards × vnodes` points mapping stream keys to shard ids.
+#[derive(Clone, Debug)]
+pub struct ShardRing {
+    shards: usize,
+    /// `(point, shard)` sorted by point (ties broken by shard id, so
+    /// construction order never matters).
+    points: Vec<(u64, u32)>,
+}
+
+/// FNV-1a 64-bit — the same function every process in a cluster runs, so
+/// client-side and shard-side placement always agree.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl ShardRing {
+    /// Default virtual nodes per shard: enough that per-shard load at a
+    /// few thousand streams stays within a few tens of percent of even.
+    pub const DEFAULT_VNODES: usize = 64;
+
+    /// Build a ring. `shards >= 1`, `vnodes >= 1` (both clamped).
+    pub fn new(shards: usize, vnodes: usize) -> ShardRing {
+        let shards = shards.max(1);
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(shards * vnodes);
+        for s in 0..shards {
+            for v in 0..vnodes {
+                let label = format!("shard-{s}#vnode-{v}");
+                points.push((fnv1a64(label.as_bytes()), s as u32));
+            }
+        }
+        points.sort_unstable();
+        ShardRing { shards, points }
+    }
+
+    /// Number of shards on the ring.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The shard owning `key`: the first ring point at or after the key's
+    /// hash, wrapping past the top of the `u64` circle.
+    pub fn shard_for(&self, key: &str) -> usize {
+        let h = fnv1a64(key.as_bytes());
+        let idx = self.points.partition_point(|&(p, _)| p < h);
+        let (_, shard) = self.points[idx % self.points.len()];
+        shard as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("stream-{i}")).collect()
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_in_range() {
+        let ring = ShardRing::new(4, ShardRing::DEFAULT_VNODES);
+        let again = ShardRing::new(4, ShardRing::DEFAULT_VNODES);
+        for k in keys(500) {
+            let s = ring.shard_for(&k);
+            assert!(s < 4);
+            assert_eq!(s, again.shard_for(&k), "placement must be stable");
+        }
+    }
+
+    #[test]
+    fn every_shard_receives_a_reasonable_share() {
+        let ring = ShardRing::new(4, ShardRing::DEFAULT_VNODES);
+        let mut counts = [0usize; 4];
+        for k in keys(2000) {
+            counts[ring.shard_for(&k)] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            // Loose band: consistent hashing is uneven, but with 64 vnodes
+            // no shard should be starved or hold the majority.
+            assert!(c > 100, "shard {s} starved: {counts:?}");
+            assert!(c < 1000, "shard {s} overloaded: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn growing_the_ring_moves_only_a_fraction_of_keys() {
+        let before = ShardRing::new(4, ShardRing::DEFAULT_VNODES);
+        let after = ShardRing::new(5, ShardRing::DEFAULT_VNODES);
+        let ks = keys(2000);
+        let moved = ks.iter().filter(|k| before.shard_for(k) != after.shard_for(k)).count();
+        // Ideal is 1/5 = 400; mod-hashing would move ~4/5 = 1600.
+        assert!(moved > 0, "a fifth shard must take over some keys");
+        assert!(moved < 800, "consistent hashing must not reshuffle: moved {moved}/2000");
+        // Keys that stayed are on the same shard id, so per-stream state
+        // never migrates unless the ring says so.
+        for k in &ks {
+            if before.shard_for(k) == after.shard_for(k) {
+                assert!(after.shard_for(k) < 5);
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_ring_maps_everything_to_shard_zero() {
+        let ring = ShardRing::new(1, 8);
+        for k in keys(50) {
+            assert_eq!(ring.shard_for(&k), 0);
+        }
+    }
+}

@@ -1,0 +1,375 @@
+//! Frame-level shard server and client — the cluster protocol over a
+//! real [`Transport`].
+//!
+//! One process per shard: [`ShardServer`] wraps a
+//! [`DecompositionService`] and speaks the wire protocol over any
+//! transport; [`RemoteShard`] is the matching client. The server pushes
+//! a [`Frame::Snapshot`] ahead of every register/ingest ack, and the
+//! client applies those frames to a local [`Replica`] *before* handing
+//! the ack to the caller — so the remote contract matches the in-process
+//! one: once your call returns, your local replica serves the epoch the
+//! ack names, bit-identical to the shard's primary.
+//!
+//! Placement stays client-side: a multi-shard deployment is one
+//! `RemoteShard` per address plus a [`super::ShardRing`] to pick which
+//! one gets each stream (`sambaten cluster --join` does exactly this for
+//! shard count 1; the routing is the same ring lookup
+//! [`ClusterService`](super::ClusterService) uses in-process).
+//!
+//! Error surfaces are deliberately split: *transport* failures (hangup,
+//! garbage bytes) fail the connection, while *request* failures (unknown
+//! stream, engine validation) come back as [`Frame::Error`] or an `Err`
+//! ingest ack and leave the connection usable.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cluster::replica::{snapshot_to_frame, Replica};
+use crate::cluster::transport::{TcpTransport, Transport};
+use crate::cluster::wire::{
+    decode_frame, encode_frame, Frame, SnapshotFrame, WireBatchAck, WireEngineSpec,
+    WireStreamStats, WireTensor,
+};
+use crate::coordinator::ModelSnapshot;
+use crate::serve::{DecompositionService, StreamHandle};
+use crate::tensor::TensorData;
+
+/// Serves one shard's [`DecompositionService`] to one connection at a
+/// time ([`serve`](Self::serve) per connection; the service itself is
+/// shared, so run one thread per accepted socket).
+pub struct ShardServer {
+    svc: Arc<DecompositionService>,
+    /// Upper bound on waiting out one ingest before the ack turns into
+    /// an in-band timeout error.
+    timeout: Duration,
+}
+
+impl ShardServer {
+    pub fn new(svc: Arc<DecompositionService>) -> ShardServer {
+        ShardServer { svc, timeout: Duration::from_secs(120) }
+    }
+
+    pub fn with_timeout(mut self, timeout: Duration) -> ShardServer {
+        self.timeout = timeout;
+        self
+    }
+
+    /// The shared service (register streams out-of-band, inspect stats).
+    pub fn service(&self) -> &Arc<DecompositionService> {
+        &self.svc
+    }
+
+    /// Serve one connection until the peer hangs up. Malformed frames
+    /// are answered with [`Frame::Error`]; only transport failures end
+    /// the loop early.
+    pub fn serve(&self, transport: &mut dyn Transport) -> Result<()> {
+        // Per-connection replication state: the last snapshot this peer
+        // was sent, per stream — the delta encoder's `prev`.
+        let mut last: HashMap<String, Arc<ModelSnapshot>> = HashMap::new();
+        while let Some(bytes) = transport.recv()? {
+            let replies = match decode_frame(&bytes) {
+                Ok(frame) => self.handle(frame, &mut last),
+                Err(e) => vec![Frame::Error { message: format!("malformed frame: {e:#}") }],
+            };
+            for reply in &replies {
+                transport.send(&encode_frame(reply))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn handle(&self, frame: Frame, last: &mut HashMap<String, Arc<ModelSnapshot>>) -> Vec<Frame> {
+        match frame {
+            Frame::Register { stream, engine, existing } => {
+                match self.register(&stream, &engine, existing, last) {
+                    Ok(replies) => replies,
+                    Err(e) => vec![Frame::Error { message: format!("{e:#}") }],
+                }
+            }
+            Frame::Ingest { stream, batch } => self.ingest(&stream, batch, last),
+            Frame::StatsReq { stream } => match self.svc.stats(&stream) {
+                Ok(stats) => vec![Frame::StatsAck { stats: WireStreamStats::from(&stats) }],
+                Err(e) => vec![Frame::Error { message: format!("{e:#}") }],
+            },
+            Frame::Drain { stream } => match self.svc.remove(&stream) {
+                Ok(stats) => {
+                    last.remove(&stream);
+                    vec![Frame::DrainAck { stats: WireStreamStats::from(&stats) }]
+                }
+                Err(e) => vec![Frame::Error { message: format!("{e:#}") }],
+            },
+            // Acks, snapshots and errors only ever travel shard → client.
+            other => {
+                let message = format!("unexpected client frame: {other:?}");
+                vec![Frame::Error { message }]
+            }
+        }
+    }
+
+    fn register(
+        &self,
+        stream: &str,
+        engine: &WireEngineSpec,
+        existing: WireTensor,
+        last: &mut HashMap<String, Arc<ModelSnapshot>>,
+    ) -> Result<Vec<Frame>> {
+        let cfg = engine.to_engine_config()?;
+        let existing = existing.into_tensor()?;
+        let handle = self.svc.register_with_engine(stream, &existing, cfg)?;
+        let snapshot = handle.snapshot();
+        let snap = snapshot_to_frame(None, &snapshot);
+        let ack = Frame::RegisterAck {
+            stream: stream.to_string(),
+            epoch: snapshot.epoch,
+            rank: snapshot.rank() as u32,
+        };
+        last.insert(stream.to_string(), snapshot);
+        Ok(vec![Frame::Snapshot { stream: stream.to_string(), snap }, ack])
+    }
+
+    fn ingest(
+        &self,
+        stream: &str,
+        batch: WireTensor,
+        last: &mut HashMap<String, Arc<ModelSnapshot>>,
+    ) -> Vec<Frame> {
+        let err_ack = |message: String| {
+            vec![Frame::IngestAck { stream: stream.to_string(), result: Err(message) }]
+        };
+        let batch = match batch.into_tensor() {
+            Ok(b) => b,
+            Err(e) => return err_ack(format!("{e:#}")),
+        };
+        let ticket = match self.svc.ingest(stream, batch) {
+            Ok(t) => t,
+            Err(e) => return err_ack(format!("{e:#}")),
+        };
+        let stats = match ticket.wait_timeout(self.timeout) {
+            Some(Ok(stats)) => stats,
+            Some(Err(e)) => return err_ack(format!("{e:#}")),
+            None => {
+                let secs = self.timeout.as_secs();
+                return err_ack(format!("ingest did not finish within {secs}s"));
+            }
+        };
+        let Ok(handle) = self.svc.handle(stream) else {
+            return err_ack(format!("stream {stream:?} vanished mid-ingest"));
+        };
+        let snapshot = handle.snapshot();
+        let snap = snapshot_to_frame(last.get(stream).map(Arc::as_ref), &snapshot);
+        let ack = Frame::IngestAck {
+            stream: stream.to_string(),
+            result: Ok(WireBatchAck {
+                epoch: snapshot.epoch,
+                k_new: stats.k_new as u64,
+                seconds: stats.seconds,
+            }),
+        };
+        last.insert(stream.to_string(), snapshot);
+        vec![Frame::Snapshot { stream: stream.to_string(), snap }, ack]
+    }
+}
+
+/// Client end of one shard connection. Every request is a blocking RPC;
+/// [`Frame::Snapshot`] frames the server pushes ahead of its acks are
+/// applied to per-stream [`Replica`]s *before* the ack is returned, so
+/// [`replica`](Self::replica) reads are current with the last ack.
+pub struct RemoteShard {
+    transport: Mutex<Box<dyn Transport>>,
+    replicas: Mutex<HashMap<String, Arc<Replica>>>,
+}
+
+impl RemoteShard {
+    pub fn new(transport: impl Transport + 'static) -> RemoteShard {
+        RemoteShard {
+            transport: Mutex::new(Box::new(transport)),
+            replicas: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Connect over TCP to a `sambaten cluster --listen` shard.
+    pub fn connect(addr: &str) -> Result<RemoteShard> {
+        Ok(RemoteShard::new(TcpTransport::connect(addr)?))
+    }
+
+    /// Register a stream; returns the shard's `(epoch, rank)` ack. The
+    /// local replica is seeded before this returns.
+    pub fn register(
+        &self,
+        stream: &str,
+        existing: &TensorData,
+        engine: WireEngineSpec,
+    ) -> Result<(u64, u32)> {
+        let existing = WireTensor::from_tensor(existing)?;
+        let req = Frame::Register { stream: stream.to_string(), engine, existing };
+        match self.rpc(&req)? {
+            Frame::RegisterAck { epoch, rank, .. } => Ok((epoch, rank)),
+            other => Err(unexpected("register", other)),
+        }
+    }
+
+    /// Ship one batch and wait for the shard's ack; the local replica
+    /// has applied the resulting snapshot when this returns.
+    pub fn ingest(&self, stream: &str, batch: &TensorData) -> Result<WireBatchAck> {
+        let batch = WireTensor::from_tensor(batch)?;
+        let req = Frame::Ingest { stream: stream.to_string(), batch };
+        match self.rpc(&req)? {
+            Frame::IngestAck { result, .. } => {
+                result.map_err(|m| anyhow!("shard rejected batch: {m}"))
+            }
+            other => Err(unexpected("ingest", other)),
+        }
+    }
+
+    /// The shard's current counters for `stream`.
+    pub fn stats(&self, stream: &str) -> Result<WireStreamStats> {
+        match self.rpc(&Frame::StatsReq { stream: stream.to_string() })? {
+            Frame::StatsAck { stats } => Ok(stats),
+            other => Err(unexpected("stats", other)),
+        }
+    }
+
+    /// Remove `stream` on the shard; returns its **final** counters (the
+    /// rebalancing handoff record). The local replica is dropped too.
+    pub fn drain(&self, stream: &str) -> Result<WireStreamStats> {
+        match self.rpc(&Frame::Drain { stream: stream.to_string() })? {
+            Frame::DrainAck { stats } => {
+                self.lock_replicas().remove(stream);
+                Ok(stats)
+            }
+            other => Err(unexpected("drain", other)),
+        }
+    }
+
+    /// Read handle over the local replica of `stream` — same
+    /// [`StreamHandle`] surface as a primary, bit-identical reads at the
+    /// acked epoch.
+    pub fn replica(&self, stream: &str) -> Result<StreamHandle> {
+        let replica = self
+            .lock_replicas()
+            .get(stream)
+            .cloned()
+            .ok_or_else(|| anyhow!("no replica for stream {stream:?} (not registered here)"))?;
+        replica.handle()
+    }
+
+    /// Epoch the local replica of `stream` has applied.
+    pub fn replica_epoch(&self, stream: &str) -> Option<u64> {
+        self.lock_replicas().get(stream).and_then(|r| r.epoch())
+    }
+
+    fn lock_replicas(&self) -> std::sync::MutexGuard<'_, HashMap<String, Arc<Replica>>> {
+        self.replicas.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Send one request, apply pushed snapshot frames, return the first
+    /// non-snapshot reply. `Frame::Error` becomes an `Err` here so every
+    /// caller gets uniform error plumbing.
+    fn rpc(&self, req: &Frame) -> Result<Frame> {
+        let mut transport = self.transport.lock().unwrap_or_else(|e| e.into_inner());
+        transport.send(&encode_frame(req))?;
+        loop {
+            let bytes = transport.recv()?.context("shard hung up mid-request")?;
+            match decode_frame(&bytes)? {
+                Frame::Snapshot { stream, snap } => self.apply_snapshot(&stream, &snap)?,
+                Frame::Error { message } => bail!("shard error: {message}"),
+                reply => return Ok(reply),
+            }
+        }
+    }
+
+    fn apply_snapshot(&self, stream: &str, snap: &SnapshotFrame) -> Result<()> {
+        let replica = self
+            .lock_replicas()
+            .entry(stream.to_string())
+            .or_insert_with(|| Arc::new(Replica::new()))
+            .clone();
+        replica
+            .apply(snap)
+            .with_context(|| format!("applying pushed snapshot for stream {stream:?}"))?;
+        Ok(())
+    }
+}
+
+fn unexpected(what: &str, frame: Frame) -> anyhow::Error {
+    anyhow!("unexpected {what} reply: {frame:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::transport::loopback;
+    use crate::tensor::DenseTensor;
+    use crate::util::Rng;
+
+    fn dense(i: usize, j: usize, k: usize, seed: u64) -> TensorData {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f64> = (0..i * j * k).map(|_| rng.gaussian()).collect();
+        TensorData::Dense(DenseTensor::from_vec(i, j, k, data))
+    }
+
+    fn spec(rank: u32) -> WireEngineSpec {
+        WireEngineSpec::SamBaTen {
+            rank,
+            sampling_factor: 2,
+            repetitions: 2,
+            seed: 42,
+            adaptive: false,
+        }
+    }
+
+    fn with_loopback_server<T>(f: impl FnOnce(&RemoteShard) -> T) -> T {
+        let (client_end, mut server_end) = loopback();
+        let server = std::thread::spawn(move || {
+            let shard = ShardServer::new(Arc::new(DecompositionService::new()));
+            shard.serve(&mut server_end).unwrap();
+        });
+        let client = RemoteShard::new(client_end);
+        let out = f(&client);
+        drop(client); // hang up → server loop ends
+        server.join().unwrap();
+        out
+    }
+
+    #[test]
+    fn register_ingest_stats_drain_over_loopback() {
+        with_loopback_server(|client| {
+            let (epoch, rank) = client.register("s", &dense(20, 16, 10, 1), spec(2)).unwrap();
+            assert_eq!((epoch, rank), (0, 2));
+            assert_eq!(client.replica_epoch("s"), Some(0));
+
+            let ack = client.ingest("s", &dense(20, 16, 2, 2)).unwrap();
+            assert_eq!(ack.epoch, 1);
+            assert_eq!(ack.k_new, 2);
+            assert_eq!(client.replica_epoch("s"), Some(1));
+            // Replica reads line up with the ack.
+            let replica = client.replica("s").unwrap();
+            assert_eq!(replica.dims(), (20, 16, 12));
+
+            let stats = client.stats("s").unwrap();
+            assert_eq!(stats.epoch, 1);
+            assert_eq!(stats.batches, 1);
+
+            let finals = client.drain("s").unwrap();
+            assert_eq!(finals.epoch, 1);
+            assert!(client.replica("s").is_err(), "drain drops the local replica");
+            assert!(client.stats("s").is_err(), "stream is gone on the shard");
+        });
+    }
+
+    #[test]
+    fn request_errors_leave_the_connection_usable() {
+        with_loopback_server(|client| {
+            let err = client.ingest("ghost", &dense(4, 4, 1, 3)).unwrap_err();
+            assert!(err.to_string().contains("ghost"), "got: {err}");
+            let err = client.stats("ghost").unwrap_err();
+            assert!(err.to_string().contains("ghost"), "got: {err}");
+            // Still works after two failed requests.
+            client.register("real", &dense(16, 12, 8, 4), spec(2)).unwrap();
+            assert_eq!(client.stats("real").unwrap().epoch, 0);
+        });
+    }
+}

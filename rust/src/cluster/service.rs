@@ -1,0 +1,529 @@
+//! The cluster front door: N shards, each an independent
+//! [`DecompositionService`], with stream placement decided by the
+//! consistent-hash [`ShardRing`] and every accepted batch replicated to
+//! M read replicas through the wire codec.
+//!
+//! The surface deliberately mirrors `serve::DecompositionService` —
+//! `register` / `ingest` → [`Ticket`] / `stats` — so a caller written
+//! against one service runs against a cluster by swapping the
+//! constructor. What changes underneath:
+//!
+//! * **Placement.** `shard_of(name)` is pure ring lookup; every process
+//!   that builds the same ring (same shard count, same vnodes) places
+//!   streams identically, which is what lets remote clients route
+//!   without asking anyone.
+//! * **Replication.** Each shard owns one replication worker. After a
+//!   batch's inner ticket resolves, the worker encodes the primary's new
+//!   snapshot as a wire frame — delta when sound, full otherwise —
+//!   round-trips it through `encode_frame`/`decode_frame` (the
+//!   in-process path proves the codec on every single batch), and
+//!   applies it to all M [`Replica`]s. Only then does the *outer* ticket
+//!   resolve, so a caller that waited on its ticket may immediately read
+//!   any replica and see the primary's epoch, bit for bit.
+//! * **Handoff.** [`ClusterService::remove`] drains the stream and
+//!   returns [`ClusterStreamStats`] — the final per-stream counters a
+//!   rebalance needs to move a stream to another shard.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cluster::replica::{snapshot_to_frame, Replica};
+use crate::cluster::ring::ShardRing;
+use crate::cluster::wire::{decode_frame, encode_frame, Frame, SnapshotFrame};
+use crate::coordinator::{BatchStats, EngineConfig, ModelSnapshot};
+use crate::serve::{DecompositionService, StreamHandle, StreamStats, Ticket};
+use crate::tensor::TensorData;
+
+/// Shape of a cluster: how many shards, how many read replicas per
+/// stream, and the knobs forwarded to each shard's inner service.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Number of shard services (≥ 1).
+    pub shards: usize,
+    /// Read replicas per stream (0 = placement + wire validation only).
+    pub replicas: usize,
+    /// Virtual nodes per shard on the placement ring.
+    pub vnodes: usize,
+    /// Bounded ingest queue depth of each shard's inner service.
+    pub queue_cap: usize,
+}
+
+impl ClusterConfig {
+    pub fn new(shards: usize) -> ClusterConfig {
+        ClusterConfig {
+            shards: shards.max(1),
+            replicas: 1,
+            vnodes: ShardRing::DEFAULT_VNODES,
+            queue_cap: 4,
+        }
+    }
+
+    pub fn replicas(mut self, replicas: usize) -> ClusterConfig {
+        self.replicas = replicas;
+        self
+    }
+
+    pub fn vnodes(mut self, vnodes: usize) -> ClusterConfig {
+        self.vnodes = vnodes.max(1);
+        self
+    }
+
+    pub fn queue_cap(mut self, cap: usize) -> ClusterConfig {
+        self.queue_cap = cap.max(1);
+        self
+    }
+}
+
+/// Final per-stream counters, returned by [`ClusterService::remove`] /
+/// [`ClusterService::shutdown`] — the handoff record for rebalancing.
+#[derive(Clone, Debug)]
+pub struct ClusterStreamStats {
+    /// Shard the stream lived on.
+    pub shard: usize,
+    /// The primary's final [`StreamStats`] (epoch, batches, errors, …).
+    pub primary: StreamStats,
+    /// Epoch each replica had applied when the stream was removed. After
+    /// a drain these all equal `primary.epoch`.
+    pub replica_epochs: Vec<u64>,
+    /// Snapshot frames shipped as deltas.
+    pub frames_delta: u64,
+    /// Snapshot frames shipped full-state (registration, fallbacks).
+    pub frames_full: u64,
+    /// Total encoded snapshot-frame bytes replicated.
+    pub bytes_replicated: u64,
+}
+
+/// One stream's replication state: the primary's read handle, the last
+/// snapshot already shipped, and the M replicas frames land on.
+struct RepStream {
+    name: String,
+    shard: usize,
+    primary: StreamHandle,
+    replicas: Vec<Replica>,
+    /// Last snapshot replicated — the delta encoder's `prev`. Only the
+    /// shard's replication worker mutates it (registration seeds it).
+    last: Mutex<Arc<ModelSnapshot>>,
+    frames_delta: AtomicU64,
+    frames_full: AtomicU64,
+    bytes_replicated: AtomicU64,
+}
+
+impl RepStream {
+    /// Ship everything the primary has published past `last` as one
+    /// frame, through the codec, onto every replica. Idempotent when the
+    /// epoch hasn't moved (concurrent producers: an earlier job may have
+    /// already shipped a later epoch).
+    fn replicate(&self) -> Result<()> {
+        let cur = self.primary.snapshot();
+        let mut last = self.last.lock().unwrap_or_else(|e| e.into_inner());
+        if cur.epoch == last.epoch {
+            return Ok(());
+        }
+        let snap = snapshot_to_frame(Some(last.as_ref()), &cur);
+        if snap.is_delta() {
+            self.frames_delta.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.frames_full.fetch_add(1, Ordering::Relaxed);
+        }
+        let frame = Frame::Snapshot { stream: self.name.clone(), snap };
+        let bytes = encode_frame(&frame);
+        self.bytes_replicated.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        // Decode what we encoded: in-process replication rides the same
+        // codec the TCP path ships, so every batch is a round-trip proof.
+        let decoded = decode_frame(&bytes).context("replication frame failed its round-trip")?;
+        let Frame::Snapshot { snap, .. } = decoded else {
+            bail!("replication frame decoded to a non-snapshot frame");
+        };
+        for (i, replica) in self.replicas.iter().enumerate() {
+            replica
+                .apply(&snap)
+                .with_context(|| format!("replica {i} of stream {:?}", self.name))?;
+        }
+        *last = cur;
+        Ok(())
+    }
+
+    fn replica_epochs(&self) -> Vec<u64> {
+        self.replicas.iter().map(|r| r.epoch().unwrap_or(0)).collect()
+    }
+}
+
+/// Work items for a shard's replication worker.
+enum ReplJob {
+    /// Wait out one accepted batch, replicate the result, resolve the
+    /// caller's outer ticket.
+    Batch { stream: Arc<RepStream>, ticket: Ticket, done: mpsc::Sender<Result<BatchStats>> },
+    /// Barrier: all jobs enqueued before this one have been processed.
+    Flush(mpsc::Sender<()>),
+}
+
+fn replication_worker(rx: mpsc::Receiver<ReplJob>) {
+    while let Ok(job) = rx.recv() {
+        match job {
+            ReplJob::Batch { stream, ticket, done } => {
+                let result = ticket.wait();
+                let result = match result {
+                    Ok(stats) => stream.replicate().map(|()| stats),
+                    Err(e) => Err(e),
+                };
+                // A dropped outer ticket is fine — replication already
+                // happened; only the caller's ack is lost.
+                let _ = done.send(result);
+            }
+            ReplJob::Flush(tx) => {
+                let _ = tx.send(());
+            }
+        }
+    }
+}
+
+/// One shard: an inner single-process service plus the replication
+/// worker and per-stream replication state.
+struct ShardNode {
+    svc: DecompositionService,
+    streams: Mutex<HashMap<String, Arc<RepStream>>>,
+    /// `None` after shutdown begins; dropping it ends the worker.
+    tx: Mutex<Option<mpsc::Sender<ReplJob>>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ShardNode {
+    fn new(queue_cap: usize, shard: usize) -> Result<ShardNode> {
+        let (tx, rx) = mpsc::channel();
+        let worker = std::thread::Builder::new()
+            .name(format!("cluster-repl-{shard}"))
+            .spawn(move || replication_worker(rx))
+            .context("spawning replication worker")?;
+        Ok(ShardNode {
+            svc: DecompositionService::with_queue_cap(queue_cap),
+            streams: Mutex::new(HashMap::new()),
+            tx: Mutex::new(Some(tx)),
+            worker: Mutex::new(Some(worker)),
+        })
+    }
+
+    fn lock_streams(&self) -> std::sync::MutexGuard<'_, HashMap<String, Arc<RepStream>>> {
+        self.streams.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn sender(&self) -> Result<mpsc::Sender<ReplJob>> {
+        let guard = self.tx.lock().unwrap_or_else(|e| e.into_inner());
+        guard.clone().ok_or_else(|| anyhow!("cluster is shut down"))
+    }
+
+    /// Barrier: returns once the replication worker has processed every
+    /// job enqueued before now (so per-stream counters are final).
+    fn flush(&self) {
+        let Ok(tx) = self.sender() else { return };
+        let (done_tx, done_rx) = mpsc::channel();
+        if tx.send(ReplJob::Flush(done_tx)).is_ok() {
+            let _ = done_rx.recv();
+        }
+    }
+}
+
+/// A sharded, replicated decomposition service. See the module docs for
+/// the architecture; see `tests/cluster_replication.rs` for the
+/// bit-identity and concurrency pins.
+pub struct ClusterService {
+    ring: ShardRing,
+    nodes: Vec<ShardNode>,
+    replicas: usize,
+}
+
+impl ClusterService {
+    /// Build a cluster: `shards` inner services, each with its own
+    /// replication worker, placement on a shared ring.
+    pub fn new(cfg: ClusterConfig) -> Result<ClusterService> {
+        let ring = ShardRing::new(cfg.shards, cfg.vnodes);
+        let mut nodes = Vec::with_capacity(ring.shards());
+        for s in 0..ring.shards() {
+            nodes.push(ShardNode::new(cfg.queue_cap, s)?);
+        }
+        Ok(ClusterService { ring, nodes, replicas: cfg.replicas })
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The shard `name` is placed on — pure ring lookup, identical in
+    /// every process that builds the same ring.
+    pub fn shard_of(&self, name: &str) -> usize {
+        self.ring.shard_for(name)
+    }
+
+    fn node_of(&self, name: &str) -> &ShardNode {
+        &self.nodes[self.ring.shard_for(name)]
+    }
+
+    /// Register a stream on its ring-assigned shard and seed every
+    /// replica with a full snapshot frame (through the codec). Returns
+    /// the primary's read handle.
+    pub fn register(
+        &self,
+        name: &str,
+        existing: &TensorData,
+        cfg: impl Into<EngineConfig>,
+    ) -> Result<StreamHandle> {
+        let shard = self.ring.shard_for(name);
+        let node = &self.nodes[shard];
+        // Hold the cluster-level registration slot across the inner
+        // register so two racing registers of one name cannot both seed.
+        let mut streams = node.lock_streams();
+        anyhow::ensure!(!streams.contains_key(name), "stream {name:?} is already registered");
+        let primary = node.svc.register(name, existing, cfg)?;
+        let snapshot = primary.snapshot();
+        let replicas: Vec<Replica> = (0..self.replicas).map(|_| Replica::new()).collect();
+        let seed = Frame::Snapshot {
+            stream: name.to_string(),
+            snap: snapshot_to_frame(None, &snapshot),
+        };
+        let bytes = encode_frame(&seed);
+        let decoded = decode_frame(&bytes).context("seed frame failed its round-trip")?;
+        let Frame::Snapshot { snap, .. } = decoded else {
+            bail!("seed frame decoded to a non-snapshot frame");
+        };
+        for replica in &replicas {
+            replica.apply(&snap).context("seeding replica")?;
+        }
+        let rep = Arc::new(RepStream {
+            name: name.to_string(),
+            shard,
+            primary: primary.clone(),
+            replicas,
+            last: Mutex::new(snapshot),
+            frames_delta: AtomicU64::new(0),
+            frames_full: AtomicU64::new(1),
+            bytes_replicated: AtomicU64::new(bytes.len() as u64),
+        });
+        streams.insert(name.to_string(), rep);
+        Ok(primary)
+    }
+
+    /// Submit a batch. Backpressure and validation are the shard's inner
+    /// service; the returned ticket resolves only after the batch is
+    /// merged **and** its snapshot is applied to every replica.
+    pub fn ingest(&self, name: &str, batch: TensorData) -> Result<Ticket> {
+        let node = self.node_of(name);
+        let stream = node
+            .lock_streams()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown stream {name:?}"))?;
+        let tx = node.sender()?;
+        let ticket = node.svc.ingest(name, batch)?;
+        let (done_tx, done_rx) = mpsc::channel();
+        if tx.send(ReplJob::Batch { stream, ticket, done: done_tx }).is_err() {
+            bail!("cluster replication worker has shut down");
+        }
+        Ok(Ticket::from_receiver(done_rx))
+    }
+
+    /// The primary's read handle.
+    pub fn handle(&self, name: &str) -> Result<StreamHandle> {
+        self.node_of(name).svc.handle(name)
+    }
+
+    /// A read handle over replica `idx` of `name` — the same
+    /// [`StreamHandle`] type the primary serves, backed by the replica's
+    /// applied snapshots.
+    pub fn replica_handle(&self, name: &str, idx: usize) -> Result<StreamHandle> {
+        let stream = self
+            .node_of(name)
+            .lock_streams()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown stream {name:?}"))?;
+        let replica = stream
+            .replicas
+            .get(idx)
+            .ok_or_else(|| anyhow!("stream {name:?} has {} replicas", stream.replicas.len()))?;
+        replica.handle()
+    }
+
+    /// The primary's point-in-time [`StreamStats`].
+    pub fn stats(&self, name: &str) -> Result<StreamStats> {
+        self.node_of(name).svc.stats(name)
+    }
+
+    /// Point-in-time cluster view of one stream: primary stats plus
+    /// replication counters. Flushes the shard's replication queue first
+    /// so the counters cover every batch whose ticket has resolved.
+    pub fn cluster_stats(&self, name: &str) -> Result<ClusterStreamStats> {
+        let node = self.node_of(name);
+        node.flush();
+        let stream = node
+            .lock_streams()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown stream {name:?}"))?;
+        let primary = node.svc.stats(name)?;
+        Ok(Self::gather(&stream, primary))
+    }
+
+    fn gather(stream: &RepStream, primary: StreamStats) -> ClusterStreamStats {
+        ClusterStreamStats {
+            shard: stream.shard,
+            primary,
+            replica_epochs: stream.replica_epochs(),
+            frames_delta: stream.frames_delta.load(Ordering::Relaxed),
+            frames_full: stream.frames_full.load(Ordering::Relaxed),
+            bytes_replicated: stream.bytes_replicated.load(Ordering::Relaxed),
+        }
+    }
+
+    /// All registered stream names across every shard, sorted.
+    pub fn stream_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .nodes
+            .iter()
+            .flat_map(|n| n.lock_streams().keys().cloned().collect::<Vec<_>>())
+            .collect();
+        names.sort();
+        names
+    }
+
+    /// Deregister one stream: the shard drains it (pending tickets
+    /// resolve), the replication queue is flushed so every accepted
+    /// batch's frame has been applied, and the final counters come back
+    /// as the rebalancing handoff record.
+    pub fn remove(&self, name: &str) -> Result<ClusterStreamStats> {
+        let node = self.node_of(name);
+        let stream = node
+            .lock_streams()
+            .remove(name)
+            .ok_or_else(|| anyhow!("unknown stream {name:?}"))?;
+        // Drain first (inner tickets resolve), then barrier the worker so
+        // every drained batch has also been replicated.
+        let primary = node.svc.remove(name)?;
+        node.flush();
+        Ok(Self::gather(&stream, primary))
+    }
+
+    /// Drain every stream on every shard and return the final counters,
+    /// sorted by stream name. The cluster stays usable afterwards.
+    pub fn shutdown(&self) -> Vec<ClusterStreamStats> {
+        let mut finals = Vec::new();
+        for node in &self.nodes {
+            let streams: Vec<Arc<RepStream>> = {
+                let mut map = node.lock_streams();
+                let mut v: Vec<Arc<RepStream>> = map.values().cloned().collect();
+                map.clear();
+                v.sort_by(|a, b| a.name.cmp(&b.name));
+                v
+            };
+            let mut primaries = node.svc.shutdown();
+            node.flush();
+            for stream in streams {
+                let Some(pos) = primaries.iter().position(|s| s.name == stream.name) else {
+                    continue;
+                };
+                finals.push(Self::gather(&stream, primaries.swap_remove(pos)));
+            }
+        }
+        finals.sort_by(|a, b| a.primary.name.cmp(&b.primary.name));
+        finals
+    }
+}
+
+impl Drop for ClusterService {
+    fn drop(&mut self) {
+        for node in &self.nodes {
+            // Closing the channel ends the worker loop; join so no
+            // replication thread outlives the service.
+            node.tx.lock().unwrap_or_else(|e| e.into_inner()).take();
+            if let Some(worker) = node.worker.lock().unwrap_or_else(|e| e.into_inner()).take() {
+                let _ = worker.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SamBaTenConfig;
+    use crate::tensor::DenseTensor;
+    use crate::util::Rng;
+
+    fn dense(i: usize, j: usize, k: usize, seed: u64) -> TensorData {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f64> = (0..i * j * k).map(|_| rng.gaussian()).collect();
+        TensorData::Dense(DenseTensor::from_vec(i, j, k, data))
+    }
+
+    fn sambaten(rank: usize) -> SamBaTenConfig {
+        SamBaTenConfig::builder(rank, 2, 2, 42).build().unwrap()
+    }
+
+    #[test]
+    fn streams_spread_over_shards_and_stats_route() {
+        let cluster = ClusterService::new(ClusterConfig::new(3).replicas(1)).unwrap();
+        let existing = dense(20, 18, 12, 1);
+        for i in 0..6 {
+            let name = format!("s{i}");
+            cluster.register(&name, &existing, sambaten(2)).unwrap();
+            assert_eq!(cluster.stats(&name).unwrap().epoch, 0);
+            assert_eq!(cluster.shard_of(&name), cluster.cluster_stats(&name).unwrap().shard);
+        }
+        assert_eq!(cluster.stream_names().len(), 6);
+        let shards: std::collections::HashSet<usize> =
+            cluster.stream_names().iter().map(|n| cluster.shard_of(n)).collect();
+        assert!(shards.len() > 1, "6 streams on 3 shards should hit more than one shard");
+    }
+
+    #[test]
+    fn ticket_resolution_implies_replicas_caught_up() {
+        let cluster = ClusterService::new(ClusterConfig::new(2).replicas(2)).unwrap();
+        cluster.register("ticker", &dense(24, 20, 10, 3), sambaten(2)).unwrap();
+        for step in 0..3u64 {
+            let batch = dense(24, 20, 2, 100 + step);
+            cluster.ingest("ticker", batch).unwrap().wait().unwrap();
+            let primary_epoch = cluster.handle("ticker").unwrap().epoch();
+            for idx in 0..2 {
+                let replica = cluster.replica_handle("ticker", idx).unwrap();
+                assert!(
+                    replica.epoch() >= primary_epoch.min(step + 1),
+                    "replica {idx} lags after resolved ticket"
+                );
+            }
+        }
+        let stats = cluster.cluster_stats("ticker").unwrap();
+        assert_eq!(stats.frames_full + stats.frames_delta, 4, "seed + 3 batches");
+        assert!(stats.bytes_replicated > 0);
+    }
+
+    #[test]
+    fn remove_surfaces_final_counters_and_frees_the_name() {
+        let cluster = ClusterService::new(ClusterConfig::new(2).replicas(1)).unwrap();
+        let existing = dense(20, 16, 8, 5);
+        cluster.register("mover", &existing, sambaten(2)).unwrap();
+        cluster.ingest("mover", dense(20, 16, 2, 6)).unwrap().wait().unwrap();
+        let finals = cluster.remove("mover").unwrap();
+        assert_eq!(finals.primary.name, "mover");
+        assert_eq!(finals.primary.epoch, 1);
+        assert_eq!(finals.replica_epochs, vec![1], "drain must leave replicas current");
+        assert!(cluster.ingest("mover", dense(20, 16, 2, 7)).is_err());
+        // The name is free again — the rebalancing handoff pattern.
+        cluster.register("mover", &existing, sambaten(2)).unwrap();
+    }
+
+    #[test]
+    fn shutdown_returns_all_streams_sorted() {
+        let cluster = ClusterService::new(ClusterConfig::new(2).replicas(1)).unwrap();
+        let existing = dense(18, 14, 8, 9);
+        for name in ["zeta", "alpha", "mid"] {
+            cluster.register(name, &existing, sambaten(2)).unwrap();
+        }
+        let finals = cluster.shutdown();
+        let names: Vec<&str> = finals.iter().map(|f| f.primary.name.as_str()).collect();
+        assert_eq!(names, ["alpha", "mid", "zeta"]);
+        assert!(cluster.stream_names().is_empty());
+    }
+}

@@ -1,0 +1,1036 @@
+//! Versioned binary wire format for the cluster layer.
+//!
+//! Every message between a cluster client and a shard — and every
+//! snapshot a primary replicates — is one self-contained frame:
+//!
+//! ```text
+//! [magic u32 LE][version u8][tag u8][payload ...]
+//! ```
+//!
+//! Scalars are little-endian; `f64` travels as `to_bits()` so a replica
+//! reconstructs the *exact* bit pattern the primary published (the whole
+//! replication design promises bit-identical reads — see
+//! [`super::replica`]). Sequences are length-prefixed, and every length
+//! is checked against the bytes actually remaining before allocation, so
+//! a corrupted or hostile length field produces an error, not an OOM.
+//!
+//! Three schema groups share the envelope:
+//!
+//! * **Slice batches** ([`WireTensor`]) — the `streaming::Batcher`
+//!   validation contract is the schema: explicit `(I, J, K)` dims, then
+//!   either a dense row-major payload whose length must equal `I·J·K`, or
+//!   a run of sparse `(i, j, k, value)` entries each bounded by the dims.
+//! * **Snapshot frames** ([`SnapshotFrame`]) — either the full blocked
+//!   factor state or a delta (epoch, touched rows per mode, per-column
+//!   block rescales, rebuilt blocks including the grown `C` tail). Both
+//!   carry *base payloads + scales*, never flattened effective matrices:
+//!   replaying `(Σ base)·scale` instead of `Σ (base·scale)` is what keeps
+//!   replica `top_k` bit-identical to the primary.
+//! * **Control frames** — register / register-ack, ingest-ack, stats,
+//!   drain (which returns the final counters for rebalancing handoff),
+//!   and a transport-level error frame.
+//!
+//! Decoding is strict: wrong magic, unknown version, unknown tag,
+//! truncated payload, oversized length, or trailing bytes are all
+//! explicit `Err`s — never panics (pinned by `tests/cluster_wire.rs`,
+//! including a blind-fuzz pass over random buffers).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::coordinator::{DriftState, EngineConfig, OcTenConfig, SamBaTenConfig};
+use crate::serve::StreamStats;
+use crate::tensor::{CooTensor, DenseTensor, Tensor3, TensorData};
+
+/// `"SBTW"` when the four magic bytes are read off the wire in order.
+pub const WIRE_MAGIC: u32 = 0x5754_4253;
+/// Bumped on any layout change; decoders reject other versions outright.
+pub const WIRE_VERSION: u8 = 1;
+/// Cap on any string field (stream names, error messages).
+pub const MAX_WIRE_STRING: usize = 4096;
+
+// Frame tags. Never reuse a retired tag — decoders key on them.
+const TAG_REGISTER: u8 = 1;
+const TAG_REGISTER_ACK: u8 = 2;
+const TAG_INGEST: u8 = 3;
+const TAG_INGEST_ACK: u8 = 4;
+const TAG_STATS_REQ: u8 = 5;
+const TAG_STATS_ACK: u8 = 6;
+const TAG_DRAIN: u8 = 7;
+const TAG_DRAIN_ACK: u8 = 8;
+const TAG_SNAPSHOT: u8 = 9;
+const TAG_ERROR: u8 = 10;
+
+/// One wire message. `PartialEq` is derived so round-trip tests can
+/// compare decoded frames directly (all floats in tests are finite).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client → shard: create a stream from its existing history.
+    Register { stream: String, engine: WireEngineSpec, existing: WireTensor },
+    /// Shard → client: stream accepted at `epoch` with model `rank`.
+    RegisterAck { stream: String, epoch: u64, rank: u32 },
+    /// Client → shard: one slice batch for `stream`.
+    Ingest { stream: String, batch: WireTensor },
+    /// Shard → client: the batch outcome. An ingest *rejection* (engine
+    /// validation, poisoned worker) is data, not a transport failure, so
+    /// it rides inside the ack rather than a [`Frame::Error`].
+    IngestAck { stream: String, result: Result<WireBatchAck, String> },
+    /// Client → shard: per-stream counters, please.
+    StatsReq { stream: String },
+    StatsAck { stats: WireStreamStats },
+    /// Client → shard: remove the stream; the ack carries the **final**
+    /// counters so a rebalancer can hand them to the next owner.
+    Drain { stream: String },
+    DrainAck { stats: WireStreamStats },
+    /// Shard → client: replicated model state for `stream`.
+    Snapshot { stream: String, snap: SnapshotFrame },
+    /// Either direction: the request could not be processed.
+    Error { message: String },
+}
+
+/// Engine selection for [`Frame::Register`] — the portable subset of the
+/// two builder surfaces (everything else keeps its tuned default).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireEngineSpec {
+    SamBaTen { rank: u32, sampling_factor: u32, repetitions: u32, seed: u64, adaptive: bool },
+    OcTen { rank: u32, replicas: u32, compression: u32, seed: u64, adaptive: bool },
+}
+
+impl WireEngineSpec {
+    /// Build the corresponding [`EngineConfig`]; the builders re-validate,
+    /// so a nonsense spec (rank 0) errors here rather than deep in ingest.
+    pub fn to_engine_config(&self) -> Result<EngineConfig> {
+        match *self {
+            WireEngineSpec::SamBaTen { rank, sampling_factor, repetitions, seed, adaptive } => {
+                let (r, s, p) = (rank as usize, sampling_factor as usize, repetitions as usize);
+                let cfg = SamBaTenConfig::builder(r, s, p, seed).adaptive_rank(adaptive).build()?;
+                Ok(cfg.into())
+            }
+            WireEngineSpec::OcTen { rank, replicas, compression, seed, adaptive } => {
+                let (r, p, c) = (rank as usize, replicas as usize, compression as usize);
+                let cfg = OcTenConfig::builder(r, p, c, seed).adaptive_rank(adaptive).build()?;
+                Ok(cfg.into())
+            }
+        }
+    }
+}
+
+/// A slice batch (or registration history) on the wire. CSF never
+/// travels: it is a local acceleration structure, so it is flattened to
+/// its COO entry run and the receiving shard re-promotes by its own bar.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireTensor {
+    Dense { dims: (u64, u64, u64), data: Vec<f64> },
+    Sparse { dims: (u64, u64, u64), entries: Vec<(u32, u32, u32, f64)> },
+}
+
+impl WireTensor {
+    pub fn from_tensor(x: &TensorData) -> Result<WireTensor> {
+        let (i, j, k) = x.dims();
+        ensure!(
+            i <= u32::MAX as usize && j <= u32::MAX as usize && k <= u32::MAX as usize,
+            "tensor dims {i}×{j}×{k} exceed the wire format's u32 index range"
+        );
+        let dims = (i as u64, j as u64, k as u64);
+        Ok(match x {
+            TensorData::Dense(d) => WireTensor::Dense { dims, data: d.data().to_vec() },
+            TensorData::Sparse(s) => WireTensor::Sparse { dims, entries: entry_run(s.iter()) },
+            TensorData::Csf(c) => WireTensor::Sparse { dims, entries: entry_run(c.iter()) },
+        })
+    }
+
+    /// Validate against the batcher contract and build the local tensor.
+    pub fn into_tensor(self) -> Result<TensorData> {
+        match self {
+            WireTensor::Dense { dims, data } => {
+                let (i, j, k) = decode_dims(dims)?;
+                let want = i.checked_mul(j).and_then(|ij| ij.checked_mul(k));
+                ensure!(
+                    want == Some(data.len()),
+                    "dense payload holds {} values for dims {i}×{j}×{k}",
+                    data.len()
+                );
+                Ok(TensorData::Dense(DenseTensor::from_vec(i, j, k, data)))
+            }
+            WireTensor::Sparse { dims, entries } => {
+                let (i, j, k) = decode_dims(dims)?;
+                let mut coo = CooTensor::with_capacity(i, j, k, entries.len());
+                for (n, &(ei, ej, ek, v)) in entries.iter().enumerate() {
+                    let (ei, ej, ek) = (ei as usize, ej as usize, ek as usize);
+                    ensure!(
+                        ei < i && ej < j && ek < k,
+                        "sparse entry {n} at ({ei},{ej},{ek}) outside dims {i}×{j}×{k}"
+                    );
+                    coo.push(ei, ej, ek, v);
+                }
+                Ok(TensorData::Sparse(coo))
+            }
+        }
+    }
+}
+
+fn entry_run(it: impl Iterator<Item = (usize, usize, usize, f64)>) -> Vec<(u32, u32, u32, f64)> {
+    it.map(|(i, j, k, v)| (i as u32, j as u32, k as u32, v)).collect()
+}
+
+fn decode_dims(dims: (u64, u64, u64)) -> Result<(usize, usize, usize)> {
+    let cast = |d: u64, name: &str| -> Result<usize> {
+        ensure!(d <= u32::MAX as u64, "{name} dim {d} exceeds the wire index range");
+        Ok(d as usize)
+    };
+    Ok((cast(dims.0, "I")?, cast(dims.1, "J")?, cast(dims.2, "K")?))
+}
+
+/// Successful-ingest summary inside [`Frame::IngestAck`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WireBatchAck {
+    /// Published epoch after the batch.
+    pub epoch: u64,
+    /// Slices the batch appended.
+    pub k_new: u64,
+    /// Worker-side ingest wall-clock.
+    pub seconds: f64,
+}
+
+/// Portable [`StreamStats`] — same counters, owned strings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireStreamStats {
+    pub name: String,
+    pub engine: String,
+    pub epoch: u64,
+    pub rank: u32,
+    pub drift: DriftState,
+    pub touched_rows: Option<[u64; 3]>,
+    pub batches: u64,
+    pub slices: u64,
+    pub errors: u64,
+    pub queued: u64,
+    pub ingest_seconds: f64,
+    pub last_error: Option<String>,
+}
+
+impl From<&StreamStats> for WireStreamStats {
+    fn from(s: &StreamStats) -> WireStreamStats {
+        WireStreamStats {
+            name: s.name.clone(),
+            engine: s.engine.to_string(),
+            epoch: s.epoch,
+            rank: s.rank as u32,
+            drift: s.drift.clone(),
+            touched_rows: s.touched_rows.map(|t| [t[0] as u64, t[1] as u64, t[2] as u64]),
+            batches: s.batches,
+            slices: s.slices,
+            errors: s.errors,
+            queued: s.queued as u64,
+            ingest_seconds: s.ingest_seconds,
+            last_error: s.last_error.clone(),
+        }
+    }
+}
+
+/// One block of a blocked factor on the wire: the shared base payload
+/// (row-major `len × R`) plus its per-column read scale — exactly the
+/// two halves of `coordinator`'s copy-on-write `FactorBlock` pair.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireBlock {
+    pub scale: Vec<f64>,
+    pub data: Vec<f64>,
+}
+
+/// Full state of one mode's factor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireFactorState {
+    pub rows: u64,
+    pub blocks: Vec<WireBlock>,
+}
+
+/// Delta of one mode's factor against the previous epoch: every reused
+/// block is "multiply your scale by `rescale`", and only rebuilt blocks
+/// (dirty rows, out-of-band scales, the grown `C` tail) carry payloads —
+/// `O(rows_touched · R)` on the wire. Rebuilt payloads have implicit
+/// scale 1: the primary rebuilds blocks from the effective matrix, so the
+/// replica reconstructs the identical `(base, scale)` pair.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireFactorDelta {
+    /// Row count after the delta (mode 2 grows every batch).
+    pub rows: u64,
+    /// Per-column scale multiplier for reused blocks — the exact factor
+    /// the primary's publication applied, so replica scales stay
+    /// bit-identical under `prev_scale * rescale`.
+    pub rescale: Vec<f64>,
+    /// `(block index, row-major payload)` for every rebuilt block.
+    pub rebuilt: Vec<(u32, Vec<f64>)>,
+}
+
+/// Replicated model state: full on registration (and whenever the delta
+/// soundness conditions fail — see [`super::replica`]), delta otherwise.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SnapshotFrame {
+    Full {
+        epoch: u64,
+        dims: (u64, u64, u64),
+        lambda: Vec<f64>,
+        drift: DriftState,
+        factors: [WireFactorState; 3],
+    },
+    Delta {
+        epoch: u64,
+        dims: (u64, u64, u64),
+        lambda: Vec<f64>,
+        drift: DriftState,
+        /// Factor rows the batch rewrote, per mode (as published).
+        touched: [Option<Vec<u64>>; 3],
+        modes: [WireFactorDelta; 3],
+    },
+}
+
+impl SnapshotFrame {
+    pub fn epoch(&self) -> u64 {
+        match self {
+            SnapshotFrame::Full { epoch, .. } | SnapshotFrame::Delta { epoch, .. } => *epoch,
+        }
+    }
+
+    pub fn is_delta(&self) -> bool {
+        matches!(self, SnapshotFrame::Delta { .. })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new(tag: u8) -> Writer {
+        let mut w = Writer { buf: Vec::with_capacity(64) };
+        w.u32(WIRE_MAGIC);
+        w.u8(WIRE_VERSION);
+        w.u8(tag);
+        w
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn string(&mut self, s: &str) {
+        debug_assert!(s.len() <= MAX_WIRE_STRING, "wire string over {MAX_WIRE_STRING} bytes");
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn f64s(&mut self, vs: &[f64]) {
+        self.u64(vs.len() as u64);
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+
+    fn u64s(&mut self, vs: &[u64]) {
+        self.u64(vs.len() as u64);
+        for &v in vs {
+            self.u64(v);
+        }
+    }
+
+    fn dims(&mut self, d: (u64, u64, u64)) {
+        self.u64(d.0);
+        self.u64(d.1);
+        self.u64(d.2);
+    }
+
+    fn drift(&mut self, d: &DriftState) {
+        match *d {
+            DriftState::Stable => self.u8(0),
+            DriftState::DriftSuspected { since_epoch } => {
+                self.u8(1);
+                self.u64(since_epoch);
+            }
+            DriftState::RankGrown { epoch, rank } => {
+                self.u8(2);
+                self.u64(epoch);
+                self.u64(rank as u64);
+            }
+            DriftState::ComponentRetired { epoch, rank } => {
+                self.u8(3);
+                self.u64(epoch);
+                self.u64(rank as u64);
+            }
+        }
+    }
+
+    fn tensor(&mut self, t: &WireTensor) {
+        match t {
+            WireTensor::Dense { dims, data } => {
+                self.u8(0);
+                self.dims(*dims);
+                self.f64s(data);
+            }
+            WireTensor::Sparse { dims, entries } => {
+                self.u8(1);
+                self.dims(*dims);
+                self.u64(entries.len() as u64);
+                for &(i, j, k, v) in entries {
+                    self.u32(i);
+                    self.u32(j);
+                    self.u32(k);
+                    self.f64(v);
+                }
+            }
+        }
+    }
+
+    fn engine_spec(&mut self, e: &WireEngineSpec) {
+        let (kind, rank, a, b, seed, adaptive) = match *e {
+            WireEngineSpec::SamBaTen { rank, sampling_factor, repetitions, seed, adaptive } => {
+                (0u8, rank, sampling_factor, repetitions, seed, adaptive)
+            }
+            WireEngineSpec::OcTen { rank, replicas, compression, seed, adaptive } => {
+                (1u8, rank, replicas, compression, seed, adaptive)
+            }
+        };
+        self.u8(kind);
+        self.u32(rank);
+        self.u32(a);
+        self.u32(b);
+        self.u64(seed);
+        self.u8(adaptive as u8);
+    }
+
+    fn stream_stats(&mut self, s: &WireStreamStats) {
+        self.string(&s.name);
+        self.string(&s.engine);
+        self.u64(s.epoch);
+        self.u32(s.rank);
+        self.drift(&s.drift);
+        match s.touched_rows {
+            Some(t) => {
+                self.u8(1);
+                self.u64(t[0]);
+                self.u64(t[1]);
+                self.u64(t[2]);
+            }
+            None => self.u8(0),
+        }
+        self.u64(s.batches);
+        self.u64(s.slices);
+        self.u64(s.errors);
+        self.u64(s.queued);
+        self.f64(s.ingest_seconds);
+        match &s.last_error {
+            Some(e) => {
+                self.u8(1);
+                self.string(e);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    fn snapshot(&mut self, s: &SnapshotFrame) {
+        match s {
+            SnapshotFrame::Full { epoch, dims, lambda, drift, factors } => {
+                self.u8(0);
+                self.u64(*epoch);
+                self.dims(*dims);
+                self.f64s(lambda);
+                self.drift(drift);
+                for f in factors {
+                    self.u64(f.rows);
+                    self.u32(f.blocks.len() as u32);
+                    for b in &f.blocks {
+                        self.f64s(&b.scale);
+                        self.f64s(&b.data);
+                    }
+                }
+            }
+            SnapshotFrame::Delta { epoch, dims, lambda, drift, touched, modes } => {
+                self.u8(1);
+                self.u64(*epoch);
+                self.dims(*dims);
+                self.f64s(lambda);
+                self.drift(drift);
+                for t in touched {
+                    match t {
+                        Some(rows) => {
+                            self.u8(1);
+                            self.u64s(rows);
+                        }
+                        None => self.u8(0),
+                    }
+                }
+                for m in modes {
+                    self.u64(m.rows);
+                    self.f64s(&m.rescale);
+                    self.u32(m.rebuilt.len() as u32);
+                    for (idx, data) in &m.rebuilt {
+                        self.u32(*idx);
+                        self.f64s(data);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Serialize one frame to its wire bytes.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let w = match frame {
+        Frame::Register { stream, engine, existing } => {
+            let mut w = Writer::new(TAG_REGISTER);
+            w.string(stream);
+            w.engine_spec(engine);
+            w.tensor(existing);
+            w
+        }
+        Frame::RegisterAck { stream, epoch, rank } => {
+            let mut w = Writer::new(TAG_REGISTER_ACK);
+            w.string(stream);
+            w.u64(*epoch);
+            w.u32(*rank);
+            w
+        }
+        Frame::Ingest { stream, batch } => {
+            let mut w = Writer::new(TAG_INGEST);
+            w.string(stream);
+            w.tensor(batch);
+            w
+        }
+        Frame::IngestAck { stream, result } => {
+            let mut w = Writer::new(TAG_INGEST_ACK);
+            w.string(stream);
+            match result {
+                Ok(ack) => {
+                    w.u8(1);
+                    w.u64(ack.epoch);
+                    w.u64(ack.k_new);
+                    w.f64(ack.seconds);
+                }
+                Err(msg) => {
+                    w.u8(0);
+                    w.string(msg);
+                }
+            }
+            w
+        }
+        Frame::StatsReq { stream } => {
+            let mut w = Writer::new(TAG_STATS_REQ);
+            w.string(stream);
+            w
+        }
+        Frame::StatsAck { stats } => {
+            let mut w = Writer::new(TAG_STATS_ACK);
+            w.stream_stats(stats);
+            w
+        }
+        Frame::Drain { stream } => {
+            let mut w = Writer::new(TAG_DRAIN);
+            w.string(stream);
+            w
+        }
+        Frame::DrainAck { stats } => {
+            let mut w = Writer::new(TAG_DRAIN_ACK);
+            w.stream_stats(stats);
+            w
+        }
+        Frame::Snapshot { stream, snap } => {
+            let mut w = Writer::new(TAG_SNAPSHOT);
+            w.string(stream);
+            w.snapshot(snap);
+            w
+        }
+        Frame::Error { message } => {
+            let mut w = Writer::new(TAG_ERROR);
+            w.string(message);
+            w
+        }
+    };
+    w.buf
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "truncated frame: need {n} more bytes at offset {}, have {}",
+            self.pos,
+            self.remaining()
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn boolean(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("invalid boolean byte {b:#x} at offset {}", self.pos - 1),
+        }
+    }
+
+    /// Sequence length declared as `len`, with each element at least
+    /// `elem` bytes — rejected if the declaration outruns the buffer, so
+    /// a corrupt length can never drive allocation.
+    fn seq_len(&mut self, elem: usize) -> Result<usize> {
+        let len = self.u64()?;
+        let len = usize::try_from(len).map_err(|_| anyhow::anyhow!("sequence length {len}"))?;
+        ensure!(
+            len.checked_mul(elem).is_some_and(|bytes| bytes <= self.remaining()),
+            "corrupt frame: sequence of {len} × {elem}-byte elements exceeds {} remaining bytes",
+            self.remaining()
+        );
+        Ok(len)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        ensure!(len <= MAX_WIRE_STRING, "string of {len} bytes exceeds cap {MAX_WIRE_STRING}");
+        let bytes = self.take(len)?;
+        let s = std::str::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("invalid UTF-8 in wire string: {e}"))?;
+        Ok(s.to_string())
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let len = self.seq_len(8)?;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let len = self.seq_len(8)?;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    fn dims(&mut self) -> Result<(u64, u64, u64)> {
+        Ok((self.u64()?, self.u64()?, self.u64()?))
+    }
+
+    fn drift(&mut self) -> Result<DriftState> {
+        let tag = self.u8()?;
+        let to_rank = |r: u64| -> Result<usize> {
+            usize::try_from(r).map_err(|_| anyhow::anyhow!("drift rank {r} out of range"))
+        };
+        Ok(match tag {
+            0 => DriftState::Stable,
+            1 => DriftState::DriftSuspected { since_epoch: self.u64()? },
+            2 => DriftState::RankGrown { epoch: self.u64()?, rank: to_rank(self.u64()?)? },
+            3 => DriftState::ComponentRetired { epoch: self.u64()?, rank: to_rank(self.u64()?)? },
+            t => bail!("unknown drift tag {t}"),
+        })
+    }
+
+    fn tensor(&mut self) -> Result<WireTensor> {
+        match self.u8()? {
+            0 => {
+                let dims = self.dims()?;
+                let data = self.f64s()?;
+                Ok(WireTensor::Dense { dims, data })
+            }
+            1 => {
+                let dims = self.dims()?;
+                let len = self.seq_len(20)?;
+                let mut entries = Vec::with_capacity(len);
+                for _ in 0..len {
+                    entries.push((self.u32()?, self.u32()?, self.u32()?, self.f64()?));
+                }
+                Ok(WireTensor::Sparse { dims, entries })
+            }
+            t => bail!("unknown tensor tag {t}"),
+        }
+    }
+
+    fn engine_spec(&mut self) -> Result<WireEngineSpec> {
+        let kind = self.u8()?;
+        let rank = self.u32()?;
+        let a = self.u32()?;
+        let b = self.u32()?;
+        let seed = self.u64()?;
+        let adaptive = self.boolean()?;
+        Ok(match kind {
+            0 => WireEngineSpec::SamBaTen {
+                rank,
+                sampling_factor: a,
+                repetitions: b,
+                seed,
+                adaptive,
+            },
+            1 => WireEngineSpec::OcTen { rank, replicas: a, compression: b, seed, adaptive },
+            k => bail!("unknown engine kind {k}"),
+        })
+    }
+
+    fn stream_stats(&mut self) -> Result<WireStreamStats> {
+        let name = self.string()?;
+        let engine = self.string()?;
+        let epoch = self.u64()?;
+        let rank = self.u32()?;
+        let drift = self.drift()?;
+        let touched_rows = if self.boolean()? {
+            Some([self.u64()?, self.u64()?, self.u64()?])
+        } else {
+            None
+        };
+        let batches = self.u64()?;
+        let slices = self.u64()?;
+        let errors = self.u64()?;
+        let queued = self.u64()?;
+        let ingest_seconds = self.f64()?;
+        let last_error = if self.boolean()? {
+            Some(self.string()?)
+        } else {
+            None
+        };
+        Ok(WireStreamStats {
+            name,
+            engine,
+            epoch,
+            rank,
+            drift,
+            touched_rows,
+            batches,
+            slices,
+            errors,
+            queued,
+            ingest_seconds,
+            last_error,
+        })
+    }
+
+    fn factor_state(&mut self) -> Result<WireFactorState> {
+        let rows = self.u64()?;
+        let nblocks = self.u32()? as usize;
+        // Each block carries at least two u64 length prefixes.
+        ensure!(
+            nblocks.checked_mul(16).is_some_and(|b| b <= self.remaining()),
+            "corrupt frame: {nblocks} factor blocks exceed {} remaining bytes",
+            self.remaining()
+        );
+        let mut blocks = Vec::with_capacity(nblocks);
+        for _ in 0..nblocks {
+            let scale = self.f64s()?;
+            let data = self.f64s()?;
+            blocks.push(WireBlock { scale, data });
+        }
+        Ok(WireFactorState { rows, blocks })
+    }
+
+    fn factor_delta(&mut self) -> Result<WireFactorDelta> {
+        let rows = self.u64()?;
+        let rescale = self.f64s()?;
+        let nrebuilt = self.u32()? as usize;
+        // Each rebuilt entry carries a u32 index and a u64 length prefix.
+        ensure!(
+            nrebuilt.checked_mul(12).is_some_and(|b| b <= self.remaining()),
+            "corrupt frame: {nrebuilt} rebuilt blocks exceed {} remaining bytes",
+            self.remaining()
+        );
+        let mut rebuilt = Vec::with_capacity(nrebuilt);
+        for _ in 0..nrebuilt {
+            let idx = self.u32()?;
+            let data = self.f64s()?;
+            rebuilt.push((idx, data));
+        }
+        Ok(WireFactorDelta { rows, rescale, rebuilt })
+    }
+
+    fn snapshot(&mut self) -> Result<SnapshotFrame> {
+        match self.u8()? {
+            0 => {
+                let epoch = self.u64()?;
+                let dims = self.dims()?;
+                let lambda = self.f64s()?;
+                let drift = self.drift()?;
+                let f0 = self.factor_state()?;
+                let f1 = self.factor_state()?;
+                let f2 = self.factor_state()?;
+                Ok(SnapshotFrame::Full { epoch, dims, lambda, drift, factors: [f0, f1, f2] })
+            }
+            1 => {
+                let epoch = self.u64()?;
+                let dims = self.dims()?;
+                let lambda = self.f64s()?;
+                let drift = self.drift()?;
+                let mut touched: [Option<Vec<u64>>; 3] = [None, None, None];
+                for t in &mut touched {
+                    if self.boolean()? {
+                        *t = Some(self.u64s()?);
+                    }
+                }
+                let m0 = self.factor_delta()?;
+                let m1 = self.factor_delta()?;
+                let m2 = self.factor_delta()?;
+                Ok(SnapshotFrame::Delta {
+                    epoch,
+                    dims,
+                    lambda,
+                    drift,
+                    touched,
+                    modes: [m0, m1, m2],
+                })
+            }
+            t => bail!("unknown snapshot kind {t}"),
+        }
+    }
+
+    fn finish(self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "corrupt frame: {} trailing bytes after payload",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+/// Parse one frame. Any malformed input — wrong magic, unknown version or
+/// tag, truncation, oversized lengths, trailing bytes — is an `Err`.
+pub fn decode_frame(bytes: &[u8]) -> Result<Frame> {
+    let mut r = Reader::new(bytes);
+    let magic = r.u32()?;
+    ensure!(magic == WIRE_MAGIC, "bad magic {magic:#010x}: not a sambaten wire frame");
+    let version = r.u8()?;
+    ensure!(version == WIRE_VERSION, "unsupported wire version {version} (speak {WIRE_VERSION})");
+    let tag = r.u8()?;
+    let frame = match tag {
+        TAG_REGISTER => {
+            let stream = r.string()?;
+            let engine = r.engine_spec()?;
+            let existing = r.tensor()?;
+            Frame::Register { stream, engine, existing }
+        }
+        TAG_REGISTER_ACK => {
+            let stream = r.string()?;
+            let epoch = r.u64()?;
+            let rank = r.u32()?;
+            Frame::RegisterAck { stream, epoch, rank }
+        }
+        TAG_INGEST => {
+            let stream = r.string()?;
+            let batch = r.tensor()?;
+            Frame::Ingest { stream, batch }
+        }
+        TAG_INGEST_ACK => {
+            let stream = r.string()?;
+            let result = if r.boolean()? {
+                Ok(WireBatchAck { epoch: r.u64()?, k_new: r.u64()?, seconds: r.f64()? })
+            } else {
+                Err(r.string()?)
+            };
+            Frame::IngestAck { stream, result }
+        }
+        TAG_STATS_REQ => Frame::StatsReq { stream: r.string()? },
+        TAG_STATS_ACK => Frame::StatsAck { stats: r.stream_stats()? },
+        TAG_DRAIN => Frame::Drain { stream: r.string()? },
+        TAG_DRAIN_ACK => Frame::DrainAck { stats: r.stream_stats()? },
+        TAG_SNAPSHOT => {
+            let stream = r.string()?;
+            let snap = r.snapshot()?;
+            Frame::Snapshot { stream, snap }
+        }
+        TAG_ERROR => Frame::Error { message: r.string()? },
+        t => bail!("unknown frame tag {t} (wire v{WIRE_VERSION})"),
+    };
+    r.finish()?;
+    Ok(frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let bytes = encode_frame(&f);
+        let back = decode_frame(&bytes).expect("frame must decode");
+        assert_eq!(f, back);
+    }
+
+    #[test]
+    fn control_frames_round_trip() {
+        roundtrip(Frame::StatsReq { stream: "s".into() });
+        roundtrip(Frame::Drain { stream: "a-very-long-stream-name-with-unicode-é".into() });
+        roundtrip(Frame::Error { message: "shard on fire".into() });
+        roundtrip(Frame::RegisterAck { stream: "s".into(), epoch: 7, rank: 5 });
+        roundtrip(Frame::IngestAck {
+            stream: "s".into(),
+            result: Ok(WireBatchAck { epoch: 3, k_new: 4, seconds: 0.25 }),
+        });
+        roundtrip(Frame::IngestAck { stream: "s".into(), result: Err("bad batch".into()) });
+    }
+
+    #[test]
+    fn register_frame_round_trips_both_engines() {
+        let dense = WireTensor::Dense { dims: (2, 2, 1), data: vec![1.0, -2.5, 0.0, 4.0] };
+        roundtrip(Frame::Register {
+            stream: "dense".into(),
+            engine: WireEngineSpec::SamBaTen {
+                rank: 3,
+                sampling_factor: 2,
+                repetitions: 4,
+                seed: 42,
+                adaptive: true,
+            },
+            existing: dense,
+        });
+        let sparse = WireTensor::Sparse {
+            dims: (10, 10, 4),
+            entries: vec![(0, 1, 2, 3.5), (9, 9, 3, -1.0)],
+        };
+        roundtrip(Frame::Register {
+            stream: "sparse".into(),
+            engine: WireEngineSpec::OcTen {
+                rank: 4,
+                replicas: 4,
+                compression: 2,
+                seed: 9,
+                adaptive: false,
+            },
+            existing: sparse,
+        });
+    }
+
+    #[test]
+    fn snapshot_frames_round_trip() {
+        let full = SnapshotFrame::Full {
+            epoch: 2,
+            dims: (3, 2, 2),
+            lambda: vec![2.0, 1.0],
+            drift: DriftState::RankGrown { epoch: 2, rank: 2 },
+            factors: [
+                WireFactorState {
+                    rows: 3,
+                    blocks: vec![WireBlock { scale: vec![1.0, 0.5], data: vec![0.0; 6] }],
+                },
+                WireFactorState {
+                    rows: 2,
+                    blocks: vec![WireBlock { scale: vec![1.0, 1.0], data: vec![1.0; 4] }],
+                },
+                WireFactorState {
+                    rows: 2,
+                    blocks: vec![WireBlock { scale: vec![2.0, 1.0], data: vec![-1.0; 4] }],
+                },
+            ],
+        };
+        roundtrip(Frame::Snapshot { stream: "s".into(), snap: full });
+        let delta = SnapshotFrame::Delta {
+            epoch: 3,
+            dims: (3, 2, 3),
+            lambda: vec![2.0, 1.5],
+            drift: DriftState::Stable,
+            touched: [Some(vec![0, 2]), None, Some(vec![2])],
+            modes: [
+                WireFactorDelta { rows: 3, rescale: vec![1.0, 1.0], rebuilt: vec![] },
+                WireFactorDelta { rows: 2, rescale: vec![0.5, 2.0], rebuilt: vec![] },
+                WireFactorDelta {
+                    rows: 3,
+                    rescale: vec![1.0, 1.0],
+                    rebuilt: vec![(0, vec![1.0; 6])],
+                },
+            ],
+        };
+        roundtrip(Frame::Snapshot { stream: "s".into(), snap: delta });
+    }
+
+    #[test]
+    fn malformed_headers_are_rejected() {
+        let good = encode_frame(&Frame::StatsReq { stream: "s".into() });
+        // Wrong magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert!(decode_frame(&bad).is_err());
+        // Unknown version.
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert!(decode_frame(&bad).is_err());
+        // Unknown tag.
+        let mut bad = good.clone();
+        bad[5] = 0xfe;
+        assert!(decode_frame(&bad).is_err());
+        // Trailing garbage.
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(decode_frame(&bad).is_err());
+        // Every truncation of a valid frame fails cleanly.
+        for n in 0..good.len() {
+            assert!(decode_frame(&good[..n]).is_err(), "prefix of {n} bytes must not decode");
+        }
+    }
+
+    #[test]
+    fn hostile_length_fields_do_not_allocate() {
+        // A dense tensor claiming u64::MAX values must be rejected by the
+        // remaining-bytes guard, not by the allocator.
+        let mut w = Writer::new(TAG_INGEST);
+        w.string("s");
+        w.u8(0); // dense
+        w.dims((2, 2, 2));
+        w.u64(u64::MAX); // hostile element count
+        let err = decode_frame(&w.buf).expect_err("hostile length must be rejected");
+        assert!(err.to_string().contains("sequence"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn wire_tensor_validates_the_batcher_contract() {
+        let bad_dense = WireTensor::Dense { dims: (2, 2, 2), data: vec![0.0; 7] };
+        assert!(bad_dense.into_tensor().is_err());
+        let bad_sparse = WireTensor::Sparse { dims: (2, 2, 2), entries: vec![(0, 0, 5, 1.0)] };
+        assert!(bad_sparse.into_tensor().is_err());
+        let ok = WireTensor::Sparse { dims: (2, 2, 2), entries: vec![(1, 1, 1, 3.0)] };
+        assert_eq!(ok.into_tensor().unwrap().nnz(), 1);
+    }
+}

@@ -59,10 +59,17 @@ impl FactorBlock {
     /// Snapshot rows `start .. start+len` of `f`.
     fn build(f: &Matrix, start: usize, len: usize) -> FactorBlock {
         let r = f.cols();
-        let base = Matrix::from_vec(len, r, f.data()[start * r..(start + len) * r].to_vec());
-        let mut base_col_sums = vec![0.0; r];
+        Self::from_matrix(Matrix::from_vec(len, r, f.data()[start * r..(start + len) * r].to_vec()))
+    }
+
+    /// Wrap a base-space payload, computing the cached column sums and max
+    /// row norm with the same accumulation order as a publication-time
+    /// build — a replica reconstructing a block from wire bytes gets
+    /// bit-identical caches (see `cluster::replica`).
+    pub fn from_matrix(base: Matrix) -> FactorBlock {
+        let mut base_col_sums = vec![0.0; base.cols()];
         let mut max_norm_sq = 0.0f64;
-        for j in 0..len {
+        for j in 0..base.rows() {
             let row = base.row(j);
             let mut nsq = 0.0;
             for (t, sum) in base_col_sums.iter_mut().enumerate() {
@@ -181,6 +188,41 @@ impl BlockFactor {
             }));
         }
         Self::finish(rows, rank, blocks)
+    }
+
+    /// Reassemble a factor from explicit `(payload, scale)` entries in
+    /// block order — the replica-side constructor (`cluster::replica`):
+    /// a snapshot-delta frame carries rebuilt payloads plus a rescale, and
+    /// the replica stitches them onto its previous blocks through here.
+    /// Validates the block partition (every block [`BLOCK_ROWS`] rows
+    /// except a partial tail) so corrupt frames fail loudly instead of
+    /// producing a snapshot with broken row addressing.
+    pub fn from_parts(
+        rank: usize,
+        parts: Vec<(Arc<FactorBlock>, Vec<f64>)>,
+    ) -> anyhow::Result<BlockFactor> {
+        let mut rows = 0usize;
+        for (b, (payload, scale)) in parts.iter().enumerate() {
+            anyhow::ensure!(
+                payload.base.cols() == rank,
+                "block {b}: payload has {} columns, factor rank is {rank}",
+                payload.base.cols()
+            );
+            anyhow::ensure!(
+                scale.len() == rank,
+                "block {b}: scale has {} entries, factor rank is {rank}",
+                scale.len()
+            );
+            anyhow::ensure!(
+                payload.rows() == BLOCK_ROWS || (b + 1 == parts.len() && payload.rows() >= 1),
+                "block {b}: {} rows breaks the {BLOCK_ROWS}-row partition",
+                payload.rows()
+            );
+            rows += payload.rows();
+        }
+        let blocks =
+            parts.into_iter().map(|(payload, scale)| BlockEntry { payload, scale }).collect();
+        Ok(Self::finish(rows, rank, blocks))
     }
 
     fn finish(rows: usize, rank: usize, blocks: Vec<BlockEntry>) -> BlockFactor {

@@ -101,6 +101,14 @@ pub struct ModelSnapshot {
     /// publication (epoch 0, a rank change, or an engine that rewrites
     /// every row, like OCTen's full-size recovery).
     pub touched_rows: [Option<Vec<usize>>; 3],
+    /// The per-mode, per-column rescale this snapshot was delta-published
+    /// with (`None` for full builds). Replication needs the *exact*
+    /// multiplier: a replica recomputes each reused block's scale as
+    /// `prev_scale · rescale` — the same f64 product the primary's
+    /// [`BlockFactor::delta`] performed — so replica reads stay
+    /// bit-identical (deriving it from the published scales would divide
+    /// and re-multiply, off by an ulp).
+    rescale: Option<[Vec<f64>; 3]>,
     /// Lazily materialised whole-matrix view (at most once per snapshot).
     materialized: OnceLock<CpModel>,
 }
@@ -160,6 +168,7 @@ impl ModelSnapshot {
             stats,
             drift,
             touched_rows: [None, None, None],
+            rescale: None,
             materialized,
         }
     }
@@ -197,8 +206,43 @@ impl ModelSnapshot {
             stats,
             drift,
             touched_rows: touched.map(Some),
+            rescale: Some(rescale.clone()),
             materialized: OnceLock::new(),
         }
+    }
+
+    /// Assemble a snapshot from already-built factor blocks — the
+    /// replica-side constructor (`cluster::replica`): a replica applies a
+    /// wire frame by reconstructing each mode's [`BlockFactor`] (reusing
+    /// its own previous blocks for everything the frame didn't rebuild)
+    /// and stitching them together here. Carries no [`BatchStats`]
+    /// (per-batch ingest stats stay on the primary); the read surface —
+    /// `entry`/`fit`/`top_k` — is complete.
+    pub fn from_parts(
+        epoch: u64,
+        dims: (usize, usize, usize),
+        lambda: Vec<f64>,
+        factors: [BlockFactor; 3],
+        drift: DriftState,
+        touched_rows: [Option<Vec<usize>>; 3],
+    ) -> Self {
+        ModelSnapshot {
+            epoch,
+            dims,
+            lambda,
+            factors,
+            stats: None,
+            drift,
+            touched_rows,
+            rescale: None,
+            materialized: OnceLock::new(),
+        }
+    }
+
+    /// The per-mode rescale this snapshot was delta-published with
+    /// (`None` for full builds) — the replication encoder's input.
+    pub fn publication_rescale(&self) -> Option<&[Vec<f64>; 3]> {
+        self.rescale.as_ref()
     }
 
     /// Rank of the published model.

@@ -34,6 +34,7 @@ pub fn run_experiment(id: &str, ctx: &EvalContext) -> Result<()> {
         "fig9" => sweeps::fig9(ctx),
         "fig10" => sweeps::fig10(ctx),
         "fig11" => sweeps::fig11(ctx),
+        "octen_sweep" => sweeps::octen_sweep(ctx),
         "all" => {
             for id in EXPERIMENTS {
                 println!("\n=== {id} ===");
@@ -48,8 +49,9 @@ pub fn run_experiment(id: &str, ctx: &EvalContext) -> Result<()> {
     }
 }
 
-/// All experiment ids, in paper order.
+/// All experiment ids: the paper's tables/figures in paper order, then
+/// the repo's own extensions (`octen_sweep`: replicas × compression).
 pub const EXPERIMENTS: &[&str] = &[
     "table2", "table4", "table5", "table6", "table7", "table8", "fig1", "fig5", "fig6", "fig7",
-    "fig8", "fig9", "fig10", "fig11",
+    "fig8", "fig9", "fig10", "fig11", "octen_sweep",
 ];

@@ -1,8 +1,9 @@
 //! Parameter sweeps: Figure 9 (sampling factor s), Figure 10 (repetition
-//! factor r), Figure 11 (joint r × s on the NIPS sim).
+//! factor r), Figure 11 (joint r × s on the NIPS sim), and the OCTen
+//! engine's analogue — replicas p × compression rate on the real sims.
 
-use super::runner::{EvalContext};
-use crate::coordinator::{SamBaTen, SamBaTenConfig};
+use super::runner::EvalContext;
+use crate::coordinator::{EngineConfig, OcTenConfig, SamBaTenConfig};
 use crate::cp::CpModel;
 use crate::datagen::{RealDatasetSim, SyntheticSpec};
 use crate::io::csv::{num, CsvWriter};
@@ -23,17 +24,22 @@ fn run_once(
     batches: &[TensorData],
     full: &TensorData,
     _truth: &CpModel,
-    cfg: SamBaTenConfig,
+    cfg: impl Into<EngineConfig>,
 ) -> Result<SweepRun> {
+    let cfg: EngineConfig = cfg.into();
+    let rank = match &cfg {
+        EngineConfig::SamBaTen(c) => c.rank,
+        EngineConfig::OcTen(c) => c.rank,
+    };
     // CP_ALS reference on the final tensor — both the relative-fitness
     // baseline AND the FMS reference ("we compute CP_ALS on the full tensor
     // and set those as ground truth components", §IV-D.2).
     let (cpals, _) = crate::cp::cp_als(
         full,
-        cfg.rank,
+        rank,
         &crate::cp::AlsOptions { seed: 3, ..Default::default() },
     )?;
-    let mut engine = SamBaTen::init(existing, cfg)?;
+    let mut engine = cfg.init(existing)?;
     let sw = Stopwatch::started();
     for b in batches {
         engine.ingest(b)?;
@@ -63,12 +69,13 @@ fn synthetic_workload(
     (existing, batches, full, truth)
 }
 
-fn nips_workload(
+fn real_workload(
     ctx: &EvalContext,
+    name: &str,
     seed: u64,
 ) -> (TensorData, Vec<TensorData>, TensorData, CpModel, usize) {
-    let ds = RealDatasetSim::by_name("NIPS").unwrap();
-    let scale = super::real::sim_scale("NIPS") * ctx.scale;
+    let ds = RealDatasetSim::by_name(name).unwrap();
+    let scale = super::real::sim_scale(name) * ctx.scale;
     let (existing, batches, truth) = ds.generate_stream(scale, seed);
     let mut full = existing.clone();
     for b in &batches {
@@ -105,7 +112,7 @@ pub fn fig9(ctx: &EvalContext) -> Result<()> {
             ])?;
         }
     }
-    let (existing, batches, full, truth, rank) = nips_workload(ctx, 67);
+    let (existing, batches, full, truth, rank) = real_workload(ctx, "NIPS", 67);
     for s in [2usize, 3, 4, 6] {
         let cfg = SamBaTenConfig::builder(rank, s, 4, 13).build()?;
         let run = run_once(&existing, &batches, &full, &truth, cfg)?;
@@ -149,7 +156,7 @@ pub fn fig10(ctx: &EvalContext) -> Result<()> {
             num(run.seconds),
         ])?;
     }
-    let (existing, batches, full, truth, rank) = nips_workload(ctx, 73);
+    let (existing, batches, full, truth, rank) = real_workload(ctx, "NIPS", 73);
     for r in [1usize, 2, 4, 8] {
         let cfg = SamBaTenConfig::builder(rank, 2, r, 37).build()?;
         let run = run_once(&existing, &batches, &full, &truth, cfg)?;
@@ -175,7 +182,7 @@ pub fn fig11(ctx: &EvalContext) -> Result<()> {
         &["r", "s", "fms", "relative_fitness", "seconds"],
     )?;
     println!("Figure 11: joint r × s sweep on NIPS sim");
-    let (existing, batches, full, truth, rank) = nips_workload(ctx, 79);
+    let (existing, batches, full, truth, rank) = real_workload(ctx, "NIPS", 79);
     for r in [1usize, 2, 4] {
         for s in [2usize, 3, 5] {
             let cfg = SamBaTenConfig::builder(rank, s, r, 41).build()?;
@@ -196,6 +203,42 @@ pub fn fig11(ctx: &EvalContext) -> Result<()> {
     csv.flush()
 }
 
+/// OCTen sweep: replicas p × compression rate on the real-sim workloads
+/// — the compressed-replica ingest engine gets the same treatment as
+/// SamBaTen's r × s sweeps. More replicas buy matching redundancy, a
+/// higher compression factor buys speed at accuracy cost; the table
+/// makes the trade-off visible next to the CP_ALS reference.
+pub fn octen_sweep(ctx: &EvalContext) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        &ctx.csv_path("octen_sweep.csv"),
+        &["dataset", "replicas", "compression", "seconds", "rel_err", "relative_fitness", "fms"],
+    )?;
+    println!("OCTen sweep: replicas p × compression on real-sim workloads");
+    for (name, seed) in [("NIPS", 83), ("NELL", 89)] {
+        let (existing, batches, full, truth, rank) = real_workload(ctx, name, seed);
+        for p in [2usize, 3, 4] {
+            for c in [2usize, 3] {
+                let cfg = OcTenConfig::builder(rank, p, c, 47).build()?;
+                let run = run_once(&existing, &batches, &full, &truth, cfg)?;
+                println!(
+                    "  {name}-sim p={p} c={c}: {:.2}s rel_err {:.3} fitness {:.3} FMS {:.3}",
+                    run.seconds, run.rel_err, run.fitness_vs_cpals, run.fms
+                );
+                csv.row(&[
+                    format!("{name}-sim"),
+                    p.to_string(),
+                    c.to_string(),
+                    num(run.seconds),
+                    num(run.rel_err),
+                    num(run.fitness_vs_cpals),
+                    num(run.fms),
+                ])?;
+            }
+        }
+    }
+    csv.flush()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +247,17 @@ mod tests {
     fn run_once_produces_finite_metrics() {
         let (existing, batches, full, truth) = synthetic_workload(10, 2, 3, 5);
         let cfg = SamBaTenConfig::builder(2, 2, 2, 3).build().unwrap();
+        let run = run_once(&existing, &batches, &full, &truth, cfg).unwrap();
+        assert!(run.seconds > 0.0);
+        assert!(run.rel_err.is_finite());
+        assert!(run.fitness_vs_cpals.is_finite());
+        assert!((0.0..=1.0).contains(&run.fms));
+    }
+
+    #[test]
+    fn run_once_accepts_the_octen_engine() {
+        let (existing, batches, full, truth) = synthetic_workload(10, 2, 3, 5);
+        let cfg = OcTenConfig::builder(2, 2, 2, 3).build().unwrap();
         let run = run_once(&existing, &batches, &full, &truth, cfg).unwrap();
         assert!(run.seconds > 0.0);
         assert!(run.rel_err.is_finite());

@@ -14,13 +14,16 @@
 //!   scheduler ([`pool`] — keyed FIFO ordering, thousands of streams per
 //!   core), the multi-stream serving layer ([`serve`] — wait-free
 //!   [`coordinator::StreamHandle`] readers over a write path that
-//!   publishes epoch-stamped snapshots, multiplexed onto the pool) and the
-//!   evaluation harness ([`eval`]).
+//!   publishes epoch-stamped snapshots, multiplexed onto the pool), the
+//!   sharded cluster layer ([`cluster`] — consistent-hash placement, a
+//!   versioned binary wire format, delta-replicated read snapshots) and
+//!   the evaluation harness ([`eval`]).
 //! * **Layer 2/1 (build-time Python)** — a JAX ALS sweep calling a Pallas
 //!   MTTKRP kernel, AOT-lowered to HLO text and executed from Rust through
 //!   the PJRT runtime wrapper ([`runtime`]).
 
 pub mod baselines;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod corcondia;

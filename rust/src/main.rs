@@ -8,12 +8,18 @@
 //!   serve       multi-stream decomposition service demo (queries during
 //!               ingest through wait-free StreamHandles; engines mixable
 //!               per stream)
+//!   cluster     sharded cluster demo: consistent-hash placement, wire-
+//!               format snapshot replication, bit-identical replica reads
+//!               (--listen/--join run one shard over TCP)
 //!   getrank     estimate CP rank via CORCONDIA
 //!   eval        regenerate a paper table/figure (see DESIGN.md §3)
 //!   bench-diff  compare two BENCH_micro.json files, fail on regressions
 //!   info        artifact bank / environment report
 
 use anyhow::{bail, Context, Result};
+use sambaten::cluster::{
+    ClusterConfig, ClusterService, RemoteShard, ShardServer, TcpTransport, WireEngineSpec,
+};
 use sambaten::config::RunConfig;
 use sambaten::coordinator::{EngineConfig, OcTenConfig, SamBaTenConfig, StreamHandle};
 use sambaten::corcondia::{getrank, GetRankOptions};
@@ -92,6 +98,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "decompose" => cmd_decompose(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "cluster" => cmd_cluster(&args),
         "getrank" => cmd_getrank(&args),
         "eval" => cmd_eval(&args),
         "bench-diff" => cmd_bench_diff(&args),
@@ -128,6 +135,14 @@ COMMANDS:
              scheduler across all streams; --workers 0 sizes it to the
              hardware; dedicated mode is the one-thread-per-stream baseline;
              --engine mixed alternates sambaten/octen across streams)
+  cluster    [--shards 2] [--replicas 1] [--streams 4] [--batches 3]
+             [--dims 32,28,16] [--rank 3] [--batch 2] [--seed 42]
+             sharded cluster demo: streams placed on shards by consistent
+             hashing, every batch's snapshot replicated through the wire
+             codec, replica reads verified bit-identical to the primary
+             --listen ADDR [--once]  serve one shard over TCP
+             --join ADDR [--stream NAME]  drive a listening shard:
+             register -> ingest -> stats -> drain (used by the CI smoke)
   getrank    --input X.tns [--max-rank 10] [--iters 2]
   eval       <{}|all> [--iters N] [--budget SECONDS] [--scale F] [--out-dir results] [--pjrt]
   bench-diff OLD.json NEW.json [--threshold 0.10]
@@ -492,6 +507,190 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ps.workers, ps.tasks_executed, ps.steals, ps.injected, ps.panics
         );
     }
+    Ok(())
+}
+
+/// `sambaten cluster` — three modes sharing one wire format:
+/// the default in-process demo (N shards × M replicas, replication
+/// through the codec), `--listen` (serve one shard over TCP), and
+/// `--join` (drive a listening shard end to end).
+fn cmd_cluster(args: &Args) -> Result<()> {
+    if let Some(addr) = args.get("listen") {
+        return cluster_listen(addr, args);
+    }
+    if let Some(addr) = args.get("join") {
+        return cluster_join(addr, args);
+    }
+    cluster_demo(args)
+}
+
+fn cluster_demo(args: &Args) -> Result<()> {
+    let shards = args.get_or("shards", 2usize)?;
+    let replicas = args.get_or("replicas", 1usize)?;
+    let streams = args.get_or("streams", 4usize)?;
+    let batches = args.get_or("batches", 3usize)?;
+    let (i, j, k) = parse_dims(args.get("dims").unwrap_or("32,28,16"))?;
+    let rank = args.get_or("rank", 3usize)?;
+    let batch_k = args.get_or("batch", 2usize)?;
+    let seed = args.get_or("seed", 42u64)?;
+
+    let cluster = ClusterService::new(ClusterConfig::new(shards).replicas(replicas))?;
+    println!(
+        "cluster: {} shard(s) × {replicas} replica(s), {streams} stream(s) of {i}×{j}×{k}",
+        cluster.shards()
+    );
+    for s in 0..streams {
+        let name = format!("stream-{s}");
+        let spec = SyntheticSpec {
+            i,
+            j,
+            k,
+            rank,
+            density: 1.0,
+            noise: 0.05,
+            seed: seed.wrapping_add(s as u64),
+        };
+        let cfg = SamBaTenConfig::builder(rank, 2, 2, seed).build()?;
+        cluster.register(&name, &spec.generate().0, cfg)?;
+        println!("  {name} -> shard {}", cluster.shard_of(&name));
+    }
+    for b in 0..batches {
+        let mut tickets = Vec::new();
+        for s in 0..streams {
+            let name = format!("stream-{s}");
+            let spec = SyntheticSpec {
+                i,
+                j,
+                k: batch_k,
+                rank,
+                density: 1.0,
+                noise: 0.05,
+                seed: seed.wrapping_add(1000 + (b * streams + s) as u64),
+            };
+            let ticket = cluster.ingest(&name, spec.generate().0)?;
+            tickets.push((name, ticket));
+        }
+        for (name, ticket) in tickets {
+            ticket.wait().with_context(|| format!("batch {b} of {name}"))?;
+        }
+    }
+    println!("\n== cluster report ==");
+    for name in cluster.stream_names() {
+        let cs = cluster.cluster_stats(&name)?;
+        anyhow::ensure!(
+            cs.replica_epochs.iter().all(|&e| e == cs.primary.epoch),
+            "{name}: replicas {:?} lag primary epoch {}",
+            cs.replica_epochs,
+            cs.primary.epoch
+        );
+        if replicas > 0 {
+            let p = cluster.handle(&name)?.snapshot();
+            let r = cluster.replica_handle(&name, 0)?.snapshot();
+            let pk = p.top_k(0, 0, 3);
+            let rk = r.top_k(0, 0, 3);
+            let identical = pk.len() == rk.len()
+                && pk.iter().zip(&rk).all(|(a, b)| a.0 == b.0 && a.1.to_bits() == b.1.to_bits());
+            anyhow::ensure!(identical, "{name}: replica top_k is not bit-identical");
+        }
+        println!(
+            "  {name}: shard {}  epoch {}  replicas {:?}  frames {}Δ+{}full  {} B replicated",
+            cs.shard,
+            cs.primary.epoch,
+            cs.replica_epochs,
+            cs.frames_delta,
+            cs.frames_full,
+            cs.bytes_replicated
+        );
+    }
+    cluster.shutdown();
+    println!("ok: every replica matched its primary bit for bit");
+    Ok(())
+}
+
+fn cluster_listen(addr: &str, args: &Args) -> Result<()> {
+    let once = args.has("once");
+    let listener = std::net::TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    println!("shard listening on {}", listener.local_addr()?);
+    let svc = Arc::new(DecompositionService::new());
+    loop {
+        let (sock, peer) = listener.accept().context("accepting connection")?;
+        println!("connection from {peer}");
+        let server = ShardServer::new(svc.clone());
+        if once {
+            let mut transport = TcpTransport::from_stream(sock);
+            server.serve(&mut transport)?;
+            println!("connection closed; exiting (--once)");
+            return Ok(());
+        }
+        std::thread::spawn(move || {
+            let mut transport = TcpTransport::from_stream(sock);
+            if let Err(e) = server.serve(&mut transport) {
+                eprintln!("connection from {peer} failed: {e:#}");
+            }
+        });
+    }
+}
+
+fn cluster_join(addr: &str, args: &Args) -> Result<()> {
+    let batches = args.get_or("batches", 3usize)?;
+    let (i, j, k) = parse_dims(args.get("dims").unwrap_or("24,20,10"))?;
+    let rank = args.get_or("rank", 2usize)?;
+    let batch_k = args.get_or("batch", 2usize)?;
+    let seed = args.get_or("seed", 42u64)?;
+    let stream = args.get("stream").unwrap_or("remote-demo").to_string();
+
+    // The listening shard may still be starting (the CI smoke launches
+    // both processes back to back) — retry the connect for ~5 seconds.
+    let mut attempt = 0;
+    let shard = loop {
+        match RemoteShard::connect(addr) {
+            Ok(shard) => break shard,
+            Err(_) if attempt < 20 => {
+                attempt += 1;
+                std::thread::sleep(std::time::Duration::from_millis(250));
+            }
+            Err(e) => return Err(e.context(format!("connecting to {addr}"))),
+        }
+    };
+
+    let existing = SyntheticSpec { i, j, k, rank, density: 1.0, noise: 0.05, seed }.generate().0;
+    let engine = WireEngineSpec::SamBaTen {
+        rank: rank as u32,
+        sampling_factor: 2,
+        repetitions: 2,
+        seed,
+        adaptive: false,
+    };
+    let (epoch, got_rank) = shard.register(&stream, &existing, engine)?;
+    println!("registered {stream:?} on {addr}: epoch {epoch}, rank {got_rank}");
+    for b in 0..batches {
+        let spec = SyntheticSpec {
+            i,
+            j,
+            k: batch_k,
+            rank,
+            density: 1.0,
+            noise: 0.05,
+            seed: seed.wrapping_add(b as u64 + 1),
+        };
+        let ack = shard.ingest(&stream, &spec.generate().0)?;
+        anyhow::ensure!(
+            shard.replica_epoch(&stream) == Some(ack.epoch),
+            "local replica must have applied the acked epoch"
+        );
+        println!(
+            "  batch {}: epoch {} (+{} slices, {:.3}s) — replica caught up",
+            b + 1,
+            ack.epoch,
+            ack.k_new,
+            ack.seconds
+        );
+    }
+    let stats = shard.stats(&stream)?;
+    println!("stats: epoch {}  batches {}  slices {}", stats.epoch, stats.batches, stats.slices);
+    let finals = shard.drain(&stream)?;
+    println!("drained {stream:?}: final epoch {}, {} batches", finals.epoch, finals.batches);
+    println!("ok: remote shard round trip complete");
     Ok(())
 }
 

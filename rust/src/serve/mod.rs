@@ -66,6 +66,13 @@ pub struct Ticket {
 }
 
 impl Ticket {
+    /// Mint a ticket over an externally owned completion channel — the
+    /// cluster layer resolves its tickets only after snapshot replication,
+    /// so it forwards the stream's result through its own channel.
+    pub(crate) fn from_receiver(rx: mpsc::Receiver<Result<BatchStats>>) -> Ticket {
+        Ticket { rx }
+    }
+
     /// Block until the batch has been processed; returns its stats or the
     /// ingest error. Also errors — never hangs — if the stream's worker
     /// died before processing the batch (a panicking dedicated-mode worker;
@@ -74,6 +81,21 @@ impl Ticket {
         match self.rx.recv() {
             Ok(result) => result,
             Err(_) => Err(anyhow!("stream worker terminated before processing the batch")),
+        }
+    }
+
+    /// [`wait`](Self::wait) with a deadline: `None` if the batch is still
+    /// queued or in-flight after `timeout` (the ticket stays usable — wait
+    /// again or drop it). The network layer's guard: a shard serving an
+    /// ingest RPC must answer the client even when a stream has wedged, so
+    /// it waits with a timeout instead of blocking its connection forever.
+    pub fn wait_timeout(&self, timeout: std::time::Duration) -> Option<Result<BatchStats>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(result) => Some(result),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Some(Err(anyhow!("stream worker terminated before processing the batch")))
+            }
         }
     }
 

@@ -1,0 +1,293 @@
+//! Property tests for the cluster wire codec: every frame kind round
+//! trips bit-exactly over randomly generated content, every truncation
+//! of a valid frame is rejected, header corruption is rejected, and no
+//! input — corrupted, hostile, or plain random — ever panics the
+//! decoder. These are the guarantees the whole cluster layer leans on:
+//! in-process replication round-trips every snapshot through this codec,
+//! and the TCP path feeds it bytes from the network.
+
+use sambaten::cluster::wire::{
+    decode_frame, encode_frame, Frame, SnapshotFrame, WireBatchAck, WireBlock, WireEngineSpec,
+    WireFactorDelta, WireFactorState, WireStreamStats, WireTensor, MAX_WIRE_STRING, WIRE_MAGIC,
+    WIRE_VERSION,
+};
+use sambaten::coordinator::DriftState;
+use sambaten::util::Rng;
+
+fn rand_name(rng: &mut Rng) -> String {
+    let len = 1 + rng.below(12);
+    (0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+}
+
+fn rand_f64s(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.gaussian()).collect()
+}
+
+fn rand_dims(rng: &mut Rng) -> (u64, u64, u64) {
+    (1 + rng.below(5) as u64, 1 + rng.below(5) as u64, 1 + rng.below(5) as u64)
+}
+
+fn rand_tensor(rng: &mut Rng) -> WireTensor {
+    let dims = rand_dims(rng);
+    if rng.below(2) == 0 {
+        let n = (dims.0 * dims.1 * dims.2) as usize;
+        WireTensor::Dense { dims, data: rand_f64s(rng, n) }
+    } else {
+        let entries = (0..rng.below(8))
+            .map(|_| {
+                let i = rng.below(dims.0 as usize) as u32;
+                let j = rng.below(dims.1 as usize) as u32;
+                let k = rng.below(dims.2 as usize) as u32;
+                (i, j, k, rng.gaussian())
+            })
+            .collect();
+        WireTensor::Sparse { dims, entries }
+    }
+}
+
+fn rand_engine(rng: &mut Rng) -> WireEngineSpec {
+    if rng.below(2) == 0 {
+        WireEngineSpec::SamBaTen {
+            rank: 1 + rng.below(6) as u32,
+            sampling_factor: 1 + rng.below(4) as u32,
+            repetitions: 1 + rng.below(4) as u32,
+            seed: rng.next_u64(),
+            adaptive: rng.below(2) == 0,
+        }
+    } else {
+        WireEngineSpec::OcTen {
+            rank: 1 + rng.below(6) as u32,
+            replicas: 1 + rng.below(5) as u32,
+            compression: 1 + rng.below(4) as u32,
+            seed: rng.next_u64(),
+            adaptive: rng.below(2) == 0,
+        }
+    }
+}
+
+fn rand_drift(rng: &mut Rng) -> DriftState {
+    match rng.below(4) {
+        0 => DriftState::Stable,
+        1 => DriftState::DriftSuspected { since_epoch: rng.next_u64() },
+        2 => DriftState::RankGrown { epoch: rng.next_u64(), rank: rng.below(10) },
+        _ => DriftState::ComponentRetired { epoch: rng.next_u64(), rank: rng.below(10) },
+    }
+}
+
+fn rand_stats(rng: &mut Rng) -> WireStreamStats {
+    let touched_rows = if rng.below(2) == 0 {
+        Some([rng.below(100) as u64, rng.below(100) as u64, rng.below(100) as u64])
+    } else {
+        None
+    };
+    let last_error = if rng.below(3) == 0 { Some(rand_name(rng)) } else { None };
+    WireStreamStats {
+        name: rand_name(rng),
+        engine: rand_name(rng),
+        epoch: rng.next_u64(),
+        rank: rng.below(16) as u32,
+        drift: rand_drift(rng),
+        touched_rows,
+        batches: rng.next_u64(),
+        slices: rng.next_u64(),
+        errors: rng.below(5) as u64,
+        queued: rng.below(5) as u64,
+        ingest_seconds: rng.uniform() * 100.0,
+        last_error,
+    }
+}
+
+fn rand_factor_state(rng: &mut Rng, rank: usize) -> WireFactorState {
+    let mut rows = 0u64;
+    let mut blocks = Vec::new();
+    for _ in 0..1 + rng.below(3) {
+        let len = 1 + rng.below(4);
+        rows += len as u64;
+        blocks.push(WireBlock { scale: rand_f64s(rng, rank), data: rand_f64s(rng, len * rank) });
+    }
+    WireFactorState { rows, blocks }
+}
+
+fn rand_factor_delta(rng: &mut Rng, rank: usize) -> WireFactorDelta {
+    let rebuilt = (0..rng.below(3))
+        .map(|b| {
+            let len = 1 + rng.below(4);
+            (b as u32, rand_f64s(rng, len * rank))
+        })
+        .collect();
+    WireFactorDelta { rows: 1 + rng.below(300) as u64, rescale: rand_f64s(rng, rank), rebuilt }
+}
+
+fn rand_touched(rng: &mut Rng) -> Option<Vec<u64>> {
+    if rng.below(2) == 0 {
+        Some((0..rng.below(6)).map(|_| rng.below(500) as u64).collect())
+    } else {
+        None
+    }
+}
+
+fn rand_snapshot(rng: &mut Rng) -> SnapshotFrame {
+    let rank = 1 + rng.below(4);
+    if rng.below(2) == 0 {
+        SnapshotFrame::Full {
+            epoch: rng.next_u64(),
+            dims: rand_dims(rng),
+            lambda: rand_f64s(rng, rank),
+            drift: rand_drift(rng),
+            factors: [
+                rand_factor_state(rng, rank),
+                rand_factor_state(rng, rank),
+                rand_factor_state(rng, rank),
+            ],
+        }
+    } else {
+        SnapshotFrame::Delta {
+            epoch: rng.next_u64(),
+            dims: rand_dims(rng),
+            lambda: rand_f64s(rng, rank),
+            drift: rand_drift(rng),
+            touched: [rand_touched(rng), rand_touched(rng), rand_touched(rng)],
+            modes: [
+                rand_factor_delta(rng, rank),
+                rand_factor_delta(rng, rank),
+                rand_factor_delta(rng, rank),
+            ],
+        }
+    }
+}
+
+fn rand_frame(rng: &mut Rng) -> Frame {
+    match rng.below(10) {
+        0 => Frame::Register {
+            stream: rand_name(rng),
+            engine: rand_engine(rng),
+            existing: rand_tensor(rng),
+        },
+        1 => Frame::RegisterAck {
+            stream: rand_name(rng),
+            epoch: rng.next_u64(),
+            rank: rng.below(16) as u32,
+        },
+        2 => Frame::Ingest { stream: rand_name(rng), batch: rand_tensor(rng) },
+        3 => {
+            let result = if rng.below(2) == 0 {
+                Ok(WireBatchAck {
+                    epoch: rng.next_u64(),
+                    k_new: rng.below(10) as u64,
+                    seconds: rng.uniform(),
+                })
+            } else {
+                Err(rand_name(rng))
+            };
+            Frame::IngestAck { stream: rand_name(rng), result }
+        }
+        4 => Frame::StatsReq { stream: rand_name(rng) },
+        5 => Frame::StatsAck { stats: rand_stats(rng) },
+        6 => Frame::Drain { stream: rand_name(rng) },
+        7 => Frame::DrainAck { stats: rand_stats(rng) },
+        8 => Frame::Snapshot { stream: rand_name(rng), snap: rand_snapshot(rng) },
+        _ => Frame::Error { message: rand_name(rng) },
+    }
+}
+
+/// Every frame kind, random content, 300 rounds: decode(encode(f)) == f
+/// including exact float bits (PartialEq on finite values).
+#[test]
+fn random_frames_round_trip_bit_exactly() {
+    let mut rng = Rng::new(0xC0DEC);
+    for case in 0..300 {
+        let frame = rand_frame(&mut rng);
+        let bytes = encode_frame(&frame);
+        let back = decode_frame(&bytes)
+            .unwrap_or_else(|e| panic!("case {case} failed to decode: {e:#}\n{frame:?}"));
+        assert_eq!(back, frame, "case {case} did not round-trip");
+    }
+}
+
+/// No strict prefix of a valid frame may decode: cutting a frame at any
+/// byte must be an explicit error (this is what lets the TCP transport
+/// treat a mid-frame hangup as a hard failure instead of silent data
+/// loss).
+#[test]
+fn every_truncation_of_a_valid_frame_is_rejected() {
+    let mut rng = Rng::new(7);
+    for _ in 0..40 {
+        let bytes = encode_frame(&rand_frame(&mut rng));
+        for len in 0..bytes.len() {
+            assert!(
+                decode_frame(&bytes[..len]).is_err(),
+                "prefix of {len}/{} bytes decoded successfully",
+                bytes.len()
+            );
+        }
+    }
+}
+
+/// Header flips (magic, version) are always rejected; body flips may
+/// produce different-but-valid data (a flipped float bit is still a
+/// float) — the contract there is no panic and no runaway allocation.
+#[test]
+fn corruption_is_rejected_or_survived_never_fatal() {
+    let mut rng = Rng::new(99);
+    for _ in 0..30 {
+        let bytes = encode_frame(&rand_frame(&mut rng));
+        for pos in 0..5 {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 1 << rng.below(8);
+            assert!(decode_frame(&bad).is_err(), "header flip at byte {pos} was accepted");
+        }
+        for _ in 0..20 {
+            let mut bad = bytes.clone();
+            let pos = rng.below(bad.len());
+            bad[pos] ^= 1 << rng.below(8);
+            let _ = decode_frame(&bad); // must not panic
+        }
+    }
+}
+
+/// Unknown tags — retired, future, or garbage — are explicit errors.
+#[test]
+fn unknown_tags_are_rejected() {
+    for tag in [0u8, 11, 42, 255] {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+        bytes.push(WIRE_VERSION);
+        bytes.push(tag);
+        let err = decode_frame(&bytes).unwrap_err();
+        assert!(err.to_string().contains("tag"), "tag {tag}: {err}");
+    }
+}
+
+/// Strings are capped so a hostile length cannot drive the decoder into
+/// a huge allocation — a claimed length past the cap errors out first.
+#[test]
+fn oversized_string_lengths_are_rejected() {
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+    bytes.push(WIRE_VERSION);
+    bytes.push(5); // StatsReq: one string field
+    bytes.extend_from_slice(&((MAX_WIRE_STRING + 1) as u32).to_le_bytes());
+    bytes.extend_from_slice(&vec![b'x'; MAX_WIRE_STRING + 1]);
+    let err = decode_frame(&bytes).unwrap_err();
+    assert!(err.to_string().contains("string"), "got: {err}");
+}
+
+/// Blind fuzz: pure random buffers, and random payloads behind a valid
+/// header (which reach the per-tag payload decoders). The decoder must
+/// return — `Ok` or `Err` — on every single one.
+#[test]
+fn blind_fuzz_never_panics() {
+    let mut rng = Rng::new(0xF422);
+    for _ in 0..2000 {
+        let buf: Vec<u8> = (0..rng.below(96)).map(|_| rng.next_u64() as u8).collect();
+        let _ = decode_frame(&buf);
+    }
+    for _ in 0..2000 {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+        buf.push(WIRE_VERSION);
+        buf.push(1 + rng.below(10) as u8);
+        buf.extend((0..rng.below(96)).map(|_| rng.next_u64() as u8));
+        let _ = decode_frame(&buf);
+    }
+}

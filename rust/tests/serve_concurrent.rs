@@ -373,3 +373,40 @@ fn held_snapshots_stay_consistent_across_future_ingests() {
     assert_snapshot_invariants(&held);
     assert!(handle.epoch() == batches.len() as u64);
 }
+
+/// `Ticket::wait_timeout` regression, pinned with the gate solver: while
+/// the worker is provably parked *inside* the ingest, `wait_timeout`
+/// must return `None` on expiry — and must not consume the ticket, so
+/// the caller can keep polling and still collect the real result once
+/// the gate opens. (This is the primitive the cluster's `ShardServer`
+/// uses to turn a stuck ingest into an in-band timeout error instead of
+/// a hung connection.)
+#[test]
+fn wait_timeout_expires_while_gated_then_resolves() {
+    let svc = DecompositionService::with_config(ServiceConfig::dedicated());
+    let spec = SyntheticSpec::dense(10, 10, 12, 2, 0.0, 23);
+    let (existing, batches, _) = spec.generate_stream(0.5, 2);
+    let gate = Gate::new();
+    let cfg = SamBaTenConfig::builder(2, 2, 1, 19)
+        .build()
+        .unwrap()
+        .with_solver(Arc::new(GateSolver { gate: gate.clone() }));
+    svc.register("timed", &existing, cfg).unwrap();
+    let ticket = svc.ingest("timed", batches[0].clone()).unwrap();
+    gate.wait_entered();
+    // Parked mid-ingest: both timeouts must expire without resolving —
+    // and without consuming the ticket.
+    let short = std::time::Duration::from_millis(30);
+    assert!(ticket.wait_timeout(short).is_none(), "resolved while the solver is gated");
+    assert!(ticket.wait_timeout(short).is_none(), "second poll must still time out");
+    gate.open();
+    // Now the same ticket resolves with the real result.
+    let stats = ticket
+        .wait_timeout(std::time::Duration::from_secs(30))
+        .expect("ingest must finish once the gate opens")
+        .unwrap();
+    assert!(stats.k_new >= 1);
+    let final_epoch = svc.handle("timed").unwrap().epoch();
+    assert_eq!(final_epoch, 1);
+    svc.shutdown();
+}
