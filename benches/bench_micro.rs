@@ -5,6 +5,8 @@
 //!   * CSF vs COO MTTKRP at paper-shaped scale (1K³, 1e-4 density)
 //!   * ALS sweep throughput: COO vs CSF × fresh-alloc vs reused workspace,
 //!     with the workspace allocation counter (steady state must be 0)
+//!   * masked ALS sweep throughput (observation-ingest hot path) at 1%
+//!     and 10% observed density
 //!   * incremental CSF mode-3 append vs the rebuild-from-COO path
 //!   * 1 000-stream serving: shared 8-worker work-stealing pool vs the
 //!     dedicated-thread baseline (asserts pool throughput >= dedicated)
@@ -244,6 +246,45 @@ fn main() {
             assert_eq!(
                 steady_allocs, 0,
                 "steady-state sweeps allocated {steady_allocs} workspace buffers"
+            );
+        }
+    }
+
+    // §completion — masked ALS sweep throughput (the observation-ingest
+    // hot path, DESIGN.md §12): one full masked sweep (all three modes of
+    // per-row weighted normal equations over the observed cells) on a
+    // 200³ rank-8 observation set, at the two densities the subsystem is
+    // sized for (1% — the completion regime — and 10%). The sweep visits
+    // each observed cell a constant number of times per mode, so the
+    // cells/s rate should be roughly density-independent; the rows pin
+    // that down across commits. Steady-state sweeps reuse the workspace
+    // (same contract as the dense/sparse ALS rows above).
+    {
+        use sambaten::cp::{masked_sweep, CpModel};
+        let mut mrng = Rng::new(41);
+        for (tag, density) in [("1pct", 0.01f64), ("10pct", 0.10)] {
+            let obs: TensorData = CooTensor::rand(200, 200, 200, density, &mut mrng).into();
+            let nnz = obs.nnz();
+            println!("masked sweep {tag} observed cells = {nnz}");
+            let model = CpModel::new(
+                Matrix::rand_gaussian(200, 8, &mut mrng),
+                Matrix::rand_gaussian(200, 8, &mut mrng),
+                Matrix::rand_gaussian(200, 8, &mut mrng),
+                vec![1.0; 8],
+            );
+            let mut ws = AlsWorkspace::new();
+            // Warm the workspace to the steady-state footprint.
+            let mut warm = model.clone();
+            masked_sweep(&obs, &mut warm, &mut ws, 1e-9).unwrap();
+            let run = bench(&format!("micro/masked_sweep_200_r8/density_{tag}"), 1, 7, || {
+                let mut m = model.clone();
+                masked_sweep(&obs, &mut m, &mut ws, 1e-9).unwrap();
+                std::hint::black_box(m);
+            });
+            report(
+                &format!("micro/masked_sweep_200_r8/cells_per_s_{tag}"),
+                nnz as f64 / run.median_s.max(1e-12),
+                "observed cells/s",
             );
         }
     }

@@ -30,9 +30,10 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::cluster::replica::{snapshot_to_frame, Replica};
 use crate::cluster::transport::{TcpTransport, Transport};
 use crate::cluster::wire::{
-    decode_frame, encode_frame, Frame, SnapshotFrame, WireBatchAck, WireEngineSpec,
-    WireStreamStats, WireTensor,
+    decode_frame, encode_frame, observations_to_batch, Frame, SnapshotFrame, WireBatchAck,
+    WireEngineSpec, WireStreamStats, WireTensor,
 };
+use crate::completion::ObservationBatch;
 use crate::coordinator::ModelSnapshot;
 use crate::serve::{DecompositionService, StreamHandle};
 use crate::tensor::TensorData;
@@ -90,6 +91,9 @@ impl ShardServer {
                 }
             }
             Frame::Ingest { stream, batch } => self.ingest(&stream, batch, last),
+            Frame::Observations { stream, dims, entries } => {
+                self.ingest_observations(&stream, dims, entries, last)
+            }
             Frame::StatsReq { stream } => match self.svc.stats(&stream) {
                 Ok(stats) => vec![Frame::StatsAck { stats: WireStreamStats::from(&stats) }],
                 Err(e) => vec![Frame::Error { message: format!("{e:#}") }],
@@ -136,27 +140,53 @@ impl ShardServer {
         batch: WireTensor,
         last: &mut HashMap<String, Arc<ModelSnapshot>>,
     ) -> Vec<Frame> {
-        let err_ack = |message: String| {
-            vec![Frame::IngestAck { stream: stream.to_string(), result: Err(message) }]
-        };
         let batch = match batch.into_tensor() {
             Ok(b) => b,
-            Err(e) => return err_ack(format!("{e:#}")),
+            Err(e) => return err_ack(stream, format!("{e:#}")),
         };
-        let ticket = match self.svc.ingest(stream, batch) {
-            Ok(t) => t,
-            Err(e) => return err_ack(format!("{e:#}")),
+        match self.svc.ingest(stream, batch) {
+            Ok(ticket) => self.await_and_ack(stream, ticket, last),
+            Err(e) => err_ack(stream, format!("{e:#}")),
+        }
+    }
+
+    /// The observation (completion) write path — same ack/snapshot
+    /// contract as slice ingest, batch validated by the wire layer.
+    fn ingest_observations(
+        &self,
+        stream: &str,
+        dims: (u64, u64, u64),
+        entries: Vec<(u32, u32, u32, f64)>,
+        last: &mut HashMap<String, Arc<ModelSnapshot>>,
+    ) -> Vec<Frame> {
+        let batch = match observations_to_batch(dims, entries) {
+            Ok(b) => b,
+            Err(e) => return err_ack(stream, format!("{e:#}")),
         };
+        match self.svc.ingest_observations(stream, batch) {
+            Ok(ticket) => self.await_and_ack(stream, ticket, last),
+            Err(e) => err_ack(stream, format!("{e:#}")),
+        }
+    }
+
+    /// Wait out one queued batch (slices or observations), then push the
+    /// delta snapshot ahead of the ack.
+    fn await_and_ack(
+        &self,
+        stream: &str,
+        ticket: crate::serve::Ticket,
+        last: &mut HashMap<String, Arc<ModelSnapshot>>,
+    ) -> Vec<Frame> {
         let stats = match ticket.wait_timeout(self.timeout) {
             Some(Ok(stats)) => stats,
-            Some(Err(e)) => return err_ack(format!("{e:#}")),
+            Some(Err(e)) => return err_ack(stream, format!("{e:#}")),
             None => {
                 let secs = self.timeout.as_secs();
-                return err_ack(format!("ingest did not finish within {secs}s"));
+                return err_ack(stream, format!("ingest did not finish within {secs}s"));
             }
         };
         let Ok(handle) = self.svc.handle(stream) else {
-            return err_ack(format!("stream {stream:?} vanished mid-ingest"));
+            return err_ack(stream, format!("stream {stream:?} vanished mid-ingest"));
         };
         let snapshot = handle.snapshot();
         let snap = snapshot_to_frame(last.get(stream).map(Arc::as_ref), &snapshot);
@@ -171,6 +201,10 @@ impl ShardServer {
         last.insert(stream.to_string(), snapshot);
         vec![Frame::Snapshot { stream: stream.to_string(), snap }, ack]
     }
+}
+
+fn err_ack(stream: &str, message: String) -> Vec<Frame> {
+    vec![Frame::IngestAck { stream: stream.to_string(), result: Err(message) }]
 }
 
 /// Client end of one shard connection. Every request is a blocking RPC;
@@ -221,6 +255,25 @@ impl RemoteShard {
                 result.map_err(|m| anyhow!("shard rejected batch: {m}"))
             }
             other => Err(unexpected("ingest", other)),
+        }
+    }
+
+    /// Ship one observation batch (the completion write path — see
+    /// [`crate::completion`]) and wait for the shard's ack. The stream
+    /// must have been registered with `completion: true` in its
+    /// [`WireEngineSpec`]; a disabled stream rejects the batch in-band
+    /// (an `Err` ack) and keeps the connection usable.
+    pub fn ingest_observations(
+        &self,
+        stream: &str,
+        batch: &ObservationBatch,
+    ) -> Result<WireBatchAck> {
+        let req = Frame::observations(stream, batch);
+        match self.rpc(&req)? {
+            Frame::IngestAck { result, .. } => {
+                result.map_err(|m| anyhow!("shard rejected observations: {m}"))
+            }
+            other => Err(unexpected("observations", other)),
         }
     }
 
@@ -318,6 +371,7 @@ mod tests {
             repetitions: 2,
             seed: 42,
             adaptive: false,
+            completion: false,
         }
     }
 
@@ -357,6 +411,40 @@ mod tests {
             assert_eq!(finals.epoch, 1);
             assert!(client.replica("s").is_err(), "drain drops the local replica");
             assert!(client.stats("s").is_err(), "stream is gone on the shard");
+        });
+    }
+
+    #[test]
+    fn observation_ingest_over_loopback() {
+        with_loopback_server(|client| {
+            let completion_spec = WireEngineSpec::SamBaTen {
+                rank: 2,
+                sampling_factor: 2,
+                repetitions: 2,
+                seed: 7,
+                adaptive: false,
+                completion: true,
+            };
+            let (epoch, _) = client.register("c", &dense(10, 8, 6, 5), completion_spec).unwrap();
+            assert_eq!(epoch, 0);
+            let batch = ObservationBatch::from_entries(
+                (10, 8, 6),
+                vec![(0, 0, 0, 1.0), (9, 7, 5, -2.0), (3, 4, 2, 0.5)],
+            )
+            .unwrap();
+            let ack = client.ingest_observations("c", &batch).unwrap();
+            assert_eq!(ack.epoch, 1);
+            assert_eq!(ack.k_new, 0, "observations append no slices");
+            // The pushed snapshot landed before the ack returned.
+            assert_eq!(client.replica_epoch("c"), Some(1));
+            assert_eq!(client.replica("c").unwrap().dims(), (10, 8, 6));
+
+            // A stream registered without completion rejects in-band —
+            // an `Err` ack, not a dead connection.
+            client.register("plain", &dense(8, 8, 4, 6), spec(2)).unwrap();
+            let err = client.ingest_observations("plain", &batch).unwrap_err();
+            assert!(err.to_string().contains("disabled"), "got: {err}");
+            assert_eq!(client.stats("plain").unwrap().epoch, 0);
         });
     }
 

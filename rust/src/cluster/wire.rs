@@ -20,6 +20,9 @@
 //!   validation contract is the schema: explicit `(I, J, K)` dims, then
 //!   either a dense row-major payload whose length must equal `I·J·K`, or
 //!   a run of sparse `(i, j, k, value)` entries each bounded by the dims.
+//!   Observation batches ([`Frame::Observations`], the completion write
+//!   path) reuse the sparse entry-run layout against the stream's full
+//!   dims and validate through [`observations_to_batch`].
 //! * **Snapshot frames** ([`SnapshotFrame`]) — either the full blocked
 //!   factor state or a delta (epoch, touched rows per mode, per-column
 //!   block rescales, rebuilt blocks including the grown `C` tail). Both
@@ -37,6 +40,7 @@
 
 use anyhow::{bail, ensure, Result};
 
+use crate::completion::{CompletionConfig, ObservationBatch};
 use crate::coordinator::{DriftState, EngineConfig, OcTenConfig, SamBaTenConfig};
 use crate::serve::StreamStats;
 use crate::tensor::{CooTensor, DenseTensor, Tensor3, TensorData};
@@ -59,6 +63,7 @@ const TAG_DRAIN: u8 = 7;
 const TAG_DRAIN_ACK: u8 = 8;
 const TAG_SNAPSHOT: u8 = 9;
 const TAG_ERROR: u8 = 10;
+const TAG_OBSERVATIONS: u8 = 11;
 
 /// One wire message. `PartialEq` is derived so round-trip tests can
 /// compare decoded frames directly (all floats in tests are finite).
@@ -70,6 +75,13 @@ pub enum Frame {
     RegisterAck { stream: String, epoch: u64, rank: u32 },
     /// Client → shard: one slice batch for `stream`.
     Ingest { stream: String, batch: WireTensor },
+    /// Client → shard: one sparse observation batch for `stream` — the
+    /// completion write path (see [`crate::completion`]). Entries are
+    /// `(i, j, k, value)` cell observations against the stream's full
+    /// `dims`, *not* appended slices, and exact zeros are meaningful
+    /// (they travel bit-exact like every other value). Acked by the
+    /// same [`Frame::IngestAck`] as slice ingest.
+    Observations { stream: String, dims: (u64, u64, u64), entries: Vec<(u32, u32, u32, f64)> },
     /// Shard → client: the batch outcome. An ingest *rejection* (engine
     /// validation, poisoned worker) is data, not a transport failure, so
     /// it rides inside the ack rather than a [`Frame::Error`].
@@ -87,11 +99,41 @@ pub enum Frame {
     Error { message: String },
 }
 
+impl Frame {
+    /// Build the observation-ingest frame from an already-validated batch.
+    pub fn observations(stream: impl Into<String>, batch: &ObservationBatch) -> Frame {
+        let (i, j, k) = batch.dims();
+        Frame::Observations {
+            stream: stream.into(),
+            dims: (i as u64, j as u64, k as u64),
+            entries: batch.entries().to_vec(),
+        }
+    }
+}
+
+/// Validate a decoded [`Frame::Observations`] payload into a local
+/// [`ObservationBatch`] — dims in the u32 index range, every entry inside
+/// them (the completion analogue of [`WireTensor::into_tensor`]).
+pub fn observations_to_batch(
+    dims: (u64, u64, u64),
+    entries: Vec<(u32, u32, u32, f64)>,
+) -> Result<ObservationBatch> {
+    ObservationBatch::from_entries(decode_dims(dims)?, entries)
+}
+
 /// Engine selection for [`Frame::Register`] — the portable subset of the
 /// two builder surfaces (everything else keeps its tuned default).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum WireEngineSpec {
-    SamBaTen { rank: u32, sampling_factor: u32, repetitions: u32, seed: u64, adaptive: bool },
+    SamBaTen {
+        rank: u32,
+        sampling_factor: u32,
+        repetitions: u32,
+        seed: u64,
+        adaptive: bool,
+        /// Accept [`Frame::Observations`] ingest (see [`crate::completion`]).
+        completion: bool,
+    },
     OcTen { rank: u32, replicas: u32, compression: u32, seed: u64, adaptive: bool },
 }
 
@@ -100,9 +142,20 @@ impl WireEngineSpec {
     /// so a nonsense spec (rank 0) errors here rather than deep in ingest.
     pub fn to_engine_config(&self) -> Result<EngineConfig> {
         match *self {
-            WireEngineSpec::SamBaTen { rank, sampling_factor, repetitions, seed, adaptive } => {
+            WireEngineSpec::SamBaTen {
+                rank,
+                sampling_factor,
+                repetitions,
+                seed,
+                adaptive,
+                completion,
+            } => {
                 let (r, s, p) = (rank as usize, sampling_factor as usize, repetitions as usize);
-                let cfg = SamBaTenConfig::builder(r, s, p, seed).adaptive_rank(adaptive).build()?;
+                let mut b = SamBaTenConfig::builder(r, s, p, seed).adaptive_rank(adaptive);
+                if completion {
+                    b = b.completion(CompletionConfig::enabled());
+                }
+                let cfg = b.build()?;
                 Ok(cfg.into())
             }
             WireEngineSpec::OcTen { rank, replicas, compression, seed, adaptive } => {
@@ -396,10 +449,11 @@ impl Writer {
     }
 
     fn engine_spec(&mut self, e: &WireEngineSpec) {
+        // Common prefix for both kinds, then kind-specific trailers.
         let (kind, rank, a, b, seed, adaptive) = match *e {
-            WireEngineSpec::SamBaTen { rank, sampling_factor, repetitions, seed, adaptive } => {
-                (0u8, rank, sampling_factor, repetitions, seed, adaptive)
-            }
+            WireEngineSpec::SamBaTen {
+                rank, sampling_factor, repetitions, seed, adaptive, ..
+            } => (0u8, rank, sampling_factor, repetitions, seed, adaptive),
             WireEngineSpec::OcTen { rank, replicas, compression, seed, adaptive } => {
                 (1u8, rank, replicas, compression, seed, adaptive)
             }
@@ -410,6 +464,9 @@ impl Writer {
         self.u32(b);
         self.u64(seed);
         self.u8(adaptive as u8);
+        if let WireEngineSpec::SamBaTen { completion, .. } = *e {
+            self.u8(completion as u8);
+        }
     }
 
     fn stream_stats(&mut self, s: &WireStreamStats) {
@@ -508,6 +565,19 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
             let mut w = Writer::new(TAG_INGEST);
             w.string(stream);
             w.tensor(batch);
+            w
+        }
+        Frame::Observations { stream, dims, entries } => {
+            let mut w = Writer::new(TAG_OBSERVATIONS);
+            w.string(stream);
+            w.dims(*dims);
+            w.u64(entries.len() as u64);
+            for &(i, j, k, v) in entries {
+                w.u32(i);
+                w.u32(j);
+                w.u32(k);
+                w.f64(v);
+            }
             w
         }
         Frame::IngestAck { stream, result } => {
@@ -709,6 +779,7 @@ impl<'a> Reader<'a> {
                 repetitions: b,
                 seed,
                 adaptive,
+                completion: self.boolean()?,
             },
             1 => WireEngineSpec::OcTen { rank, replicas: a, compression: b, seed, adaptive },
             k => bail!("unknown engine kind {k}"),
@@ -865,6 +936,16 @@ pub fn decode_frame(bytes: &[u8]) -> Result<Frame> {
             let batch = r.tensor()?;
             Frame::Ingest { stream, batch }
         }
+        TAG_OBSERVATIONS => {
+            let stream = r.string()?;
+            let dims = r.dims()?;
+            let len = r.seq_len(20)?;
+            let mut entries = Vec::with_capacity(len);
+            for _ in 0..len {
+                entries.push((r.u32()?, r.u32()?, r.u32()?, r.f64()?));
+            }
+            Frame::Observations { stream, dims, entries }
+        }
         TAG_INGEST_ACK => {
             let stream = r.string()?;
             let result = if r.boolean()? {
@@ -924,6 +1005,7 @@ mod tests {
                 repetitions: 4,
                 seed: 42,
                 adaptive: true,
+                completion: true,
             },
             existing: dense,
         });
@@ -984,6 +1066,26 @@ mod tests {
             ],
         };
         roundtrip(Frame::Snapshot { stream: "s".into(), snap: delta });
+    }
+
+    #[test]
+    fn observation_frames_round_trip_and_validate() {
+        roundtrip(Frame::Observations {
+            stream: "obs".into(),
+            dims: (4, 3, 2),
+            entries: vec![(0, 0, 0, 1.5), (3, 2, 1, 0.0), (1, 1, 1, -2.25)],
+        });
+        // Exact zero survives the wire (it is a meaningful observation).
+        let batch = ObservationBatch::from_entries((4, 3, 2), vec![(3, 2, 1, 0.0)]).unwrap();
+        let Frame::Observations { dims, entries, .. } = Frame::observations("s", &batch) else {
+            panic!("constructor must build an Observations frame");
+        };
+        let back = observations_to_batch(dims, entries).unwrap();
+        assert_eq!(back.entries(), batch.entries());
+        // Out-of-range entries are rejected at validation, not ingest.
+        assert!(observations_to_batch((2, 2, 2), vec![(2, 0, 0, 1.0)]).is_err());
+        // Dims past the u32 index range are rejected before any entry scan.
+        assert!(observations_to_batch((u64::MAX, 1, 1), vec![]).is_err());
     }
 
     #[test]

@@ -1,0 +1,376 @@
+//! Online tensor completion: sparse *observation* ingest (GOCPT-style,
+//! arXiv:2205.03749) next to the append-only slice path.
+//!
+//! SamBaTen's native ingest contract is fully-observed frontal slices
+//! appended along mode 3. Real workloads from the paper's motivating
+//! domains (ratings, social interactions, sensor feeds) instead deliver
+//! sparse `(i, j, k, value)` **observations** of an underlying tensor —
+//! values for existing cells, including *revisits* that overwrite a
+//! previously observed cell. This module is the ingest type for that
+//! second update shape:
+//!
+//! * [`ObservationBatch`] — a validated, deterministically coalesced set
+//!   of cell observations (last write wins within a batch, by push
+//!   order);
+//! * [`CompletionConfig`] — the engine knob set, **off by default**; with
+//!   completion off the engine is bit-identical to a build without this
+//!   module (pinned in `tests/completion_stream.rs`).
+//!
+//! The solve itself — masked per-row normal equations restricted to the
+//! observed support — lives in [`crate::cp::masked`] on top of the
+//! backends' `masked_normals_into` kernel ([`crate::tensor::Tensor3`]);
+//! the engine wiring is `SamBaTen::ingest_observations`
+//! ([`crate::coordinator::engine`]). DESIGN.md §12 has the math.
+
+use crate::tensor::CooTensor;
+use anyhow::{bail, Result};
+
+/// Engine configuration for the completion path. Defaults are **off**:
+/// a default-constructed config leaves the engine's slice path
+/// bit-identical to a completion-free build, and observation ingest is
+/// rejected until `enabled` is set.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompletionConfig {
+    /// Accept [`ObservationBatch`] ingest. Off by default.
+    pub enabled: bool,
+    /// Masked ALS sweeps per observation batch (warm-started from the
+    /// current model, over the full accumulated observation set).
+    pub sweeps: usize,
+    /// Per-row Tikhonov ridge, scaled by the mean diagonal of each row's
+    /// masked normal matrix. Sparse fibers (few observations at a row)
+    /// make individual row systems rank-deficient long before the global
+    /// Gram is — the ridge keeps every observed row solvable.
+    pub ridge: f64,
+}
+
+impl Default for CompletionConfig {
+    fn default() -> Self {
+        CompletionConfig { enabled: false, sweeps: 3, ridge: 1e-9 }
+    }
+}
+
+impl CompletionConfig {
+    /// An enabled config with the default solve knobs.
+    pub fn enabled() -> Self {
+        CompletionConfig { enabled: true, ..Default::default() }
+    }
+
+    /// Validate the knob ranges (mirrors `SamBaTenConfigBuilder::build`).
+    pub fn validate(&self) -> Result<()> {
+        if self.sweeps == 0 {
+            bail!("completion.sweeps must be >= 1");
+        }
+        if !self.ridge.is_finite() || self.ridge < 0.0 {
+            bail!("completion.ridge must be finite and >= 0, got {}", self.ridge);
+        }
+        Ok(())
+    }
+}
+
+/// A batch of sparse cell observations `(i, j, k, value)` against a tensor
+/// of fixed `dims` — the completion counterpart of a slice batch.
+///
+/// Invariants (enforced at construction, relied on by the engine, the
+/// wire codec and the masked kernels):
+///
+/// * every index is in range for `dims`;
+/// * every value is finite;
+/// * coordinates are unique and sorted by `(k, j, i)` — duplicates within
+///   one batch coalesce **deterministically, last push wins** (a cell
+///   re-observed inside a batch keeps its latest value, independent of
+///   any sort order). This is the observation-semantics counterpart of
+///   the slice path's sum-coalesce: values are *states*, not increments.
+///
+/// Exact-zero values are kept: "observed as zero" is information the mask
+/// must carry (unlike sparse tensor entries, where zero means absent).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObservationBatch {
+    dims: (usize, usize, usize),
+    entries: Vec<(u32, u32, u32, f64)>,
+}
+
+impl ObservationBatch {
+    /// Empty batch against a `dims`-shaped tensor.
+    pub fn new(dims: (usize, usize, usize)) -> Self {
+        ObservationBatch { dims, entries: Vec::new() }
+    }
+
+    /// Build from raw entries, validating and coalescing. The entry order
+    /// is the observation order: on duplicate coordinates the **last**
+    /// entry wins.
+    pub fn from_entries(
+        dims: (usize, usize, usize),
+        entries: Vec<(u32, u32, u32, f64)>,
+    ) -> Result<Self> {
+        let mut b = ObservationBatch { dims, entries };
+        for &(i, j, k, v) in &b.entries {
+            check_entry(dims, i, j, k, v)?;
+        }
+        b.coalesce();
+        Ok(b)
+    }
+
+    /// Record one observation. Later pushes of the same cell overwrite
+    /// earlier ones at [`ObservationBatch::coalesce`] time (which every
+    /// consumer-facing constructor and the engine run implicitly).
+    pub fn push(&mut self, i: usize, j: usize, k: usize, v: f64) -> Result<()> {
+        check_entry(self.dims, i as u32, j as u32, k as u32, v)?;
+        self.entries.push((i as u32, j as u32, k as u32, v));
+        Ok(())
+    }
+
+    /// Deterministic duplicate resolution: sort by `(k, j, i)` and keep,
+    /// for each coordinate, the value of the **latest push**. Stable sort
+    /// preserves push order within a coordinate, so "last wins" is
+    /// independent of how the duplicates interleave with other cells.
+    pub fn coalesce(&mut self) {
+        self.entries.sort_by_key(|&(i, j, k, _)| (k, j, i));
+        // After a stable sort equal coordinates sit adjacent in push
+        // order; dedup keeps the first of each run, so walk runs and keep
+        // the last instead.
+        let mut out: Vec<(u32, u32, u32, f64)> = Vec::with_capacity(self.entries.len());
+        for &e in &self.entries {
+            match out.last_mut() {
+                Some(last) if (last.0, last.1, last.2) == (e.0, e.1, e.2) => *last = e,
+                _ => out.push(e),
+            }
+        }
+        self.entries = out;
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize) {
+        self.dims
+    }
+
+    /// Number of (coalesced) observations.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The coalesced entries, sorted by `(k, j, i)`.
+    pub fn entries(&self) -> &[(u32, u32, u32, f64)] {
+        &self.entries
+    }
+
+    /// Entry iterator `(i, j, k, v)` in `(k, j, i)` order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, usize, f64)> + '_ {
+        self.entries.iter().map(|&(i, j, k, v)| (i as usize, j as usize, k as usize, v))
+    }
+}
+
+fn check_entry(dims: (usize, usize, usize), i: u32, j: u32, k: u32, v: f64) -> Result<()> {
+    if (i as usize) >= dims.0 || (j as usize) >= dims.1 || (k as usize) >= dims.2 {
+        bail!(
+            "observation ({i}, {j}, {k}) out of range for a {}x{}x{} tensor",
+            dims.0,
+            dims.1,
+            dims.2
+        );
+    }
+    if !v.is_finite() {
+        bail!("observation ({i}, {j}, {k}) has non-finite value {v}");
+    }
+    Ok(())
+}
+
+/// Accumulated observation state: the engine's view of every cell observed
+/// so far, kept sorted by `(k, j, i)` with unique coordinates. Batches
+/// merge in with last-write-wins *across* batches too — a revisit
+/// overwrites the cell's previous value, it does not sum.
+#[derive(Clone, Debug, Default)]
+pub struct ObservationSet {
+    dims: (usize, usize, usize),
+    entries: Vec<(u32, u32, u32, f64)>,
+}
+
+impl ObservationSet {
+    pub fn new(dims: (usize, usize, usize)) -> Self {
+        ObservationSet { dims, entries: Vec::new() }
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize) {
+        self.dims
+    }
+
+    /// Track the stream's growing tensor: slice ingest appends mode-3
+    /// rows, and later observation batches address the grown shape. Dims
+    /// may only grow — every stored observation stays in range.
+    pub fn grow_to(&mut self, dims: (usize, usize, usize)) -> Result<()> {
+        if dims.0 < self.dims.0 || dims.1 < self.dims.1 || dims.2 < self.dims.2 {
+            bail!(
+                "observation set dims can only grow (have {:?}, asked to shrink to {:?})",
+                self.dims,
+                dims
+            );
+        }
+        self.dims = dims;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Merge a batch: one linear pass over both sorted runs. On a shared
+    /// coordinate the batch value replaces the stored one.
+    pub fn merge(&mut self, batch: &ObservationBatch) -> Result<()> {
+        if batch.dims() != self.dims {
+            bail!(
+                "observation batch dims {:?} do not match the stream dims {:?}",
+                batch.dims(),
+                self.dims
+            );
+        }
+        let new = batch.entries();
+        if new.is_empty() {
+            return Ok(());
+        }
+        let old = std::mem::take(&mut self.entries);
+        let mut out = Vec::with_capacity(old.len() + new.len());
+        let key = |e: &(u32, u32, u32, f64)| (e.2, e.1, e.0);
+        let (mut a, mut b) = (0usize, 0usize);
+        while a < old.len() && b < new.len() {
+            match key(&old[a]).cmp(&key(&new[b])) {
+                std::cmp::Ordering::Less => {
+                    out.push(old[a]);
+                    a += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push(new[b]);
+                    b += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    // Revisit: the new observation replaces the old value.
+                    out.push(new[b]);
+                    a += 1;
+                    b += 1;
+                }
+            }
+        }
+        out.extend_from_slice(&old[a..]);
+        out.extend_from_slice(&new[b..]);
+        self.entries = out;
+        Ok(())
+    }
+
+    /// Materialise the observed support as a COO tensor for the masked
+    /// kernels. Exact-zero observations are nudged to a subnormal-scale
+    /// value so the sparse backends (whose `push` drops exact zeros —
+    /// zero means *absent* there) keep the cell in the mask; the
+    /// perturbation is below any fit tolerance.
+    pub fn to_coo(&self) -> CooTensor {
+        let mut t =
+            CooTensor::with_capacity(self.dims.0, self.dims.1, self.dims.2, self.entries.len());
+        for &(i, j, k, v) in &self.entries {
+            let v = if v == 0.0 { f64::MIN_POSITIVE } else { v };
+            t.push(i as usize, j as usize, k as usize, v);
+        }
+        t
+    }
+
+    /// The accumulated entries, sorted by `(k, j, i)`, unique coordinates.
+    pub fn entries(&self) -> &[(u32, u32, u32, f64)] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_off_and_valid() {
+        let cfg = CompletionConfig::default();
+        assert!(!cfg.enabled);
+        cfg.validate().unwrap();
+        assert!(CompletionConfig::enabled().enabled);
+        CompletionConfig::enabled().validate().unwrap();
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_knobs() {
+        let mut cfg = CompletionConfig::enabled();
+        cfg.sweeps = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = CompletionConfig::enabled();
+        cfg.ridge = -1.0;
+        assert!(cfg.validate().is_err());
+        cfg.ridge = f64::NAN;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn batch_validates_ranges_and_values() {
+        let mut b = ObservationBatch::new((2, 3, 4));
+        b.push(1, 2, 3, 5.0).unwrap();
+        assert!(b.push(2, 0, 0, 1.0).is_err(), "i out of range");
+        assert!(b.push(0, 3, 0, 1.0).is_err(), "j out of range");
+        assert!(b.push(0, 0, 4, 1.0).is_err(), "k out of range");
+        assert!(b.push(0, 0, 0, f64::NAN).is_err(), "non-finite value");
+        assert!(ObservationBatch::from_entries((2, 2, 2), vec![(0, 0, 2, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn coalesce_is_last_write_wins_and_order_independent() {
+        // The same duplicate cell pushed in two different interleavings
+        // must resolve to the same batch: latest push wins.
+        let mut a = ObservationBatch::new((3, 3, 3));
+        a.push(1, 1, 1, 1.0).unwrap();
+        a.push(0, 2, 2, 7.0).unwrap();
+        a.push(1, 1, 1, 2.0).unwrap();
+        a.push(1, 1, 1, 3.0).unwrap();
+        a.coalesce();
+        assert_eq!(a.len(), 2);
+        let got: Vec<_> = a.iter().collect();
+        assert!(got.contains(&(1, 1, 1, 3.0)), "{got:?}");
+        assert!(got.contains(&(0, 2, 2, 7.0)));
+        // Zero observations survive coalescing — observed-as-zero is data.
+        let z = ObservationBatch::from_entries((2, 2, 2), vec![(0, 0, 0, 0.0)]).unwrap();
+        assert_eq!(z.len(), 1);
+    }
+
+    #[test]
+    fn set_merges_with_revisit_overwrite() {
+        let mut set = ObservationSet::new((4, 4, 4));
+        let b1 = ObservationBatch::from_entries(
+            (4, 4, 4),
+            vec![(0, 0, 0, 1.0), (1, 2, 3, 4.0), (2, 2, 2, -1.0)],
+        )
+        .unwrap();
+        set.merge(&b1).unwrap();
+        assert_eq!(set.len(), 3);
+        // Revisit (1,2,3) with a new value, add one fresh cell.
+        let b2 = ObservationBatch::from_entries((4, 4, 4), vec![(1, 2, 3, 9.0), (3, 3, 3, 2.0)])
+            .unwrap();
+        set.merge(&b2).unwrap();
+        assert_eq!(set.len(), 4, "revisit must overwrite, not duplicate");
+        let v = set
+            .entries()
+            .iter()
+            .find(|e| (e.0, e.1, e.2) == (1, 2, 3))
+            .unwrap()
+            .3;
+        assert_eq!(v, 9.0);
+        // Dim mismatch is rejected.
+        let bad = ObservationBatch::new((5, 4, 4));
+        assert!(set.merge(&bad).is_err());
+    }
+
+    #[test]
+    fn to_coo_keeps_zero_observations_in_the_mask() {
+        let mut set = ObservationSet::new((2, 2, 2));
+        let b = ObservationBatch::from_entries((2, 2, 2), vec![(0, 0, 0, 0.0), (1, 1, 1, 3.0)])
+            .unwrap();
+        set.merge(&b).unwrap();
+        let coo = set.to_coo();
+        assert_eq!(coo.nnz(), 2, "an observed zero must stay in the support");
+    }
+}

@@ -6,6 +6,7 @@ pub mod toml_min;
 
 pub use toml_min::{TomlDoc, TomlValue};
 
+use crate::completion::CompletionConfig;
 use crate::coordinator::{DriftConfig, EngineConfig, OcTenConfig, SamBaTenConfig};
 use crate::cp::AlsOptions;
 use crate::matching::MatchPolicy;
@@ -59,6 +60,14 @@ pub struct RunConfig {
     pub drift_retire_floor: f64,
     /// Rank ceiling for growth; `0` means "resolve to 2·rank at build".
     pub drift_max_rank: usize,
+    /// Accept sparse observation-batch ingest (online tensor completion —
+    /// see `completion`). Off by default: the slice path is bit-identical
+    /// with completion off.
+    pub completion: bool,
+    /// Masked ALS sweeps per observation batch.
+    pub completion_sweeps: usize,
+    /// Baseline ridge for the per-row masked normal equations.
+    pub completion_ridge: f64,
 }
 
 impl Default for RunConfig {
@@ -85,6 +94,9 @@ impl Default for RunConfig {
             drift_grow_bar: 0.2,
             drift_retire_floor: 0.05,
             drift_max_rank: 0,
+            completion: false,
+            completion_sweeps: CompletionConfig::default().sweeps,
+            completion_ridge: CompletionConfig::default().ridge,
         }
     }
 }
@@ -137,6 +149,13 @@ impl RunConfig {
                 "drift_max_rank" => {
                     cfg.drift_max_rank = value.as_usize().context("drift_max_rank")?
                 }
+                "completion" => cfg.completion = value.as_bool().context("completion")?,
+                "completion_sweeps" => {
+                    cfg.completion_sweeps = value.as_usize().context("completion_sweeps")?
+                }
+                "completion_ridge" => {
+                    cfg.completion_ridge = value.as_f64().context("completion_ridge")?
+                }
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
         }
@@ -183,7 +202,22 @@ impl RunConfig {
                 && (0.0..=1.0).contains(&self.drift_retire_floor),
             "drift_retire_floor must be in [0, 1]"
         );
+        self.completion_config().validate()?;
+        anyhow::ensure!(
+            !(self.completion && self.algorithm == "octen"),
+            "completion = true requires algorithm = \"sambaten\" (the octen engine has no \
+             observation-ingest path)"
+        );
         Ok(())
+    }
+
+    /// The completion knobs as a [`CompletionConfig`].
+    pub fn completion_config(&self) -> CompletionConfig {
+        CompletionConfig {
+            enabled: self.completion,
+            sweeps: self.completion_sweeps,
+            ridge: self.completion_ridge,
+        }
     }
 
     /// Build the engine configuration through the validating builder
@@ -212,6 +246,7 @@ impl RunConfig {
                 max_rank: self.drift_max_rank,
                 ..Default::default()
             })
+            .completion(self.completion_config())
             .build()
     }
 
@@ -333,6 +368,27 @@ als_tol = 1e-6
         assert!(RunConfig::from_toml_str("drift_window = 0\n").is_err());
         assert!(RunConfig::from_toml_str("drift_grow_bar = 1.5\n").is_err());
         assert!(RunConfig::from_toml_str("drift_retire_floor = -0.2\n").is_err());
+    }
+
+    #[test]
+    fn completion_knobs_parse_validate_and_thread_into_engine_config() {
+        let text = "rank = 3\ncompletion = true\ncompletion_sweeps = 5\n\
+                    completion_ridge = 1e-6\n";
+        let cfg = RunConfig::from_toml_str(text).unwrap();
+        assert!(cfg.completion);
+        let ec = cfg.to_engine_config().unwrap();
+        assert!(ec.completion().enabled);
+        assert_eq!(ec.completion().sweeps, 5);
+        assert!((ec.completion().ridge - 1e-6).abs() < 1e-18);
+        // Defaults keep completion off (slice path bit-identical).
+        let d = RunConfig::default();
+        assert!(!d.completion);
+        assert!(!d.to_engine_config().unwrap().completion().enabled);
+        // Nonsense knobs and the octen clash are rejected up front.
+        assert!(RunConfig::from_toml_str("completion_sweeps = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("completion_ridge = -1.0\n").is_err());
+        let clash = "completion = true\nalgorithm = \"octen\"\n";
+        assert!(RunConfig::from_toml_str(clash).is_err());
     }
 
     #[test]

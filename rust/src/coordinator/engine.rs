@@ -10,8 +10,11 @@ use super::engine_api::{
 use super::snapshot::StreamHandle;
 use super::solver::{InnerSolver, NativeAlsSolver};
 use super::update::{normalize_sample_model, project_sample_with, ProjectedUpdate};
+use crate::completion::{CompletionConfig, ObservationBatch, ObservationSet};
 use crate::corcondia::{getrank_with, GetRankOptions};
-use crate::cp::{cp_als, AlsOptions, AlsWorkspace, CpModel};
+use crate::cp::{
+    cp_als, init_factors, masked_fit, masked_sweep, AlsOptions, AlsWorkspace, CpModel, InitMethod,
+};
 use crate::matching::{match_components, MatchPolicy};
 use crate::pool::WorkPool;
 use crate::sampling::{draw_sample, Sample, SamplerConfig};
@@ -73,6 +76,12 @@ pub struct SamBaTenConfig {
     /// the fixed-rank behaviour; the window still bounds the batch-stats
     /// history either way.
     pub(crate) drift: DriftConfig,
+    /// Online tensor completion (see `crate::completion`). Disabled by
+    /// default: a stream that never ingests observations behaves — bit for
+    /// bit — as if this subsystem did not exist; enabling it only *allows*
+    /// [`SamBaTen::ingest_observations`], it changes nothing about the
+    /// append-only slice path.
+    pub(crate) completion: CompletionConfig,
     /// Optional shared executor: when set, the per-repetition sample-ALS
     /// fan-out runs on this [`WorkPool`] instead of spawning scoped
     /// threads, so intra-ingest and inter-stream parallelism share one
@@ -91,6 +100,7 @@ impl std::fmt::Debug for SamBaTenConfig {
             .field("repetitions", &self.repetitions)
             .field("quality_control", &self.quality_control)
             .field("adaptive_rank", &self.drift.enabled)
+            .field("completion", &self.completion.enabled)
             .field("csf_nnz_bar", &self.csf_nnz_bar)
             .field("executor", &self.executor.as_ref().map(|p| p.workers()))
             .field("solver", &self.solver.name())
@@ -127,6 +137,7 @@ impl SamBaTenConfig {
                 refine_c: true,
                 blend: 0.5,
                 drift: DriftConfig::default(),
+                completion: CompletionConfig::default(),
                 csf_nnz_bar: crate::tensor::CSF_PROMOTION_NNZ,
                 executor: None,
                 solver: Arc::new(NativeAlsSolver),
@@ -220,6 +231,12 @@ impl SamBaTenConfig {
     /// Whether drift-aware adaptive rank is on.
     pub fn adaptive_rank(&self) -> bool {
         self.drift.enabled
+    }
+
+    /// Online tensor-completion configuration (observation ingest is
+    /// rejected unless `completion.enabled`).
+    pub fn completion(&self) -> &CompletionConfig {
+        &self.completion
     }
 
     /// The shared fan-out executor, if one is attached.
@@ -329,6 +346,14 @@ impl SamBaTenConfigBuilder {
         self
     }
 
+    /// Online tensor-completion configuration (see [`CompletionConfig`]).
+    /// Off by default; enabling it allows observation-batch ingest on this
+    /// stream without touching the append-only slice path.
+    pub fn completion(mut self, completion: CompletionConfig) -> Self {
+        self.cfg.completion = completion;
+        self
+    }
+
     /// nnz bar (≥ 1) for COO→CSF promotion of the accumulated tensor and
     /// for CSF-native sample extraction. Defaults to
     /// [`crate::tensor::CSF_PROMOTION_NNZ`]; lower it for shapes whose
@@ -390,6 +415,7 @@ impl SamBaTenConfigBuilder {
             c.drift.retire_floor
         );
         anyhow::ensure!(c.drift.min_rank >= 1, "drift.min_rank must be >= 1 (got 0)");
+        c.completion.validate()?;
         if self.cfg.quality_control {
             self.cfg.getrank.max_rank = self.cfg.rank;
         }
@@ -444,6 +470,14 @@ pub struct BatchStats {
     /// republication such as a rank change). The delta-publication cost is
     /// `O(Σ touched_rows · R)` — see DESIGN.md §10.
     pub touched_rows: [usize; 3],
+    /// Mask-aware fit over the accumulated observation set
+    /// (`1 − ‖X − X̂‖_Ω/‖X‖_Ω` — see `crate::cp::masked_fit`). `Some` only
+    /// for observation-batch ingests; slice ingests report `None` and keep
+    /// `batch_fit` as the dense fit, so both signals coexist in mixed
+    /// streams (DESIGN.md §12).
+    pub masked_fit: Option<f64>,
+    /// Cell observations ingested by this batch (0 for slice batches).
+    pub observations: usize,
 }
 
 /// The incremental decomposition engine (Algorithm 1).
@@ -476,6 +510,12 @@ pub struct SamBaTen {
     /// publish-only-on-success) is shared with every other engine — see
     /// `coordinator::engine_api::SnapshotPublisher`.
     publisher: SnapshotPublisher,
+    /// Accumulated cell observations (the completion path's side state,
+    /// last-write-wins per coordinate). Kept *outside* `x`: the slice
+    /// history stays append-only and is never rewritten by observation
+    /// ingest, which is what keeps the slice path bit-identical whether or
+    /// not completion is enabled. Empty until the first observation batch.
+    obs: ObservationSet,
 }
 
 impl SamBaTen {
@@ -506,7 +546,8 @@ impl SamBaTen {
         let publisher = SnapshotPublisher::new(x.dims(), &model);
         let history = BoundedHistory::new(cfg.drift.window);
         let detector = DriftDetector::new(cfg.drift.clone(), model.rank());
-        SamBaTen { cfg, model, x, rng, history, epoch: 0, detector, ws_pool, publisher }
+        let obs = ObservationSet::new(x.dims());
+        SamBaTen { cfg, model, x, rng, history, epoch: 0, detector, ws_pool, publisher, obs }
     }
 
     /// Current model (unit-norm columns, weights in λ).
@@ -854,6 +895,96 @@ impl SamBaTen {
         Ok(stats)
     }
 
+    /// Ingest a batch of sparse cell observations (the online-completion
+    /// path — DESIGN.md §12). Rejected unless `cfg.completion.enabled`.
+    ///
+    /// Semantics: observations are *states*, not increments — a coordinate
+    /// seen again (in this batch or any earlier one) replaces its previous
+    /// value in the accumulated [`ObservationSet`]. The slice history `x`
+    /// is never touched; the masked sweeps run over the observation set
+    /// alone, warm-started from the current model. Same publication
+    /// contract as [`SamBaTen::ingest`]: on success the epoch advances by
+    /// exactly 1 and a fresh full snapshot is published (observation
+    /// batches can touch every factor row, so there is no delta to
+    /// exploit); on error nothing observable changes — the set merge is
+    /// deferred until after the solve succeeds.
+    pub fn ingest_observations(&mut self, batch: &ObservationBatch) -> Result<BatchStats> {
+        let sw = Stopwatch::started();
+        anyhow::ensure!(
+            self.cfg.completion.enabled,
+            "completion is disabled for this stream (build the engine with \
+             CompletionConfig::enabled to ingest observations)"
+        );
+        anyhow::ensure!(!batch.is_empty(), "empty observation batch");
+        let dims = self.x.dims();
+        anyhow::ensure!(
+            batch.dims() == dims,
+            "observation batch dims {:?} must match the stream dims {dims:?}",
+            batch.dims()
+        );
+        // Solve against a *candidate* set (current set + this batch) so a
+        // failed solve leaves the accumulated state untouched.
+        let mut candidate = self.obs.clone();
+        candidate.grow_to(dims)?;
+        candidate.merge(batch)?;
+        let obs_coo = TensorData::Sparse(candidate.to_coo());
+
+        let mut model = self.model.clone();
+        // Cold start: a stream bootstrapped on an (all-)zero tensor has
+        // every component dead (λ = 0) and masked sweeps cannot revive a
+        // rank-0-energy model from the 1e-12 reseed alone in few sweeps —
+        // reseed the factors randomly, deterministic under the engine RNG.
+        if model.lambda.iter().all(|&l| l <= 1e-10) {
+            let r = model.rank();
+            let [a, b, c] = init_factors(&obs_coo, r, InitMethod::Random, &mut self.rng);
+            model = CpModel::new(a, b, c, vec![1.0; r]);
+            model.normalize();
+        }
+        let t0 = std::time::Instant::now();
+        {
+            // Completion shares repetition 0's workspace: observation
+            // ingest is single-solver (no sampling fan-out), and slice and
+            // observation batches on one stream are serialised by `&mut`.
+            let mut ws = self.ws_pool[0].lock().unwrap_or_else(|e| e.into_inner());
+            for _ in 0..self.cfg.completion.sweeps {
+                masked_sweep(&obs_coo, &mut model, &mut ws, self.cfg.completion.ridge)?;
+            }
+        }
+        let phase_decompose_s = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(
+            model.is_finite(),
+            "masked sweeps produced non-finite factors (degenerate observation batch)"
+        );
+        let mfit = masked_fit(&obs_coo, &model);
+
+        // Commit: model, observation set, epoch, history, publication.
+        self.model = model;
+        self.obs = candidate;
+        let epoch = self.epoch + 1;
+        let stats = BatchStats {
+            seconds: sw.elapsed_secs(),
+            phase_decompose_s,
+            masked_fit: Some(mfit),
+            observations: batch.len(),
+            rank: self.model.rank(),
+            drift: self.detector.state().clone(),
+            // Observation batches may rewrite any factor row: publication
+            // is a full rebuild of every mode.
+            touched_rows: [dims.0, dims.1, dims.2],
+            ..Default::default()
+        };
+        self.epoch = epoch;
+        self.history.push(stats.clone());
+        self.publisher.publish(epoch, dims, &self.model, &stats, None);
+        Ok(stats)
+    }
+
+    /// The accumulated observation set (empty unless this stream ingested
+    /// observation batches).
+    pub fn observations(&self) -> &ObservationSet {
+        &self.obs
+    }
+
     /// Closed-form LS for the new `C` rows with `A`, `B` fixed:
     /// `Y = X_new(3)(B ⊙ Ã)[(ÃᵀÃ)∘(BᵀB)]⁻¹` with `Ã = A·diag(λ)`, written
     /// into the appended rows, followed by re-canonicalisation. Returns
@@ -941,6 +1072,9 @@ impl DecompositionEngine for SamBaTen {
     }
     fn ingest(&mut self, x_new: &TensorData) -> Result<BatchStats> {
         SamBaTen::ingest(self, x_new)
+    }
+    fn ingest_observations(&mut self, obs: &ObservationBatch) -> Result<BatchStats> {
+        SamBaTen::ingest_observations(self, obs)
     }
     fn handle(&self) -> StreamHandle {
         SamBaTen::handle(self)
@@ -1344,6 +1478,81 @@ mod tests {
         let (bad, _) = SyntheticSpec::dense(9, 8, 2, 2, 0.0, 10).generate();
         assert!(e.ingest(&bad).is_err());
         assert_eq!(handle.epoch(), 0, "a rejected batch must not advance the epoch");
+    }
+
+    #[test]
+    fn observation_ingest_requires_completion_enabled() {
+        let spec = SyntheticSpec::dense(8, 8, 8, 2, 0.0, 12);
+        let (x, _) = spec.generate();
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 5).build().unwrap();
+        let mut e = SamBaTen::init(&x, cfg).unwrap();
+        let handle = e.handle();
+        let mut b = ObservationBatch::new(e.tensor().dims());
+        b.push(0, 0, 0, 1.0).unwrap();
+        assert!(e.ingest_observations(&b).is_err(), "disabled stream must reject");
+        assert_eq!(handle.epoch(), 0, "rejected batch must not publish");
+        assert!(e.observations().is_empty());
+    }
+
+    #[test]
+    fn observation_ingest_publishes_and_tracks_masked_fit() {
+        let spec = SyntheticSpec::dense(8, 8, 8, 2, 0.0, 13);
+        let (x, _) = spec.generate();
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 5)
+            .completion(CompletionConfig::enabled())
+            .build()
+            .unwrap();
+        let mut e = SamBaTen::init(&x, cfg).unwrap();
+        let handle = e.handle();
+        // Observe a handful of true cells of the underlying tensor.
+        let dense = x.to_dense();
+        let mut b = ObservationBatch::new(e.tensor().dims());
+        for (i, j, k) in [(0, 0, 0), (1, 2, 3), (4, 4, 4), (7, 7, 7), (3, 5, 1)] {
+            b.push(i, j, k, dense.get(i, j, k)).unwrap();
+        }
+        let stats = e.ingest_observations(&b).unwrap();
+        assert_eq!(e.epoch(), 1);
+        assert_eq!(stats.observations, 5);
+        assert_eq!(stats.k_new, 0, "observations append no slices");
+        let mfit = stats.masked_fit.expect("observation ingest reports masked fit");
+        assert!(mfit.is_finite());
+        assert_eq!(e.observations().len(), 5);
+        // The snapshot carries the same stats (masked fit rides along).
+        let snap = handle.snapshot();
+        assert_eq!(snap.epoch, 1);
+        assert_eq!(snap.stats.as_ref().unwrap().masked_fit, Some(mfit));
+        assert_eq!(snap.dims, e.tensor().dims(), "observations never grow the tensor");
+        // A revisit overwrites rather than duplicates.
+        let mut b2 = ObservationBatch::new(e.tensor().dims());
+        b2.push(0, 0, 0, 2.5).unwrap();
+        e.ingest_observations(&b2).unwrap();
+        assert_eq!(e.observations().len(), 5, "revisit must not duplicate");
+        assert_eq!(e.epoch(), 2);
+    }
+
+    #[test]
+    fn slice_and_observation_ingest_interleave_on_one_stream() {
+        let spec = SyntheticSpec::dense(8, 8, 12, 2, 0.0, 14);
+        let (existing, batches, _) = spec.generate_stream(0.5, 3);
+        let cfg = SamBaTenConfig::builder(2, 2, 2, 5)
+            .completion(CompletionConfig::enabled())
+            .build()
+            .unwrap();
+        let mut e = SamBaTen::init(&existing, cfg).unwrap();
+        e.ingest(&batches[0]).unwrap();
+        let dims = e.tensor().dims();
+        let mut b = ObservationBatch::new(dims);
+        // Address a slice appended by the slice batch — the observation
+        // set tracks the grown mode-3 extent.
+        b.push(1, 1, dims.2 - 1, 0.5).unwrap();
+        let stats = e.ingest_observations(&b).unwrap();
+        assert!(stats.masked_fit.is_some());
+        // Slice ingest still works afterwards, and reports no masked fit.
+        let stats = e.ingest(&batches[1]).unwrap();
+        assert_eq!(stats.masked_fit, None);
+        assert_eq!(stats.observations, 0);
+        assert_eq!(e.epoch(), 3);
+        assert_eq!(e.model().factors[2].rows(), e.tensor().dims().2);
     }
 
     #[test]

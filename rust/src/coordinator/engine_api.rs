@@ -20,6 +20,7 @@ use super::drift::DriftState;
 use super::engine::{BatchStats, SamBaTen, SamBaTenConfig};
 use super::octen::{OcTen, OcTenConfig};
 use super::snapshot::{ModelSnapshot, SnapshotCell, StreamHandle};
+use crate::completion::ObservationBatch;
 use crate::cp::CpModel;
 use crate::pool::WorkPool;
 use crate::tensor::{Tensor3, TensorData};
@@ -41,6 +42,18 @@ pub trait DecompositionEngine: Send {
     /// advances by exactly 1 and a fresh snapshot is published; on error
     /// nothing observable changes.
     fn ingest(&mut self, x_new: &TensorData) -> Result<BatchStats>;
+
+    /// Ingest one batch of sparse cell observations (the tensor-completion
+    /// path — see `crate::completion`). Observations are *states*, not
+    /// increments: a coordinate seen again replaces its previous value.
+    /// Same publication contract as [`DecompositionEngine::ingest`]: on
+    /// success the epoch advances by exactly 1 and a fresh snapshot is
+    /// published; on error nothing observable changes. Engines that do not
+    /// support completion reject every batch (the default).
+    fn ingest_observations(&mut self, obs: &ObservationBatch) -> Result<BatchStats> {
+        let _ = obs;
+        anyhow::bail!("engine '{}' does not support observation ingest", self.name())
+    }
 
     /// A cheap `Clone + Send + Sync` reader over this engine's published
     /// snapshots (the wait-free read path — see `coordinator::snapshot`).

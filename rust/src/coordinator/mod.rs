@@ -15,8 +15,10 @@
 //! Quality control (§III-B) runs GETRANK on each summary and matches only
 //! the `R_new ≤ R` components that are actually present.
 //!
-//! The public API is split into a **write path** (`SamBaTen::ingest`,
-//! `&mut self`) and a **wait-free read path** ([`snapshot`]): every ingest
+//! The public API is split into a **write path** (`SamBaTen::ingest` for
+//! appended slices, `SamBaTen::ingest_observations` for sparse cell
+//! observations when completion is enabled — see [`crate::completion`];
+//! both `&mut self`) and a **wait-free read path** ([`snapshot`]): every ingest
 //! publishes an immutable epoch-stamped [`ModelSnapshot`], and cheap
 //! [`StreamHandle`] readers query it — `snapshot()`, `entry`, `fit`,
 //! `top_k` — without ever contending with the writer. The multi-stream

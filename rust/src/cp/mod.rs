@@ -4,10 +4,12 @@
 
 pub mod als;
 pub mod init;
+pub mod masked;
 pub mod model;
 pub mod workspace;
 
 pub use als::{cp_als, cp_als_from, cp_als_from_with, cp_als_with, AlsOptions, AlsReport};
 pub use init::{init_factors, InitMethod};
+pub use masked::{masked_cp_als, masked_fit, masked_sweep, MaskedAlsOptions};
 pub use model::CpModel;
 pub use workspace::AlsWorkspace;

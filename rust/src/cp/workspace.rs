@@ -30,6 +30,11 @@ pub struct AlsWorkspace {
     pub(crate) gram_had: Matrix,
     /// Cholesky factor + ridge scratch for the gram solves.
     pub(crate) solve: GramSolveScratch,
+    /// Per-row masked Gram stack for completion sweeps: `(dim_mode · R) × R`,
+    /// block `d` occupying rows `d·R .. (d+1)·R`. Sized lazily by
+    /// [`AlsWorkspace::reserve_masked`] so append-only (fully-observed)
+    /// callers never pay for it.
+    pub(crate) masked_grams: Matrix,
     allocs: usize,
 }
 
@@ -51,6 +56,16 @@ impl AlsWorkspace {
             self.allocs += usize::from(g.ensure_shape(rank, rank));
         }
         self.allocs += usize::from(self.gram_had.ensure_shape(rank, rank));
+    }
+
+    /// Grow the per-row masked Gram stack to cover the *largest* mode of a
+    /// `(dims, rank)` masked sweep. One stack is shared across modes: the
+    /// sweep reshapes it to `dim_mode·R × R` per mode, which after this call
+    /// never reallocates (`ensure_shape` shrinks in place). Separate from
+    /// [`AlsWorkspace::reserve`] because only completion ingest needs it.
+    pub fn reserve_masked(&mut self, dims: (usize, usize, usize), rank: usize) {
+        let widest = dims.0.max(dims.1).max(dims.2);
+        self.allocs += usize::from(self.masked_grams.ensure_shape(widest * rank, rank));
     }
 
     /// Buffer allocations/growths since creation (including the gram-solve

@@ -1,0 +1,212 @@
+//! Observation-stream workloads for the completion subsystem (DESIGN.md
+//! §12): a ground-truth low-rank tensor observed cell by cell, delivered
+//! as a schedule of [`ObservationBatch`]es with density, revisit and
+//! noise knobs. The truth model is generated exactly like
+//! [`super::SyntheticSpec`] (non-negative uniform factors, unit weights)
+//! so completion results are comparable with the slice-stream evals.
+
+use crate::completion::ObservationBatch;
+use crate::cp::CpModel;
+use crate::linalg::Matrix;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Specification of a completion workload.
+#[derive(Clone, Debug)]
+pub struct CompletionSpec {
+    pub i: usize,
+    pub j: usize,
+    pub k: usize,
+    /// Ground-truth CP rank.
+    pub rank: usize,
+    /// Fraction of the `I·J·K` cells observed across the whole schedule
+    /// (distinct cells; revisits come on top).
+    pub density: f64,
+    /// Fraction of each batch after the first that *revisits* cells
+    /// observed in earlier batches — a fresh noisy measurement of the
+    /// same cell, exercising the last-write-wins merge.
+    pub revisit: f64,
+    /// Additive i.i.d. Gaussian noise std, relative to the data RMS,
+    /// applied per observation (a revisit re-draws the noise).
+    pub noise: f64,
+    /// Number of observation batches the schedule is split into.
+    pub batches: usize,
+    pub seed: u64,
+}
+
+impl CompletionSpec {
+    /// A cube workload — the completion analogue of
+    /// [`super::SyntheticSpec::cube`].
+    pub fn cube(dim: usize, rank: usize, density: f64, seed: u64) -> Self {
+        CompletionSpec {
+            i: dim,
+            j: dim,
+            k: dim,
+            rank,
+            density,
+            revisit: 0.0,
+            noise: 0.0,
+            batches: 4,
+            seed,
+        }
+    }
+
+    pub fn with_revisit(mut self, revisit: f64) -> Self {
+        self.revisit = revisit;
+        self
+    }
+
+    pub fn with_noise(mut self, noise: f64) -> Self {
+        self.noise = noise;
+        self
+    }
+
+    pub fn with_batches(mut self, batches: usize) -> Self {
+        self.batches = batches;
+        self
+    }
+
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.i >= 1 && self.j >= 1 && self.k >= 1 && self.rank >= 1,
+            "completion spec needs positive dims and rank"
+        );
+        anyhow::ensure!(
+            self.density > 0.0 && self.density <= 1.0,
+            "observation density {} must be in (0, 1]",
+            self.density
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.revisit),
+            "revisit fraction {} must be in [0, 1)",
+            self.revisit
+        );
+        anyhow::ensure!(self.batches >= 1, "schedule needs at least one batch");
+        Ok(())
+    }
+
+    /// Generate `(observation_schedule, ground_truth_model)`.
+    ///
+    /// The distinct observed support is a uniform sample of
+    /// `density · I·J·K` cells, split evenly across the batches in
+    /// arrival order; each batch after the first additionally carries
+    /// `revisit · batch_len` re-measurements of cells from earlier
+    /// batches. Every batch addresses the full `(I, J, K)` dims.
+    pub fn generate(&self) -> Result<(Vec<ObservationBatch>, CpModel)> {
+        self.validate()?;
+        let mut rng = Rng::new(self.seed);
+        let truth = CpModel::new(
+            Matrix::rand_uniform(self.i, self.rank, &mut rng),
+            Matrix::rand_uniform(self.j, self.rank, &mut rng),
+            Matrix::rand_uniform(self.k, self.rank, &mut rng),
+            vec![1.0; self.rank],
+        );
+        let clean = truth.to_dense();
+        let total = self.i * self.j * self.k;
+        let rms = (clean.norm_sq() / total as f64).sqrt();
+        let sigma = self.noise * rms;
+
+        let observed = ((total as f64 * self.density).round() as usize).clamp(1, total);
+        let support = rng.sample_indices(total, observed);
+        let cell = |e: usize| (e % self.i, (e / self.i) % self.j, e / (self.i * self.j));
+        let mut observe = |rng: &mut Rng, batch: &mut ObservationBatch, e: usize| -> Result<()> {
+            let (ci, cj, ck) = cell(e);
+            let mut v = clean.get(ci, cj, ck);
+            if sigma > 0.0 {
+                v += sigma * rng.gaussian();
+            }
+            batch.push(ci, cj, ck, v)
+        };
+
+        let dims = (self.i, self.j, self.k);
+        let mut out = Vec::with_capacity(self.batches);
+        let per_batch = observed.div_ceil(self.batches);
+        let mut seen = 0usize; // prefix of `support` delivered so far
+        for chunk in support.chunks(per_batch) {
+            let mut batch = ObservationBatch::new(dims);
+            if seen > 0 && self.revisit > 0.0 {
+                let revisits = (chunk.len() as f64 * self.revisit).round() as usize;
+                for _ in 0..revisits {
+                    let e = support[rng.below(seen)];
+                    observe(&mut rng, &mut batch, e)?;
+                }
+            }
+            for &e in chunk {
+                observe(&mut rng, &mut batch, e)?;
+            }
+            seen += chunk.len();
+            out.push(batch);
+        }
+        Ok((out, truth))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn unique_cells(batches: &[ObservationBatch]) -> HashSet<(u32, u32, u32)> {
+        batches.iter().flat_map(|b| b.entries().iter().map(|&(i, j, k, _)| (i, j, k))).collect()
+    }
+
+    #[test]
+    fn schedule_covers_the_requested_density() {
+        let spec = CompletionSpec::cube(10, 2, 0.3, 7).with_batches(5);
+        let (batches, _) = spec.generate().unwrap();
+        assert_eq!(batches.len(), 5);
+        assert_eq!(unique_cells(&batches).len(), 300);
+        assert!(batches.iter().all(|b| b.dims() == (10, 10, 10)));
+    }
+
+    #[test]
+    fn noiseless_observations_match_the_truth_model() {
+        let spec = CompletionSpec::cube(6, 3, 0.5, 11);
+        let (batches, truth) = spec.generate().unwrap();
+        for b in &batches {
+            for (i, j, k, v) in b.iter() {
+                assert!((v - truth.entry(i, j, k)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn revisits_remeasure_previously_seen_cells_only() {
+        let spec = CompletionSpec::cube(8, 2, 0.2, 3).with_revisit(0.5).with_batches(4);
+        let (batches, _) = spec.generate().unwrap();
+        let base = CompletionSpec::cube(8, 2, 0.2, 3).with_batches(4);
+        let (plain, _) = base.generate().unwrap();
+        // Revisits add observations but no new support.
+        let with_rv: usize = batches.iter().map(|b| b.len()).sum();
+        let without: usize = plain.iter().map(|b| b.len()).sum();
+        assert!(with_rv > without, "revisit schedule must carry extra measurements");
+        assert_eq!(unique_cells(&batches).len(), unique_cells(&plain).len());
+        // Every revisited cell in batch n appeared in batches 0..n.
+        let mut seen: HashSet<(u32, u32, u32)> = HashSet::new();
+        for b in &batches {
+            let cells: Vec<_> = b.entries().iter().map(|&(i, j, k, _)| (i, j, k)).collect();
+            let fresh: HashSet<_> = cells.iter().filter(|c| !seen.contains(*c)).collect();
+            assert!(!fresh.is_empty(), "each batch must deliver new support");
+            seen.extend(cells);
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = CompletionSpec::cube(7, 2, 0.4, 21).with_revisit(0.3).with_noise(0.05);
+        let (a, _) = spec.generate().unwrap();
+        let (b, _) = spec.generate().unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.entries(), y.entries());
+        }
+    }
+
+    #[test]
+    fn nonsense_specs_are_rejected() {
+        assert!(CompletionSpec::cube(6, 2, 0.0, 1).generate().is_err());
+        assert!(CompletionSpec::cube(6, 2, 1.5, 1).generate().is_err());
+        assert!(CompletionSpec::cube(6, 2, 0.5, 1).with_revisit(1.0).generate().is_err());
+        assert!(CompletionSpec::cube(6, 2, 0.5, 1).with_batches(0).generate().is_err());
+    }
+}

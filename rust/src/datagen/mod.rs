@@ -4,10 +4,12 @@
 //! argument — the original FROSTT files are tens of GB and gated on
 //! bandwidth; `io::tns` loads the real files when present).
 
+pub mod completion;
 pub mod drift;
 pub mod real_sim;
 pub mod synthetic;
 
+pub use completion::CompletionSpec;
 pub use drift::{DriftComponent, DriftSpec};
 pub use real_sim::{RealDatasetSim, REAL_DATASETS};
 pub use synthetic::SyntheticSpec;

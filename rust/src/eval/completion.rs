@@ -1,0 +1,115 @@
+//! Completion eval (`sambaten eval completion`): the online masked-ingest
+//! path against an offline masked-ALS oracle over a density × revisit
+//! grid (DESIGN.md §12). The oracle sees the *merged* observation set up
+//! front and iterates to convergence; the online engine sees the same
+//! observations batch by batch with a fixed sweep budget, so the ratio
+//! of masked fits is the cost of being incremental.
+
+use super::runner::EvalContext;
+use crate::completion::{CompletionConfig, ObservationSet};
+use crate::coordinator::{EngineConfig, SamBaTenConfig};
+use crate::cp::{masked_cp_als, masked_fit, MaskedAlsOptions};
+use crate::datagen::CompletionSpec;
+use crate::io::csv::{num, CsvWriter};
+use crate::tensor::{CooTensor, TensorData};
+use crate::util::Stopwatch;
+use anyhow::Result;
+
+struct CompletionRun {
+    online_fit: f64,
+    oracle_fit: f64,
+    seconds: f64,
+}
+
+fn run_once(spec: &CompletionSpec, rank: usize) -> Result<CompletionRun> {
+    let (batches, _truth) = spec.generate()?;
+    let dims = (spec.i, spec.j, spec.k);
+
+    // Offline oracle: every observation at once, iterated to convergence.
+    let mut all = ObservationSet::new(dims);
+    for b in &batches {
+        all.merge(b)?;
+    }
+    let obs_coo = TensorData::Sparse(all.to_coo());
+    let opts = MaskedAlsOptions { seed: spec.seed ^ 0x0BAC_1E, ..Default::default() };
+    let (oracle, _) = masked_cp_als(&obs_coo, rank, &opts)?;
+    let oracle_fit = masked_fit(&obs_coo, &oracle);
+
+    // Online engine: a completion-enabled stream bootstrapped on an
+    // all-zero tensor of the full dims, fed batch by batch.
+    let zero = TensorData::Sparse(CooTensor::new(spec.i, spec.j, spec.k));
+    let cfg: EngineConfig = SamBaTenConfig::builder(rank, 2, 2, spec.seed)
+        .completion(CompletionConfig::enabled())
+        .build()?
+        .into();
+    let mut engine = cfg.init(&zero)?;
+    let sw = Stopwatch::started();
+    let mut online_fit = 0.0;
+    for b in &batches {
+        let stats = engine.ingest_observations(b)?;
+        online_fit = stats.masked_fit.unwrap_or(0.0);
+    }
+    Ok(CompletionRun { online_fit, oracle_fit, seconds: sw.elapsed_secs() })
+}
+
+/// The density × revisit grid. Low density (1%) is the regime the
+/// subsystem exists for; the revisit column exercises the last-write-wins
+/// merge under re-measurement.
+pub fn completion(ctx: &EvalContext) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        &ctx.csv_path("completion.csv"),
+        &["density", "revisit", "online_fit", "oracle_fit", "ratio", "seconds"],
+    )?;
+    println!("Completion: online masked ingest vs offline masked-ALS oracle");
+    let dim = ctx.dim(16);
+    let rank = 3;
+    for density in [0.01f64, 0.1, 0.3] {
+        for revisit in [0.0f64, 0.3] {
+            let spec = CompletionSpec {
+                i: dim,
+                j: dim,
+                k: dim,
+                rank,
+                density,
+                revisit,
+                noise: 0.02,
+                batches: 4,
+                seed: 101,
+            };
+            let run = run_once(&spec, rank)?;
+            let ratio = if run.oracle_fit > 0.0 { run.online_fit / run.oracle_fit } else { 1.0 };
+            println!(
+                "  density {density:>5.2} revisit {revisit:.1}: online {:.4} oracle {:.4} \
+                 ratio {ratio:.3} ({:.2}s)",
+                run.online_fit, run.oracle_fit, run.seconds
+            );
+            csv.row(&[
+                num(density),
+                num(revisit),
+                num(run.online_fit),
+                num(run.oracle_fit),
+                num(ratio),
+                num(run.seconds),
+            ])?;
+        }
+    }
+    csv.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_tracks_the_oracle_on_a_small_grid() {
+        let spec = CompletionSpec::cube(8, 2, 0.3, 5).with_batches(3);
+        let run = run_once(&spec, 2).unwrap();
+        assert!(run.oracle_fit > 0.9, "oracle fit {}", run.oracle_fit);
+        assert!(
+            run.online_fit > 0.5 * run.oracle_fit,
+            "online {} vs oracle {}",
+            run.online_fit,
+            run.oracle_fit
+        );
+    }
+}

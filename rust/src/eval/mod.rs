@@ -7,6 +7,7 @@
 //! the comparison shape (who wins, by what factor, who exceeds budget —
 //! budget overruns reproduce the paper's "N/A" cells).
 
+pub mod completion;
 pub mod quality;
 pub mod real;
 pub mod runner;
@@ -35,6 +36,8 @@ pub fn run_experiment(id: &str, ctx: &EvalContext) -> Result<()> {
         "fig10" => sweeps::fig10(ctx),
         "fig11" => sweeps::fig11(ctx),
         "octen_sweep" => sweeps::octen_sweep(ctx),
+        "drift_sweep" => sweeps::drift_sweep(ctx),
+        "completion" => completion::completion(ctx),
         "all" => {
             for id in EXPERIMENTS {
                 println!("\n=== {id} ===");
@@ -50,8 +53,10 @@ pub fn run_experiment(id: &str, ctx: &EvalContext) -> Result<()> {
 }
 
 /// All experiment ids: the paper's tables/figures in paper order, then
-/// the repo's own extensions (`octen_sweep`: replicas × compression).
+/// the repo's own extensions (`octen_sweep`: replicas × compression;
+/// `drift_sweep`: adaptive-rank thresholds; `completion`: online masked
+/// ingest vs the offline oracle).
 pub const EXPERIMENTS: &[&str] = &[
     "table2", "table4", "table5", "table6", "table7", "table8", "fig1", "fig5", "fig6", "fig7",
-    "fig8", "fig9", "fig10", "fig11", "octen_sweep",
+    "fig8", "fig9", "fig10", "fig11", "octen_sweep", "drift_sweep", "completion",
 ];

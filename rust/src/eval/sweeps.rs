@@ -1,11 +1,13 @@
 //! Parameter sweeps: Figure 9 (sampling factor s), Figure 10 (repetition
-//! factor r), Figure 11 (joint r × s on the NIPS sim), and the OCTen
-//! engine's analogue — replicas p × compression rate on the real sims.
+//! factor r), Figure 11 (joint r × s on the NIPS sim), the OCTen
+//! engine's analogue — replicas p × compression rate on the real sims —
+//! and the adaptive-rank controller's grow_bar × retire_floor grid on
+//! drifting streams (`drift_sweep`).
 
 use super::runner::EvalContext;
-use crate::coordinator::{EngineConfig, OcTenConfig, SamBaTenConfig};
+use crate::coordinator::{DriftConfig, DriftState, EngineConfig, OcTenConfig, SamBaTenConfig};
 use crate::cp::CpModel;
-use crate::datagen::{RealDatasetSim, SyntheticSpec};
+use crate::datagen::{DriftSpec, RealDatasetSim, SyntheticSpec};
 use crate::io::csv::{num, CsvWriter};
 use crate::metrics::{fms, relative_error, relative_fitness};
 use crate::tensor::TensorData;
@@ -232,6 +234,76 @@ pub fn octen_sweep(ctx: &EvalContext) -> Result<()> {
                     num(run.rel_err),
                     num(run.fitness_vs_cpals),
                     num(run.fms),
+                ])?;
+            }
+        }
+    }
+    csv.flush()
+}
+
+/// Drift-threshold sweep: grow_bar × retire_floor on injection and death
+/// streams. The grid makes the two failure modes of the adaptive-rank
+/// controller visible — a grow bar set too low over-grows on noise, a
+/// retire floor set too high kills live components — next to the final
+/// rank the controller actually settled on (ground truth: injection ends
+/// at rank 3, death at rank 2).
+pub fn drift_sweep(ctx: &EvalContext) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        &ctx.csv_path("drift_sweep.csv"),
+        &["workload", "grow_bar", "retire_floor", "final_rank", "drift_state", "rel_err",
+          "seconds"],
+    )?;
+    println!("Drift sweep: grow_bar × retire_floor on injection/death streams");
+    let dim = ctx.dim(12);
+    let workloads = [
+        ("injection", DriftSpec::injection(dim, dim, 24, 2, 10, 0.02, 91), 2usize),
+        ("death", DriftSpec::death(dim, dim, 24, 3, 10, 0.02, 93), 3usize),
+    ];
+    for (name, spec, rank0) in workloads {
+        let (existing, batches, _truth) = spec.stream(6, 2);
+        let mut full = existing.clone();
+        for b in &batches {
+            full.append_mode3(b);
+        }
+        for grow_bar in [0.1f64, 0.2, 0.4] {
+            for retire_floor in [0.02f64, 0.05, 0.1] {
+                let drift = DriftConfig {
+                    enabled: true,
+                    window: 3,
+                    grow_bar,
+                    retire_floor,
+                    ..Default::default()
+                };
+                let cfg: EngineConfig =
+                    SamBaTenConfig::builder(rank0, 2, 2, 17).drift(drift).build()?.into();
+                let mut engine = cfg.init(&existing)?;
+                let sw = Stopwatch::started();
+                let mut last = None;
+                for b in &batches {
+                    last = Some(engine.ingest(b)?);
+                }
+                let seconds = sw.elapsed_secs();
+                let stats = last.expect("drift streams carry at least one batch");
+                let rel_err = relative_error(&full, engine.model());
+                let state = match &stats.drift {
+                    DriftState::Stable => "stable".to_string(),
+                    DriftState::DriftSuspected { .. } => "suspected".to_string(),
+                    DriftState::RankGrown { rank, .. } => format!("grown:{rank}"),
+                    DriftState::ComponentRetired { rank, .. } => format!("retired:{rank}"),
+                };
+                println!(
+                    "  {name} grow_bar={grow_bar:.2} retire_floor={retire_floor:.2}: \
+                     rank {} ({state}) rel_err {rel_err:.3} ({seconds:.2}s)",
+                    stats.rank
+                );
+                csv.row(&[
+                    name.into(),
+                    num(grow_bar),
+                    num(retire_floor),
+                    stats.rank.to_string(),
+                    state,
+                    num(rel_err),
+                    num(seconds),
                 ])?;
             }
         }

@@ -16,14 +16,17 @@
 //!   [`coordinator::StreamHandle`] readers over a write path that
 //!   publishes epoch-stamped snapshots, multiplexed onto the pool), the
 //!   sharded cluster layer ([`cluster`] — consistent-hash placement, a
-//!   versioned binary wire format, delta-replicated read snapshots) and
-//!   the evaluation harness ([`eval`]).
+//!   versioned binary wire format, delta-replicated read snapshots), the
+//!   online tensor-completion subsystem ([`completion`] — masked
+//!   observation ingest and mask-aware least squares) and the evaluation
+//!   harness ([`eval`]).
 //! * **Layer 2/1 (build-time Python)** — a JAX ALS sweep calling a Pallas
 //!   MTTKRP kernel, AOT-lowered to HLO text and executed from Rust through
 //!   the PJRT runtime wrapper ([`runtime`]).
 
 pub mod baselines;
 pub mod cluster;
+pub mod completion;
 pub mod config;
 pub mod coordinator;
 pub mod corcondia;

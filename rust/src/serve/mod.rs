@@ -23,7 +23,10 @@
 //!   memory never grows unboundedly.
 //! * [`DecompositionService::ingest`] — hands a batch to a stream and
 //!   returns a [`Ticket`] immediately; `Ticket::wait` joins the batch's
-//!   [`BatchStats`] (or its error). A ticket can **never hang**: a batch
+//!   [`BatchStats`] (or its error).
+//!   [`DecompositionService::ingest_observations`] submits sparse cell
+//!   observations (the tensor-completion path, `crate::completion`)
+//!   through the identical queue/ticket machinery. A ticket can **never hang**: a batch
 //!   accepted before `remove`/`shutdown` is drained and resolves, a
 //!   submission racing them fails with an error, and a panicking ingest
 //!   fails its own ticket while the pool, the other streams — and in pool
@@ -45,6 +48,7 @@
 //! All registry methods take `&self`; wrap the service in an `Arc` to
 //! share it across producer threads.
 
+use crate::completion::ObservationBatch;
 use crate::coordinator::{
     BatchStats, DecompositionEngine, DriftState, EngineConfig, ModelSnapshot, StreamHandle,
 };
@@ -178,8 +182,28 @@ impl StatsInner {
     }
 }
 
+/// What a queued job applies to its stream's engine: appended mode-3
+/// slices (the classic path) or sparse cell observations (the completion
+/// path — rejected by engines whose stream was not configured for it).
+/// Both shapes share the queue, backpressure bound, ticket, stats and
+/// poisoning machinery — a stream's slice and observation batches stay
+/// FIFO-ordered relative to each other.
+enum Payload {
+    Slices(TensorData),
+    Observations(ObservationBatch),
+}
+
+impl Payload {
+    fn apply(&self, engine: &mut dyn DecompositionEngine) -> Result<BatchStats> {
+        match self {
+            Payload::Slices(batch) => engine.ingest(batch),
+            Payload::Observations(obs) => engine.ingest_observations(obs),
+        }
+    }
+}
+
 struct Job {
-    batch: TensorData,
+    payload: Payload,
     done: mpsc::Sender<Result<BatchStats>>,
 }
 
@@ -430,6 +454,21 @@ impl DecompositionService {
     /// producing a ticket that would hang) when the stream is unknown, was
     /// removed, is shutting down, or was poisoned by a panicked ingest.
     pub fn ingest(&self, name: &str, batch: TensorData) -> Result<Ticket> {
+        self.submit_payload(name, Payload::Slices(batch))
+    }
+
+    /// Submit a batch of sparse cell observations to a stream (the
+    /// tensor-completion path — see `crate::completion`). Identical
+    /// contract to [`DecompositionService::ingest`]: same bounded queue,
+    /// same backpressure, same [`Ticket`], FIFO-ordered with any slice
+    /// batches on the same stream. The engine rejects the batch (failing
+    /// the ticket, not the stream) when its stream was not registered with
+    /// completion enabled.
+    pub fn ingest_observations(&self, name: &str, batch: ObservationBatch) -> Result<Ticket> {
+        self.submit_payload(name, Payload::Observations(batch))
+    }
+
+    fn submit_payload(&self, name: &str, payload: Payload) -> Result<Ticket> {
         enum Submit {
             Dedicated(mpsc::SyncSender<Job>),
             Pooled(KeyHandle, Arc<Mutex<Box<dyn DecompositionEngine>>>, Arc<AtomicBool>),
@@ -452,7 +491,7 @@ impl DecompositionService {
         stats.queued.fetch_add(1, Ordering::SeqCst);
         match submit {
             Submit::Dedicated(tx) => {
-                if tx.send(Job { batch, done: done_tx }).is_err() {
+                if tx.send(Job { payload, done: done_tx }).is_err() {
                     stats.queued.fetch_sub(1, Ordering::SeqCst);
                     anyhow::bail!("stream {name:?} worker has shut down");
                 }
@@ -468,7 +507,7 @@ impl DecompositionService {
                 let job_stats = stats.clone();
                 let job_name = name.to_string();
                 let submitted = key.submit(move || {
-                    run_pooled_ingest(&job_name, &engine, &poisoned, &batch, &job_stats, done_tx)
+                    run_pooled_ingest(&job_name, &engine, &poisoned, &payload, &job_stats, done_tx)
                 });
                 if let Err(e) = submitted {
                     stats.queued.fetch_sub(1, Ordering::SeqCst);
@@ -650,7 +689,7 @@ fn run_pooled_ingest(
     name: &str,
     engine: &Mutex<Box<dyn DecompositionEngine>>,
     poisoned: &AtomicBool,
-    batch: &TensorData,
+    payload: &Payload,
     stats: &StatsInner,
     done: mpsc::Sender<Result<BatchStats>>,
 ) {
@@ -660,7 +699,7 @@ fn run_pooled_ingest(
         let t0 = std::time::Instant::now();
         let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
             let mut eng = engine.lock().unwrap_or_else(|e| e.into_inner());
-            eng.ingest(batch)
+            payload.apply(eng.as_mut())
         }));
         stats.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::SeqCst);
         match outcome {
@@ -691,7 +730,7 @@ fn dedicated_worker_loop(
 ) {
     while let Ok(job) = rx.recv() {
         let t0 = std::time::Instant::now();
-        let result = engine.ingest(&job.batch);
+        let result = job.payload.apply(engine.as_mut());
         stats.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::SeqCst);
         stats.record(&result);
         stats.queued.fetch_sub(1, Ordering::SeqCst);
@@ -789,6 +828,45 @@ mod tests {
                 t.wait().unwrap();
             }
             assert_eq!(handle.epoch(), batches.len() as u64);
+        }
+    }
+
+    #[test]
+    fn observation_batches_flow_through_the_same_ticket_path() {
+        use crate::completion::{CompletionConfig, ObservationBatch};
+        for svc in both_modes() {
+            let (existing, batches) = small_stream(31);
+            let completing = SamBaTenConfig::builder(2, 2, 2, 19)
+                .completion(CompletionConfig::enabled())
+                .build()
+                .unwrap();
+            let handle = svc.register("obs", &existing, completing).unwrap();
+            svc.register("plain", &existing, cfg(20)).unwrap();
+            // Mixed traffic on one stream: slices then observations, FIFO.
+            let k_new = batches[0].dims().2;
+            let t1 = svc.ingest("obs", batches[0].clone()).unwrap();
+            let dims = (existing.dims().0, existing.dims().1, existing.dims().2 + k_new);
+            let mut ob = ObservationBatch::new(dims);
+            ob.push(0, 0, 0, 1.5).unwrap();
+            ob.push(1, 1, dims.2 - 1, -0.5).unwrap();
+            let t2 = svc.ingest_observations("obs", ob).unwrap();
+            assert_eq!(t1.wait().unwrap().k_new, k_new);
+            let stats = t2.wait().unwrap();
+            assert_eq!(stats.observations, 2);
+            assert!(stats.masked_fit.is_some());
+            assert_eq!(handle.epoch(), 2);
+            let st = svc.stats("obs").unwrap();
+            assert_eq!((st.batches, st.errors), (2, 0));
+            // A stream without completion enabled fails the ticket — not
+            // the stream: it keeps serving slice batches afterwards.
+            let mut bad = ObservationBatch::new(existing.dims());
+            bad.push(0, 0, 0, 1.0).unwrap();
+            let err = svc.ingest_observations("plain", bad).unwrap().wait();
+            assert!(err.is_err());
+            assert!(format!("{:#}", err.unwrap_err()).contains("disabled"));
+            svc.ingest("plain", batches[0].clone()).unwrap().wait().unwrap();
+            assert_eq!(svc.stats("plain").unwrap().epoch, 1);
+            svc.shutdown();
         }
     }
 

@@ -214,8 +214,12 @@ impl Batcher {
                         }
                     }
                     Slice::Sparse { entries, .. } => {
+                        // Duplicate coordinates within a slice must coalesce
+                        // by summation — the same contract as the sparse arm's
+                        // `CooTensor::push` — not last-write-wins, which would
+                        // make the batch depend on entry order.
                         for (i, j, v) in entries {
-                            t.set(i as usize, j as usize, k, v);
+                            t.add_at(i as usize, j as usize, k, v);
                         }
                     }
                 }
@@ -380,6 +384,26 @@ mod tests {
         let d = batch.to_dense();
         assert_eq!(d.get(0, 0, 0), 1.0);
         assert_eq!(d.get(1, 0, 1), 7.0);
+    }
+
+    #[test]
+    fn duplicate_coordinates_coalesce_identically_in_both_arms() {
+        // A slice that revisits (0, 0) and (1, 1); both the dense and the
+        // sparse arm must sum duplicates, independent of entry order.
+        let fwd = vec![(0u32, 0u32, 1.0), (1, 1, 10.0), (0, 0, 2.0), (1, 1, -4.0)];
+        let mut rev = fwd.clone();
+        rev.reverse();
+        for entries in [fwd, rev] {
+            for sparse in [false, true] {
+                let mut b = Batcher::new(1, sparse);
+                let batch =
+                    b.push(Slice::Sparse { i: 2, j: 2, entries: entries.clone() }).unwrap().unwrap();
+                let d = batch.to_dense();
+                assert_eq!(d.get(0, 0, 0), 3.0);
+                assert_eq!(d.get(1, 1, 0), 6.0);
+                assert_eq!(d.get(0, 1, 0), 0.0);
+            }
+        }
     }
 
     #[test]

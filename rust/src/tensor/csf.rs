@@ -28,7 +28,9 @@
 //! [`CsfTensor::append_mode3`]); the history is never re-sorted.
 
 use super::sparse::{inverse_map, mode3_shift};
-use super::{mode_dim, CooTensor, DenseTensor, Tensor3};
+use super::{
+    masked_normals_accumulate, masked_normals_prepare, mode_dim, CooTensor, DenseTensor, Tensor3,
+};
 use crate::linalg::Matrix;
 use crate::util::par::workers_for;
 
@@ -962,6 +964,45 @@ impl Tensor3 for CsfTensor {
             }
         }
         acc
+    }
+
+    fn masked_normals_into(
+        &self,
+        mode: usize,
+        a: &Matrix,
+        b: &Matrix,
+        c: &Matrix,
+        rhs: &mut Matrix,
+        grams: &mut Matrix,
+    ) {
+        let r = a.cols();
+        masked_normals_prepare(self.dims, mode, r, rhs, grams);
+        // Walk orientation `mode` like its MTTKRP (root = output row, one
+        // mid-factor row load per fiber), but the Khatri-Rao row `w` is
+        // per *entry* — the gram accumulation cannot hoist past the leaf
+        // loop the way the MTTKRP's register accumulator can.
+        let (midf, leaff) = match mode {
+            0 => (b, c),
+            1 => (a, c),
+            2 => (b, a),
+            _ => panic!("mode {mode} out of range"),
+        };
+        let o = &self.orient[mode];
+        let mut w = vec![0.0f64; r];
+        for f in 0..o.roots.len() {
+            let dst = o.roots[f] as usize;
+            for g in o.fiber_ptr[f] as usize..o.fiber_ptr[f + 1] as usize {
+                let mrow = midf.row(o.mids[g] as usize);
+                let es = o.entry_ptr[g] as usize..o.entry_ptr[g + 1] as usize;
+                for (leaf, v) in o.leaves[es.clone()].iter().zip(&o.vals[es]) {
+                    let lrow = leaff.row(*leaf as usize);
+                    for t in 0..r {
+                        w[t] = mrow[t] * lrow[t];
+                    }
+                    masked_normals_accumulate(rhs, grams, dst, *v, &w);
+                }
+            }
+        }
     }
 }
 

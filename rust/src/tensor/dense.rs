@@ -435,6 +435,40 @@ impl Tensor3 for DenseTensor {
         }
         acc
     }
+
+    fn masked_normals_into(
+        &self,
+        mode: usize,
+        a: &Matrix,
+        b: &Matrix,
+        c: &Matrix,
+        rhs: &mut Matrix,
+        grams: &mut Matrix,
+    ) {
+        let r = a.cols();
+        super::masked_normals_prepare(self.dims(), mode, r, rhs, grams);
+        // Dense storage has no notion of an absent cell: every entry —
+        // zeros included — is observed, so each row's gram converges to
+        // the shared normal matrix the fully-observed ALS step uses.
+        let (ni, nj, nk) = self.dims();
+        let mut w = vec![0.0f64; r];
+        for k in 0..nk {
+            for j in 0..nj {
+                for i in 0..ni {
+                    let (dst, f1, f2) = match mode {
+                        0 => (i, b.row(j), c.row(k)),
+                        1 => (j, a.row(i), c.row(k)),
+                        2 => (k, a.row(i), b.row(j)),
+                        _ => panic!("mode {mode} out of range"),
+                    };
+                    for t in 0..r {
+                        w[t] = f1[t] * f2[t];
+                    }
+                    super::masked_normals_accumulate(rhs, grams, dst, self.get(i, j, k), &w);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -63,6 +63,35 @@ pub trait Tensor3 {
     /// Inner product `⟨X, [[λ; A, B, C]]⟩` with a Kruskal model — used for
     /// fit computation without materialising the reconstruction.
     fn inner_with_kruskal(&self, lambda: &[f64], a: &Matrix, b: &Matrix, c: &Matrix) -> f64;
+
+    /// Masked per-row normal equations for `mode`, treating this tensor's
+    /// stored entries as the observed support `Ω` of an underlying tensor
+    /// — the completion setting (DESIGN.md §12). For each mode-`mode`
+    /// index `d`, accumulated over the observed cells of its slab, with
+    /// `w = f1 ∘ f2` the Khatri-Rao row of the two off-mode factors
+    /// (`mode 0: w = B[j] ∘ C[k]`, etc.):
+    ///
+    /// * `rhs[d, :] = Σ_Ω v · w` — the mask-aware MTTKRP (identical to
+    ///   [`Tensor3::mttkrp_into`] restricted to the same entries);
+    /// * `grams` rows `d·R .. d·R+R` hold `Σ_Ω w · wᵀ` — the per-row
+    ///   normal matrix. A fully observed tensor shares one normal matrix
+    ///   across all rows (`⊛_{m≠n} FᵀF`); a masked solve must restrict it
+    ///   per row, which is exactly what makes completion a different
+    ///   kernel rather than a reweighted MTTKRP.
+    ///
+    /// `rhs` must be pre-shaped `mode_dim × R` and `grams`
+    /// `(mode_dim·R) × R` (row-major: block `d` occupies rows
+    /// `d·R..d·R+R`); both are fully overwritten. A dense tensor treats
+    /// **every** cell — zeros included — as observed.
+    fn masked_normals_into(
+        &self,
+        mode: usize,
+        a: &Matrix,
+        b: &Matrix,
+        c: &Matrix,
+        rhs: &mut Matrix,
+        grams: &mut Matrix,
+    );
 }
 
 /// Owned tensor used by engine APIs: dense, flat sparse (COO) or
@@ -287,6 +316,71 @@ impl Tensor3 for TensorData {
             TensorData::Csf(t) => t.inner_with_kruskal(lambda, a, b, c),
         }
     }
+    fn masked_normals_into(
+        &self,
+        mode: usize,
+        a: &Matrix,
+        b: &Matrix,
+        c: &Matrix,
+        rhs: &mut Matrix,
+        grams: &mut Matrix,
+    ) {
+        match self {
+            TensorData::Dense(t) => t.masked_normals_into(mode, a, b, c, rhs, grams),
+            TensorData::Sparse(t) => t.masked_normals_into(mode, a, b, c, rhs, grams),
+            TensorData::Csf(t) => t.masked_normals_into(mode, a, b, c, rhs, grams),
+        }
+    }
+}
+
+/// Shared prologue of the three `masked_normals_into` kernels: shape-check
+/// the caller buffers against `(dims, mode, R)` and zero them.
+pub(crate) fn masked_normals_prepare(
+    dims: (usize, usize, usize),
+    mode: usize,
+    r: usize,
+    rhs: &mut Matrix,
+    grams: &mut Matrix,
+) {
+    let out_dim = mode_dim(dims, mode);
+    assert_eq!(
+        (rhs.rows(), rhs.cols()),
+        (out_dim, r),
+        "masked_normals_into rhs-buffer shape mismatch"
+    );
+    assert_eq!(
+        (grams.rows(), grams.cols()),
+        (out_dim * r, r),
+        "masked_normals_into grams-buffer shape mismatch"
+    );
+    rhs.fill(0.0);
+    grams.fill(0.0);
+}
+
+/// Shared accumulate step of the masked-normals kernels: fold one observed
+/// entry with Khatri-Rao row `w` and value `v` into output row `dst` —
+/// `rhs[dst] += v·w`, `grams` block `dst` `+= w·wᵀ`.
+#[inline]
+pub(crate) fn masked_normals_accumulate(
+    rhs: &mut Matrix,
+    grams: &mut Matrix,
+    dst: usize,
+    v: f64,
+    w: &[f64],
+) {
+    let r = w.len();
+    let o = rhs.row_mut(dst);
+    for t in 0..r {
+        o[t] += v * w[t];
+    }
+    let g = &mut grams.data_mut()[dst * r * r..(dst + 1) * r * r];
+    for t in 0..r {
+        let wt = w[t];
+        let grow = &mut g[t * r..(t + 1) * r];
+        for (gu, wu) in grow.iter_mut().zip(w) {
+            *gu += wt * wu;
+        }
+    }
 }
 
 /// Dimension of `dims` along `mode`.
@@ -432,6 +526,82 @@ mod tests {
         want.append_mode3(&batch);
         assert_eq!(via_csf.dims(), want.dims());
         assert_eq!(via_csf.to_dense().data(), want.to_dense().data());
+    }
+
+    #[test]
+    fn masked_normals_agree_across_backends_and_match_mttkrp() {
+        let mut rng = Rng::new(11);
+        let coo = CooTensor::rand(6, 5, 4, 0.4, &mut rng);
+        let csf = CsfTensor::from_coo(coo.clone());
+        let r = 3;
+        let a = Matrix::rand_gaussian(6, r, &mut rng);
+        let b = Matrix::rand_gaussian(5, r, &mut rng);
+        let c = Matrix::rand_gaussian(4, r, &mut rng);
+        for mode in 0..3 {
+            let dim = mode_dim(coo.dims(), mode);
+            let mut rhs_coo = Matrix::zeros(dim, r);
+            let mut g_coo = Matrix::zeros(dim * r, r);
+            coo.masked_normals_into(mode, &a, &b, &c, &mut rhs_coo, &mut g_coo);
+            let mut rhs_csf = Matrix::zeros(dim, r);
+            let mut g_csf = Matrix::zeros(dim * r, r);
+            csf.masked_normals_into(mode, &a, &b, &c, &mut rhs_csf, &mut g_csf);
+            assert!(rhs_coo.max_abs_diff(&rhs_csf) < 1e-10, "mode {mode} rhs");
+            assert!(g_coo.max_abs_diff(&g_csf) < 1e-10, "mode {mode} grams");
+            // The RHS is exactly the MTTKRP over the stored support.
+            assert!(
+                rhs_coo.max_abs_diff(&coo.mttkrp(mode, &a, &b, &c)) < 1e-10,
+                "mode {mode}: masked rhs must equal the MTTKRP on the same entries"
+            );
+            // Dirty buffers are fully overwritten.
+            rhs_coo.fill(7.0);
+            g_coo.fill(-3.0);
+            coo.masked_normals_into(mode, &a, &b, &c, &mut rhs_coo, &mut g_coo);
+            assert!(rhs_coo.max_abs_diff(&rhs_csf) < 1e-10);
+            assert!(g_coo.max_abs_diff(&g_csf) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fully_observed_masked_grams_collapse_to_the_shared_normal_matrix() {
+        // When every cell is observed the per-row masked gram must equal
+        // the fully-observed ALS normal matrix ⊛_{m≠n} FᵀF — the masked
+        // solve degenerates to the classic sweep.
+        let mut rng = Rng::new(13);
+        let dense = DenseTensor::rand(4, 3, 5, &mut rng);
+        let coo = CooTensor::from_dense(&dense, -1.0); // gaussian: no zeros
+        assert_eq!(coo.nnz(), 4 * 3 * 5);
+        let r = 2;
+        let a = Matrix::rand_gaussian(4, r, &mut rng);
+        let b = Matrix::rand_gaussian(3, r, &mut rng);
+        let c = Matrix::rand_gaussian(5, r, &mut rng);
+        let shared = [
+            b.gram().hadamard(&c.gram()),
+            a.gram().hadamard(&c.gram()),
+            a.gram().hadamard(&b.gram()),
+        ];
+        for mode in 0..3 {
+            let dim = mode_dim(dense.dims(), mode);
+            for t in [
+                TensorData::Dense(dense.clone()),
+                TensorData::Sparse(coo.clone()),
+            ] {
+                let mut rhs = Matrix::zeros(dim, r);
+                let mut grams = Matrix::zeros(dim * r, r);
+                t.masked_normals_into(mode, &a, &b, &c, &mut rhs, &mut grams);
+                for d in 0..dim {
+                    for p in 0..r {
+                        for q in 0..r {
+                            let got = grams[(d * r + p, q)];
+                            let want = shared[mode][(p, q)];
+                            assert!(
+                                (got - want).abs() < 1e-9,
+                                "mode {mode} row {d}: {got} vs {want}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! loop on real-world-shaped workloads and is parallelised over nnz chunks
 //! with per-thread accumulators (no locks in the inner loop).
 
-use super::{mode_dim, DenseTensor, Tensor3};
+use super::{masked_normals_accumulate, masked_normals_prepare, mode_dim, DenseTensor, Tensor3};
 use crate::linalg::Matrix;
 use crate::util::par::{chunk_ranges, workers_for};
 use crate::util::Rng;
@@ -463,6 +463,37 @@ impl Tensor3 for CooTensor {
             acc += v * m;
         }
         acc
+    }
+
+    fn masked_normals_into(
+        &self,
+        mode: usize,
+        a: &Matrix,
+        b: &Matrix,
+        c: &Matrix,
+        rhs: &mut Matrix,
+        grams: &mut Matrix,
+    ) {
+        let r = a.cols();
+        masked_normals_prepare(self.dims, mode, r, rhs, grams);
+        // Serial entry scan (the mttkrp_range pattern): observation sets
+        // are batch-scale, not history-scale, so the per-row gram
+        // accumulation dominates the entry walk and parallel partials
+        // would have to replicate the `dim·R×R` gram stack per worker.
+        let mut w = vec![0.0f64; r];
+        for e in 0..self.vv.len() {
+            let (i, j, k) = (self.ii[e] as usize, self.jj[e] as usize, self.kk[e] as usize);
+            let (dst, f1, f2) = match mode {
+                0 => (i, b.row(j), c.row(k)),
+                1 => (j, a.row(i), c.row(k)),
+                2 => (k, a.row(i), b.row(j)),
+                _ => panic!("mode {mode} out of range"),
+            };
+            for t in 0..r {
+                w[t] = f1[t] * f2[t];
+            }
+            masked_normals_accumulate(rhs, grams, dst, self.vv[e], &w);
+        }
     }
 }
 

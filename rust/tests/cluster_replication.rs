@@ -206,6 +206,7 @@ fn tcp_shard_round_trips_register_ingest_stats_drain() {
         repetitions: 2,
         seed: 5,
         adaptive: false,
+        completion: false,
     };
     let (epoch, rank) = client.register("tcp", &existing, engine).unwrap();
     assert_eq!((epoch, rank), (0, 2));

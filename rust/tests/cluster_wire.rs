@@ -53,6 +53,7 @@ fn rand_engine(rng: &mut Rng) -> WireEngineSpec {
             repetitions: 1 + rng.below(4) as u32,
             seed: rng.next_u64(),
             adaptive: rng.below(2) == 0,
+            completion: rng.below(2) == 0,
         }
     } else {
         WireEngineSpec::OcTen {
@@ -156,8 +157,23 @@ fn rand_snapshot(rng: &mut Rng) -> SnapshotFrame {
     }
 }
 
+fn rand_observations(rng: &mut Rng) -> Frame {
+    let dims = rand_dims(rng);
+    let entries = (0..rng.below(12))
+        .map(|_| {
+            let i = rng.below(dims.0 as usize) as u32;
+            let j = rng.below(dims.1 as usize) as u32;
+            let k = rng.below(dims.2 as usize) as u32;
+            // Exact zeros are meaningful observations — generate some.
+            let v = if rng.below(4) == 0 { 0.0 } else { rng.gaussian() };
+            (i, j, k, v)
+        })
+        .collect();
+    Frame::Observations { stream: rand_name(rng), dims, entries }
+}
+
 fn rand_frame(rng: &mut Rng) -> Frame {
-    match rng.below(10) {
+    match rng.below(11) {
         0 => Frame::Register {
             stream: rand_name(rng),
             engine: rand_engine(rng),
@@ -186,6 +202,7 @@ fn rand_frame(rng: &mut Rng) -> Frame {
         6 => Frame::Drain { stream: rand_name(rng) },
         7 => Frame::DrainAck { stats: rand_stats(rng) },
         8 => Frame::Snapshot { stream: rand_name(rng), snap: rand_snapshot(rng) },
+        9 => rand_observations(rng),
         _ => Frame::Error { message: rand_name(rng) },
     }
 }
@@ -248,7 +265,7 @@ fn corruption_is_rejected_or_survived_never_fatal() {
 /// Unknown tags — retired, future, or garbage — are explicit errors.
 #[test]
 fn unknown_tags_are_rejected() {
-    for tag in [0u8, 11, 42, 255] {
+    for tag in [0u8, 12, 42, 255] {
         let mut bytes = Vec::new();
         bytes.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
         bytes.push(WIRE_VERSION);
@@ -286,7 +303,7 @@ fn blind_fuzz_never_panics() {
         let mut buf = Vec::new();
         buf.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
         buf.push(WIRE_VERSION);
-        buf.push(1 + rng.below(10) as u8);
+        buf.push(1 + rng.below(11) as u8);
         buf.extend((0..rng.below(96)).map(|_| rng.next_u64() as u8));
         let _ = decode_frame(&buf);
     }

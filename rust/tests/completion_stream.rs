@@ -1,0 +1,169 @@
+//! Online tensor completion, end to end: observation schedules from
+//! `datagen::completion` streamed through a completion-enabled engine,
+//! scored against the offline masked-ALS oracle that sees every
+//! observation up front (DESIGN.md §12).
+//!
+//! The acceptance band: the online masked fit must stay within 90% of
+//! the oracle's at both 10% and 1% observed density. The flip side is
+//! also pinned here — with completion off (the default), the slice path
+//! must be bit-identical to a completion-free build.
+
+use sambaten::completion::{CompletionConfig, ObservationBatch, ObservationSet};
+use sambaten::coordinator::{SamBaTen, SamBaTenConfig};
+use sambaten::cp::{masked_cp_als, masked_fit, MaskedAlsOptions};
+use sambaten::datagen::{CompletionSpec, SyntheticSpec};
+use sambaten::serve::DecompositionService;
+use sambaten::tensor::{CooTensor, TensorData};
+
+/// Run one schedule both ways: the oracle gets the merged observation
+/// set at once and iterates to convergence; the online engine sees it
+/// batch by batch with `sweeps` masked sweeps per ingest. Both fits are
+/// measured on the same merged set with the same metric.
+fn oracle_and_online(spec: &CompletionSpec, rank: usize, sweeps: usize) -> (f64, f64) {
+    let (batches, _truth) = spec.generate().unwrap();
+    let mut all = ObservationSet::new((spec.i, spec.j, spec.k));
+    for b in &batches {
+        all.merge(b).unwrap();
+    }
+    let merged = TensorData::Sparse(all.to_coo());
+
+    let opts = MaskedAlsOptions { seed: spec.seed ^ 0xF00D, ..Default::default() };
+    let (oracle, _) = masked_cp_als(&merged, rank, &opts).unwrap();
+    let oracle_fit = masked_fit(&merged, &oracle);
+
+    let zero = TensorData::Sparse(CooTensor::new(spec.i, spec.j, spec.k));
+    let cfg = SamBaTenConfig::builder(rank, 2, 2, spec.seed)
+        .completion(CompletionConfig { enabled: true, sweeps, ..Default::default() })
+        .build()
+        .unwrap();
+    let mut engine = SamBaTen::init(&zero, cfg).unwrap();
+    for b in &batches {
+        engine.ingest_observations(b).unwrap();
+    }
+    let online_fit = masked_fit(&merged, engine.model());
+    (oracle_fit, online_fit)
+}
+
+/// The headline acceptance criterion at the comfortable density.
+#[test]
+fn online_fit_stays_within_90_percent_of_the_oracle_at_10_percent_density() {
+    let spec = CompletionSpec::cube(14, 2, 0.10, 41).with_batches(6);
+    let (oracle, online) = oracle_and_online(&spec, 2, 8);
+    assert!(oracle > 0.8, "oracle fit {oracle} — schedule too hard to certify against");
+    assert!(
+        online >= 0.9 * oracle,
+        "online fit {online} fell below 90% of oracle {oracle}"
+    );
+}
+
+/// The regime the subsystem exists for: 1% observed density. The
+/// per-row masked systems are heavily underdetermined here, so this
+/// doubles as a regression test for the trace-scaled ridge.
+#[test]
+fn online_fit_stays_within_90_percent_of_the_oracle_at_1_percent_density() {
+    let spec = CompletionSpec::cube(20, 2, 0.01, 43).with_batches(5);
+    let (oracle, online) = oracle_and_online(&spec, 2, 8);
+    assert!(oracle > 0.8, "oracle fit {oracle} — schedule too hard to certify against");
+    assert!(
+        online >= 0.9 * oracle,
+        "online fit {online} fell below 90% of oracle {oracle}"
+    );
+}
+
+/// A revisit-heavy schedule: half of every later batch re-measures
+/// already-seen cells. Last-write-wins means the observation set must
+/// not grow past the unique support, and the remeasured values (same
+/// truth, fresh noise) must keep the solve stable.
+#[test]
+fn revisit_heavy_streams_coalesce_and_stay_stable() {
+    let spec =
+        CompletionSpec::cube(12, 2, 0.2, 47).with_revisit(0.5).with_noise(0.05).with_batches(5);
+    let (batches, _truth) = spec.generate().unwrap();
+    let pushed: usize = batches.iter().map(|b| b.len()).sum();
+
+    let zero = TensorData::Sparse(CooTensor::new(spec.i, spec.j, spec.k));
+    let cfg = SamBaTenConfig::builder(2, 2, 2, spec.seed)
+        .completion(CompletionConfig::enabled())
+        .build()
+        .unwrap();
+    let mut engine = SamBaTen::init(&zero, cfg).unwrap();
+    let mut last_fit = 0.0;
+    for b in &batches {
+        let stats = engine.ingest_observations(b).unwrap();
+        last_fit = stats.masked_fit.expect("observation ingest reports masked fit");
+    }
+    let unique = engine.observations().len();
+    let total = (spec.i * spec.j * spec.k) as f64;
+    let support = ((total * spec.density).round() as usize).max(1);
+    assert!(unique <= support, "unique {unique} exceeds scheduled support {support}");
+    assert!(pushed > unique, "schedule produced no revisits ({pushed} pushed, {unique} unique)");
+    assert!(last_fit.is_finite() && last_fit > 0.0, "masked fit {last_fit}");
+}
+
+/// The do-no-harm half of the acceptance criteria: a default config
+/// (completion off) must leave the slice path bit-identical — same
+/// factors, same lambdas, to the last ULP — as a build that merely
+/// *enables* completion but only ever ingests slices.
+#[test]
+fn slice_path_is_bit_identical_with_completion_enabled_but_unused() {
+    let spec = SyntheticSpec::dense(12, 12, 14, 2, 0.05, 23);
+    let (existing, batches, _) = spec.generate_stream(0.4, 3);
+    let run = |cfg: SamBaTenConfig| {
+        let mut e = SamBaTen::init(&existing, cfg).unwrap();
+        for b in &batches {
+            e.ingest(b).unwrap();
+        }
+        e.model().clone()
+    };
+    let off = SamBaTenConfig::builder(2, 2, 3, 19).build().unwrap();
+    let on = SamBaTenConfig::builder(2, 2, 3, 19)
+        .completion(CompletionConfig::enabled())
+        .build()
+        .unwrap();
+    let a = run(off);
+    let b = run(on);
+    for f in 0..3 {
+        assert!(a.factors[f].max_abs_diff(&b.factors[f]) == 0.0, "factor {f}");
+    }
+    assert_eq!(a.lambda, b.lambda);
+}
+
+/// The serving surface end to end: observation batches ride the same
+/// Ticket/backpressure path as slices, and a stream registered without
+/// completion rejects them with the epoch unmoved.
+#[test]
+fn service_routes_observations_and_rejects_disabled_streams() {
+    let svc = DecompositionService::new();
+    let (x, _) = SyntheticSpec::dense(10, 8, 6, 2, 0.0, 31).generate();
+    let enabled = SamBaTenConfig::builder(2, 2, 2, 7)
+        .completion(CompletionConfig::enabled())
+        .build()
+        .unwrap();
+    let handle = svc.register("obs", &x, enabled).unwrap();
+
+    let dense = x.to_dense();
+    let mut batch = ObservationBatch::new((10, 8, 6));
+    for (i, j, k) in [(0usize, 0usize, 0usize), (9, 7, 5), (3, 4, 2)] {
+        batch.push(i, j, k, dense.get(i, j, k)).unwrap();
+    }
+    let stats = svc.ingest_observations("obs", batch).unwrap().wait().unwrap();
+    assert_eq!(stats.observations, 3);
+    assert_eq!(stats.k_new, 0);
+    assert!(stats.masked_fit.is_some());
+    let snap = handle.snapshot();
+    assert_eq!(snap.epoch, 1);
+    assert_eq!(snap.stats.as_ref().unwrap().masked_fit, stats.masked_fit);
+
+    // Default config: completion off, observations bounce.
+    let plain = SamBaTenConfig::builder(2, 2, 2, 7).build().unwrap();
+    let plain_handle = svc.register("plain", &x, plain).unwrap();
+    let mut batch = ObservationBatch::new((10, 8, 6));
+    batch.push(0, 0, 0, 1.0).unwrap();
+    let err = svc
+        .ingest_observations("plain", batch)
+        .unwrap()
+        .wait()
+        .expect_err("disabled stream must reject observations");
+    assert!(format!("{err:#}").contains("disabled"), "unexpected error: {err:#}");
+    assert_eq!(plain_handle.snapshot().epoch, 0, "rejected batch must not publish");
+}
